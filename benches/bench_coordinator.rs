@@ -1,0 +1,33 @@
+//! Serving-layer benchmark: coordinator throughput/latency across batch
+//! sizes (DESIGN ablation b: batching policy).
+
+use centaur::baselines::FrameworkKind;
+use centaur::coordinator::{Coordinator, ServerConfig};
+use centaur::model::{ModelConfig, ModelWeights};
+use centaur::util::bench::Bencher;
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new();
+    let cfg = ModelConfig::bert_tiny();
+    let weights = ModelWeights::random(&cfg, 5);
+    let n_req = if std::env::var("CENTAUR_BENCH_QUICK").is_ok() { 8 } else { 24 };
+
+    for batch in [1usize, 4, 8] {
+        b.section(&format!("coordinator, batch<={batch}, {n_req} requests"));
+        let mut sc = ServerConfig::new(cfg.clone(), weights.clone());
+        sc.framework = FrameworkKind::Centaur;
+        sc.max_batch = batch;
+        sc.linger = Duration::from_millis(2);
+        let coord = Coordinator::start(sc).unwrap();
+        b.bench(&format!("serve {n_req} reqs (batch {batch})"), || {
+            let rxs: Vec<_> =
+                (0..n_req).map(|i| coord.submit(vec![(4 + i % 100) as u32; cfg.n_ctx])).collect();
+            for rx in rxs {
+                rx.recv().unwrap().unwrap();
+            }
+        });
+        let snap = coord.shutdown();
+        println!("    -> {}", snap.summary());
+    }
+}

@@ -1,0 +1,36 @@
+//! End-to-end benchmark (Figs. 7/8 companion): one inference per
+//! (framework × model), printing comm volume and simulated wall times —
+//! the series the report targets regenerate in table form.
+
+use centaur::baselines::FrameworkKind;
+use centaur::model::ModelConfig;
+use centaur::net::NetworkProfile;
+use centaur::report::measure_framework;
+use centaur::util::bench::Bencher;
+use centaur::util::{human_bytes, human_secs};
+
+fn main() {
+    let mut b = Bencher::new();
+    let quick = std::env::var("CENTAUR_BENCH_QUICK").is_ok();
+    let models: Vec<&str> =
+        if quick { vec!["bert-tiny"] } else { vec!["bert-tiny", "bert-base", "gpt2-base"] };
+
+    for model in models {
+        let cfg = ModelConfig::by_name(model).unwrap();
+        b.section(&format!("{model} — measure_framework (extrapolated)"));
+        for kind in [FrameworkKind::Centaur, FrameworkKind::Puma] {
+            let mut last = None;
+            b.bench(&format!("{} {model}", kind.name()), || {
+                last = Some(measure_framework(kind, &cfg, 3, true).unwrap());
+            });
+            let ledger = last.unwrap();
+            println!(
+                "    -> comm {} | LAN {} | WAN1 {} | WAN2 {}",
+                human_bytes(ledger.bytes_total()),
+                human_secs(ledger.total_time(&NetworkProfile::lan())),
+                human_secs(ledger.total_time(&NetworkProfile::wan1())),
+                human_secs(ledger.total_time(&NetworkProfile::wan2())),
+            );
+        }
+    }
+}

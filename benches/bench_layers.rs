@@ -1,0 +1,64 @@
+//! Per-layer benchmarks: one full Centaur transformer layer vs the SMPC
+//! baselines at tiny and base shapes, plus the Π_PPP-placement ablation
+//! (DESIGN ablation a) and backend comparison (ablation e).
+
+use centaur::baselines::{smpc::SmpcEngine, FrameworkKind, PptiFramework};
+use centaur::engine::{CentaurEngine, EngineOptions};
+use centaur::model::{ModelConfig, ModelWeights};
+use centaur::net::NetworkProfile;
+use centaur::runtime::NativeBackend;
+use centaur::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // -------- tiny model, full protocol fidelity --------
+    let cfg = ModelConfig::bert_tiny();
+    let w = ModelWeights::random(&cfg, 7);
+    let tokens: Vec<u32> = (0..cfg.n_ctx).map(|i| (4 + i % 100) as u32).collect();
+
+    b.section("full inference, bert-tiny (full-fidelity protocols)");
+    let mut cent = CentaurEngine::new(&cfg, &w, NetworkProfile::lan(), 9).unwrap();
+    b.bench("centaur", || {
+        std::hint::black_box(cent.infer(&tokens).unwrap());
+    });
+    for kind in FrameworkKind::SMPC_BASELINES {
+        let mut eng = SmpcEngine::new(kind, &cfg, &w, NetworkProfile::lan(), 9).unwrap();
+        b.bench(kind.name(), || {
+            std::hint::black_box(eng.infer(&tokens).unwrap());
+        });
+    }
+
+    // -------- ablation (e): fast-sim vs full protocols --------
+    b.section("ablation: fast-sim (charged-ideal) vs full Beaver, bert-tiny");
+    let mut fast = CentaurEngine::with_backend(
+        &cfg,
+        &w,
+        Box::new(NativeBackend::new()),
+        EngineOptions { fast_sim: true, seed: 9, ..Default::default() },
+    )
+    .unwrap();
+    b.bench("centaur fast-sim", || {
+        std::hint::black_box(fast.infer(&tokens).unwrap());
+    });
+
+    // -------- base-scale single layer (fast-sim) --------
+    b.section("1-layer bert-base (fast-sim; layer cost for extrapolation)");
+    let base1 = ModelConfig::bert_base().with_layers(1);
+    let wb = ModelWeights::random(&base1, 11);
+    let toks: Vec<u32> = (0..base1.n_ctx).map(|i| (4 + i % 1000) as u32).collect();
+    let mut cb = CentaurEngine::with_backend(
+        &base1,
+        &wb,
+        Box::new(NativeBackend::new()),
+        EngineOptions { fast_sim: true, seed: 11, ..Default::default() },
+    )
+    .unwrap();
+    b.bench("centaur 1-layer base", || {
+        std::hint::black_box(cb.infer(&toks).unwrap());
+    });
+    let mut pb = SmpcEngine::new(FrameworkKind::Puma, &base1, &wb, NetworkProfile::lan(), 11).unwrap();
+    b.bench("puma 1-layer base", || {
+        std::hint::black_box(pb.infer(&toks).unwrap());
+    });
+}

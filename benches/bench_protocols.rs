@@ -1,0 +1,88 @@
+//! Protocol-level benchmarks (Table 1 companions): wall cost of each MPC
+//! primitive and each Π_PP* conversion at paper-relevant shapes.
+
+use centaur::engine::views::Views;
+use centaur::fixed;
+use centaur::mpc::{nonlin as smpc_nonlin, Mpc};
+use centaur::net::{NetSim, NetworkProfile, OpClass};
+use centaur::protocols::nonlin;
+use centaur::runtime::NativeBackend;
+use centaur::tensor::FloatTensor;
+use centaur::util::bench::Bencher;
+
+fn mk() -> Mpc {
+    Mpc::new(NetSim::new(NetworkProfile::lan()), 7)
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let x = FloatTensor::from_fn(128, 128, |r, c| ((r + c) % 17) as f32 * 0.1 - 0.8);
+    let x_fx = fixed::encode_tensor(&x);
+
+    b.section("MPC primitives on 128x128");
+    b.bench("share_local", || {
+        let mut mpc = mk();
+        std::hint::black_box(mpc.share_local(&x_fx));
+    });
+    b.bench("Pi_ScalMul", || {
+        let mut mpc = mk();
+        let a = mpc.share_local(&x_fx);
+        std::hint::black_box(mpc.scalmul(&x_fx, &a, OpClass::Linear));
+    });
+    b.bench("Pi_MatMul (beaver)", || {
+        let mut mpc = mk();
+        let a = mpc.share_local(&x_fx);
+        let y = mpc.share_local(&x_fx);
+        std::hint::black_box(mpc.matmul(&a, &y, OpClass::Linear));
+    });
+    b.bench("Pi_MatMul (charged-ideal)", || {
+        let mut mpc = mk();
+        let a = mpc.share_local(&x_fx);
+        let y = mpc.share_local(&x_fx);
+        std::hint::black_box(mpc.matmul_charged_ideal(&a, &y, OpClass::Linear));
+    });
+    b.bench("square", || {
+        let mut mpc = mk();
+        let a = mpc.share_local(&x_fx);
+        std::hint::black_box(mpc.square(&a, OpClass::Softmax));
+    });
+
+    b.section("Centaur Pi_PP* conversions (state switch + plaintext op)");
+    b.bench("Pi_PPSM 128x128", || {
+        let mut mpc = mk();
+        let mut be = NativeBackend::new();
+        let mut views = Views::new(false);
+        let a = mpc.share_local(&x_fx);
+        std::hint::black_box(nonlin::pp_softmax(&mut mpc, &mut be, &mut views, &a, "b").unwrap());
+    });
+    let big = FloatTensor::from_fn(128, 3072, |r, c| ((r * 7 + c) % 23) as f32 * 0.05 - 0.5);
+    let big_fx = fixed::encode_tensor(&big);
+    b.bench("Pi_PPGeLU 128x3072", || {
+        let mut mpc = mk();
+        let mut be = NativeBackend::new();
+        let mut views = Views::new(false);
+        let a = mpc.share_local(&big_fx);
+        std::hint::black_box(nonlin::pp_gelu(&mut mpc, &mut be, &mut views, &a, "b").unwrap());
+    });
+
+    b.section("SMPC baselines' non-linear ops (what PUMA pays)");
+    b.bench("smpc softmax 128x128", || {
+        let mut mpc = mk();
+        let a = mpc.share_local(&x_fx);
+        std::hint::black_box(smpc_nonlin::softmax(&mut mpc, &a, OpClass::Softmax));
+    });
+    let med = FloatTensor::from_fn(128, 768, |r, c| ((r + 3 * c) % 11) as f32 * 0.1 - 0.5);
+    let med_fx = fixed::encode_tensor(&med);
+    b.bench("smpc gelu 128x768", || {
+        let mut mpc = mk();
+        let a = mpc.share_local(&med_fx);
+        std::hint::black_box(smpc_nonlin::gelu(&mut mpc, &a, OpClass::Gelu));
+    });
+    b.bench("smpc layernorm 128x768", || {
+        let mut mpc = mk();
+        let a = mpc.share_local(&med_fx);
+        let g = mpc.share_local(&fixed::encode_tensor(&FloatTensor::from_fn(1, 768, |_, _| 1.0)));
+        let be = mpc.share_local(&fixed::encode_tensor(&FloatTensor::zeros(1, 768)));
+        std::hint::black_box(smpc_nonlin::layernorm(&mut mpc, &a, &g, &be, 1e-5, OpClass::LayerNorm));
+    });
+}

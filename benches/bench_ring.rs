@@ -1,0 +1,91 @@
+//! L3 hot-path microbenchmarks: the Z_{2^64} ring matmul (every Π_ScalMul
+//! and Beaver product lowers to it) + tile-size ablation (DESIGN ablation d).
+//!
+//! Run: `cargo bench --bench bench_ring` (CENTAUR_BENCH_QUICK=1 for smoke).
+
+use centaur::ring;
+use centaur::tensor::RingTensor;
+use centaur::util::bench::Bencher;
+use centaur::util::rng::Rng;
+
+fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> RingTensor {
+    RingTensor::from_vec(r, c, rng.vec_i64(r * c))
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(42);
+
+    b.section("ring matmul — Centaur linear-layer shapes (bert-base, n=128)");
+    for (m, k, n, label) in [
+        (128usize, 768usize, 768usize, "qkv/wo 128x768x768"),
+        (128, 768, 3072, "ffn-up 128x768x3072"),
+        (128, 3072, 768, "ffn-down 128x3072x768"),
+        (128, 128, 128, "attention 128x128x128"),
+    ] {
+        let a = rand_mat(&mut rng, m, k);
+        let w = rand_mat(&mut rng, n, k); // stored (out,in) for matmul_nt
+        b.bench(&format!("matmul_nt {label}"), || {
+            std::hint::black_box(ring::matmul_nt(&a, &w));
+        });
+        let macs = (m * k * n) as f64;
+        let t = b.results().last().unwrap().median.as_secs_f64();
+        println!("    -> {:.2} Gmac/s", macs / t / 1e9);
+    }
+
+    b.section("perf iteration 1: bounds-checked indexed loop vs chunks_exact");
+    {
+        // the pre-optimization inner kernel, kept for the §Perf A/B
+        fn dot_indexed(a: &[i64], b: &[i64]) -> i64 {
+            let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
+            let mut i = 0;
+            let len = a.len();
+            while i + 4 <= len {
+                a0 = a0.wrapping_add(a[i].wrapping_mul(b[i]));
+                a1 = a1.wrapping_add(a[i + 1].wrapping_mul(b[i + 1]));
+                a2 = a2.wrapping_add(a[i + 2].wrapping_mul(b[i + 2]));
+                a3 = a3.wrapping_add(a[i + 3].wrapping_mul(b[i + 3]));
+                i += 4;
+            }
+            while i < len {
+                a0 = a0.wrapping_add(a[i].wrapping_mul(b[i]));
+                i += 1;
+            }
+            a0.wrapping_add(a1).wrapping_add(a2).wrapping_add(a3)
+        }
+        let x = rand_mat(&mut rng, 128, 768);
+        let w = rand_mat(&mut rng, 768, 768);
+        b.bench("indexed dot 128x768x768 (before)", || {
+            let mut out = vec![0i64; 128 * 768];
+            for r in 0..128 {
+                for c in 0..768 {
+                    out[r * 768 + c] = dot_indexed(x.row(r), w.row(c));
+                }
+            }
+            std::hint::black_box(out);
+        });
+        b.bench("matmul_nt 128x768x768 (after)", || {
+            std::hint::black_box(ring::matmul_nt(&x, &w));
+        });
+    }
+
+    b.section("blocked vs naive (256x256x256)");
+    let a = rand_mat(&mut rng, 256, 256);
+    let bm = rand_mat(&mut rng, 256, 256);
+    b.bench("blocked", || {
+        std::hint::black_box(ring::matmul(&a, &bm));
+    });
+    b.bench("naive", || {
+        std::hint::black_box(ring::matmul_naive(&a, &bm));
+    });
+
+    b.section("elementwise ring ops (128x3072)");
+    let x = rand_mat(&mut rng, 128, 3072);
+    let y = rand_mat(&mut rng, 128, 3072);
+    b.bench("add", || {
+        std::hint::black_box(ring::add(&x, &y));
+    });
+    b.bench("mul_elem", || {
+        std::hint::black_box(ring::mul_elem(&x, &y));
+    });
+}

@@ -1,0 +1,46 @@
+//! Attack demo (paper Fig. 4): train a SIP inversion model on an auxiliary
+//! corpus, then try to reconstruct private sentences from (a) the plaintext
+//! `QKᵀ` a permutation-only PPTI exposes and (b) the `O1π₁` Centaur's cloud
+//! party actually sees. Prints recovered text side by side.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example attack_demo
+//! ```
+
+use centaur::data::{artifacts_dir, AttackCorpora, Vocab};
+use centaur::model::ModelWeights;
+use centaur::util::cli::Args;
+
+fn main() -> centaur::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let dir = args.opt_or("artifacts", &artifacts_dir()).to_string();
+    let examples = args.opt_usize("examples", 3);
+
+    let vocab = Vocab::load(&dir)?;
+    let corpora = AttackCorpora::load(&dir)?;
+    let (cfg, w) = ModelWeights::load_tag(&dir, "gpt2-tiny-wikitext103")?;
+    let aux: Vec<Vec<u32>> = corpora.aux_indist.iter().take(600).cloned().collect();
+
+    println!("attacker: SIP inversion model trained on {} in-distribution auxiliary sentences", aux.len());
+    println!("target  : first-layer attention scores (O1 = QKᵀ/√dh)\n");
+    for (i, victim) in corpora.private.iter().take(examples).enumerate() {
+        let (truth, plain, perm) = centaur::attacks::harness::recovery_example(
+            &cfg,
+            &w,
+            &aux,
+            victim,
+            &vocab,
+            0xDE40 + i as u64,
+        )?;
+        println!("---- example {i} ----");
+        println!("ground truth          : {truth}");
+        println!("recovered (plain O1)  : {plain}");
+        println!("recovered (Centaur O1π₁): {perm}\n");
+        let truth_toks: Vec<&str> = truth.split(' ').collect();
+        let rec_toks: Vec<&str> = plain.split(' ').collect();
+        let overlap = rec_toks.iter().filter(|t| truth_toks.contains(t)).count();
+        assert!(overlap * 2 >= truth_toks.len(), "plaintext attack should recover most tokens");
+    }
+    println!("attack_demo OK — permuted observations yield garbled output");
+    Ok(())
+}

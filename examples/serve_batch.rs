@@ -1,0 +1,84 @@
+//! **End-to-end serving driver** (the mandated E2E validation): load the
+//! build-time-trained tiny BERT classifier, serve a batch of real test-set
+//! requests through the full stack — coordinator → dynamic batcher →
+//! Centaur three-party protocol engine (optionally the XLA/PJRT backend
+//! executing the AOT Pallas artifacts) — and report task accuracy,
+//! latency percentiles, throughput, and communication totals.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_batch -- [--requests 64] [--backend xla]
+//! ```
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use centaur::coordinator::{Coordinator, ServerConfig};
+use centaur::data::{artifacts_dir, TaskData, Vocab};
+use centaur::model::ModelWeights;
+use centaur::net::NetworkProfile;
+use centaur::util::cli::Args;
+
+fn main() -> centaur::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let dir = args.opt_or("artifacts", &artifacts_dir()).to_string();
+    let task = args.opt_or("task", "qnli").to_string();
+    let n_req = args.opt_usize("requests", 48);
+    let backend = args.opt_or("backend", "native").to_string();
+
+    // Load the trained model + dataset produced by `make artifacts`.
+    let (cfg, weights) = ModelWeights::load_tag(&dir, &format!("bert-tiny-{task}"))?;
+    let td = TaskData::load(&dir, &task)?;
+    let vocab = Vocab::load(&dir)?;
+    println!(
+        "loaded bert-tiny-{task}: {} params, vocab {}, {} test examples",
+        cfg.param_count(),
+        vocab.len(),
+        td.test.ids.len()
+    );
+
+    let mut sc = ServerConfig::new(cfg.clone(), weights);
+    sc.backend = backend.clone();
+    sc.artifacts_dir = dir.clone();
+    sc.profile = NetworkProfile::by_name(args.opt_or("net", "lan")).unwrap();
+    sc.max_batch = args.opt_usize("batch", 8);
+    sc.workers = args.opt_usize("workers", 1);
+    println!(
+        "coordinator: backend={} batch<={} workers={} net={}",
+        backend, sc.max_batch, sc.workers, sc.profile.name
+    );
+
+    let coord = Coordinator::start(sc)?;
+    let t0 = std::time::Instant::now();
+    let reqs: Vec<(Vec<u32>, f32)> = td
+        .test
+        .ids
+        .iter()
+        .cloned()
+        .zip(td.test.labels.iter().copied())
+        .take(n_req)
+        .collect();
+    let rxs: Vec<_> = reqs.iter().map(|(ids, _)| coord.submit(ids.clone())).collect();
+
+    let mut hits = 0usize;
+    for (rx, (_, label)) in rxs.into_iter().zip(&reqs) {
+        let resp = rx.recv().expect("coordinator alive")?;
+        let pred = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if pred == *label as usize {
+            hits += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = coord.shutdown();
+
+    println!("\n== E2E results ==");
+    println!("accuracy over served requests: {:.1}% ({hits}/{})", 100.0 * hits as f64 / reqs.len() as f64, reqs.len());
+    println!("{}", snap.summary());
+    println!("wall time: {}", centaur::util::human_secs(wall.as_secs_f64()));
+    assert!(hits * 100 >= reqs.len() * 60, "served accuracy suspiciously low");
+    println!("serve_batch OK");
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT compiler: lower the L2/L1 entry points to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT serialized HloModuleProto — jax >= 0.5
+emits protos with 64-bit instruction ids which the runtime's xla_extension
+(0.5.1) rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out ../artifacts [--models bert-tiny,gpt2-tiny,...]
+
+Outputs, per model config:
+    artifacts/<model>/{softmax,gelu,layernorm,tanh}_RxC.hlo.txt
+    artifacts/<model>/manifest.json
+plus the ring-matmul ablation kernels under artifacts/ring/ and a global
+artifacts/manifest.json index.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .configs import CONFIGS  # noqa: E402
+
+DEFAULT_MODELS = ["bert-tiny", "gpt2-tiny", "bert-base", "bert-large", "gpt2-base", "gpt2-large"]
+
+# Ring matmul ablation shapes: tiny-model protocol shapes + one bench shape.
+RING_SHAPES = [(32, 64, 64), (32, 64, 256), (32, 256, 64), (128, 768, 768)]
+
+
+def to_hlo_text(fn, *arg_specs) -> str:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def s64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int64)
+
+
+def emit(out_dir, name, text):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def model_entries(cfg):
+    """The plaintext ops P1 executes in Centaur, at this config's shapes."""
+    n, d, k, h = cfg.n_ctx, cfg.d, cfg.k, cfg.h
+    entries = [
+        # op name, fn, arg specs, shape label
+        ("softmax", model.op_softmax, [f32(h * n, n)], (h * n, n)),
+        ("gelu", model.op_gelu, [f32(n, k)], (n, k)),
+        ("layernorm", model.op_layernorm, [f32(n, d), f32(d), f32(d)], (n, d)),
+    ]
+    if cfg.kind == "bert":
+        entries.append(("tanh", model.op_tanh, [f32(1, d)], (1, d)))
+    return entries
+
+
+def build_model_artifacts(cfg, root):
+    out_dir = os.path.join(root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    ops = []
+    for op, fn, specs, shape in model_entries(cfg):
+        name = f"{op}_{shape[0]}x{shape[1]}"
+        emit(out_dir, name, to_hlo_text(fn, *specs))
+        ops.append(
+            {
+                "op": op,
+                "rows": shape[0],
+                "cols": shape[1],
+                "file": f"{name}.hlo.txt",
+                "args": [list(s.shape) for s in specs],
+            }
+        )
+        print(f"  {cfg.name}/{name}")
+    manifest = {
+        "model": cfg.name,
+        "kind": cfg.kind,
+        "d": cfg.d,
+        "h": cfg.h,
+        "layers": cfg.layers,
+        "k": cfg.k,
+        "n_ctx": cfg.n_ctx,
+        "vocab": cfg.vocab,
+        "ops": ops,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def build_ring_artifacts(root):
+    out_dir = os.path.join(root, "ring")
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for m, k, n in RING_SHAPES:
+        name = f"ring_matmul_{m}x{k}x{n}"
+        emit(out_dir, name, to_hlo_text(model.op_ring_matmul, s64(m, k), s64(k, n)))
+        entries.append({"m": m, "k": k, "n": n, "file": f"{name}.hlo.txt"})
+        print(f"  ring/{name}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"shapes": entries}, f, indent=2)
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS))
+    args = ap.parse_args()
+    root = os.path.abspath(args.out)
+    os.makedirs(root, exist_ok=True)
+    models = [m for m in args.models.split(",") if m]
+    index = {"models": [], "ring": None}
+    for name in models:
+        cfg = CONFIGS[name]
+        print(f"lowering {name} ...")
+        build_model_artifacts(cfg, root)
+        index["models"].append(name)
+    print("lowering ring matmul ablation kernels ...")
+    index["ring"] = build_ring_artifacts(root)
+    with open(os.path.join(root, "manifest.json"), "w") as f:
+        json.dump(index, f, indent=2)
+    print(f"artifacts written to {root}")
+
+
+if __name__ == "__main__":
+    main()

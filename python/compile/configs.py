@@ -1,0 +1,37 @@
+"""Model configurations (mirrors rust/src/model/config.rs — keep in sync).
+
+Real paper dimensions for the efficiency experiments (BERT/GPT-2 base &
+large, Appendix D) plus tiny trained variants for the accuracy and attack
+experiments (DESIGN.md substitution table).
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    kind: str  # "bert" | "gpt2"
+    vocab: int
+    n_ctx: int  # sequence length used for AOT shapes / experiments
+    d: int  # feature dim
+    h: int  # attention heads
+    layers: int
+    k: int  # FFN intermediate dim
+    n_classes: int = 2  # bert adaptation output
+
+    @property
+    def dh(self) -> int:
+        return self.d // self.h
+
+
+CONFIGS = {
+    # trained-from-scratch tiny models (synthetic tasks)
+    "bert-tiny": ModelConfig("bert-tiny", "bert", 512, 32, 64, 2, 2, 256),
+    "gpt2-tiny": ModelConfig("gpt2-tiny", "gpt2", 512, 32, 64, 2, 2, 256),
+    # paper-scale shapes (random weights; efficiency experiments only)
+    "bert-base": ModelConfig("bert-base", "bert", 30522, 128, 768, 12, 12, 3072),
+    "bert-large": ModelConfig("bert-large", "bert", 30522, 128, 1024, 16, 24, 4096),
+    "gpt2-base": ModelConfig("gpt2-base", "gpt2", 50257, 128, 768, 12, 12, 3072),
+    "gpt2-large": ModelConfig("gpt2-large", "gpt2", 50257, 128, 1280, 20, 36, 5120),
+}

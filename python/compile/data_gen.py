@@ -1,0 +1,322 @@
+"""Synthetic dataset generator (build-time; DESIGN.md substitution table).
+
+Offline we cannot download GLUE or Wikitext, so we generate deterministic
+synthetic equivalents over a ~500-word vocabulary with entity-rich
+templates (dates, cities, names — the content the paper's Fig. 4 DRA
+examples recover). Every dataset is written to artifacts/data/ as JSON that
+the Rust side loads; the vocabulary is the cross-language contract.
+
+Tasks (GLUE-like):
+  qnli  — does the second segment mention the first segment's city?  (cls)
+  cola  — is the sentence un-scrambled?                               (cls)
+  stsb  — content-word overlap score in [0, 5]                        (reg)
+  mrpc  — is the second sentence a synonym-paraphrase of the first?   (cls)
+  rte   — is the hypothesis one of the premise's facts?               (cls)
+LM corpora: wikitext2 (small) and wikitext103 (larger), plus an
+out-of-distribution auxiliary corpus (cnn-dailymail stand-in) for attacks.
+"""
+
+import argparse
+import json
+import os
+import random
+
+PAD, CLS, SEP, UNK = 0, 1, 2, 3
+SEQ_LEN = 32
+
+MONTHS = "january february march april may june july august september october november december".split()
+DAYS = [str(i) for i in range(1, 29)]
+YEARS = [str(y) for y in range(1850, 1900)]
+CITIES = (
+    "london paris calafat vienna berlin moscow madrid rome lisbon dublin athens cairo "
+    "oslo bern kyiv sofia prague warsaw belgrade bucharest amsterdam brussels geneva turin"
+).split()
+NAMES = (
+    "omar anna boris clara dmitri elena felix greta henry irene ivan jonas karl lena "
+    "marta nikolai olga pavel quentin rosa stefan tanya viktor wilhelm"
+).split()
+NOUNS = (
+    "forces village church palace abbey settlement garden tower site river bridge army "
+    "fortress harbor market cathedral museum castle станция railway treaty battle fleet "
+    "regiment council parliament university library monastery province border station"
+).split()
+NOUNS = [n for n in NOUNS if n.isascii()]
+VERBS = (
+    "moved engaged contains attacked defended crossed reached entered captured signed "
+    "declared visited rebuilt established described approached surrounded occupied held left"
+).split()
+ADJS = (
+    "small large old historic famous northern southern eastern western ancient royal "
+    "imperial ottoman russian british french grand minor outer inner"
+).split()
+FILLER = (
+    "the a an of at on in against and or near by nine miles north south between world "
+    "heritage sites comprising including four five six seven eight ten day year month "
+    "which was were is are it its their from to with during after before that this single token"
+).split()
+
+
+def build_vocab():
+    words = ["[PAD]", "[CLS]", "[SEP]", "[UNK]"]
+    for group in (MONTHS, DAYS, YEARS, CITIES, NAMES, NOUNS, VERBS, ADJS, FILLER):
+        for w in group:
+            if w not in words:
+                words.append(w)
+    return words
+
+
+VOCAB = build_vocab()
+W2I = {w: i for i, w in enumerate(VOCAB)}
+
+SYNONYMS = {
+    "small": "minor",
+    "large": "grand",
+    "old": "ancient",
+    "moved": "approached",
+    "attacked": "engaged",
+    "village": "settlement",
+    "famous": "historic",
+    "captured": "occupied",
+    "defended": "held",
+}
+
+
+def ids(tokens):
+    return [W2I.get(t, UNK) for t in tokens]
+
+
+def sent_battle(rng):
+    return (
+        f"on {rng.choice(DAYS)} {rng.choice(MONTHS)} {rng.choice(YEARS)} the "
+        f"{rng.choice(ADJS)} {rng.choice(NOUNS)} at {rng.choice(CITIES)} "
+        f"{rng.choice(VERBS)} the {rng.choice(NOUNS)} at {rng.choice(CITIES)}"
+    ).split()
+
+
+def sent_heritage(rng):
+    return (
+        f"{rng.choice(CITIES)} contains {rng.choice(['four', 'five', 'six'])} world heritage "
+        f"sites including the {rng.choice(ADJS)} {rng.choice(NOUNS)} of {rng.choice(CITIES)} "
+        f"and the {rng.choice(ADJS)} {rng.choice(NOUNS)}"
+    ).split()
+
+
+def sent_person(rng):
+    return (
+        f"{rng.choice(NAMES)} {rng.choice(VERBS)} the {rng.choice(ADJS)} {rng.choice(NOUNS)} "
+        f"near {rng.choice(CITIES)} in {rng.choice(MONTHS)} {rng.choice(YEARS)}"
+    ).split()
+
+
+SENT_KINDS = [sent_battle, sent_heritage, sent_person]
+
+
+def sentence(rng):
+    return rng.choice(SENT_KINDS)(rng)
+
+
+def news_sentence(rng):
+    """Aux-corpus (cnn-dailymail stand-in): different template family."""
+    return (
+        f"the {rng.choice(NOUNS)} council of {rng.choice(CITIES)} declared during "
+        f"{rng.choice(MONTHS)} that {rng.choice(NAMES)} {rng.choice(VERBS)} the "
+        f"{rng.choice(ADJS)} {rng.choice(NOUNS)} between {rng.choice(CITIES)} and {rng.choice(CITIES)}"
+    ).split()
+
+
+def cities_in(toks):
+    return [t for t in toks if t in CITIES]
+
+
+def pad_pair(a, b):
+    x = [CLS] + ids(a) + [SEP] + ids(b) + [SEP]
+    return (x + [PAD] * SEQ_LEN)[:SEQ_LEN]
+
+
+def pad_single(a):
+    x = [CLS] + ids(a) + [SEP]
+    return (x + [PAD] * SEQ_LEN)[:SEQ_LEN]
+
+
+def gen_qnli(rng, n):
+    """Label 1 iff s2 mentions a city from s1.
+
+    Both segments are short person-sentences so the overlap entity always
+    fits inside SEQ_LEN (longer templates would truncate the evidence).
+    """
+    xs, ys = [], []
+    for _ in range(n):
+        s1 = sent_person(rng)
+        s2 = sent_person(rng)
+        label = rng.randint(0, 1)
+        c1 = cities_in(s1)[0]
+        c2_pos = next(i for i, t in enumerate(s2) if t in CITIES)
+        if label:
+            s2[c2_pos] = c1  # force entity overlap
+        elif s2[c2_pos] == c1:
+            s2[c2_pos] = rng.choice([c for c in CITIES if c != c1])
+        xs.append(pad_pair(s1, s2))
+        ys.append(label)
+    return xs, ys
+
+
+def gen_cola(rng, n):
+    """Label 1 for intact template sentences; 0 for locally scrambled."""
+    xs, ys = [], []
+    for _ in range(n):
+        s = sentence(rng)
+        label = rng.randint(0, 1)
+        if not label:
+            s = s[:]
+            for _ in range(3):
+                i, j = rng.randrange(len(s)), rng.randrange(len(s))
+                s[i], s[j] = s[j], s[i]
+        xs.append(pad_single(s))
+        ys.append(label)
+    return xs, ys
+
+
+def gen_stsb(rng, n):
+    """Score = 5 * (shared content-word fraction)."""
+    xs, ys = [], []
+    content = set(CITIES) | set(NAMES) | set(NOUNS) | set(VERBS) | set(ADJS)
+    for _ in range(n):
+        s1 = sentence(rng)
+        keep = rng.random()
+        s2 = []
+        for t in s1:
+            if t in content and rng.random() > keep:
+                s2.append(rng.choice(sorted(content)))
+            else:
+                s2.append(t)
+        c1 = [t for t in s1 if t in content]
+        shared = sum(1 for a, b in zip(s1, s2) if a == b and a in content)
+        score = 5.0 * shared / max(1, len(c1))
+        xs.append(pad_pair(s1, s2))
+        ys.append(round(score, 3))
+    return xs, ys
+
+
+def gen_mrpc(rng, n):
+    """Label 1 for synonym-substituted paraphrases."""
+    xs, ys = [], []
+    for _ in range(n):
+        s1 = sentence(rng)
+        label = rng.randint(0, 1)
+        if label:
+            s2 = [SYNONYMS.get(t, t) for t in s1]
+        else:
+            s2 = sentence(rng)
+            if cities_in(s1):
+                # share an entity so the negative is non-trivial
+                c = cities_in(s1)[0]
+                s2 = s2 + ["near", c]
+        xs.append(pad_pair(s1, s2))
+        ys.append(label)
+    return xs, ys
+
+
+def fact(rng):
+    """Short fact for RTE (fits two facts + hypothesis in SEQ_LEN)."""
+    return f"{rng.choice(NAMES)} {rng.choice(VERBS)} the {rng.choice(NOUNS)} near {rng.choice(CITIES)}".split()
+
+
+def gen_rte(rng, n):
+    """Premise = two facts; hypothesis entailed iff it is one of them."""
+    xs, ys = [], []
+    for _ in range(n):
+        f1, f2 = fact(rng), fact(rng)
+        premise = f1 + ["and"] + f2
+        label = rng.randint(0, 1)
+        if label:
+            hyp = rng.choice([f1, f2])
+        elif rng.random() < 0.5:
+            # hard negative: recombine f1's actor with f2's tail (binding)
+            hyp = f1[:2] + f2[2:]
+            if hyp == f1 or hyp == f2:
+                hyp = fact(rng)
+        else:
+            hyp = fact(rng)
+        xs.append(pad_pair(premise, hyp))
+        ys.append(label)
+    return xs, ys
+
+
+TASKS = {
+    "qnli": (gen_qnli, "cls", 2),
+    "cola": (gen_cola, "cls", 2),
+    "stsb": (gen_stsb, "reg", 1),
+    "mrpc": (gen_mrpc, "cls", 2),
+    "rte": (gen_rte, "cls", 2),
+}
+
+# train/test sizes roughly proportional to GLUE's relative scales
+TASK_SIZES = {"qnli": (4000, 600), "cola": (2000, 400), "stsb": (1500, 300), "mrpc": (1200, 300), "rte": (1000, 250)}
+
+
+def gen_lm_corpus(rng, n_sents):
+    seqs = []
+    for _ in range(n_sents):
+        toks = []
+        while len(toks) < SEQ_LEN - 1:
+            toks += sentence(rng) + [W2I["and"] if rng.random() < 0.3 else SEP]
+        seqs.append(([CLS] + ids([VOCAB[i] if isinstance(i, int) else i for i in toks]))[:SEQ_LEN])
+    return seqs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/data")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+
+    with open(os.path.join(out, "vocab.json"), "w") as f:
+        json.dump(VOCAB, f)
+    print(f"vocab: {len(VOCAB)} words")
+
+    for task, (gen, ttype, ncls) in TASKS.items():
+        rng = random.Random(hash(task) % 2**31)
+        ntr, nte = TASK_SIZES[task]
+        xtr, ytr = gen(rng, ntr)
+        xte, yte = gen(rng, nte)
+        doc = {
+            "task": task,
+            "type": ttype,
+            "n_classes": ncls,
+            "seq_len": SEQ_LEN,
+            "train": {"ids": xtr, "labels": ytr},
+            "test": {"ids": xte, "labels": yte},
+        }
+        with open(os.path.join(out, f"task_{task}.json"), "w") as f:
+            json.dump(doc, f)
+        print(f"task {task}: {ntr} train / {nte} test")
+
+    for name, n_sents in [("wikitext2", 3000), ("wikitext103", 9000)]:
+        rng = random.Random(hash(name) % 2**31)
+        train = gen_lm_corpus(rng, n_sents)
+        test = gen_lm_corpus(rng, max(200, n_sents // 10))
+        with open(os.path.join(out, f"lm_{name}.json"), "w") as f:
+            json.dump({"name": name, "seq_len": SEQ_LEN, "train": train, "test": test}, f)
+        print(f"lm {name}: {n_sents} train sents")
+
+    # attack corpora: private targets + two auxiliary sets — an
+    # out-of-distribution one (news templates; the paper's CNN-DailyMail
+    # stand-in) and an in-distribution one (same template family as the
+    # private sentences, disjoint samples).
+    rng = random.Random(777)
+    private = [pad_single(sentence(rng)) for _ in range(200)]
+    seen = {tuple(s) for s in private}
+    aux = [pad_single(news_sentence(rng)) for _ in range(3000)]
+    aux_indist = []
+    while len(aux_indist) < 3000:
+        s = pad_single(sentence(rng))
+        if tuple(s) not in seen:
+            aux_indist.append(s)
+    with open(os.path.join(out, "attack_corpora.json"), "w") as f:
+        json.dump({"private": private, "aux": aux, "aux_indist": aux_indist, "seq_len": SEQ_LEN}, f)
+    print("attack corpora written (aux OOD + in-dist)")
+
+
+if __name__ == "__main__":
+    main()

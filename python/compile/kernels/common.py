@@ -1,0 +1,52 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that both the
+build-time pytest checks and the Rust runtime can execute (see
+DESIGN.md §Hardware-Adaptation for the TPU mapping rationale).
+"""
+
+import functools
+
+# Target tile edges for the HBM->VMEM schedule. 128 matches both the MXU
+# systolic edge and the lane width; see DESIGN.md §Hardware-Adaptation.
+TARGET_TILE_M = 128
+TARGET_TILE_N = 128
+TARGET_TILE_K = 128
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target.
+
+    Model dimensions in this repo are multiples of 8/64/128, so this finds
+    MXU-friendly tiles; odd test shapes degrade gracefully to smaller tiles.
+    """
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def vmem_bytes_matmul(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    """Estimated VMEM working set of one matmul grid step (lhs+rhs+acc)."""
+    return (bm * bk + bk * bn + bm * bn) * itemsize
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> float:
+    """Analytic MXU utilization estimate for a tiled matmul on a 128x128
+    systolic array: fraction of MACs issued in full 128x128x128 blocks."""
+    eff_m = min(bm, 128) / 128.0
+    eff_n = min(bn, 128) / 128.0
+    # k streams through the array; any bk >= 128 saturates the pipeline.
+    eff_k = min(bk, 128) / 128.0
+    return eff_m * eff_n * eff_k
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@functools.cache
+def interpret_flag() -> bool:
+    """Always True in this environment; isolated for future TPU builds."""
+    return True

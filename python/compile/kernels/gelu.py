@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: erf GeLU (paper Eq. 5), elementwise row tiles.
+
+erf is expanded to the Abramowitz-Stegun 7.1.26 rational approximation
+(|err| <= 1.5e-7, below f32 resolution here) instead of the HLO `erf`
+opcode: the runtime's xla_extension 0.5.1 HLO parser predates that opcode,
+and this formula matches the Rust NativeBackend bit-for-bit in structure.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def erf_as(x):
+    """Abramowitz & Stegun 7.1.26 erf (matches rust/src/runtime/native.rs)."""
+    sign = jnp.sign(x)
+    ax = jnp.abs(x)
+    a1, a2, a3, a4, a5 = 0.254829592, -0.284496736, 1.421413741, -1.453152027, 1.061405429
+    p = 0.3275911
+    t = 1.0 / (1.0 + p * ax)
+    y = 1.0 - (((((a5 * t + a4) * t) + a3) * t + a2) * t + a1) * t * jnp.exp(-ax * ax)
+    return sign * y
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    y = 0.5 * x * (1.0 + erf_as(x / jnp.sqrt(2.0).astype(jnp.float32)))
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def gelu(x, *, br=None):
+    """Elementwise GeLU of a 2-D tensor."""
+    m, n = x.shape
+    br = br or common.pick_block(m, 8)
+    return pl.pallas_call(
+        _gelu_kernel,
+        grid=(m // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=common.interpret_flag(),
+    )(x)
+
+
+def _tanh_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.tanh(x_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def tanh(x, *, br=None):
+    """Elementwise tanh (BERT pooler / adaptation layer)."""
+    m, n = x.shape
+    br = br or common.pick_block(m, 8)
+    return pl.pallas_call(
+        _tanh_kernel,
+        grid=(m // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=common.interpret_flag(),
+    )(x)

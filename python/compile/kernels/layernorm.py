@@ -1,0 +1,37 @@
+"""L1 Pallas kernel: LayerNorm over the last axis (paper Eq. 1)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    y = (x - mean) / jnp.sqrt(var + eps)
+    o_ref[...] = (g_ref[...][None, :] * y + b_ref[...][None, :]).astype(o_ref.dtype)
+
+
+def layernorm_rows(x, gamma, beta, *, eps=1e-5, br=None):
+    """LayerNorm of a 2-D tensor with affine parameters gamma/beta (d,)."""
+    m, n = x.shape
+    assert gamma.shape == (n,) and beta.shape == (n,)
+    br = br or common.pick_block(m, 8)
+    import functools
+
+    kern = functools.partial(_layernorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kern,
+        grid=(m // br,),
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=common.interpret_flag(),
+    )(x, gamma, beta)

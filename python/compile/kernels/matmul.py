@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: tiled fused linear layer ``x @ w^T + b``.
+
+The hot matmul of Centaur's plaintext path (P1 applying permuted weights).
+Tiling follows DESIGN.md §Hardware-Adaptation: ``bm x bk x bn`` blocks with
+the k-grid innermost so the output block stays resident (the accumulator
+lives in the revisited output ref), expressing the HBM<->VMEM schedule a GPU
+implementation would express with threadblocks.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _linear_kernel(x_ref, wt_ref, b_ref, o_ref):
+    """One (i, j, kk) grid step: o[i,j] += x[i,kk] @ wt[kk,j] (+ bias at kk==0)."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.broadcast_to(b_ref[...], o_ref.shape)
+
+    o_ref[...] += jnp.dot(x_ref[...], wt_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def linear(x, w, b, *, bm=None, bn=None, bk=None):
+    """Fused ``x (m,k) @ w (n,k)^T + b (n,)`` as a Pallas kernel.
+
+    ``w`` is stored (out_features, in_features), the layout the Rust side
+    and the checkpoint format use.
+    """
+    m, k = x.shape
+    n, k2 = w.shape
+    assert k == k2, f"linear: inner dim {k} != {k2}"
+    assert b.shape == (n,)
+    bm = bm or common.pick_block(m, common.TARGET_TILE_M)
+    bn = bn or common.pick_block(n, common.TARGET_TILE_N)
+    bk = bk or common.pick_block(k, common.TARGET_TILE_K)
+    wt = w.T  # (k, n)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _linear_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=common.interpret_flag(),
+    )(x, wt, b)

@@ -1,0 +1,44 @@
+"""Pure-jnp reference oracle for the Pallas kernels (L1 correctness signal).
+
+Every kernel in this package is checked against these functions by
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes and dtypes).
+The Rust NativeBackend mirrors these definitions exactly (same GeLU-erf,
+same LayerNorm epsilon placement), so the three layers agree numerically.
+"""
+
+import jax.numpy as jnp
+import jax.scipy.special as jsp
+
+
+def linear(x, w, b):
+    """x (n,k) @ w^T (m,k) + b (m,) — weights stored (out, in)."""
+    return jnp.matmul(x, w.T) + b[None, :]
+
+
+def softmax_rows(x):
+    """Numerically stable row softmax (paper Eq. 3)."""
+    tau = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - tau)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def gelu(x):
+    """Exact erf GeLU (paper Eq. 5)."""
+    return 0.5 * x * (1.0 + jsp.erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+
+
+def layernorm_rows(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis (paper Eq. 1)."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return gamma[None, :] * (x - mean) / jnp.sqrt(var + eps) + beta[None, :]
+
+
+def tanh_rows(x):
+    return jnp.tanh(x)
+
+
+def ring_matmul(a, b):
+    """Wrapping s64 matmul in Z_{2^64} (requires jax_enable_x64)."""
+    assert a.dtype == jnp.int64 and b.dtype == jnp.int64
+    return jnp.matmul(a, b)

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: wrapping s64 matmul in Z_{2^64} — the Pi_ScalMul hot op.
+
+Used by the optional ``xla-ring`` backend (ablation (e) in DESIGN.md): the
+Rust coordinator can route the secret-share linear algebra through this
+AOT-compiled kernel instead of its native blocked i64 matmul. XLA integer
+arithmetic is two's-complement wraparound, which *is* the ring semantics.
+
+Requires ``jax_enable_x64`` (set by aot.py / tests before import of jnp use).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _ring_matmul_kernel(a_ref, b_ref, o_ref):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # int64 dot: XLA lowers to wraparound multiply-accumulate.
+    o_ref[...] += jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int64,
+    )
+
+
+def ring_matmul(a, b, *, bm=None, bn=None, bk=None):
+    """Wrapping ``a (m,k) @ b (k,n)`` over int64."""
+    assert a.dtype == jnp.int64 and b.dtype == jnp.int64
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm = bm or common.pick_block(m, common.TARGET_TILE_M)
+    bn = bn or common.pick_block(n, common.TARGET_TILE_N)
+    bk = bk or common.pick_block(k, common.TARGET_TILE_K)
+    return pl.pallas_call(
+        _ring_matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int64),
+        interpret=common.interpret_flag(),
+    )(a, b)

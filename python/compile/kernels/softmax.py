@@ -1,0 +1,33 @@
+"""L1 Pallas kernel: numerically stable row softmax (paper Eq. 3).
+
+Row-tiled: each grid step normalizes a block of full rows, keeping the
+reduction in-registers (f32) — the 8x128-lane friendly layout from
+DESIGN.md §Hardware-Adaptation.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    tau = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - tau)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def softmax_rows(x, *, br=None):
+    """Softmax over the last axis of a 2-D tensor."""
+    m, n = x.shape
+    br = br or common.pick_block(m, 8)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(m // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=common.interpret_flag(),
+    )(x)

@@ -1,0 +1,231 @@
+"""L2: JAX Transformer forward passes (paper §2.1), composed from the L1
+Pallas kernels, plus the per-op entry points that aot.py lowers to HLO.
+
+Two execution modes:
+
+* ``use_pallas=True`` — every op routes through ``kernels/`` (the AOT path;
+  what the Rust runtime executes).
+* ``use_pallas=False`` — pure jnp via ``kernels/ref.py`` (fast path for
+  build-time training and the pytest oracle).
+
+Python only ever runs at build time; the request path loads the lowered
+artifacts through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import gelu as gelu_k
+from .kernels import layernorm as ln_k
+from .kernels import matmul as mm_k
+from .kernels import ref
+from .kernels import softmax as sm_k
+
+LN_EPS = 1e-5
+
+
+# ---------------------------------------------------------------------
+# Parameter initialization (flat dict of named arrays; names are the
+# cross-language weight contract — rust/src/model/weights.rs reads them).
+# ---------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    p = {}
+    std = 0.02
+
+    def nrm(key, shape):
+        return jax.random.normal(key, shape, jnp.float32) * std
+
+    keys = iter(jax.random.split(key, 8 + 16 * cfg.layers))
+    p["emb.word"] = nrm(next(keys), (cfg.vocab, cfg.d))
+    p["emb.pos"] = nrm(next(keys), (cfg.n_ctx, cfg.d))
+    p["emb.ln.gamma"] = jnp.ones(cfg.d, jnp.float32)
+    p["emb.ln.beta"] = jnp.zeros(cfg.d, jnp.float32)
+    for i in range(cfg.layers):
+        pre = f"layer{i}."
+        for nm in ["wq", "wk", "wv", "wo"]:
+            p[pre + "attn." + nm] = nrm(next(keys), (cfg.d, cfg.d))
+        for nm in ["bq", "bk", "bv", "bo"]:
+            p[pre + "attn." + nm] = jnp.zeros(cfg.d, jnp.float32)
+        p[pre + "ln1.gamma"] = jnp.ones(cfg.d, jnp.float32)
+        p[pre + "ln1.beta"] = jnp.zeros(cfg.d, jnp.float32)
+        p[pre + "ffn.w1"] = nrm(next(keys), (cfg.k, cfg.d))
+        p[pre + "ffn.b1"] = jnp.zeros(cfg.k, jnp.float32)
+        p[pre + "ffn.w2"] = nrm(next(keys), (cfg.d, cfg.k))
+        p[pre + "ffn.b2"] = jnp.zeros(cfg.d, jnp.float32)
+        p[pre + "ln2.gamma"] = jnp.ones(cfg.d, jnp.float32)
+        p[pre + "ln2.beta"] = jnp.zeros(cfg.d, jnp.float32)
+    if cfg.kind == "bert":
+        p["pooler.w"] = nrm(next(keys), (cfg.d, cfg.d))
+        p["pooler.b"] = jnp.zeros(cfg.d, jnp.float32)
+        p["cls.w"] = nrm(next(keys), (cfg.n_classes, cfg.d))
+        p["cls.b"] = jnp.zeros(cfg.n_classes, jnp.float32)
+    else:
+        p["final_ln.gamma"] = jnp.ones(cfg.d, jnp.float32)
+        p["final_ln.beta"] = jnp.zeros(cfg.d, jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------
+# Op dispatch (ref vs pallas)
+# ---------------------------------------------------------------------
+
+
+def softmax_2quad(x, c=5.0):
+    """MPCFormer's 2Quad substitute (paper Eq. 8).
+
+    Masked positions (additive -1e9 in the scores) get exactly zero weight —
+    the multiplicative-mask semantics the SMPC engine implements.
+    """
+    s = jnp.where(x > -1e8, (x + c) ** 2, 0.0)
+    return s / jnp.sum(s, axis=-1, keepdims=True)
+
+
+def gelu_quad(x):
+    """MPCFormer's Quad GeLU substitute: 0.125x^2 + 0.25x + 0.5."""
+    return 0.125 * x * x + 0.25 * x + 0.5
+
+
+# variant -> (softmax, gelu) substitutions; "exact" is the unmodified model.
+VARIANTS = {
+    "exact": (None, None),
+    "mpcformer": (softmax_2quad, gelu_quad),
+    "secformer": (softmax_2quad, None),
+}
+
+
+def _ops(use_pallas: bool, variant: str = "exact"):
+    if use_pallas:
+        ops = dict(
+            linear=mm_k.linear,
+            softmax=sm_k.softmax_rows,
+            gelu=gelu_k.gelu,
+            tanh=gelu_k.tanh,
+            layernorm=lambda x, g, b: ln_k.layernorm_rows(x, g, b, eps=LN_EPS),
+        )
+    else:
+        ops = dict(
+            linear=ref.linear,
+            softmax=ref.softmax_rows,
+            gelu=ref.gelu,
+            tanh=ref.tanh_rows,
+            layernorm=lambda x, g, b: ref.layernorm_rows(x, g, b, eps=LN_EPS),
+        )
+    sm, gl = VARIANTS[variant]
+    if sm is not None:
+        ops["softmax"] = sm
+    if gl is not None:
+        ops["gelu"] = gl
+    return ops
+
+
+# ---------------------------------------------------------------------
+# Forward passes (single sequence (n,) -> logits). vmap for batches.
+# ---------------------------------------------------------------------
+
+
+def embed(cfg: ModelConfig, p: dict, ids, ops) -> jnp.ndarray:
+    """Embedding layer: lookup + positional + LayerNorm (paper §2.1)."""
+    x = p["emb.word"][ids] + p["emb.pos"][: ids.shape[0]]
+    return ops["layernorm"](x, p["emb.ln.gamma"], p["emb.ln.beta"])
+
+
+def attention(cfg: ModelConfig, lp: dict, x, mask, ops) -> jnp.ndarray:
+    """Multi-head attention (paper Eq. 2); column-block head slicing to
+    match the Rust protocol implementation exactly."""
+    n = x.shape[0]
+    q = ops["linear"](x, lp["attn.wq"], lp["attn.bq"])
+    k = ops["linear"](x, lp["attn.wk"], lp["attn.bk"])
+    v = ops["linear"](x, lp["attn.wv"], lp["attn.bv"])
+    dh = cfg.dh
+    heads = []
+    for hh in range(cfg.h):
+        sl = slice(hh * dh, (hh + 1) * dh)
+        scores = q[:, sl] @ k[:, sl].T / jnp.sqrt(jnp.float32(dh)) + mask
+        probs = ops["softmax"](scores)
+        heads.append(probs @ v[:, sl])
+    o = jnp.concatenate(heads, axis=1)
+    return ops["linear"](o, lp["attn.wo"], lp["attn.bo"])
+
+
+def transformer_layer(cfg: ModelConfig, p: dict, i: int, x, mask, ops):
+    lp = {k.removeprefix(f"layer{i}."): v for k, v in p.items() if k.startswith(f"layer{i}.")}
+    o4 = attention(cfg, lp, x, mask, ops)
+    l1 = ops["layernorm"](o4 + x, lp["ln1.gamma"], lp["ln1.beta"])
+    o5 = ops["linear"](l1, lp["ffn.w1"], lp["ffn.b1"])
+    g = ops["gelu"](o5)
+    o6 = ops["linear"](g, lp["ffn.w2"], lp["ffn.b2"])
+    return ops["layernorm"](o6 + l1, lp["ln2.gamma"], lp["ln2.beta"])
+
+
+def causal_mask(n: int) -> jnp.ndarray:
+    return jnp.where(jnp.tril(jnp.ones((n, n), bool)), 0.0, -1e9).astype(jnp.float32)
+
+
+def backbone(cfg: ModelConfig, p: dict, ids, *, use_pallas=False, variant="exact"):
+    """Embedding + all transformer layers -> hidden states (n, d)."""
+    ops = _ops(use_pallas, variant)
+    n = ids.shape[0]
+    mask = causal_mask(n) if cfg.kind == "gpt2" else jnp.zeros((n, n), jnp.float32)
+    x = embed(cfg, p, ids, ops)
+    for i in range(cfg.layers):
+        x = transformer_layer(cfg, p, i, x, mask, ops)
+    return x
+
+
+def bert_forward(cfg: ModelConfig, p: dict, ids, *, use_pallas=False, variant="exact"):
+    """BERT adaptation (paper §2.1): pooler(tanh) on [CLS] + classifier."""
+    ops = _ops(use_pallas, variant)
+    hidden = backbone(cfg, p, ids, use_pallas=use_pallas, variant=variant)
+    cls = hidden[0:1, :]
+    pooled = ops["tanh"](ops["linear"](cls, p["pooler.w"], p["pooler.b"]))
+    return ops["linear"](pooled, p["cls.w"], p["cls.b"])[0]
+
+
+def gpt2_forward(cfg: ModelConfig, p: dict, ids, *, use_pallas=False, variant="exact"):
+    """GPT-2 adaptation: final LayerNorm + tied lm head -> (n, vocab) logits."""
+    ops = _ops(use_pallas, variant)
+    hidden = backbone(cfg, p, ids, use_pallas=use_pallas, variant=variant)
+    hidden = ops["layernorm"](hidden, p["final_ln.gamma"], p["final_ln.beta"])
+    return hidden @ p["emb.word"].T
+
+
+def forward(cfg: ModelConfig, p: dict, ids, *, use_pallas=False, variant="exact"):
+    if cfg.kind == "bert":
+        return bert_forward(cfg, p, ids, use_pallas=use_pallas, variant=variant)
+    return gpt2_forward(cfg, p, ids, use_pallas=use_pallas, variant=variant)
+
+
+# ---------------------------------------------------------------------
+# Per-op entry points for AOT lowering (the artifacts the Rust runtime
+# executes at P1's plaintext steps). Shapes are fixed per model config by
+# aot.py; all use the Pallas kernels.
+# ---------------------------------------------------------------------
+
+
+def op_softmax(x):
+    return (sm_k.softmax_rows(x),)
+
+
+def op_gelu(x):
+    return (gelu_k.gelu(x),)
+
+
+def op_tanh(x):
+    return (gelu_k.tanh(x),)
+
+
+def op_layernorm(x, gamma, beta):
+    return (ln_k.layernorm_rows(x, gamma, beta, eps=LN_EPS),)
+
+
+def op_linear(x, w, b):
+    return (mm_k.linear(x, w, b),)
+
+
+def op_ring_matmul(a, b):
+    from .kernels import ring_matmul as rm_k
+
+    return (rm_k.ring_matmul(a, b),)

@@ -1,0 +1,318 @@
+"""Build-time training of the tiny models (accuracy & attack experiments).
+
+Trains, on the synthetic datasets from data_gen.py:
+  * bert-tiny classifiers/regressors for each GLUE-like task
+  * gpt2-tiny language models for each Wikitext-like corpus
+  * MPCFormer / SecFormer *substituted* variants, fine-tuned from the exact
+    checkpoint (the paper's "w" rows; the "w/o" rows evaluate the exact
+    checkpoint under the substituted forward with no retraining)
+
+Weights are exported in the CTWB format the Rust side reads:
+  artifacts/weights/<tag>/manifest.json + weights.bin (LE f32, row-major)
+plus artifacts/weights/metrics.json recording plaintext/variant quality
+(the python-side half of Table 3; the Rust side recomputes the Centaur and
+baseline numbers through the actual protocols).
+
+Pure JAX (no optax offline): Adam implemented inline.
+"""
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .configs import CONFIGS, ModelConfig
+
+# ---------------------------------------------------------------------
+# Adam (manual)
+# ---------------------------------------------------------------------
+
+
+def adam_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    new_m, new_v, new_p = {}, {}, {}
+    for k in params:
+        m = b1 * state["m"][k] + (1 - b1) * grads[k]
+        v = b2 * state["v"][k] + (1 - b2) * grads[k] ** 2
+        mhat = m / (1 - b1**t)
+        vhat = v / (1 - b2**t)
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_m[k], new_v[k] = m, v
+    return new_p, {"m": new_m, "v": new_v, "t": t}
+
+
+# ---------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------
+
+
+def cls_loss_fn(cfg: ModelConfig, variant: str):
+    fwd = jax.vmap(lambda p, x: model.bert_forward(cfg, p, x, variant=variant), in_axes=(None, 0))
+
+    def loss(p, xs, ys):
+        logits = fwd(p, xs)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, ys[:, None], axis=-1))
+
+    return fwd, loss
+
+
+def reg_loss_fn(cfg: ModelConfig, variant: str):
+    fwd = jax.vmap(lambda p, x: model.bert_forward(cfg, p, x, variant=variant), in_axes=(None, 0))
+
+    def loss(p, xs, ys):
+        pred = fwd(p, xs)[:, 0]
+        return jnp.mean((pred - ys) ** 2)
+
+    return fwd, loss
+
+
+def lm_loss_fn(cfg: ModelConfig, variant: str):
+    fwd = jax.vmap(lambda p, x: model.gpt2_forward(cfg, p, x, variant=variant), in_axes=(None, 0))
+
+    def loss(p, xs, pad_id=0):
+        logits = fwd(p, xs)[:, :-1, :]
+        targets = xs[:, 1:]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        mask = (targets != pad_id).astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    return fwd, loss
+
+
+# ---------------------------------------------------------------------
+# Metrics (match the paper's per-task choices where meaningful)
+# ---------------------------------------------------------------------
+
+
+def accuracy(fwd, p, xs, ys, bs=64):
+    hits, n = 0, 0
+    for i in range(0, len(xs), bs):
+        logits = fwd(p, xs[i : i + bs])
+        hits += int(jnp.sum(jnp.argmax(logits, -1) == ys[i : i + bs]))
+        n += len(xs[i : i + bs])
+    return 100.0 * hits / n
+
+
+def f1_score(fwd, p, xs, ys, bs=64):
+    tp = fp = fn = 0
+    for i in range(0, len(xs), bs):
+        pred = np.array(jnp.argmax(fwd(p, xs[i : i + bs]), -1))
+        y = np.array(ys[i : i + bs])
+        tp += int(((pred == 1) & (y == 1)).sum())
+        fp += int(((pred == 1) & (y == 0)).sum())
+        fn += int(((pred == 0) & (y == 1)).sum())
+    prec = tp / max(1, tp + fp)
+    rec = tp / max(1, tp + fn)
+    return 100.0 * 2 * prec * rec / max(1e-9, prec + rec)
+
+
+def matthews(fwd, p, xs, ys, bs=64):
+    tp = fp = fn = tn = 0
+    for i in range(0, len(xs), bs):
+        pred = np.array(jnp.argmax(fwd(p, xs[i : i + bs]), -1))
+        y = np.array(ys[i : i + bs])
+        tp += int(((pred == 1) & (y == 1)).sum())
+        fp += int(((pred == 1) & (y == 0)).sum())
+        fn += int(((pred == 0) & (y == 1)).sum())
+        tn += int(((pred == 0) & (y == 0)).sum())
+    denom = np.sqrt(float((tp + fp) * (tp + fn) * (tn + fp) * (tn + fn)))
+    return 100.0 * (tp * tn - fp * fn) / max(denom, 1e-9)
+
+
+def pearson_spearman(fwd, p, xs, ys, bs=64):
+    preds = []
+    for i in range(0, len(xs), bs):
+        preds.append(np.array(fwd(p, xs[i : i + bs])[:, 0]))
+    pred = np.concatenate(preds)
+    y = np.array(ys)
+    pearson = np.corrcoef(pred, y)[0, 1]
+    ranks = lambda a: np.argsort(np.argsort(a))
+    spearman = np.corrcoef(ranks(pred), ranks(y))[0, 1]
+    return 100.0 * (pearson + spearman) / 2.0
+
+
+TASK_METRIC = {"qnli": accuracy, "cola": matthews, "stsb": pearson_spearman, "mrpc": f1_score, "rte": accuracy}
+
+
+def perplexity(fwd, p, xs, bs=64, pad_id=0):
+    tot, cnt = 0.0, 0.0
+    for i in range(0, len(xs), bs):
+        x = xs[i : i + bs]
+        logits = fwd(p, x)[:, :-1, :]
+        targets = x[:, 1:]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        mask = (targets != pad_id).astype(jnp.float32)
+        tot += float(jnp.sum(nll * mask))
+        cnt += float(jnp.sum(mask))
+    return float(np.exp(tot / max(cnt, 1.0)))
+
+
+# ---------------------------------------------------------------------
+# CTWB export (rust/src/model/weights.rs is the reader)
+# ---------------------------------------------------------------------
+
+
+def export_ctwb(params: dict, cfg: ModelConfig, tag: str, out_root: str, extra=None):
+    out_dir = os.path.join(out_root, tag)
+    os.makedirs(out_dir, exist_ok=True)
+    tensors, blob = [], bytearray()
+    offset = 0
+    for name in sorted(params):
+        arr = np.asarray(params[name], dtype=np.float32)
+        rows, cols = (1, arr.shape[0]) if arr.ndim == 1 else arr.shape
+        tensors.append({"name": name, "rows": int(rows), "cols": int(cols), "offset": offset})
+        blob += arr.tobytes()  # little-endian f32 row-major
+        offset += arr.size
+    manifest = {
+        "tag": tag,
+        "model": cfg.name,
+        "kind": cfg.kind,
+        "vocab": cfg.vocab,
+        "n_ctx": cfg.n_ctx,
+        "d": cfg.d,
+        "h": cfg.h,
+        "layers": cfg.layers,
+        "k": cfg.k,
+        "n_classes": cfg.n_classes,
+        "tensors": tensors,
+    }
+    if extra:
+        manifest.update(extra)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        f.write(bytes(blob))
+
+
+# ---------------------------------------------------------------------
+# Training loops
+# ---------------------------------------------------------------------
+
+
+def train(cfg, params, loss, xs, ys, steps, bs, lr, seed, log_tag):
+    state = adam_init(params)
+    step_fn = jax.jit(
+        lambda p, s, x, y: (lambda l, g: (l, *adam_update(p, g, s, lr)))(
+            *jax.value_and_grad(loss)(p, x, y)
+        )
+    )
+    rng = np.random.default_rng(seed)
+    n = len(xs)
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, n, bs)
+        x = xs[idx]
+        y = ys[idx] if ys is not None else None
+        if ys is None:
+            l, params, state = jax.jit(
+                lambda p, s, x: (lambda l, g: (l, *adam_update(p, g, s, lr)))(
+                    *jax.value_and_grad(lambda pp, xx: loss(pp, xx))(p, x)
+                )
+            )(params, state, x)
+        else:
+            l, params, state = step_fn(params, state, x, y)
+        if step % max(1, steps // 5) == 0:
+            print(f"    [{log_tag}] step {step:4d} loss {float(l):.4f} ({time.time()-t0:.0f}s)")
+    return params
+
+
+def load_task(data_dir, task):
+    with open(os.path.join(data_dir, f"task_{task}.json")) as f:
+        doc = json.load(f)
+    to = lambda split: (
+        jnp.array(doc[split]["ids"], jnp.int32),
+        jnp.array(doc[split]["labels"], jnp.float32 if doc["type"] == "reg" else jnp.int32),
+    )
+    return doc, to("train"), to("test")
+
+
+def run_bert(task, data_dir, out_root, steps, metrics):
+    doc, (xtr, ytr), (xte, yte) = load_task(data_dir, task)
+    cfg = ModelConfig(**{**CONFIGS["bert-tiny"].__dict__, "n_classes": doc["n_classes"]})
+    params = model.init_params(cfg, jax.random.PRNGKey(hash(task) % 2**31))
+    mk_loss = reg_loss_fn if doc["type"] == "reg" else cls_loss_fn
+    metric = TASK_METRIC[task]
+
+    fwd, loss = mk_loss(cfg, "exact")
+    params = train(cfg, params, loss, xtr, ytr, steps, 32, 1e-3, 1, f"bert/{task}")
+    score = metric(fwd, params, xte, yte)
+    print(f"  bert-tiny {task}: plaintext {score:.1f}")
+    export_ctwb(params, cfg, f"bert-tiny-{task}", out_root, {"task": task, "type": doc["type"]})
+    metrics.setdefault(task, {})["plaintext"] = score
+
+    # substituted variants: "w/o" = no retraining; "w" = brief fine-tune
+    for variant in ["mpcformer", "secformer"]:
+        vfwd, vloss = mk_loss(cfg, variant)
+        metrics[task][f"{variant}_wo"] = metric(vfwd, params, xte, yte)
+        vparams = train(cfg, dict(params), vloss, xtr, ytr, max(steps // 2, 50), 32, 5e-4, 2, f"{variant}/{task}")
+        score_v = metric(vfwd, vparams, xte, yte)
+        metrics[task][variant] = score_v
+        export_ctwb(vparams, cfg, f"bert-tiny-{task}-{variant}", out_root, {"task": task, "variant": variant})
+        print(f"  bert-tiny {task}: {variant} w/o {metrics[task][f'{variant}_wo']:.1f} | w {score_v:.1f}")
+
+
+def run_gpt(corpus, data_dir, out_root, steps, metrics):
+    with open(os.path.join(data_dir, f"lm_{corpus}.json")) as f:
+        doc = json.load(f)
+    xtr = jnp.array(doc["train"], jnp.int32)
+    xte = jnp.array(doc["test"], jnp.int32)
+    cfg = CONFIGS["gpt2-tiny"]
+    params = model.init_params(cfg, jax.random.PRNGKey(hash(corpus) % 2**31))
+    fwd, loss = lm_loss_fn(cfg, "exact")
+    params = train(cfg, params, lambda p, x, _y: loss(p, x), xtr, jnp.zeros(len(xtr), jnp.int32), steps, 16, 1e-3, 3, f"gpt/{corpus}")
+    ppl = perplexity(fwd, params, xte)
+    print(f"  gpt2-tiny {corpus}: plaintext ppl {ppl:.1f}")
+    export_ctwb(params, cfg, f"gpt2-tiny-{corpus}", out_root, {"corpus": corpus})
+    metrics.setdefault(corpus, {})["plaintext_ppl"] = ppl
+
+    for variant in ["mpcformer", "secformer"]:
+        vfwd, vloss = lm_loss_fn(cfg, variant)
+        metrics[corpus][f"{variant}_wo_ppl"] = perplexity(vfwd, params, xte)
+        vparams = train(
+            cfg, dict(params), lambda p, x, _y: vloss(p, x), xtr, jnp.zeros(len(xtr), jnp.int32),
+            max(steps // 2, 50), 16, 5e-4, 4, f"{variant}/{corpus}"
+        )
+        ppl_v = perplexity(vfwd, vparams, xte)
+        metrics[corpus][f"{variant}_ppl"] = ppl_v
+        export_ctwb(vparams, cfg, f"gpt2-tiny-{corpus}-{variant}", out_root, {"corpus": corpus, "variant": variant})
+        print(f"  gpt2-tiny {corpus}: {variant} w/o {metrics[corpus][f'{variant}_wo_ppl']:.1f} | w {ppl_v:.1f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/weights")
+    ap.add_argument("--data", default="../artifacts/data")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--tasks", default="qnli,cola,stsb,mrpc,rte")
+    ap.add_argument("--corpora", default="wikitext2,wikitext103")
+    args = ap.parse_args()
+    out_root = os.path.abspath(args.out)
+    data_dir = os.path.abspath(args.data)
+    os.makedirs(out_root, exist_ok=True)
+
+    metrics = {}
+    for task in [t for t in args.tasks.split(",") if t]:
+        run_bert(task, data_dir, out_root, args.steps, metrics)
+    for corpus in [c for c in args.corpora.split(",") if c]:
+        run_gpt(corpus, data_dir, out_root, args.steps, metrics)
+    with open(os.path.join(out_root, "metrics.json"), "w") as f:
+        json.dump(metrics, f, indent=2)
+    print("metrics:", json.dumps(metrics, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""AOT path: HLO text generation and manifest structure."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.configs import CONFIGS
+
+
+def test_hlo_text_for_softmax():
+    text = aot.to_hlo_text(aot.model.op_softmax, aot.f32(8, 16))
+    assert text.startswith("HloModule"), text[:80]
+    assert "f32[8,16]" in text
+
+
+def test_hlo_text_for_ring_matmul():
+    text = aot.to_hlo_text(aot.model.op_ring_matmul, aot.s64(8, 8), aot.s64(8, 8))
+    assert text.startswith("HloModule")
+    assert "s64[8,8]" in text
+
+
+def test_model_entries_cover_centaur_plaintext_ops():
+    cfg = CONFIGS["bert-tiny"]
+    ops = {e[0] for e in aot.model_entries(cfg)}
+    assert ops == {"softmax", "gelu", "layernorm", "tanh"}
+    gpt = CONFIGS["gpt2-tiny"]
+    assert {e[0] for e in aot.model_entries(gpt)} == {"softmax", "gelu", "layernorm"}
+
+
+def test_entry_shapes_match_config():
+    cfg = CONFIGS["bert-tiny"]
+    for op, _fn, _specs, shape in aot.model_entries(cfg):
+        if op == "softmax":
+            assert shape == (cfg.h * cfg.n_ctx, cfg.n_ctx)
+        elif op == "gelu":
+            assert shape == (cfg.n_ctx, cfg.k)
+        elif op == "layernorm":
+            assert shape == (cfg.n_ctx, cfg.d)
+        elif op == "tanh":
+            assert shape == (1, cfg.d)
+
+
+def test_build_model_artifacts_roundtrip(tmp_path):
+    cfg = CONFIGS["bert-tiny"]
+    manifest = aot.build_model_artifacts(cfg, str(tmp_path))
+    mpath = tmp_path / cfg.name / "manifest.json"
+    assert mpath.exists()
+    loaded = json.loads(mpath.read_text())
+    assert loaded == manifest
+    for op in manifest["ops"]:
+        f = tmp_path / cfg.name / op["file"]
+        assert f.exists()
+        assert f.read_text().startswith("HloModule")
+
+
+@pytest.mark.slow
+def test_build_ring_artifacts(tmp_path):
+    entries = aot.build_ring_artifacts(str(tmp_path))
+    assert len(entries) == len(aot.RING_SHAPES)
+    for e in entries:
+        assert (tmp_path / "ring" / e["file"]).exists()

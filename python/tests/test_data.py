@@ -1,0 +1,75 @@
+"""Synthetic data generator invariants."""
+
+import random
+
+from compile import data_gen as dg
+
+
+def test_vocab_special_tokens():
+    assert dg.VOCAB[dg.PAD] == "[PAD]"
+    assert dg.VOCAB[dg.CLS] == "[CLS]"
+    assert dg.VOCAB[dg.SEP] == "[SEP]"
+    assert dg.VOCAB[dg.UNK] == "[UNK]"
+    assert len(dg.VOCAB) == len(set(dg.VOCAB)), "duplicate vocab entries"
+    assert len(dg.VOCAB) <= 512, "must fit the tiny-model vocab"
+
+
+def test_all_template_words_in_vocab():
+    rng = random.Random(0)
+    for _ in range(200):
+        for tok in dg.sentence(rng) + dg.news_sentence(rng):
+            assert tok in dg.W2I, f"{tok!r} missing from vocab"
+
+
+def test_sequences_padded_to_len():
+    rng = random.Random(1)
+    for gen, _t, _n in dg.TASKS.values():
+        xs, ys = gen(rng, 20)
+        assert len(xs) == len(ys) == 20
+        for x in xs:
+            assert len(x) == dg.SEQ_LEN
+            assert all(0 <= t < len(dg.VOCAB) for t in x)
+
+
+def test_qnli_labels_follow_rule():
+    rng = random.Random(2)
+    xs, ys = dg.gen_qnli(rng, 100)
+    # decode and re-check the rule for positives
+    for x, y in zip(xs, ys):
+        toks = [dg.VOCAB[i] for i in x if i not in (dg.PAD,)]
+        sep = toks.index("[SEP]")
+        s1, s2 = toks[1:sep], toks[sep + 1 :]
+        c1 = set(dg.cities_in(s1))
+        overlap = bool(c1 & set(dg.cities_in(s2)))
+        if y == 1:
+            assert overlap, f"positive without overlap: {toks}"
+
+
+def test_stsb_scores_in_range():
+    rng = random.Random(3)
+    _xs, ys = dg.gen_stsb(rng, 100)
+    assert all(0.0 <= y <= 5.0 for y in ys)
+    assert len({round(y, 1) for y in ys}) > 3, "scores should vary"
+
+
+def test_cola_balanced():
+    rng = random.Random(4)
+    _xs, ys = dg.gen_cola(rng, 400)
+    pos = sum(ys)
+    assert 120 < pos < 280
+
+
+def test_lm_corpus_shapes():
+    rng = random.Random(5)
+    seqs = dg.gen_lm_corpus(rng, 50)
+    assert len(seqs) == 50
+    for s in seqs:
+        assert len(s) == dg.SEQ_LEN
+        assert s[0] == dg.CLS
+
+
+def test_aux_differs_from_private_templates():
+    rng = random.Random(6)
+    private = {" ".join(dg.sentence(rng)) for _ in range(50)}
+    aux = {" ".join(dg.news_sentence(rng)) for _ in range(50)}
+    assert not private & aux

@@ -1,0 +1,156 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref — the core
+correctness signal of the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import common, gelu, layernorm, matmul, ref, ring_matmul, softmax
+
+# Shapes: multiples that exercise 1-to-many grid steps without being slow.
+dims = st.sampled_from([1, 2, 4, 8, 16, 24, 32, 64])
+float_dtypes = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+class TestLinear:
+    @settings(max_examples=20, deadline=None)
+    @given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**30))
+    def test_matches_ref(self, m, k, n, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        x = rand(k1, (m, k))
+        w = rand(k2, (n, k), scale=0.3)
+        b = rand(k3, (n,))
+        assert_allclose(np.array(matmul.linear(x, w, b)), np.array(ref.linear(x, w, b)), rtol=1e-5, atol=1e-5)
+
+    def test_explicit_tiles(self):
+        key = jax.random.PRNGKey(0)
+        x = rand(key, (64, 128))
+        w = rand(key, (96, 128), scale=0.1)
+        b = jnp.zeros(96, jnp.float32)
+        got = matmul.linear(x, w, b, bm=16, bn=32, bk=64)
+        assert_allclose(np.array(got), np.array(ref.linear(x, w, b)), rtol=1e-4, atol=1e-4)
+
+    def test_rejects_bad_inner_dim(self):
+        with pytest.raises(AssertionError):
+            matmul.linear(jnp.zeros((4, 8)), jnp.zeros((4, 9)), jnp.zeros(4))
+
+
+class TestSoftmax:
+    @settings(max_examples=20, deadline=None)
+    @given(m=dims, n=dims, seed=st.integers(0, 2**30), dtype=float_dtypes)
+    def test_matches_ref(self, m, n, seed, dtype):
+        x = rand(jax.random.PRNGKey(seed), (m, n), dtype, scale=4.0)
+        got = np.array(softmax.softmax_rows(x), np.float32)
+        want = np.array(ref.softmax_rows(x), np.float32)
+        assert_allclose(got, want, rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-3)
+
+    def test_rows_sum_to_one(self):
+        x = rand(jax.random.PRNGKey(1), (16, 32), scale=10.0)
+        s = np.array(softmax.softmax_rows(x)).sum(-1)
+        assert_allclose(s, np.ones(16), rtol=1e-5)
+
+    def test_extreme_values_stable(self):
+        x = jnp.array([[1e4, -1e4, 0.0, 5.0] * 8])
+        out = np.array(softmax.softmax_rows(x))
+        assert np.isfinite(out).all()
+
+
+class TestGelu:
+    @settings(max_examples=20, deadline=None)
+    @given(m=dims, n=dims, seed=st.integers(0, 2**30), dtype=float_dtypes)
+    def test_matches_ref(self, m, n, seed, dtype):
+        x = rand(jax.random.PRNGKey(seed), (m, n), dtype, scale=3.0)
+        got = np.array(gelu.gelu(x), np.float32)
+        want = np.array(ref.gelu(x), np.float32)
+        if dtype == jnp.bfloat16:
+            # both sides round to bf16 at different points; bound abs error
+            assert_allclose(got, want, rtol=0.08, atol=0.04)
+        else:
+            assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+    def test_known_values(self):
+        x = jnp.array([[0.0, 1.0, -1.0, 2.0]])
+        got = np.array(gelu.gelu(x))[0]
+        assert_allclose(got, [0.0, 0.84134, -0.15866, 1.95450], atol=1e-4)
+
+    def test_tanh_kernel(self):
+        x = rand(jax.random.PRNGKey(3), (8, 16), scale=2.0)
+        assert_allclose(np.array(gelu.tanh(x)), np.tanh(np.array(x)), rtol=1e-5, atol=1e-6)
+
+
+class TestLayerNorm:
+    @settings(max_examples=20, deadline=None)
+    @given(m=dims, n=st.sampled_from([4, 8, 16, 32, 64]), seed=st.integers(0, 2**30))
+    def test_matches_ref(self, m, n, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        x = rand(k1, (m, n), scale=2.0)
+        g = rand(k2, (n,)) + 1.0
+        b = rand(k3, (n,))
+        assert_allclose(
+            np.array(layernorm.layernorm_rows(x, g, b)),
+            np.array(ref.layernorm_rows(x, g, b)),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+    def test_zero_mean_unit_var(self):
+        x = rand(jax.random.PRNGKey(5), (4, 64), scale=7.0)
+        out = np.array(layernorm.layernorm_rows(x, jnp.ones(64), jnp.zeros(64)))
+        assert_allclose(out.mean(-1), np.zeros(4), atol=1e-5)
+        assert_allclose(out.std(-1), np.ones(4), atol=1e-2)
+
+
+class TestRingMatmul:
+    @settings(max_examples=15, deadline=None)
+    @given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**30))
+    def test_matches_ref_and_wraps(self, m, k, n, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        a = jax.random.randint(k1, (m, k), -(2**62), 2**62, jnp.int64)
+        b = jax.random.randint(k2, (k, n), -(2**62), 2**62, jnp.int64)
+        got = np.array(ring_matmul.ring_matmul(a, b), np.int64)
+        want = np.array(ref.ring_matmul(a, b), np.int64)
+        assert (got == want).all()
+
+    def test_share_distributivity(self):
+        # A @ (X0 + X1) == A@X0 + A@X1 mod 2^64 — the Pi_ScalMul identity.
+        key = jax.random.PRNGKey(9)
+        ks = jax.random.split(key, 3)
+        a = jax.random.randint(ks[0], (8, 16), -(2**62), 2**62, jnp.int64)
+        x0 = jax.random.randint(ks[1], (16, 8), -(2**62), 2**62, jnp.int64)
+        x1 = jax.random.randint(ks[2], (16, 8), -(2**62), 2**62, jnp.int64)
+        lhs = np.array(ring_matmul.ring_matmul(a, x0 + x1), np.uint64)
+        rhs = np.array(ring_matmul.ring_matmul(a, x0), np.uint64) + np.array(
+            ring_matmul.ring_matmul(a, x1), np.uint64
+        )
+        assert (lhs == rhs).all()
+
+
+class TestCommon:
+    @settings(max_examples=50, deadline=None)
+    @given(dim=st.integers(1, 512), target=st.integers(1, 128))
+    def test_pick_block_divides(self, dim, target):
+        b = common.pick_block(dim, target)
+        assert 1 <= b <= min(dim, target)
+        assert dim % b == 0
+
+    def test_vmem_estimate(self):
+        # 128x128x128 f32 tiles: 3 * 64KiB = 192KiB, within the 16 MiB VMEM
+        assert common.vmem_bytes_matmul(128, 128, 128) == 3 * 128 * 128 * 4
+        assert common.vmem_bytes_matmul(128, 128, 128) < 16 * 2**20
+
+    def test_mxu_estimate_full_tiles(self):
+        assert common.mxu_utilization_estimate(768, 768, 768, 128, 128, 128) == 1.0
+        assert common.mxu_utilization_estimate(32, 32, 32, 32, 32, 32) == (32 / 128) ** 3

@@ -1,0 +1,106 @@
+"""L2 correctness: model forward shapes, pallas==ref equality, variants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.configs import CONFIGS
+
+
+@pytest.fixture(scope="module")
+def bert():
+    cfg = CONFIGS["bert-tiny"]
+    return cfg, model.init_params(cfg, jax.random.PRNGKey(1))
+
+
+@pytest.fixture(scope="module")
+def gpt():
+    cfg = CONFIGS["gpt2-tiny"]
+    return cfg, model.init_params(cfg, jax.random.PRNGKey(2))
+
+
+def test_param_inventory(bert):
+    cfg, p = bert
+    assert p["emb.word"].shape == (cfg.vocab, cfg.d)
+    assert p["layer0.ffn.w1"].shape == (cfg.k, cfg.d)
+    assert p["layer1.attn.wo"].shape == (cfg.d, cfg.d)
+    assert p["cls.w"].shape == (cfg.n_classes, cfg.d)
+    # 4 emb + 16/layer + 4 head tensors
+    assert len(p) == 4 + 16 * cfg.layers + 4
+
+
+def test_bert_pallas_matches_ref(bert):
+    cfg, p = bert
+    ids = jnp.arange(cfg.n_ctx, dtype=jnp.int32) % cfg.vocab
+    a = model.forward(cfg, p, ids, use_pallas=False)
+    b = model.forward(cfg, p, ids, use_pallas=True)
+    assert a.shape == (cfg.n_classes,)
+    assert_allclose(np.array(a), np.array(b), rtol=1e-4, atol=1e-5)
+
+
+def test_gpt_pallas_matches_ref(gpt):
+    cfg, p = gpt
+    ids = (jnp.arange(cfg.n_ctx, dtype=jnp.int32) * 7) % cfg.vocab
+    a = model.forward(cfg, p, ids, use_pallas=False)
+    b = model.forward(cfg, p, ids, use_pallas=True)
+    assert a.shape == (cfg.n_ctx, cfg.vocab)
+    assert_allclose(np.array(a), np.array(b), rtol=1e-4, atol=1e-4)
+
+
+def test_causal_mask_blocks_future(gpt):
+    cfg, p = gpt
+    ids = jnp.zeros(cfg.n_ctx, jnp.int32)
+    base = model.forward(cfg, p, ids)
+    # changing a future token must not affect earlier positions' logits
+    ids2 = ids.at[-1].set(5)
+    pert = model.forward(cfg, p, ids2)
+    assert_allclose(np.array(base[:-1]), np.array(pert[:-1]), rtol=1e-5, atol=1e-6)
+    assert not np.allclose(np.array(base[-1]), np.array(pert[-1]))
+
+
+def test_bert_not_causal(bert):
+    cfg, p = bert
+    ids = jnp.zeros(cfg.n_ctx, jnp.int32)
+    h1 = model.backbone(cfg, p, ids)
+    h2 = model.backbone(cfg, p, ids.at[-1].set(9))
+    # bidirectional attention: early positions DO change
+    assert not np.allclose(np.array(h1[0]), np.array(h2[0]))
+
+
+def test_variants_differ_from_exact(bert):
+    cfg, p = bert
+    ids = (jnp.arange(cfg.n_ctx, dtype=jnp.int32) * 3) % cfg.vocab
+    exact = np.array(model.forward(cfg, p, ids, variant="exact"))
+    mpcf = np.array(model.forward(cfg, p, ids, variant="mpcformer"))
+    secf = np.array(model.forward(cfg, p, ids, variant="secformer"))
+    assert not np.allclose(exact, mpcf)
+    assert not np.allclose(exact, secf)
+    assert not np.allclose(mpcf, secf)  # gelu substitution differs
+
+
+def test_2quad_is_distribution():
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 16))
+    y = np.array(model.softmax_2quad(x))
+    assert (y >= 0).all()
+    assert_allclose(y.sum(-1), np.ones(8), rtol=1e-5)
+
+
+def test_gelu_quad_formula():
+    x = jnp.array([-2.0, 0.0, 1.0, 3.0])
+    got = np.array(model.gelu_quad(x))
+    want = 0.125 * np.array(x) ** 2 + 0.25 * np.array(x) + 0.5
+    assert_allclose(got, want, rtol=1e-6)
+
+
+def test_head_slicing_matches_reshape(bert):
+    """Column-block slicing == reshape-based head split (rust contract)."""
+    cfg, p = bert
+    x = jax.random.normal(jax.random.PRNGKey(4), (cfg.n_ctx, cfg.d))
+    dh = cfg.dh
+    for h in range(cfg.h):
+        a = x[:, h * dh : (h + 1) * dh]
+        b = x.reshape(cfg.n_ctx, cfg.h, dh)[:, h, :]
+        assert np.array_equal(np.array(a), np.array(b))

@@ -1,0 +1,100 @@
+"""Training utilities: Adam step, losses, metrics, CTWB export contract."""
+
+import json
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model, train_tiny as tt
+from compile.configs import CONFIGS, ModelConfig
+
+
+def test_adam_reduces_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = tt.adam_init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = tt.adam_update(params, g, state, 0.1)
+    assert float(loss(params)) < 1e-3
+
+
+def test_cls_loss_decreases_on_tiny_problem():
+    cfg = ModelConfig(**{**CONFIGS["bert-tiny"].__dict__, "layers": 1})
+    p = model.init_params(cfg, jax.random.PRNGKey(0))
+    fwd, loss = tt.cls_loss_fn(cfg, "exact")
+    # label = 1 iff first real token id is even
+    rng = np.random.default_rng(0)
+    xs = jnp.array(rng.integers(4, cfg.vocab, (64, cfg.n_ctx)), jnp.int32)
+    ys = jnp.array(np.array(xs)[:, 1] % 2, jnp.int32)
+    l0 = float(loss(p, xs, ys))
+    state = tt.adam_init(p)
+    step = jax.jit(lambda p, s: (lambda g: tt.adam_update(p, g, s, 1e-3))(jax.grad(loss)(p, xs, ys)))
+    for _ in range(30):
+        p, state = step(p, state)
+    l1 = float(loss(p, xs, ys))
+    assert l1 < l0, f"{l1} !< {l0}"
+
+
+def test_perplexity_of_uniform_model():
+    cfg = ModelConfig(**{**CONFIGS["gpt2-tiny"].__dict__, "layers": 1})
+    p = model.init_params(cfg, jax.random.PRNGKey(1))
+    fwd, _ = tt.lm_loss_fn(cfg, "exact")
+    xs = jnp.ones((8, cfg.n_ctx), jnp.int32) * 7
+    ppl = tt.perplexity(fwd, p, xs)
+    # untrained model ~ uniform over vocab
+    assert 10 < ppl < cfg.vocab * 4
+
+
+def test_metrics_sanity():
+    cfg = ModelConfig(**{**CONFIGS["bert-tiny"].__dict__, "layers": 1})
+    # perfect predictor mock: fwd returns one-hot of label parity
+    fwd = lambda p, xs: jax.nn.one_hot(xs[:, 1] % 2, 2) * 10.0
+    xs = jnp.array(np.random.default_rng(2).integers(4, 100, (50, cfg.n_ctx)), jnp.int32)
+    ys = jnp.array(np.array(xs)[:, 1] % 2, jnp.int32)
+    assert tt.accuracy(fwd, None, xs, ys) == 100.0
+    assert tt.f1_score(fwd, None, xs, ys) == 100.0
+    assert tt.matthews(fwd, None, xs, ys) == 100.0
+
+
+def test_pearson_spearman_perfect_correlation():
+    fwd = lambda p, xs: jnp.array(xs[:, 1:2], jnp.float32)
+    xs = jnp.array(np.random.default_rng(3).integers(0, 50, (40, 8)), jnp.int32)
+    ys = np.array(xs)[:, 1].astype(np.float32)
+    score = tt.pearson_spearman(fwd, None, xs, ys)
+    assert score > 99.9
+
+
+def test_ctwb_export_roundtrip(tmp_path):
+    cfg = ModelConfig(**{**CONFIGS["bert-tiny"].__dict__, "layers": 1})
+    p = model.init_params(cfg, jax.random.PRNGKey(4))
+    tt.export_ctwb(p, cfg, "unit-test", str(tmp_path))
+    man = json.loads((tmp_path / "unit-test" / "manifest.json").read_text())
+    blob = (tmp_path / "unit-test" / "weights.bin").read_bytes()
+    assert man["model"] == cfg.name
+    names = [t["name"] for t in man["tensors"]]
+    assert names == sorted(names), "tensors must be name-sorted (rust contract)"
+    total = sum(t["rows"] * t["cols"] for t in man["tensors"])
+    assert len(blob) == 4 * total
+    # spot-check one tensor's bytes
+    t = next(t for t in man["tensors"] if t["name"] == "emb.word")
+    off = t["offset"] * 4
+    vals = struct.unpack_from(f"<{t['rows']*t['cols']}f", blob, off)
+    assert_allclose(
+        np.array(vals).reshape(t["rows"], t["cols"]),
+        np.asarray(p["emb.word"], np.float32),
+        rtol=0,
+        atol=0,
+    )
+
+
+def test_vector_tensors_exported_as_single_row(tmp_path):
+    cfg = ModelConfig(**{**CONFIGS["bert-tiny"].__dict__, "layers": 1})
+    p = model.init_params(cfg, jax.random.PRNGKey(5))
+    tt.export_ctwb(p, cfg, "vec-test", str(tmp_path))
+    man = json.loads((tmp_path / "vec-test" / "manifest.json").read_text())
+    t = next(t for t in man["tensors"] if t["name"] == "emb.ln.gamma")
+    assert t["rows"] == 1 and t["cols"] == cfg.d

@@ -1,0 +1,106 @@
+//! BRE — continuous-space inversion (Chen et al. 2024 flavor).
+//!
+//! The attacker builds per-token *prototypes* in the intermediate feature
+//! space from its auxiliary corpus (mean feature vector over occurrences),
+//! then decodes each observed position to the nearest prototype by cosine
+//! similarity — embedding-space inversion without the discrete search.
+
+use std::collections::BTreeMap;
+
+use crate::model::{ModelConfig, ModelWeights};
+use crate::tensor::FloatTensor;
+
+use super::{featurize, plaintext_intermediate, TargetOp};
+
+/// Prototype table for one target op.
+pub struct BreModel {
+    op: TargetOp,
+    /// token id → mean feature vector.
+    protos: BTreeMap<u32, Vec<f32>>,
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+impl BreModel {
+    /// Build prototypes from the auxiliary corpus.
+    pub fn train(cfg: &ModelConfig, w: &ModelWeights, aux: &[Vec<u32>], op: TargetOp) -> BreModel {
+        let n = cfg.n_ctx;
+        let mut sums: BTreeMap<u32, (Vec<f64>, usize)> = BTreeMap::new();
+        for sent in aux {
+            let obs = plaintext_intermediate(cfg, w, sent, op);
+            let f = featurize(op, &obs, n, cfg.h);
+            for r in 0..n {
+                let entry = sums.entry(sent[r]).or_insert_with(|| (vec![0.0; f.cols()], 0));
+                for (acc, &v) in entry.0.iter_mut().zip(f.row(r)) {
+                    *acc += v as f64;
+                }
+                entry.1 += 1;
+            }
+        }
+        let protos = sums
+            .into_iter()
+            .map(|(tok, (sum, cnt))| (tok, sum.iter().map(|&s| (s / cnt as f64) as f32).collect()))
+            .collect();
+        BreModel { op, protos }
+    }
+
+    /// Decode an observation to tokens via nearest prototype.
+    pub fn invert(&self, obs: &FloatTensor, n: usize, h: usize) -> Vec<u32> {
+        let f = featurize(self.op, obs, n, h);
+        (0..n)
+            .map(|r| {
+                self.protos
+                    .iter()
+                    .max_by(|(_, a), (_, b)| {
+                        cosine(f.row(r), a).partial_cmp(&cosine(f.row(r), b)).unwrap()
+                    })
+                    .map(|(&tok, _)| tok)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attacks::rouge::rouge_l_f1;
+    use crate::attacks::{content_tokens, random_like};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bre_prototype_separation() {
+        let mut cfg = ModelConfig::bert_tiny();
+        cfg.layers = 1;
+        cfg.n_ctx = 10;
+        cfg.vocab = 48;
+        let w = ModelWeights::random(&cfg, 131);
+        let mut rng = Rng::new(132);
+        let sent = |rng: &mut Rng| -> Vec<u32> {
+            (0..cfg.n_ctx).map(|_| 4 + rng.below(cfg.vocab - 4) as u32).collect()
+        };
+        let aux: Vec<Vec<u32>> = (0..120).map(|_| sent(&mut rng)).collect();
+        let model = BreModel::train(&cfg, &w, &aux, TargetOp::O6);
+
+        let victim = sent(&mut rng);
+        let obs = plaintext_intermediate(&cfg, &w, &victim, TargetOp::O6);
+        let rec = model.invert(&obs, cfg.n_ctx, cfg.h);
+        let f1_plain = rouge_l_f1(&content_tokens(&victim), &content_tokens(&rec));
+        let rec_r = model.invert(&random_like(&obs, &mut rng), cfg.n_ctx, cfg.h);
+        let f1_rand = rouge_l_f1(&content_tokens(&victim), &content_tokens(&rec_r));
+        assert!(f1_plain > f1_rand, "plaintext {f1_plain} !> random {f1_rand}");
+        assert!(f1_plain > 30.0, "prototype recovery too weak: {f1_plain}");
+    }
+}

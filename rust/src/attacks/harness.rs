@@ -1,0 +1,217 @@
+//! The Table 2/4 experiment runner: attacks × conditions × targets with
+//! multi-seed aggregation, plus the Fig. 4/9 text-recovery examples.
+
+use std::collections::BTreeMap;
+
+use crate::engine::{CentaurEngine, EngineOptions};
+use crate::model::{ModelConfig, ModelWeights};
+use crate::net::NetworkProfile;
+use crate::runtime::NativeBackend;
+use crate::tensor::FloatTensor;
+use crate::util::rng::Rng;
+use crate::Result;
+
+use super::bre::BreModel;
+use super::eia::{eia_invert, EiaConfig};
+use super::rouge::{mean_std, rouge_l_f1};
+use super::sip::SipModel;
+use super::{content_tokens, plaintext_intermediate, random_like, Condition, TargetOp};
+
+/// Attack family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AttackKind {
+    Sip,
+    Eia,
+    Bre,
+}
+
+impl AttackKind {
+    pub const ALL: [AttackKind; 3] = [AttackKind::Sip, AttackKind::Eia, AttackKind::Bre];
+    pub fn name(self) -> &'static str {
+        match self {
+            AttackKind::Sip => "SIP",
+            AttackKind::Eia => "EIA",
+            AttackKind::Bre => "BRE",
+        }
+    }
+}
+
+/// Experiment configuration.
+pub struct AttackExperiment<'a> {
+    pub cfg: &'a ModelConfig,
+    pub weights: &'a ModelWeights,
+    /// Auxiliary (attacker) corpus.
+    pub aux: &'a [Vec<u32>],
+    /// Private victim sentences.
+    pub private: &'a [Vec<u32>],
+    pub seeds: u64,
+    /// Victim sentences used per seed (per paper: 4×20 batches; reduced
+    /// here — configurable from the CLI).
+    pub sentences: usize,
+    /// EIA uses fewer sentences (it is the expensive attack).
+    pub eia_sentences: usize,
+    pub eia: EiaConfig,
+    /// Aux sentences used to train SIP/BRE.
+    pub aux_train: usize,
+    /// Target ops to attack (default: all four).
+    pub ops: Vec<TargetOp>,
+}
+
+/// One table cell: ROUGE-L F1 mean ± std over seeds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Cell {
+    pub mean: f64,
+    pub std: f64,
+}
+
+/// Result keyed by (attack, condition, target).
+pub type TableResult = BTreeMap<(AttackKind, usize, TargetOp), Cell>;
+
+/// Collect the permuted observations Centaur's P1 actually sees for each
+/// victim sentence (one engine per seed ⇒ fresh permutations).
+fn permuted_observations(
+    cfg: &ModelConfig,
+    w: &ModelWeights,
+    sentences: &[Vec<u32>],
+    seed: u64,
+) -> Result<BTreeMap<TargetOp, Vec<FloatTensor>>> {
+    let mut engine = CentaurEngine::with_backend(
+        cfg,
+        w,
+        Box::new(NativeBackend::new()),
+        EngineOptions { profile: NetworkProfile::lan(), seed, record_views: true, fast_sim: true },
+    )?;
+    let mut out: BTreeMap<TargetOp, Vec<FloatTensor>> = BTreeMap::new();
+    for sent in sentences {
+        engine.infer(sent)?;
+        for (op, label) in [
+            (TargetOp::O1, "O1pi1 layer0"),
+            (TargetOp::O4, "O4+X pi layer0"),
+            (TargetOp::O5, "O5pi2 layer0"),
+            (TargetOp::O6, "O6+L1 pi layer0"),
+        ] {
+            let rec = engine
+                .views
+                .find(label)
+                .and_then(|r| r.tensor.clone())
+                .ok_or_else(|| anyhow::anyhow!("missing view {label}"))?;
+            out.entry(op).or_default().push(rec);
+        }
+    }
+    Ok(out)
+}
+
+/// Run the full attack grid. Returns cells averaged over seeds.
+pub fn run(exp: &AttackExperiment) -> Result<TableResult> {
+    let mut acc: BTreeMap<(AttackKind, usize, TargetOp), Vec<f64>> = BTreeMap::new();
+    for seed_i in 0..exp.seeds {
+        let mut rng = Rng::new(0xA77AC4 ^ seed_i);
+        let victims: Vec<Vec<u32>> =
+            (0..exp.sentences).map(|i| exp.private[(seed_i as usize * exp.sentences + i) % exp.private.len()].clone()).collect();
+        let aux: Vec<Vec<u32>> = exp.aux.iter().take(exp.aux_train).cloned().collect();
+        let permuted = permuted_observations(exp.cfg, exp.weights, &victims, 0x5EED ^ seed_i)?;
+
+        for &op in &exp.ops {
+            // attacker-side models (trained once per op per seed)
+            let sip = SipModel::train(exp.cfg, exp.weights, &aux, op, 1e-2)?;
+            let bre = BreModel::train(exp.cfg, exp.weights, &aux, op);
+
+            for cond in Condition::ALL {
+                let mut scores: BTreeMap<AttackKind, Vec<f64>> = BTreeMap::new();
+                for (vi, victim) in victims.iter().enumerate() {
+                    let obs = match cond {
+                        Condition::Plaintext => plaintext_intermediate(exp.cfg, exp.weights, victim, op),
+                        Condition::Permuted => permuted[&op][vi].clone(),
+                        Condition::Random => {
+                            let plain = plaintext_intermediate(exp.cfg, exp.weights, victim, op);
+                            random_like(&plain, &mut rng)
+                        }
+                    };
+                    let truth = content_tokens(victim);
+                    // SIP
+                    let rec = sip.invert(&obs, exp.cfg.n_ctx, exp.cfg.h);
+                    scores.entry(AttackKind::Sip).or_default().push(rouge_l_f1(&truth, &content_tokens(&rec)));
+                    // BRE
+                    let rec = bre.invert(&obs, exp.cfg.n_ctx, exp.cfg.h);
+                    scores.entry(AttackKind::Bre).or_default().push(rouge_l_f1(&truth, &content_tokens(&rec)));
+                    // EIA (subset of sentences)
+                    if vi < exp.eia_sentences {
+                        let rec = eia_invert(exp.cfg, exp.weights, &obs, op, &exp.eia, &mut rng);
+                        scores.entry(AttackKind::Eia).or_default().push(rouge_l_f1(&truth, &content_tokens(&rec)));
+                    }
+                }
+                for (attack, vals) in scores {
+                    let (m, _) = mean_std(&vals);
+                    acc.entry((attack, cond as usize, op)).or_default().push(m);
+                }
+            }
+        }
+    }
+    Ok(acc
+        .into_iter()
+        .map(|(k, seeds)| {
+            let (mean, std) = mean_std(&seeds);
+            (k, Cell { mean, std })
+        })
+        .collect())
+}
+
+/// A Fig. 4/9-style example: (ground truth text, SIP recovery from
+/// plaintext O1, SIP recovery from permuted O1).
+pub fn recovery_example(
+    cfg: &ModelConfig,
+    w: &ModelWeights,
+    aux: &[Vec<u32>],
+    victim: &[u32],
+    vocab: &crate::data::Vocab,
+    seed: u64,
+) -> Result<(String, String, String)> {
+    let sip = SipModel::train(cfg, w, aux, TargetOp::O1, 1e-2)?;
+    let plain_obs = plaintext_intermediate(cfg, w, victim, TargetOp::O1);
+    let rec_plain = sip.invert(&plain_obs, cfg.n_ctx, cfg.h);
+    let permuted = permuted_observations(cfg, w, std::slice::from_ref(&victim.to_vec()), seed)?;
+    let rec_perm = sip.invert(&permuted[&TargetOp::O1][0], cfg.n_ctx, cfg.h);
+    Ok((vocab.decode(victim), vocab.decode(&rec_plain), vocab.decode(&rec_perm)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mini end-to-end grid: plaintext SIP ≫ permuted SIP ≈ random SIP.
+    #[test]
+    fn grid_shows_permutation_defense() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 141);
+        let mut rng = Rng::new(142);
+        let sent = |rng: &mut Rng| -> Vec<u32> {
+            let mut s: Vec<u32> = vec![1];
+            s.extend((0..20).map(|_| 4 + rng.below(cfg.vocab - 4) as u32));
+            s.push(2);
+            s.resize(cfg.n_ctx, 0);
+            s
+        };
+        let aux: Vec<Vec<u32>> = (0..100).map(|_| sent(&mut rng)).collect();
+        let private: Vec<Vec<u32>> = (0..6).map(|_| sent(&mut rng)).collect();
+        let exp = AttackExperiment {
+            cfg: &cfg,
+            weights: &w,
+            aux: &aux,
+            private: &private,
+            seeds: 1,
+            sentences: 4,
+            eia_sentences: 0, // EIA covered by its own test
+            eia: EiaConfig { candidates: 4, sweeps: 1 },
+            aux_train: 100,
+            ops: vec![TargetOp::O5],
+        };
+        let table = run(&exp).unwrap();
+        let cell = |a: AttackKind, c: Condition, o: TargetOp| table[&(a, c as usize, o)].mean;
+        let plain = cell(AttackKind::Sip, Condition::Plaintext, TargetOp::O5);
+        let perm = cell(AttackKind::Sip, Condition::Permuted, TargetOp::O5);
+        let rand = cell(AttackKind::Sip, Condition::Random, TargetOp::O5);
+        assert!(plain > 35.0, "plaintext SIP too weak: {plain}");
+        assert!(perm < plain / 2.0, "permuted {perm} vs plaintext {plain}");
+        assert!((perm - rand).abs() < 25.0, "permuted {perm} should be near random {rand}");
+    }
+}

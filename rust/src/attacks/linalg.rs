@@ -1,0 +1,141 @@
+//! Small dense linear algebra for the attack models (ridge regression via
+//! Gaussian elimination — feature dims here are ≤ a few hundred).
+
+use crate::tensor::FloatTensor;
+
+/// Solve `A x = b` for square `A` (in f64, partial pivoting). Returns None
+/// if singular.
+pub fn solve(a: &[Vec<f64>], b: &[f64]) -> Option<Vec<f64>> {
+    let n = a.len();
+    let mut m: Vec<Vec<f64>> = a.iter().cloned().collect();
+    let mut rhs = b.to_vec();
+    for col in 0..n {
+        // pivot
+        let piv = (col..n).max_by(|&i, &j| m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap())?;
+        if m[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        m.swap(col, piv);
+        rhs.swap(col, piv);
+        let d = m[col][col];
+        for r in (col + 1)..n {
+            let f = m[r][col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                m[r][c] -= f * m[col][c];
+            }
+            rhs[r] -= f * rhs[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for r in (0..n).rev() {
+        let mut acc = rhs[r];
+        for c in (r + 1)..n {
+            acc -= m[r][c] * x[c];
+        }
+        x[r] = acc / m[r][r];
+    }
+    Some(x)
+}
+
+/// Ridge regression fit: given features `X (n×d)` and multi-output targets
+/// `Y (n×k)`, return `W (d×k)` minimizing `‖XW − Y‖² + λ‖W‖²`.
+pub struct Ridge {
+    /// (d×k) weights.
+    pub w: FloatTensor,
+}
+
+impl Ridge {
+    pub fn fit(x: &FloatTensor, y: &FloatTensor, lambda: f64) -> Option<Ridge> {
+        let (n, d) = x.shape();
+        let (n2, k) = y.shape();
+        assert_eq!(n, n2);
+        // XtX (d×d) in f64
+        let mut xtx = vec![vec![0.0f64; d]; d];
+        for r in 0..n {
+            let row = x.row(r);
+            for i in 0..d {
+                let xi = row[i] as f64;
+                if xi == 0.0 {
+                    continue;
+                }
+                for j in i..d {
+                    xtx[i][j] += xi * row[j] as f64;
+                }
+            }
+        }
+        for i in 0..d {
+            for j in 0..i {
+                xtx[i][j] = xtx[j][i];
+            }
+            xtx[i][i] += lambda;
+        }
+        // XtY (d×k)
+        let mut xty = vec![vec![0.0f64; k]; d];
+        for r in 0..n {
+            let xr = x.row(r);
+            let yr = y.row(r);
+            for i in 0..d {
+                let xi = xr[i] as f64;
+                if xi == 0.0 {
+                    continue;
+                }
+                for c in 0..k {
+                    xty[i][c] += xi * yr[c] as f64;
+                }
+            }
+        }
+        // Solve per output column (reuse factorization would be nicer; the
+        // attack dims make plain resolves acceptable).
+        // Factor once via inverse-free approach: solve for each column.
+        let mut w = FloatTensor::zeros(d, k);
+        for c in 0..k {
+            let bcol: Vec<f64> = (0..d).map(|i| xty[i][c]).collect();
+            let sol = solve(&xtx, &bcol)?;
+            for i in 0..d {
+                w.set(i, c, sol[i] as f32);
+            }
+        }
+        Some(Ridge { w })
+    }
+
+    /// Predict `(n×k)` outputs for features `(n×d)`.
+    pub fn predict(&self, x: &FloatTensor) -> FloatTensor {
+        x.matmul(&self.w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_small_system() {
+        let a = vec![vec![2.0, 1.0], vec![1.0, 3.0]];
+        let x = solve(&a, &[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-9);
+        assert!((x[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        let a = vec![vec![1.0, 2.0], vec![2.0, 4.0]];
+        assert!(solve(&a, &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn ridge_recovers_linear_map() {
+        // y = X W* exactly; ridge with tiny λ should recover W*.
+        let mut rng = crate::util::rng::Rng::new(7);
+        let (n, d, k) = (200, 8, 3);
+        let x = FloatTensor::from_vec(n, d, rng.vec_gaussian_f32(n * d, 1.0));
+        let wstar = FloatTensor::from_vec(d, k, rng.vec_gaussian_f32(d * k, 1.0));
+        let y = x.matmul(&wstar);
+        let model = Ridge::fit(&x, &y, 1e-6).unwrap();
+        assert!(model.w.max_abs_diff(&wstar) < 1e-2);
+        let pred = model.predict(&x);
+        assert!(pred.max_abs_diff(&y) < 1e-2);
+    }
+}

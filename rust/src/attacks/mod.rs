@@ -1,0 +1,181 @@
+//! Data Reconstruction Attack (DRA) harness — the paper's §7.2 experiments
+//! (Tables 2/4, Figs. 4/9).
+//!
+//! Threat model (paper's, deliberately idealized): the adversary has
+//! unrestricted query access to the model's intermediate components, an
+//! out-of-distribution auxiliary corpus, and observes **one** intermediate
+//! tensor per victim sentence. Three attack families:
+//!
+//! * [`sip`] — learning-based (SIP, Chen et al. 2024): an inversion model
+//!   (ridge regression per position → token distribution, standing in for
+//!   the paper's GRU) trained on auxiliary data.
+//! * [`eia`] — discrete optimization (EIA, Song & Raghunathan 2020): greedy
+//!   coordinate descent over the vocabulary matching the observed
+//!   intermediate (standing in for Gumbel-softmax relaxation).
+//! * [`bre`] — continuous-space inversion (BRE, Chen et al. 2024):
+//!   prototype matching in the intermediate feature space.
+//!
+//! Conditions per target (`O1, O4, O5, O6`): **W/O** — plaintext
+//! intermediates (what permutation-only PPTI exposes); **W** — what
+//! Centaur's P1 actually reconstructs (the permuted tensors recorded by
+//! [`crate::engine::views::Views`]); **Rand** — random tensors
+//! (the floor). DESIGN.md documents the simplifications vs the original
+//! attack implementations.
+
+pub mod bre;
+pub mod eia;
+pub mod harness;
+pub mod linalg;
+pub mod rouge;
+pub mod sip;
+
+use crate::model::{forward_trace, ModelConfig, ModelWeights, Variant};
+use crate::tensor::FloatTensor;
+use crate::util::rng::Rng;
+
+/// Intermediate tensor under attack (paper's Table 2 columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TargetOp {
+    O1,
+    O4,
+    O5,
+    O6,
+}
+
+impl TargetOp {
+    pub const ALL: [TargetOp; 4] = [TargetOp::O1, TargetOp::O4, TargetOp::O5, TargetOp::O6];
+    pub fn name(self) -> &'static str {
+        match self {
+            TargetOp::O1 => "O1",
+            TargetOp::O4 => "O4",
+            TargetOp::O5 => "O5",
+            TargetOp::O6 => "O6",
+        }
+    }
+}
+
+/// Observation condition (paper's Table 2 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Condition {
+    /// "W/O": plaintext intermediate (permutation-only exposure).
+    Plaintext,
+    /// "W": the permuted tensor Centaur's P1 reconstructs.
+    Permuted,
+    /// "Rand": random tensor of the same shape/scale (attack floor).
+    Random,
+}
+
+impl Condition {
+    pub const ALL: [Condition; 3] = [Condition::Plaintext, Condition::Permuted, Condition::Random];
+    pub fn name(self) -> &'static str {
+        match self {
+            Condition::Plaintext => "W/O",
+            Condition::Permuted => "W(Ours)",
+            Condition::Random => "Rand",
+        }
+    }
+}
+
+/// Per-position feature matrix `(n, feat)` extracted from an observed
+/// intermediate. For `O1` (heads stacked `(h·n, n)`) position `r` gets the
+/// concatenation across heads of both its **row** (how r attends — query
+/// side) and its **column** (how r is attended to — key side; this carries
+/// most of the token identity).
+pub fn featurize(op: TargetOp, obs: &FloatTensor, n: usize, h: usize) -> FloatTensor {
+    match op {
+        TargetOp::O1 => {
+            let w = obs.cols();
+            let feat = 2 * h * w;
+            // clamp causal-mask sentinels (−1e5 / −1e9) so they don't
+            // dominate the regression features
+            let clamp = |v: f32| if v < -1e4 { 0.0 } else { v };
+            FloatTensor::from_fn(n, feat, |r, c| {
+                let head = (c / w) % h;
+                let idx = c % w;
+                clamp(if c < h * w {
+                    obs.get(head * n + r, idx) // query-side row
+                } else {
+                    obs.get(head * n + idx, r.min(w - 1)) // key-side column
+                })
+            })
+        }
+        _ => obs.clone(),
+    }
+}
+
+/// Plaintext layer-0 intermediate (the attacker's own forward pass; also
+/// the "W/O" observation).
+pub fn plaintext_intermediate(
+    cfg: &ModelConfig,
+    w: &ModelWeights,
+    tokens: &[u32],
+    op: TargetOp,
+) -> FloatTensor {
+    let t = forward_trace(cfg, w, tokens, Variant::Exact);
+    let l = &t.layers[0];
+    match op {
+        TargetOp::O1 => l.o1.clone(),
+        TargetOp::O4 => l.o4.clone(),
+        TargetOp::O5 => l.o5.clone(),
+        TargetOp::O6 => l.o6.clone(),
+    }
+}
+
+/// Random observation with moments matched to a reference tensor.
+pub fn random_like(reference: &FloatTensor, rng: &mut Rng) -> FloatTensor {
+    let n = reference.len() as f32;
+    let mean = reference.data().iter().sum::<f32>() / n;
+    let var = reference.data().iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let std = var.sqrt().max(1e-6);
+    FloatTensor::from_vec(
+        reference.rows(),
+        reference.cols(),
+        (0..reference.len()).map(|_| mean + rng.next_gaussian() as f32 * std).collect(),
+    )
+}
+
+/// Strip special tokens (PAD/CLS/SEP/UNK < 4) for ROUGE scoring.
+pub fn content_tokens(tokens: &[u32]) -> Vec<u32> {
+    tokens.iter().copied().filter(|&t| t > 3).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn featurize_o1_concats_rows_then_cols() {
+        let (h, n) = (2, 3);
+        let obs = FloatTensor::from_fn(h * n, n, |r, c| (r * 10 + c) as f32);
+        let f = featurize(TargetOp::O1, &obs, n, h);
+        assert_eq!(f.shape(), (n, 2 * h * n));
+        // position 1, first half: head0 row 1 then head1 row (n+1)
+        assert_eq!(f.get(1, 0), obs.get(1, 0));
+        assert_eq!(f.get(1, n), obs.get(n + 1, 0));
+        // position 1, second half: head0 column 1 entries
+        assert_eq!(f.get(1, 2 * n), obs.get(0, 1));
+        assert_eq!(f.get(1, 2 * n + 1), obs.get(1, 1));
+    }
+
+    #[test]
+    fn featurize_o1_clamps_mask_sentinels() {
+        let (h, n) = (1, 2);
+        let obs = FloatTensor::from_vec(2, 2, vec![1.0, -1e9, 2.0, 3.0]);
+        let f = featurize(TargetOp::O1, &obs, n, h);
+        assert!(f.data().iter().all(|&v| v > -1e4));
+    }
+
+    #[test]
+    fn random_like_matches_moments() {
+        let mut rng = Rng::new(3);
+        let t = FloatTensor::from_fn(40, 40, |r, c| ((r * 40 + c) as f32 * 0.173).sin() * 2.0 + 0.5);
+        let r = random_like(&t, &mut rng);
+        let mean = |x: &FloatTensor| x.data().iter().sum::<f32>() / x.len() as f32;
+        assert!((mean(&r) - mean(&t)).abs() < 0.1);
+    }
+
+    #[test]
+    fn content_tokens_strips_specials() {
+        assert_eq!(content_tokens(&[1, 5, 6, 2, 0, 0]), vec![5, 6]);
+    }
+}

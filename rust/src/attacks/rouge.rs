@@ -1,0 +1,90 @@
+//! ROUGE-L F1 over token sequences — the attack-quality metric of the
+//! paper's Tables 2/4 (longest common subsequence, order-sensitive).
+
+/// Length of the longest common subsequence.
+pub fn lcs_len(a: &[u32], b: &[u32]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    // rolling 1-D DP
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for &x in a {
+        for (j, &y) in b.iter().enumerate() {
+            cur[j + 1] = if x == y { prev[j] + 1 } else { prev[j + 1].max(cur[j]) };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+        cur[0] = 0;
+    }
+    prev[b.len()]
+}
+
+/// ROUGE-L F1 in percent (0-100) between a reference and a candidate.
+pub fn rouge_l_f1(reference: &[u32], candidate: &[u32]) -> f64 {
+    if reference.is_empty() || candidate.is_empty() {
+        return 0.0;
+    }
+    let l = lcs_len(reference, candidate) as f64;
+    if l == 0.0 {
+        return 0.0;
+    }
+    let p = l / candidate.len() as f64;
+    let r = l / reference.len() as f64;
+    100.0 * 2.0 * p * r / (p + r)
+}
+
+/// Mean and sample standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    if xs.len() < 2 {
+        return (m, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    (m, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_sequences_score_100() {
+        let s = vec![4, 5, 6, 7];
+        assert!((rouge_l_f1(&s, &s) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_sequences_score_0() {
+        assert_eq!(rouge_l_f1(&[1, 2, 3], &[4, 5, 6]), 0.0);
+    }
+
+    #[test]
+    fn partial_overlap() {
+        // LCS([a b c d], [a x c y]) = [a c] → P=R=0.5 → F1=50
+        let f1 = rouge_l_f1(&[1, 2, 3, 4], &[1, 9, 3, 8]);
+        assert!((f1 - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn order_sensitivity() {
+        // same bag of tokens, reversed order → LCS 1
+        let f1 = rouge_l_f1(&[1, 2, 3, 4], &[4, 3, 2, 1]);
+        assert!(f1 < 30.0);
+    }
+
+    #[test]
+    fn lcs_dp_correct() {
+        assert_eq!(lcs_len(&[1, 3, 5, 7], &[1, 5, 7, 9]), 3);
+        assert_eq!(lcs_len(&[], &[1]), 0);
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+}

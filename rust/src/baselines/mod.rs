@@ -1,0 +1,70 @@
+//! Baseline PPTI frameworks (paper §7.1): the systems Centaur is compared
+//! against, implemented operationally on the same MPC engine so their
+//! communication costs fall out of actual protocol execution.
+//!
+//! * [`smpc::SmpcEngine`] — the all-SMPC family, parameterized by the
+//!   non-linearity treatment:
+//!   - **PUMA** (Dong et al. 2023): accurate SMPC softmax/GeLU/LayerNorm.
+//!   - **MPCFormer** (Li et al. 2023): Softmax→2Quad, GeLU→Quad.
+//!   - **SecFormer** (Luo et al. 2024): Softmax→2Quad, accurate GeLU.
+//! * [`permonly::PermOnlyEngine`] — Yuan et al. 2023: permutation-only
+//!   PPTI that exposes intermediate results (the paper's §3 motivation and
+//!   Table 2 "W/O" rows).
+
+pub mod permonly;
+pub mod smpc;
+
+use crate::engine::InferenceOutput;
+use crate::Result;
+
+/// A PPTI framework under comparison.
+pub trait PptiFramework {
+    fn name(&self) -> &'static str;
+    /// Run one private inference.
+    fn infer(&mut self, tokens: &[u32]) -> Result<InferenceOutput>;
+}
+
+impl PptiFramework for crate::engine::CentaurEngine {
+    fn name(&self) -> &'static str {
+        "Centaur"
+    }
+    fn infer(&mut self, tokens: &[u32]) -> Result<InferenceOutput> {
+        crate::engine::CentaurEngine::infer(self, tokens)
+    }
+}
+
+/// Framework selector used by the CLI / reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameworkKind {
+    Centaur,
+    Puma,
+    MpcFormer,
+    SecFormer,
+    PermOnly,
+}
+
+impl FrameworkKind {
+    pub fn by_name(s: &str) -> Option<Self> {
+        match s {
+            "centaur" => Some(Self::Centaur),
+            "puma" => Some(Self::Puma),
+            "mpcformer" => Some(Self::MpcFormer),
+            "secformer" => Some(Self::SecFormer),
+            "permonly" => Some(Self::PermOnly),
+            _ => None,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Centaur => "Centaur",
+            Self::Puma => "PUMA",
+            Self::MpcFormer => "MPCFormer",
+            Self::SecFormer => "SecFormer",
+            Self::PermOnly => "PermOnly",
+        }
+    }
+    pub const ALL: [FrameworkKind; 5] =
+        [Self::Centaur, Self::Puma, Self::MpcFormer, Self::SecFormer, Self::PermOnly];
+    /// The SMPC baselines of Figs. 7/8 (excludes PermOnly).
+    pub const SMPC_BASELINES: [FrameworkKind; 3] = [Self::Puma, Self::MpcFormer, Self::SecFormer];
+}

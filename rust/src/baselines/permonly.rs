@@ -1,0 +1,119 @@
+//! Permutation-only PPTI (Yuan et al. 2023) — the paper's §3 Motivation 2.
+//!
+//! Plaintext computation on permuted parameters and data: near-plaintext
+//! efficiency, but the linear-layer algebra cancels the permutations, so
+//! intermediate results (`QKᵀ`, attention scores, FFN activations) are
+//! exposed to the cloud in **unpermuted plaintext** — the attack surface
+//! Table 2's "W/O" rows quantify. The [`crate::engine::views::Views`]
+//! ledger records these exposures with `PermTag::None`, which the leak
+//! detector flags (by design, for this baseline).
+
+use crate::engine::views::{PermTag, Views};
+use crate::engine::InferenceOutput;
+use crate::model::{plaintext, ModelConfig, ModelWeights, Variant};
+use crate::net::{NetSim, NetworkProfile, OpClass, PartyId};
+use crate::tensor::FloatTensor;
+use crate::Result;
+
+use super::PptiFramework;
+
+/// The permutation-only engine.
+pub struct PermOnlyEngine {
+    cfg: ModelConfig,
+    weights: ModelWeights,
+    net: NetSim,
+    /// Observations the cloud makes (plaintext intermediates!).
+    pub views: Views,
+}
+
+impl PermOnlyEngine {
+    pub fn new(cfg: &ModelConfig, w: &ModelWeights, profile: NetworkProfile, record_views: bool) -> Self {
+        PermOnlyEngine {
+            cfg: cfg.clone(),
+            weights: w.clone(),
+            net: NetSim::new(profile),
+            views: Views::new(record_views),
+        }
+    }
+}
+
+impl PptiFramework for PermOnlyEngine {
+    fn name(&self) -> &'static str {
+        "PermOnly"
+    }
+
+    fn infer(&mut self, tokens: &[u32]) -> Result<InferenceOutput> {
+        self.net.reset();
+        self.views.clear();
+        // client → cloud: permuted embedding-space input (n×d floats ≈
+        // ring elements on the wire), one round; result comes back the
+        // same way. That is the entire communication.
+        let n = tokens.len();
+        let in_bytes = (n * self.cfg.d * 8) as u64;
+        self.net.charge_bytes(OpClass::Embedding, in_bytes);
+        self.net.round(OpClass::Embedding, 1);
+
+        let t0 = std::time::Instant::now();
+        let trace = plaintext::forward_trace(&self.cfg, &self.weights, tokens, Variant::Exact);
+        self.net.compute(OpClass::Linear, PartyId::P1, t0.elapsed().as_secs_f64());
+
+        // The §3 analysis: linear cancellation exposes these in plaintext.
+        for (i, lt) in trace.layers.iter().enumerate() {
+            self.views.observe_p1(format!("O1 layer{i} (exposed)"), &lt.o1, PermTag::None);
+            self.views.observe_p1(format!("O4 layer{i} (exposed)"), &lt.o4, PermTag::None);
+            self.views.observe_p1(format!("O5 layer{i} (exposed)"), &lt.o5, PermTag::None);
+            self.views.observe_p1(format!("O6 layer{i} (exposed)"), &lt.o6, PermTag::None);
+        }
+
+        let out_bytes = (trace.logits.len() * 8) as u64;
+        self.net.charge_bytes(OpClass::Adaptation, out_bytes);
+        self.net.round(OpClass::Adaptation, 1);
+        Ok(InferenceOutput { logits: trace.logits, stats: self.net.ledger.clone() })
+    }
+}
+
+/// Exposed intermediates from a plaintext trace (attack-harness helper:
+/// the "W/O" condition of Tables 2/4 without running the engine).
+pub fn exposed_intermediates(
+    cfg: &ModelConfig,
+    w: &ModelWeights,
+    tokens: &[u32],
+    layer: usize,
+) -> (FloatTensor, FloatTensor, FloatTensor, FloatTensor) {
+    let t = plaintext::forward_trace(cfg, w, tokens, Variant::Exact);
+    let lt = &t.layers[layer];
+    (lt.o1.clone(), lt.o4.clone(), lt.o5.clone(), lt.o6.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permonly_is_exact_but_leaky() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 95);
+        let tokens: Vec<u32> = (0..cfg.n_ctx as u32).map(|i| 4 + (i % 100)).collect();
+        let mut eng = PermOnlyEngine::new(&cfg, &w, NetworkProfile::lan(), true);
+        let out = eng.infer(&tokens).unwrap();
+        // exact plaintext result
+        let want = plaintext::forward(&cfg, &w, &tokens, Variant::Exact);
+        assert_eq!(out.logits.data(), want.data());
+        // leak detector fires: O1/O4/O5/O6 exposed per layer
+        assert_eq!(eng.views.leaks().len(), 4 * cfg.layers);
+        // near-plaintext communication: orders below any SMPC framework
+        assert!(out.stats.bytes_total() < 100_000);
+    }
+
+    #[test]
+    fn exposed_intermediates_shapes() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 96);
+        let tokens: Vec<u32> = vec![7; cfg.n_ctx];
+        let (o1, o4, o5, o6) = exposed_intermediates(&cfg, &w, &tokens, 0);
+        assert_eq!(o1.shape(), (cfg.h * cfg.n_ctx, cfg.n_ctx));
+        assert_eq!(o4.shape(), (cfg.n_ctx, cfg.d));
+        assert_eq!(o5.shape(), (cfg.n_ctx, cfg.k));
+        assert_eq!(o6.shape(), (cfg.n_ctx, cfg.d));
+    }
+}

@@ -1,0 +1,101 @@
+//! Dynamic batcher: groups queued requests into batches bounded by
+//! `max_batch` and a linger window, the standard serving trade-off
+//! (throughput vs tail latency). Generic over the request type so it is
+//! unit-testable without engines.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    /// How long to wait for more requests once one is pending.
+    pub linger: Duration,
+}
+
+/// A formed batch.
+pub struct Batch<T> {
+    pub items: Vec<T>,
+    /// When the first item of the batch arrived.
+    pub opened: Instant,
+}
+
+/// Run the batching loop until the input channel disconnects.
+pub fn run<T: Send>(rx: Receiver<T>, tx: Sender<Batch<T>>, cfg: BatcherConfig) {
+    loop {
+        // Block for the first item of the next batch.
+        let first = match rx.recv() {
+            Ok(item) => item,
+            Err(_) => return,
+        };
+        let opened = Instant::now();
+        let mut items = vec![first];
+        // Fill until max_batch or linger expiry.
+        while items.len() < cfg.max_batch.max(1) {
+            let left = cfg.linger.saturating_sub(opened.elapsed());
+            if left.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(left) {
+                Ok(item) => items.push(item),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    let _ = tx.send(Batch { items, opened });
+                    return;
+                }
+            }
+        }
+        if tx.send(Batch { items, opened }).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn batches_cap_at_max() {
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::channel();
+        for i in 0..10 {
+            in_tx.send(i).unwrap();
+        }
+        drop(in_tx);
+        run(in_rx, out_tx, BatcherConfig { max_batch: 4, linger: Duration::from_millis(50) });
+        let sizes: Vec<usize> = out_rx.iter().map(|b: Batch<i32>| b.items.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().all(|&s| s <= 4));
+        assert_eq!(sizes[0], 4);
+    }
+
+    #[test]
+    fn linger_flushes_partial_batches() {
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::channel();
+        let h = std::thread::spawn(move || {
+            run(in_rx, out_tx, BatcherConfig { max_batch: 100, linger: Duration::from_millis(5) })
+        });
+        in_tx.send(1).unwrap();
+        let b = out_rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(b.items, vec![1]);
+        drop(in_tx);
+        let _ = h.join();
+    }
+
+    #[test]
+    fn preserves_order_within_batch() {
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::channel();
+        for i in 0..5 {
+            in_tx.send(i).unwrap();
+        }
+        drop(in_tx);
+        run(in_rx, out_tx, BatcherConfig { max_batch: 16, linger: Duration::from_millis(1) });
+        let b = out_rx.recv().unwrap();
+        assert_eq!(b.items, vec![0, 1, 2, 3, 4]);
+    }
+}

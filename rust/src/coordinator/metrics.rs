@@ -1,0 +1,131 @@
+//! Serving metrics: latency quantiles, throughput, protocol totals.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating metrics (guarded by a mutex in the coordinator).
+pub struct Metrics {
+    started: Instant,
+    latencies: Vec<Duration>,
+    service_times: Vec<Duration>,
+    pub completed: u64,
+    pub batches: u64,
+    pub bytes_total: u64,
+    pub rounds_total: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            started: Instant::now(),
+            latencies: Vec::new(),
+            service_times: Vec::new(),
+            completed: 0,
+            batches: 0,
+            bytes_total: 0,
+            rounds_total: 0,
+        }
+    }
+
+    pub fn record(&mut self, latency: Duration, service: Duration, bytes: u64, rounds: u64) {
+        self.latencies.push(latency);
+        self.service_times.push(service);
+        self.completed += 1;
+        self.bytes_total += bytes;
+        self.rounds_total += rounds;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut lats = self.latencies.clone();
+        lats.sort_unstable();
+        let q = |p: f64| -> Duration {
+            if lats.is_empty() {
+                Duration::ZERO
+            } else {
+                lats[((lats.len() as f64 - 1.0) * p) as usize]
+            }
+        };
+        let elapsed = self.started.elapsed();
+        MetricsSnapshot {
+            completed: self.completed,
+            batches: self.batches,
+            p50: q(0.50),
+            p95: q(0.95),
+            p99: q(0.99),
+            mean_service: if self.service_times.is_empty() {
+                Duration::ZERO
+            } else {
+                self.service_times.iter().sum::<Duration>() / self.service_times.len() as u32
+            },
+            throughput_rps: self.completed as f64 / elapsed.as_secs_f64().max(1e-9),
+            bytes_total: self.bytes_total,
+            rounds_total: self.rounds_total,
+            elapsed,
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Point-in-time metrics view.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub batches: u64,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub mean_service: Duration,
+    pub throughput_rps: f64,
+    pub bytes_total: u64,
+    pub rounds_total: u64,
+    pub elapsed: Duration,
+}
+
+impl MetricsSnapshot {
+    /// Human-readable summary block.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} p50={} p95={} p99={} mean_service={} \
+             throughput={:.2} req/s comm={} rounds={} elapsed={}",
+            self.completed,
+            self.batches,
+            crate::util::human_secs(self.p50.as_secs_f64()),
+            crate::util::human_secs(self.p95.as_secs_f64()),
+            crate::util::human_secs(self.p99.as_secs_f64()),
+            crate::util::human_secs(self.mean_service.as_secs_f64()),
+            self.throughput_rps,
+            crate::util::human_bytes(self.bytes_total),
+            self.rounds_total,
+            crate::util::human_secs(self.elapsed.as_secs_f64()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_ordered() {
+        let mut m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record(Duration::from_millis(i), Duration::from_millis(i / 2), 10, 1);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 100);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+        assert_eq!(s.bytes_total, 1000);
+        assert!(s.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.p99, Duration::ZERO);
+    }
+}

@@ -1,0 +1,291 @@
+//! L3 serving coordinator: request router, dynamic batcher, worker pool,
+//! and metrics — the deployment layer a cloud platform would run Centaur
+//! behind (vLLM-router-style, adapted to three-party PPTI sessions).
+//!
+//! Threading model (`std::thread` + channels; DESIGN.md substitutions):
+//!
+//! ```text
+//!  clients ──submit──▶ batcher ──Batch──▶ router ──▶ worker 0 (engine)
+//!                       (linger/max)        └──────▶ worker 1 (engine)
+//! ```
+//!
+//! Each worker owns a full protocol engine (PJRT clients are not `Send`,
+//! so engines are constructed *inside* the worker thread from a spec).
+
+mod batcher;
+mod metrics;
+
+pub use batcher::{Batch, BatcherConfig};
+pub use metrics::{Metrics, MetricsSnapshot};
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::baselines::{permonly::PermOnlyEngine, smpc::SmpcEngine, FrameworkKind, PptiFramework};
+use crate::engine::{CentaurEngine, EngineOptions};
+use crate::model::{ModelConfig, ModelWeights};
+use crate::net::NetworkProfile;
+use crate::runtime::{backend_by_name, NativeBackend};
+use crate::Result;
+
+/// Serving configuration.
+#[derive(Clone)]
+pub struct ServerConfig {
+    pub cfg: ModelConfig,
+    pub weights: ModelWeights,
+    pub framework: FrameworkKind,
+    /// `"native"` or `"xla"` (Centaur only).
+    pub backend: String,
+    pub artifacts_dir: String,
+    pub profile: NetworkProfile,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub linger: Duration,
+    pub fast_sim: bool,
+    pub seed: u64,
+}
+
+impl ServerConfig {
+    pub fn new(cfg: ModelConfig, weights: ModelWeights) -> Self {
+        ServerConfig {
+            cfg,
+            weights,
+            framework: FrameworkKind::Centaur,
+            backend: "native".into(),
+            artifacts_dir: crate::data::artifacts_dir(),
+            profile: NetworkProfile::lan(),
+            workers: 1,
+            max_batch: 8,
+            linger: Duration::from_millis(2),
+            fast_sim: false,
+            seed: 11,
+        }
+    }
+}
+
+/// One inference response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Flattened logits with shape.
+    pub logits: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+    /// End-to-end latency (queue + protocol), wall clock.
+    pub latency: Duration,
+    /// Simulated-network portion of the protocol time.
+    pub simulated_net: f64,
+    pub bytes: u64,
+    pub rounds: u64,
+}
+
+struct Request {
+    tokens: Vec<u32>,
+    enqueued: Instant,
+    respond: mpsc::Sender<Result<Response>>,
+}
+
+/// Build the framework engine inside a worker thread.
+fn build_engine(cfg: &ServerConfig) -> Result<Box<dyn PptiFramework>> {
+    match cfg.framework {
+        FrameworkKind::Centaur => {
+            let backend = if cfg.backend == "native" {
+                Box::new(NativeBackend::new()) as Box<dyn crate::runtime::Backend>
+            } else {
+                backend_by_name(&cfg.backend, &cfg.cfg.name, &cfg.artifacts_dir)?
+            };
+            let eng = CentaurEngine::with_backend(
+                &cfg.cfg,
+                &cfg.weights,
+                backend,
+                EngineOptions {
+                    profile: cfg.profile,
+                    seed: cfg.seed,
+                    record_views: false,
+                    fast_sim: cfg.fast_sim,
+                },
+            )?;
+            Ok(Box::new(eng))
+        }
+        FrameworkKind::PermOnly => {
+            Ok(Box::new(PermOnlyEngine::new(&cfg.cfg, &cfg.weights, cfg.profile, false)))
+        }
+        smpc => Ok(Box::new(SmpcEngine::new(smpc, &cfg.cfg, &cfg.weights, cfg.profile, cfg.seed)?)),
+    }
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    submit_tx: mpsc::Sender<Request>,
+    metrics: Arc<Mutex<Metrics>>,
+    batcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the batcher and worker threads.
+    pub fn start(config: ServerConfig) -> Result<Self> {
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (submit_tx, submit_rx) = mpsc::channel::<Request>();
+
+        // Workers: one engine each, fed by a shared work queue guarded by a
+        // mutex-wrapped receiver (simple m:n fan-out).
+        let (work_tx, work_rx) = mpsc::channel::<Batch<Request>>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let mut workers = Vec::new();
+        for wid in 0..config.workers.max(1) {
+            let cfg = config.clone();
+            let rx = Arc::clone(&work_rx);
+            let m = Arc::clone(&metrics);
+            workers.push(std::thread::spawn(move || {
+                let mut engine = match build_engine(&cfg) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        eprintln!("worker {wid}: engine init failed: {e}");
+                        return;
+                    }
+                };
+                loop {
+                    let batch = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(batch) = batch else { break };
+                    m.lock().unwrap().batches += 1;
+                    for req in batch.items {
+                        let t0 = Instant::now();
+                        let outcome = engine.infer(&req.tokens);
+                        let latency = req.enqueued.elapsed();
+                        let resp = outcome.map(|out| {
+                            let sim = out.stats.total_time(&cfg.profile) - out.stats.compute_total();
+                            Response {
+                                rows: out.logits.rows(),
+                                cols: out.logits.cols(),
+                                logits: out.logits.data().to_vec(),
+                                latency,
+                                simulated_net: sim,
+                                bytes: out.stats.bytes_total(),
+                                rounds: out.stats.rounds_total(),
+                            }
+                        });
+                        if let Ok(r) = &resp {
+                            m.lock().unwrap().record(latency, t0.elapsed(), r.bytes, r.rounds);
+                        }
+                        let _ = req.respond.send(resp);
+                    }
+                }
+            }));
+        }
+
+        // Batcher thread.
+        let bconf = BatcherConfig { max_batch: config.max_batch, linger: config.linger };
+        let batcher = std::thread::spawn(move || {
+            batcher::run(submit_rx, work_tx, bconf);
+        });
+
+        Ok(Coordinator { submit_tx, metrics, batcher: Some(batcher), workers })
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, tokens: Vec<u32>) -> mpsc::Receiver<Result<Response>> {
+        let (tx, rx) = mpsc::channel();
+        let req = Request { tokens, enqueued: Instant::now(), respond: tx };
+        // If the batcher is gone the receiver will simply report disconnect.
+        let _ = self.submit_tx.send(req);
+        rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn infer_blocking(&self, tokens: Vec<u32>) -> Result<Response> {
+        self.submit(tokens)
+            .recv()
+            .map_err(|_| anyhow::anyhow!("coordinator shut down"))?
+    }
+
+    /// Snapshot of metrics so far.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.lock().unwrap().snapshot()
+    }
+
+    /// Graceful shutdown: stop accepting, drain workers, return metrics.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        drop(self.submit_tx);
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let snap = self.metrics.lock().unwrap().snapshot();
+        snap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn tiny_config(framework: FrameworkKind) -> ServerConfig {
+        let cfg = ModelConfig::bert_tiny();
+        let weights = ModelWeights::random(&cfg, 101);
+        let mut sc = ServerConfig::new(cfg, weights);
+        sc.framework = framework;
+        sc.max_batch = 4;
+        sc.linger = Duration::from_millis(1);
+        sc
+    }
+
+    #[test]
+    fn serve_roundtrip_centaur() {
+        let sc = tiny_config(FrameworkKind::Centaur);
+        let n_ctx = sc.cfg.n_ctx;
+        let coord = Coordinator::start(sc).unwrap();
+        let resp = coord.infer_blocking(vec![5; n_ctx]).unwrap();
+        assert_eq!((resp.rows, resp.cols), (1, 2));
+        assert!(resp.bytes > 0);
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, 1);
+        assert!(snap.p50 > Duration::ZERO);
+    }
+
+    #[test]
+    fn batching_groups_requests() {
+        let mut sc = tiny_config(FrameworkKind::Centaur);
+        sc.linger = Duration::from_millis(30);
+        sc.max_batch = 8;
+        let n_ctx = sc.cfg.n_ctx;
+        let coord = Coordinator::start(sc).unwrap();
+        let rxs: Vec<_> = (0..6).map(|_| coord.submit(vec![7; n_ctx])).collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, 6);
+        // 6 requests within one linger window → far fewer batches
+        assert!(snap.batches <= 3, "batches={}", snap.batches);
+    }
+
+    #[test]
+    fn serve_permonly_framework() {
+        let sc = tiny_config(FrameworkKind::PermOnly);
+        let n_ctx = sc.cfg.n_ctx;
+        let coord = Coordinator::start(sc).unwrap();
+        let resp = coord.infer_blocking(vec![9; n_ctx]).unwrap();
+        assert!(resp.bytes < 100_000); // near-plaintext
+        coord.shutdown();
+    }
+
+    #[test]
+    fn bad_input_is_reported_not_fatal() {
+        let sc = tiny_config(FrameworkKind::Centaur);
+        let coord = Coordinator::start(sc).unwrap();
+        let err = coord.infer_blocking(vec![5; 3]); // wrong length
+        assert!(err.is_err());
+        // server still alive
+        let ok = coord.infer_blocking(vec![5; 32]);
+        assert!(ok.is_ok());
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,253 @@
+//! Synthetic datasets (generated at build time by
+//! `python/compile/data_gen.py` into `artifacts/data/`) — the Rust-side
+//! loaders. The vocabulary is the cross-language contract; token ids in
+//! checkpoints, tasks, and attack corpora all refer to it.
+
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+use crate::Result;
+
+/// Special token ids (fixed by data_gen.py).
+pub const PAD: u32 = 0;
+pub const CLS: u32 = 1;
+pub const SEP: u32 = 2;
+pub const UNK: u32 = 3;
+
+/// The shared word-level vocabulary.
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    pub words: Vec<String>,
+}
+
+impl Vocab {
+    pub fn load(artifacts_dir: &str) -> Result<Self> {
+        let path = Path::new(artifacts_dir).join("data").join("vocab.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e} (run `make artifacts`)", path.display()))?;
+        let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("vocab: {e}"))?;
+        let words = doc
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("vocab must be an array"))?
+            .iter()
+            .map(|w| w.as_str().unwrap_or("?").to_string())
+            .collect();
+        Ok(Vocab { words })
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Token id for a word (UNK when unknown).
+    pub fn id(&self, word: &str) -> u32 {
+        self.words.iter().position(|w| w == word).map(|i| i as u32).unwrap_or(UNK)
+    }
+
+    /// Tokenize a whitespace-separated sentence with [CLS]/[SEP] framing,
+    /// padded/truncated to `seq_len`.
+    pub fn encode(&self, text: &str, seq_len: usize) -> Vec<u32> {
+        let mut ids = vec![CLS];
+        ids.extend(text.split_whitespace().map(|w| self.id(w)));
+        ids.push(SEP);
+        ids.resize(seq_len, PAD);
+        ids.truncate(seq_len);
+        ids
+    }
+
+    /// Decode ids to text, dropping specials.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .filter(|&&i| i > SEP)
+            .map(|&i| self.words.get(i as usize).map(|s| s.as_str()).unwrap_or("?"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// Task type (classification / regression).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskType {
+    Cls,
+    Reg,
+}
+
+/// One split of a GLUE-like task.
+#[derive(Clone, Debug, Default)]
+pub struct Split {
+    pub ids: Vec<Vec<u32>>,
+    pub labels: Vec<f32>,
+}
+
+/// A GLUE-like synthetic task.
+#[derive(Clone, Debug)]
+pub struct TaskData {
+    pub task: String,
+    pub ttype: TaskType,
+    pub n_classes: usize,
+    pub seq_len: usize,
+    pub train: Split,
+    pub test: Split,
+}
+
+fn parse_split(doc: &Json) -> Split {
+    let ids = doc
+        .get("ids")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|row| row.as_arr().unwrap_or(&[]).iter().map(|v| v.as_f64().unwrap_or(0.0) as u32).collect())
+        .collect();
+    let labels = doc
+        .get("labels")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+        .collect();
+    Split { ids, labels }
+}
+
+impl TaskData {
+    pub fn load(artifacts_dir: &str, task: &str) -> Result<Self> {
+        let path = Path::new(artifacts_dir).join("data").join(format!("task_{task}.json"));
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e} (run `make artifacts`)", path.display()))?;
+        let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("task {task}: {e}"))?;
+        Ok(TaskData {
+            task: task.to_string(),
+            ttype: if doc.get("type").as_str() == Some("reg") { TaskType::Reg } else { TaskType::Cls },
+            n_classes: doc.get("n_classes").as_usize().unwrap_or(2),
+            seq_len: doc.get("seq_len").as_usize().unwrap_or(32),
+            train: parse_split(doc.get("train")),
+            test: parse_split(doc.get("test")),
+        })
+    }
+
+    pub const ALL_TASKS: [&'static str; 5] = ["qnli", "cola", "stsb", "mrpc", "rte"];
+}
+
+/// A Wikitext-like LM corpus.
+#[derive(Clone, Debug)]
+pub struct LmData {
+    pub name: String,
+    pub seq_len: usize,
+    pub train: Vec<Vec<u32>>,
+    pub test: Vec<Vec<u32>>,
+}
+
+impl LmData {
+    pub fn load(artifacts_dir: &str, name: &str) -> Result<Self> {
+        let path = Path::new(artifacts_dir).join("data").join(format!("lm_{name}.json"));
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e} (run `make artifacts`)", path.display()))?;
+        let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("lm {name}: {e}"))?;
+        let seqs = |key: &str| -> Vec<Vec<u32>> {
+            doc.get(key)
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|row| row.as_arr().unwrap_or(&[]).iter().map(|v| v.as_f64().unwrap_or(0.0) as u32).collect())
+                .collect()
+        };
+        Ok(LmData {
+            name: name.to_string(),
+            seq_len: doc.get("seq_len").as_usize().unwrap_or(32),
+            train: seqs("train"),
+            test: seqs("test"),
+        })
+    }
+
+    pub const ALL_CORPORA: [&'static str; 2] = ["wikitext2", "wikitext103"];
+}
+
+/// Attack corpora: in-distribution private targets + OOD auxiliary data.
+#[derive(Clone, Debug)]
+pub struct AttackCorpora {
+    pub private: Vec<Vec<u32>>,
+    /// Out-of-distribution auxiliary corpus (news templates).
+    pub aux: Vec<Vec<u32>>,
+    /// In-distribution auxiliary corpus (same template family as private).
+    pub aux_indist: Vec<Vec<u32>>,
+    pub seq_len: usize,
+}
+
+impl AttackCorpora {
+    pub fn load(artifacts_dir: &str) -> Result<Self> {
+        let path = Path::new(artifacts_dir).join("data").join("attack_corpora.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e} (run `make artifacts`)", path.display()))?;
+        let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("attack corpora: {e}"))?;
+        let seqs = |key: &str| -> Vec<Vec<u32>> {
+            doc.get(key)
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|row| row.as_arr().unwrap_or(&[]).iter().map(|v| v.as_f64().unwrap_or(0.0) as u32).collect())
+                .collect()
+        };
+        Ok(AttackCorpora {
+            private: seqs("private"),
+            aux: seqs("aux"),
+            aux_indist: seqs("aux_indist"),
+            seq_len: doc.get("seq_len").as_usize().unwrap_or(32),
+        })
+    }
+}
+
+/// Default artifacts directory (overridable with CENTAUR_ARTIFACTS).
+pub fn artifacts_dir() -> String {
+    std::env::var("CENTAUR_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture() -> String {
+        let tmp = std::env::temp_dir().join(format!("centaur_data_{}", std::process::id()));
+        let dd = tmp.join("data");
+        std::fs::create_dir_all(&dd).unwrap();
+        std::fs::write(dd.join("vocab.json"), r#"["[PAD]","[CLS]","[SEP]","[UNK]","london","paris","moved"]"#).unwrap();
+        std::fs::write(
+            dd.join("task_toy.json"),
+            r#"{"task":"toy","type":"cls","n_classes":2,"seq_len":8,
+                "train":{"ids":[[1,4,2,0,0,0,0,0]],"labels":[1]},
+                "test":{"ids":[[1,5,2,0,0,0,0,0]],"labels":[0]}}"#,
+        )
+        .unwrap();
+        tmp.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn vocab_encode_decode_roundtrip() {
+        let dir = write_fixture();
+        let v = Vocab::load(&dir).unwrap();
+        let ids = v.encode("london moved paris", 8);
+        assert_eq!(ids.len(), 8);
+        assert_eq!(ids[0], CLS);
+        assert_eq!(v.decode(&ids), "london moved paris");
+        assert_eq!(v.id("nonexistent-word"), UNK);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn task_load() {
+        let dir = write_fixture();
+        let t = TaskData::load(&dir, "toy").unwrap();
+        assert_eq!(t.ttype, TaskType::Cls);
+        assert_eq!(t.train.ids.len(), 1);
+        assert_eq!(t.train.labels, vec![1.0]);
+        assert_eq!(t.test.ids[0][1], 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_artifacts_error_is_actionable() {
+        let err = Vocab::load("/definitely/missing").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,362 @@
+//! The Centaur inference engine: end-to-end PPTI across `P0/P1/P2`
+//! (paper §5.1, Fig. 5/6).
+//!
+//! Lifecycle:
+//! 1. **Initialization** (paper: model developer side) — draw `Π`, build
+//!    the permuted parameter set Θ′ ([`PermutedModel`]), deal the shared
+//!    permutation matrices for `Π_PPP`.
+//! 2. **Inference** — client shares its one-hot input; the servers run
+//!    `Π_PPEmbedding` → `L×` transformer layers → `Π_PPAdaptation`; logit
+//!    shares return to the client.
+//!
+//! All communication lands in [`crate::net::CostLedger`]; every plaintext
+//! P1 reconstructs is recorded in [`views::Views`].
+
+pub mod views;
+
+use crate::model::{ModelConfig, ModelKind, ModelWeights, PermSet, PermutedModel};
+use crate::mpc::{Mpc, Share};
+use crate::net::{CostLedger, NetSim, NetworkProfile, OpClass};
+use crate::protocols::{adaptation, embedding, layer, ppp};
+use crate::runtime::{Backend, NativeBackend};
+use crate::tensor::{FloatTensor, RingTensor};
+use crate::util::rng::Rng;
+use crate::Result;
+use views::Views;
+
+/// Engine construction options.
+pub struct EngineOptions {
+    pub profile: NetworkProfile,
+    pub seed: u64,
+    /// Keep P1's observed tensors (attack experiments).
+    pub record_views: bool,
+    /// Charged-ideal share×share products (paper-scale efficiency runs).
+    pub fast_sim: bool,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions { profile: NetworkProfile::lan(), seed: 7, record_views: false, fast_sim: false }
+    }
+}
+
+/// Result of one private inference.
+pub struct InferenceOutput {
+    /// BERT: `(1, n_classes)`; GPT-2: `(n, vocab)` logits.
+    pub logits: FloatTensor,
+    /// Communication + compute ledger for this inference.
+    pub stats: CostLedger,
+}
+
+/// The three-party Centaur engine.
+pub struct CentaurEngine {
+    pub cfg: ModelConfig,
+    pm: PermutedModel,
+    mpc: Mpc,
+    backend: Box<dyn Backend>,
+    pub views: Views,
+    pi1_sh: Share,
+    pi1_t_sh: Share,
+    mask_fx: Option<RingTensor>,
+    fast_sim: bool,
+    /// Ledger snapshot taken at construction (perm dealing cost).
+    init_ledger: CostLedger,
+}
+
+impl CentaurEngine {
+    /// Build with the native backend and default options.
+    pub fn new(cfg: &ModelConfig, w: &ModelWeights, profile: NetworkProfile, seed: u64) -> Result<Self> {
+        Self::with_backend(cfg, w, Box::new(NativeBackend::new()), EngineOptions { profile, seed, ..Default::default() })
+    }
+
+    /// Build with an explicit backend (e.g. [`crate::runtime::XlaBackend`]).
+    pub fn with_backend(
+        cfg: &ModelConfig,
+        w: &ModelWeights,
+        backend: Box<dyn Backend>,
+        opts: EngineOptions,
+    ) -> Result<Self> {
+        let mut rng = Rng::new(opts.seed);
+        let perms = PermSet::random(cfg, &mut rng);
+        Self::with_perms(cfg, w, backend, opts, perms)
+    }
+
+    /// Build with explicit permutations (identity = leakage ablation).
+    pub fn with_perms(
+        cfg: &ModelConfig,
+        w: &ModelWeights,
+        backend: Box<dyn Backend>,
+        opts: EngineOptions,
+        perms: PermSet,
+    ) -> Result<Self> {
+        let pm = PermutedModel::build(cfg, w, perms);
+        let mut mpc = Mpc::new(NetSim::new(opts.profile), opts.seed ^ 0xEE);
+        // Deal the shared π₁ matrices once (Algorithm 6 setup).
+        let pi1_sh = ppp::share_perm(&mut mpc, &pm.perms.pi1, OpClass::Linear);
+        let pi1_t_sh = ppp::share_perm_t(&mut mpc, &pm.perms.pi1, OpClass::Linear);
+        let mask_fx = (cfg.kind == ModelKind::Gpt2).then(|| layer::causal_mask_fx(cfg.h, cfg.n_ctx));
+        let init_ledger = mpc.net.ledger.clone();
+        Ok(CentaurEngine {
+            cfg: cfg.clone(),
+            pm,
+            mpc,
+            backend,
+            views: Views::new(opts.record_views),
+            pi1_sh,
+            pi1_t_sh,
+            mask_fx,
+            fast_sim: opts.fast_sim,
+            init_ledger,
+        })
+    }
+
+    /// Permutations in use (client side needs π to unpermute outputs in
+    /// the general case; our adaptation heads already cancel it).
+    pub fn perms(&self) -> &PermSet {
+        &self.pm.perms
+    }
+
+    /// Bytes of permuted parameters shipped to P1 at initialization.
+    pub fn init_param_bytes(&self) -> u64 {
+        self.pm.bytes()
+    }
+
+    /// Run one private inference over `tokens` (must be `n_ctx` long —
+    /// pad with the tokenizer's PAD id; lengths below `n_ctx` are allowed
+    /// and processed at the shorter length).
+    pub fn infer(&mut self, tokens: &[u32]) -> Result<InferenceOutput> {
+        anyhow::ensure!(!tokens.is_empty(), "empty input");
+        anyhow::ensure!(tokens.len() <= self.cfg.n_ctx, "sequence too long");
+        // π₁ was dealt at n_ctx; require full length for the PPP shapes.
+        anyhow::ensure!(
+            tokens.len() == self.cfg.n_ctx,
+            "pad input to n_ctx={} (got {})",
+            self.cfg.n_ctx,
+            tokens.len()
+        );
+        self.mpc.net.reset();
+        self.views.clear();
+
+        let mut ctx = layer::ProtoCtx {
+            mpc: &mut self.mpc,
+            backend: self.backend.as_mut(),
+            views: &mut self.views,
+            fast_sim: self.fast_sim,
+        };
+        // Embedding.
+        let mut x_pi = embedding::pp_embedding(&mut ctx, &self.pm, tokens)?;
+        // Transformer layers.
+        for (i, pl) in self.pm.layers.iter().enumerate() {
+            x_pi = layer::transformer_layer(
+                &mut ctx,
+                &self.cfg,
+                pl,
+                &self.pi1_sh,
+                &self.pi1_t_sh,
+                &x_pi,
+                self.mask_fx.as_ref(),
+                i,
+            )?;
+        }
+        // Adaptation + return to client.
+        let logits_sh = match self.cfg.kind {
+            ModelKind::Bert => adaptation::pp_adaptation_bert(&mut ctx, &self.pm, &x_pi)?,
+            ModelKind::Gpt2 => adaptation::pp_adaptation_gpt2(&mut ctx, &self.pm, &x_pi)?,
+        };
+        let logits = adaptation::return_to_client(&mut self.mpc, &logits_sh)?;
+        Ok(InferenceOutput { logits, stats: self.mpc.net.ledger.clone() })
+    }
+
+    /// Autoregressive generation through the private protocol (GPT-2 only):
+    /// repeatedly run PPTI on the padded context and greedily append the
+    /// next token — the workload the paper's introduction motivates
+    /// ("SMPC-based inference takes 25+ minutes per token"; Centaur makes
+    /// it interactive). Returns the generated continuation and the total
+    /// cost across steps.
+    pub fn generate(&mut self, prompt: &[u32], steps: usize) -> Result<(Vec<u32>, CostLedger)> {
+        anyhow::ensure!(self.cfg.kind == ModelKind::Gpt2, "generate() needs a decoder model");
+        anyhow::ensure!(!prompt.is_empty() && prompt.len() + steps <= self.cfg.n_ctx, "prompt+steps must fit n_ctx");
+        let mut ctx: Vec<u32> = prompt.to_vec();
+        let mut total = CostLedger::new();
+        for _ in 0..steps {
+            let mut padded = ctx.clone();
+            padded.resize(self.cfg.n_ctx, 0); // PAD; causal mask keeps them inert
+            let out = self.infer(&padded)?;
+            total.merge(&out.stats);
+            let row = out.logits.row(ctx.len() - 1);
+            let next = row
+                .iter()
+                .enumerate()
+                .skip(4) // never emit specials
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as u32)
+                .unwrap();
+            ctx.push(next);
+        }
+        Ok((ctx[prompt.len()..].to_vec(), total))
+    }
+
+    /// One-time initialization communication (permutation dealing).
+    pub fn init_stats(&self) -> &CostLedger {
+        &self.init_ledger
+    }
+
+    /// Leak check: labels of unpermuted plaintext P1 observed (must be
+    /// empty for real permutations).
+    pub fn leaks(&self) -> Vec<&str> {
+        self.views.leaks()
+    }
+
+    /// Backend fallback count (XLA backend health check).
+    pub fn backend_fallbacks(&self) -> u64 {
+        self.backend.fallbacks()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{plaintext, Variant};
+
+    fn tiny_tokens(cfg: &ModelConfig, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        (0..cfg.n_ctx).map(|_| (rng.below(cfg.vocab - 4) + 4) as u32).collect()
+    }
+
+    #[test]
+    fn bert_centaur_matches_plaintext() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 61);
+        let tokens = tiny_tokens(&cfg, 62);
+        let mut engine = CentaurEngine::new(&cfg, &w, NetworkProfile::lan(), 63).unwrap();
+        let out = engine.infer(&tokens).unwrap();
+        let want = plaintext::forward(&cfg, &w, &tokens, Variant::Exact);
+        assert_eq!(out.logits.shape(), (1, cfg.n_classes));
+        let diff = out.logits.max_abs_diff(&want);
+        assert!(diff < 0.05, "centaur vs plaintext diff {diff}");
+        // no unpermuted plaintext at P1
+        assert!(engine.leaks().is_empty());
+        // communication happened
+        assert!(out.stats.bytes_total() > 0);
+        assert!(out.stats.rounds_total() > 0);
+    }
+
+    #[test]
+    fn gpt_centaur_matches_plaintext() {
+        let cfg = ModelConfig::gpt2_tiny();
+        let w = ModelWeights::random(&cfg, 64);
+        let tokens = tiny_tokens(&cfg, 65);
+        let mut engine = CentaurEngine::new(&cfg, &w, NetworkProfile::wan1(), 66).unwrap();
+        let out = engine.infer(&tokens).unwrap();
+        let want = plaintext::forward(&cfg, &w, &tokens, Variant::Exact);
+        assert_eq!(out.logits.shape(), (cfg.n_ctx, cfg.vocab));
+        // compare argmax per position (fixed-point noise over vocab logits)
+        let mut agree = 0;
+        for r in 0..cfg.n_ctx {
+            let am = |t: &FloatTensor| {
+                (0..cfg.vocab).max_by(|&a, &b| t.get(r, a).partial_cmp(&t.get(r, b)).unwrap()).unwrap()
+            };
+            if am(&out.logits) == am(&want) {
+                agree += 1;
+            }
+        }
+        assert!(agree * 10 >= cfg.n_ctx * 9, "argmax agreement {agree}/{}", cfg.n_ctx);
+        assert!(engine.leaks().is_empty());
+    }
+
+    #[test]
+    fn fast_sim_same_costs_as_full() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 67);
+        let tokens = tiny_tokens(&cfg, 68);
+        let run = |fast_sim: bool| {
+            let mut e = CentaurEngine::with_backend(
+                &cfg,
+                &w,
+                Box::new(NativeBackend::new()),
+                EngineOptions { fast_sim, seed: 69, ..Default::default() },
+            )
+            .unwrap();
+            let out = e.infer(&tokens).unwrap();
+            (out.stats.bytes_total(), out.stats.rounds_total(), out.logits)
+        };
+        let (b_full, r_full, l_full) = run(false);
+        let (b_fast, r_fast, l_fast) = run(true);
+        assert_eq!(b_full, b_fast, "fast-sim must charge identical bytes");
+        assert_eq!(r_full, r_fast, "fast-sim must charge identical rounds");
+        assert!(l_full.max_abs_diff(&l_fast) < 0.05);
+    }
+
+    #[test]
+    fn views_record_attack_surface() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 70);
+        let tokens = tiny_tokens(&cfg, 71);
+        let mut e = CentaurEngine::with_backend(
+            &cfg,
+            &w,
+            Box::new(NativeBackend::new()),
+            EngineOptions { record_views: true, seed: 72, ..Default::default() },
+        )
+        .unwrap();
+        e.infer(&tokens).unwrap();
+        // per layer: O1π₁ softmax input, two LN inputs, one GeLU input
+        assert!(e.views.find("O1pi1 layer0").is_some());
+        assert!(e.views.find("O5pi2 layer1").is_some());
+        assert!(e.views.find("pooler pre-tanh").is_some());
+        let o1 = e.views.find("O1pi1 layer0").unwrap();
+        assert_eq!((o1.rows, o1.cols), (cfg.h * cfg.n_ctx, cfg.n_ctx));
+        assert!(o1.tensor.is_some());
+    }
+
+    #[test]
+    fn generate_is_private_and_matches_plaintext_greedy() {
+        let cfg = ModelConfig::gpt2_tiny();
+        let w = ModelWeights::random(&cfg, 75);
+        let prompt: Vec<u32> = vec![7, 11, 13, 17];
+        let mut e = CentaurEngine::new(&cfg, &w, NetworkProfile::lan(), 76).unwrap();
+        let (gen, cost) = e.generate(&prompt, 3).unwrap();
+        assert_eq!(gen.len(), 3);
+        assert!(cost.bytes_total() > 0);
+        assert!(e.leaks().is_empty());
+        // plaintext greedy reference
+        let mut ctx = prompt.clone();
+        for _ in 0..3 {
+            let mut padded = ctx.clone();
+            padded.resize(cfg.n_ctx, 0);
+            let logits = plaintext::forward(&cfg, &w, &padded, Variant::Exact);
+            let row = logits.row(ctx.len() - 1);
+            let next = row
+                .iter()
+                .enumerate()
+                .skip(4)
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as u32)
+                .unwrap();
+            ctx.push(next);
+        }
+        assert_eq!(gen, ctx[prompt.len()..].to_vec(), "private greedy decode must match plaintext");
+    }
+
+    #[test]
+    fn generate_rejects_encoder_models() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 77);
+        let mut e = CentaurEngine::new(&cfg, &w, NetworkProfile::lan(), 78).unwrap();
+        assert!(e.generate(&[1, 2], 2).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_lengths() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 73);
+        let mut e = CentaurEngine::new(&cfg, &w, NetworkProfile::lan(), 74).unwrap();
+        assert!(e.infer(&[]).is_err());
+        assert!(e.infer(&vec![1; cfg.n_ctx + 1]).is_err());
+        assert!(e.infer(&vec![1; cfg.n_ctx - 1]).is_err());
+    }
+}

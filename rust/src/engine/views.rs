@@ -1,0 +1,100 @@
+//! Per-party view ledger — the security bookkeeping of DESIGN.md §Security.
+//!
+//! Every plaintext value the cloud party `P1` reconstructs during a
+//! `Π_PP*` protocol is recorded here with its permutation tag. The leak
+//! detector asserts that no *unpermuted* activation ever appears in P1's
+//! view; the attack harness replays exactly these tensors as the
+//! adversary's observations (Table 2/4 of the paper).
+
+use crate::tensor::FloatTensor;
+
+/// Which permutation protects a value P1 sees (None = plaintext leak).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PermTag {
+    /// Feature permutation π (d-dim streams: O4+X, O6, pooler input).
+    Pi,
+    /// Sequence permutation π₁ (attention scores O1, probs O2).
+    Pi1,
+    /// FFN-intermediate permutation π₂ (O5).
+    Pi2,
+    /// Unpermuted plaintext — only legal in the PermOnly baseline and in
+    /// failure-injection tests; the leak detector flags it.
+    None,
+}
+
+/// One observation by P1.
+#[derive(Clone, Debug)]
+pub struct ViewRecord {
+    pub label: String,
+    pub tag: PermTag,
+    /// Tensor payload (kept only when `record_tensors` is on).
+    pub tensor: Option<FloatTensor>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// The cloud party's accumulated view.
+#[derive(Debug, Default)]
+pub struct Views {
+    pub p1: Vec<ViewRecord>,
+    /// Keep tensor payloads (attack experiments); off by default to save
+    /// memory during benches.
+    pub record_tensors: bool,
+}
+
+impl Views {
+    pub fn new(record_tensors: bool) -> Self {
+        Views { p1: Vec::new(), record_tensors }
+    }
+
+    /// Record a plaintext reconstruction at P1.
+    pub fn observe_p1(&mut self, label: impl Into<String>, tensor: &FloatTensor, tag: PermTag) {
+        self.p1.push(ViewRecord {
+            label: label.into(),
+            tag,
+            tensor: self.record_tensors.then(|| tensor.clone()),
+            rows: tensor.rows(),
+            cols: tensor.cols(),
+        });
+    }
+
+    /// Leak detector: labels of unpermuted plaintext observations.
+    pub fn leaks(&self) -> Vec<&str> {
+        self.p1.iter().filter(|r| r.tag == PermTag::None).map(|r| r.label.as_str()).collect()
+    }
+
+    /// Find the first recorded observation whose label contains `pat`.
+    pub fn find(&self, pat: &str) -> Option<&ViewRecord> {
+        self.p1.iter().find(|r| r.label.contains(pat))
+    }
+
+    pub fn clear(&mut self) {
+        self.p1.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leak_detector_flags_unpermuted() {
+        let mut v = Views::new(false);
+        let t = FloatTensor::zeros(2, 2);
+        v.observe_p1("softmax_in layer0", &t, PermTag::Pi1);
+        v.observe_p1("oops plaintext", &t, PermTag::None);
+        assert_eq!(v.leaks(), vec!["oops plaintext"]);
+    }
+
+    #[test]
+    fn tensors_kept_only_when_recording() {
+        let t = FloatTensor::zeros(2, 3);
+        let mut off = Views::new(false);
+        off.observe_p1("a", &t, PermTag::Pi);
+        assert!(off.p1[0].tensor.is_none());
+        assert_eq!((off.p1[0].rows, off.p1[0].cols), (2, 3));
+        let mut on = Views::new(true);
+        on.observe_p1("a", &t, PermTag::Pi);
+        assert!(on.p1[0].tensor.is_some());
+    }
+}

@@ -1,0 +1,149 @@
+//! Fixed-point encoding over the ring `Z_{2^64}` (CrypTen-compatible).
+//!
+//! Real values are scaled by `2^FRAC_BITS` and rounded to the nearest ring
+//! element; the ring is represented by `i64` with **wrapping** arithmetic,
+//! so `x = ([x]_0 + [x]_1) mod 2^64` holds exactly (the paper's §2.2, with
+//! CrypTen's default 16-bit fixed-point precision).
+//!
+//! Multiplying two encodings yields scale `2^{2f}`; [`trunc_local`]
+//! implements CrypTen's *local probabilistic truncation*: each party right-
+//! shifts its own share. With overwhelming probability (values ≪ ring size)
+//! the reconstruction is off by at most 1 ULP, which is far below model
+//! noise; `fixed::tests` quantifies the error.
+
+use crate::tensor::{FloatTensor, RingTensor};
+
+/// Fractional bits of the fixed-point encoding (CrypTen default).
+pub const FRAC_BITS: u32 = 16;
+/// Scale factor `2^FRAC_BITS`.
+pub const SCALE: i64 = 1 << FRAC_BITS;
+/// Bytes per ring element on the wire.
+pub const ELEM_BYTES: u64 = 8;
+
+/// Encode one real number.
+#[inline]
+pub fn encode(x: f64) -> i64 {
+    let v = x * SCALE as f64;
+    // round-half-away-from-zero, wrapping into the ring
+    let r = if v >= 0.0 { (v + 0.5).floor() } else { (v - 0.5).ceil() };
+    r as i64
+}
+
+/// Decode one ring element back to a real number.
+#[inline]
+pub fn decode(v: i64) -> f64 {
+    v as f64 / SCALE as f64
+}
+
+/// Encode an `f32` tensor into a ring tensor.
+pub fn encode_tensor(t: &FloatTensor) -> RingTensor {
+    t.map(|x| encode(x as f64))
+}
+
+/// Decode a ring tensor into `f32`.
+pub fn decode_tensor(t: &RingTensor) -> FloatTensor {
+    t.map(|v| decode(v) as f32)
+}
+
+/// After a fixed×fixed product the scale is `2^{2f}`; rescale a *plaintext*
+/// value exactly.
+#[inline]
+pub fn rescale_plain(v: i64) -> i64 {
+    v >> FRAC_BITS
+}
+
+/// CrypTen-style local truncation of a *share* by `2^FRAC_BITS`.
+///
+/// Party 0 computes `floor(s / 2^f)`; party 1 computes `-floor(-s / 2^f)`,
+/// i.e. both divide their share as signed integers. The reconstructed value
+/// equals the truncated plaintext ±1 with overwhelming probability when the
+/// plaintext magnitude is ≪ 2^63 (standard CrypTen assumption).
+#[inline]
+pub fn trunc_share(share: i64, party: usize) -> i64 {
+    debug_assert!(party < 2);
+    if party == 0 {
+        share >> FRAC_BITS
+    } else {
+        // -floor(-s / 2^f) == ceil(s / 2^f) for the second share keeps the
+        // expected reconstruction unbiased.
+        (share >> FRAC_BITS).wrapping_add(if share & (SCALE - 1) != 0 { 1 } else { 0 })
+    }
+}
+
+/// Truncate a whole share tensor in place.
+pub fn trunc_share_tensor(t: &mut RingTensor, party: usize) {
+    for v in t.data_mut() {
+        *v = trunc_share(*v, party);
+    }
+}
+
+/// Largest representable magnitude before encode saturating behaviour is
+/// meaningless (half ring, at fixed scale).
+pub fn max_representable() -> f64 {
+    (i64::MAX as f64) / SCALE as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn encode_decode_roundtrip_small() {
+        for &x in &[0.0, 1.0, -1.0, 3.14159, -2.71828, 1e-4, -1e-4, 1000.5] {
+            let err = (decode(encode(x)) - x).abs();
+            assert!(err <= 1.0 / SCALE as f64, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_error_bounded() {
+        check("fixed roundtrip", 500, |g| {
+            let x = g.f64_in(-1e4, 1e4);
+            let err = (decode(encode(x)) - x).abs();
+            assert!(err <= 0.5 / SCALE as f64 + 1e-12, "x={x} err={err}");
+        });
+    }
+
+    #[test]
+    fn prop_encode_additive_homomorphic() {
+        check("encode additive", 500, |g| {
+            let a = g.small_f64();
+            let b = g.small_f64();
+            let sum = decode(encode(a).wrapping_add(encode(b)));
+            assert!((sum - (a + b)).abs() < 2.0 / SCALE as f64);
+        });
+    }
+
+    #[test]
+    fn product_rescale() {
+        let a = encode(3.5);
+        let b = encode(-2.0);
+        let prod = rescale_plain(a.wrapping_mul(b));
+        assert!((decode(prod) - (-7.0)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn share_truncation_error_at_most_one_ulp() {
+        let mut rng = Rng::new(99);
+        let mut worst = 0i64;
+        for _ in 0..20_000 {
+            let x = rng.range_i64(-(1 << 40), 1 << 40); // plaintext at scale 2^{2f}
+            let s0 = rng.next_i64();
+            let s1 = x.wrapping_sub(s0);
+            let recon = trunc_share(s0, 0).wrapping_add(trunc_share(s1, 1));
+            let truth = x >> FRAC_BITS;
+            worst = worst.max((recon - truth).abs());
+        }
+        assert!(worst <= 1, "worst truncation error {worst} ULP");
+    }
+
+    #[test]
+    fn tensor_encode_decode() {
+        let t = crate::tensor::FloatTensor::from_fn(3, 3, |r, c| (r as f32 - c as f32) * 0.25);
+        let rt = encode_tensor(&t);
+        let back = decode_tensor(&rt);
+        assert!(t.max_abs_diff(&back) <= 1.0 / SCALE as f32);
+    }
+}

@@ -1,0 +1,64 @@
+//! # Centaur — hybrid privacy-preserving transformer inference
+//!
+//! Reproduction of *"Centaur: Bridging the Impossible Trinity of Privacy,
+//! Efficiency, and Performance in Privacy-Preserving Transformer Inference"*
+//! (ACL 2025).
+//!
+//! Centaur protects **model parameters with random permutations** and
+//! **inference data with 2-out-of-2 additive secret sharing** over the ring
+//! `Z_{2^64}` (CrypTen-compatible fixed-point). Linear layers become
+//! communication-free plaintext×share products; non-linear layers run in
+//! plaintext on *permuted* data at the cloud party; the two share×share
+//! products inside attention use Beaver triples.
+//!
+//! The crate is the L3 layer of a three-layer stack:
+//!
+//! * **L3 (this crate)** — protocol engine, three-party simulation, network
+//!   cost accounting, serving coordinator, baselines, attacks, reports.
+//! * **L2 (python/compile/model.py)** — JAX forward functions AOT-lowered to
+//!   HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute hot
+//!   spots, lowered inside the L2 functions.
+//!
+//! Python never runs at inference time: the [`runtime`] module loads the AOT
+//! artifacts through PJRT (`xla` crate) or falls back to a pure-Rust
+//! [`runtime::NativeBackend`] with identical semantics.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use centaur::engine::CentaurEngine;
+//! use centaur::model::{ModelConfig, ModelWeights};
+//! use centaur::net::NetworkProfile;
+//!
+//! let cfg = ModelConfig::bert_tiny();
+//! let weights = ModelWeights::random(&cfg, 42);
+//! let mut engine = CentaurEngine::new(&cfg, &weights, NetworkProfile::lan(), 7).unwrap();
+//! let tokens = vec![5u32, 17, 9, 2];
+//! let out = engine.infer(&tokens).unwrap();
+//! println!("logits: {:?}", out.logits);
+//! println!("comm: {} bytes in {} rounds", out.stats.bytes_total(), out.stats.rounds_total());
+//! ```
+
+pub mod attacks;
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod fixed;
+pub mod model;
+pub mod mpc;
+pub mod net;
+pub mod perm;
+pub mod protocols;
+pub mod report;
+pub mod ring;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Library-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Crate version string (from Cargo).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

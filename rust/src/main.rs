@@ -1,0 +1,191 @@
+//! `centaur` CLI — leader entrypoint for the Centaur PPTI system.
+//!
+//! ```text
+//! centaur report <table1|table2|table3|table4|fig3|fig4|fig7|fig8|fig10|all> [--fast]
+//! centaur infer  --weights bert-tiny-qnli --text "..." [--net lan]
+//! centaur serve  --weights bert-tiny-qnli --requests 32 --batch 8 [--framework centaur]
+//! centaur compare --model bert-tiny [--full]
+//! centaur artifacts-check
+//! ```
+
+use centaur::baselines::FrameworkKind;
+use centaur::coordinator::{Coordinator, ServerConfig};
+use centaur::data::{artifacts_dir, TaskData, Vocab};
+use centaur::model::{ModelConfig, ModelWeights};
+use centaur::net::NetworkProfile;
+use centaur::report;
+use centaur::util::cli::Args;
+use centaur::Result;
+
+fn main() {
+    let args = Args::from_env();
+    let rc = match args.command.as_deref() {
+        Some("report") => cmd_report(&args),
+        Some("infer") => cmd_infer(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("artifacts-check") => cmd_artifacts_check(&args),
+        _ => {
+            eprintln!(
+                "centaur {} — hybrid privacy-preserving transformer inference\n\
+                 usage: centaur <report|infer|serve|compare|artifacts-check> [options]\n\
+                 report targets: table1 table2 table3 table4 fig3 fig4 fig7 fig8 fig10 all",
+                centaur::VERSION
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = rc {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn profile_arg(args: &Args) -> NetworkProfile {
+    NetworkProfile::by_name(args.opt_or("net", "lan")).unwrap_or_else(NetworkProfile::lan)
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let target = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let dir = args.opt_or("artifacts", &artifacts_dir()).to_string();
+    let extrapolate = !args.flag("full"); // --full disables layer extrapolation
+    let quick = args.flag("fast");
+    let run = |t: &str| -> Result<String> {
+        match t {
+            "table1" => report::table1(args.opt_usize("n", 128)),
+            "table2" | "table4" => {
+                let mut opts = report::AttackTableOpts::default();
+                if quick {
+                    opts.seeds = 1;
+                    opts.sentences = 6;
+                    opts.eia_sentences = 2;
+                    opts.eia_candidates = 12;
+                    opts.aux_train = 150;
+                }
+                opts.seeds = args.opt_u64("seeds", opts.seeds);
+                opts.sentences = args.opt_usize("sentences", opts.sentences);
+                report::attack_table(&dir, t == "table4", &opts)
+            }
+            "table3" => report::table3(&dir, args.opt_usize("engine-check", if quick { 2 } else { 8 })),
+            "fig3" => report::fig3(extrapolate),
+            "fig4" => report::fig4(&dir, args.opt_usize("examples", 3)),
+            "fig7" => {
+                let models = models_arg(args, "fig7");
+                report::fig7(&models, extrapolate)
+            }
+            "fig8" => {
+                let models = models_arg(args, "fig8");
+                report::fig8(&models, extrapolate)
+            }
+            "fig10" => {
+                let models = models_arg(args, "fig10");
+                report::fig8(&models, extrapolate)
+            }
+            other => anyhow::bail!("unknown report target '{other}'"),
+        }
+    };
+    if target == "all" {
+        for t in ["table1", "fig7", "fig8", "fig10", "fig3", "table3", "table2", "table4", "fig4"] {
+            println!("\n################ {t} ################");
+            println!("{}", run(t)?);
+        }
+    } else {
+        println!("{}", run(target)?);
+    }
+    Ok(())
+}
+
+fn models_arg(args: &Args, fig: &str) -> Vec<String> {
+    args.opt("models")
+        .map(|m| m.split(',').map(|s| s.trim().to_string()).collect())
+        .unwrap_or_else(|| report::default_models(fig))
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", &artifacts_dir()).to_string();
+    let tag = args.opt_or("weights", "bert-tiny-qnli");
+    let (cfg, weights) = ModelWeights::load_tag(&dir, tag)?;
+    let vocab = Vocab::load(&dir)?;
+    let text = args.opt_or("text", "omar captured the famous tower near london in march 1862");
+    let tokens = vocab.encode(text, cfg.n_ctx);
+    let mut engine = centaur::engine::CentaurEngine::new(&cfg, &weights, profile_arg(args), 7)?;
+    let out = engine.infer(&tokens)?;
+    println!("model   : {tag} ({} params)", cfg.param_count());
+    println!("input   : {text}");
+    println!("logits  : {:?}", out.logits.row(0).iter().take(8).collect::<Vec<_>>());
+    println!("comm    : {}", centaur::util::human_bytes(out.stats.bytes_total()));
+    println!("rounds  : {}", out.stats.rounds_total());
+    let p = profile_arg(args);
+    println!("est time: {} under {}", centaur::util::human_secs(out.stats.total_time(&p)), p.name);
+    println!("leaks   : {:?}", engine.leaks());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", &artifacts_dir()).to_string();
+    let tag = args.opt_or("weights", "bert-tiny-qnli").to_string();
+    let (cfg, weights) = ModelWeights::load_tag(&dir, &tag)?;
+    let mut sc = ServerConfig::new(cfg.clone(), weights);
+    sc.framework = FrameworkKind::by_name(args.opt_or("framework", "centaur"))
+        .ok_or_else(|| anyhow::anyhow!("unknown framework"))?;
+    sc.backend = args.opt_or("backend", "native").to_string();
+    sc.artifacts_dir = dir.clone();
+    sc.profile = profile_arg(args);
+    sc.workers = args.opt_usize("workers", 1);
+    sc.max_batch = args.opt_usize("batch", 8);
+    let n_req = args.opt_usize("requests", 16);
+
+    // requests from the matching task's test set when available
+    let task = tag.split('-').next_back().unwrap_or("qnli").to_string();
+    let inputs: Vec<Vec<u32>> = match TaskData::load(&dir, &task) {
+        Ok(td) => td.test.ids.into_iter().take(n_req).collect(),
+        Err(_) => (0..n_req).map(|i| vec![(4 + i % 100) as u32; cfg.n_ctx]).collect(),
+    };
+    println!(
+        "serving {} requests through {} ({} workers, batch<={}, {})",
+        inputs.len(),
+        sc.framework.name(),
+        sc.workers,
+        sc.max_batch,
+        sc.profile.name
+    );
+    let coord = Coordinator::start(sc)?;
+    let rxs: Vec<_> = inputs.into_iter().map(|t| coord.submit(t)).collect();
+    for rx in rxs {
+        rx.recv().map_err(|_| anyhow::anyhow!("coordinator died"))??;
+    }
+    let snap = coord.shutdown();
+    println!("{}", snap.summary());
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let model = args.opt_or("model", "bert-tiny");
+    let cfg = ModelConfig::by_name(model).ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let extrapolate = !args.flag("full");
+    println!("{}", report::fig7(&[model.to_string()], extrapolate)?);
+    let _ = cfg;
+    Ok(())
+}
+
+fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    let dir = args.opt_or("artifacts", &artifacts_dir()).to_string();
+    let vocab = Vocab::load(&dir)?;
+    println!("vocab: {} words", vocab.len());
+    for t in TaskData::ALL_TASKS {
+        let td = TaskData::load(&dir, t)?;
+        println!("task {t}: {} train / {} test", td.train.ids.len(), td.test.ids.len());
+    }
+    for model in ["bert-tiny", "gpt2-tiny", "bert-base", "bert-large", "gpt2-base", "gpt2-large"] {
+        match centaur::runtime::ArtifactRegistry::load(&dir, model) {
+            Ok(reg) => println!("hlo {model}: {} ops", reg.keys().count()),
+            Err(e) => println!("hlo {model}: MISSING ({e})"),
+        }
+    }
+    for tag in ["bert-tiny-qnli", "gpt2-tiny-wikitext103"] {
+        let (cfg, _w) = ModelWeights::load_tag(&dir, tag)?;
+        println!("weights {tag}: d={} layers={}", cfg.d, cfg.layers);
+    }
+    println!("artifacts OK");
+    Ok(())
+}

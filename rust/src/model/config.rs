@@ -1,0 +1,146 @@
+//! Model configurations — mirrors `python/compile/configs.py` (the AOT
+//! side); keep the two in sync.
+
+/// Transformer family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Encoder (NLU; classification adaptation with pooler+tanh).
+    Bert,
+    /// Decoder (NLG; causal mask, final LayerNorm, tied LM head).
+    Gpt2,
+}
+
+/// Static shape description of a model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub kind: ModelKind,
+    pub vocab: usize,
+    /// Sequence length used for experiments/AOT shapes.
+    pub n_ctx: usize,
+    /// Feature dimension `d`.
+    pub d: usize,
+    /// Attention heads `h`.
+    pub h: usize,
+    pub layers: usize,
+    /// FFN intermediate dimension `k` (4d in all configs).
+    pub k: usize,
+    /// Classifier width (BERT adaptation).
+    pub n_classes: usize,
+}
+
+impl ModelConfig {
+    fn new(name: &str, kind: ModelKind, vocab: usize, n_ctx: usize, d: usize, h: usize, layers: usize, k: usize) -> Self {
+        ModelConfig { name: name.into(), kind, vocab, n_ctx, d, h, layers, k, n_classes: 2 }
+    }
+
+    /// Tiny trained variant (synthetic tasks; accuracy & attack experiments).
+    pub fn bert_tiny() -> Self {
+        Self::new("bert-tiny", ModelKind::Bert, 512, 32, 64, 2, 2, 256)
+    }
+    pub fn gpt2_tiny() -> Self {
+        Self::new("gpt2-tiny", ModelKind::Gpt2, 512, 32, 64, 2, 2, 256)
+    }
+    /// Paper Appendix D shapes (efficiency experiments).
+    pub fn bert_base() -> Self {
+        Self::new("bert-base", ModelKind::Bert, 30522, 128, 768, 12, 12, 3072)
+    }
+    pub fn bert_large() -> Self {
+        Self::new("bert-large", ModelKind::Bert, 30522, 128, 1024, 16, 24, 4096)
+    }
+    pub fn gpt2_base() -> Self {
+        Self::new("gpt2-base", ModelKind::Gpt2, 50257, 128, 768, 12, 12, 3072)
+    }
+    pub fn gpt2_large() -> Self {
+        Self::new("gpt2-large", ModelKind::Gpt2, 50257, 128, 1280, 20, 36, 5120)
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "bert-tiny" => Some(Self::bert_tiny()),
+            "gpt2-tiny" => Some(Self::gpt2_tiny()),
+            "bert-base" => Some(Self::bert_base()),
+            "bert-large" => Some(Self::bert_large()),
+            "gpt2-base" => Some(Self::gpt2_base()),
+            "gpt2-large" => Some(Self::gpt2_large()),
+            _ => None,
+        }
+    }
+
+    pub const ALL_NAMES: [&'static str; 6] =
+        ["bert-tiny", "gpt2-tiny", "bert-base", "bert-large", "gpt2-base", "gpt2-large"];
+
+    /// Per-head dimension.
+    pub fn dh(&self) -> usize {
+        self.d / self.h
+    }
+
+    /// Total parameter count (for reports).
+    pub fn param_count(&self) -> usize {
+        let per_layer = 4 * self.d * self.d + 4 * self.d // attn weights+biases
+            + 2 * self.d * self.k + self.k + self.d // ffn
+            + 4 * self.d; // 2 layernorms
+        let emb = self.vocab * self.d + self.n_ctx * self.d + 2 * self.d;
+        let head = match self.kind {
+            ModelKind::Bert => self.d * self.d + self.d + self.n_classes * self.d + self.n_classes,
+            ModelKind::Gpt2 => 2 * self.d,
+        };
+        emb + self.layers * per_layer + head
+    }
+
+    /// Scale the config down to `layers` layers (bench extrapolation).
+    pub fn with_layers(&self, layers: usize) -> Self {
+        let mut c = self.clone();
+        c.layers = layers;
+        c
+    }
+
+    /// Scale to a different sequence length.
+    pub fn with_n_ctx(&self, n_ctx: usize) -> Self {
+        let mut c = self.clone();
+        c.n_ctx = n_ctx;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_appendix_d_dims() {
+        assert_eq!(ModelConfig::bert_base().d, 768);
+        assert_eq!(ModelConfig::bert_large().d, 1024);
+        assert_eq!(ModelConfig::bert_large().layers, 24);
+        assert_eq!(ModelConfig::gpt2_large().d, 1280);
+        assert_eq!(ModelConfig::gpt2_large().layers, 36);
+        assert_eq!(ModelConfig::gpt2_large().h, 20);
+    }
+
+    #[test]
+    fn param_counts_match_paper_magnitudes() {
+        // paper: BERT_BASE 110M, BERT_LARGE 340M, GPT2_BASE 117M, GPT2_LARGE 774M
+        let approx = |c: ModelConfig| c.param_count() as f64 / 1e6;
+        assert!((approx(ModelConfig::bert_base()) - 110.0).abs() < 15.0);
+        assert!((approx(ModelConfig::bert_large()) - 340.0).abs() < 30.0);
+        assert!((approx(ModelConfig::gpt2_base()) - 117.0).abs() < 15.0);
+        assert!((approx(ModelConfig::gpt2_large()) - 774.0).abs() < 60.0);
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for name in ModelConfig::ALL_NAMES {
+            let c = ModelConfig::by_name(name).unwrap();
+            assert_eq!(c.d % c.h, 0, "{name}");
+            assert_eq!(c.k, 4 * c.d, "{name}");
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in ModelConfig::ALL_NAMES {
+            assert_eq!(ModelConfig::by_name(name).unwrap().name, name);
+        }
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+}

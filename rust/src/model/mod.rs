@@ -1,0 +1,12 @@
+//! Model zoo: configurations, weights (CTWB checkpoints / seeded random),
+//! permuted parameter sets (Θ′), and the plaintext reference forward.
+
+mod config;
+mod permute;
+pub mod plaintext;
+mod weights;
+
+pub use config::{ModelConfig, ModelKind};
+pub use permute::{PermLayer, PermSet, PermutedModel};
+pub use plaintext::{forward, forward_trace, Trace, Variant};
+pub use weights::{LayerWeights, ModelWeights};

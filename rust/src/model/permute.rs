@@ -1,0 +1,262 @@
+//! Parameter permutation — Centaur's initialization phase (paper §5.1).
+//!
+//! The model developer `P0` draws `Π = {π (d×d), π₁ (n×n), π₂ (k×k)}` and
+//! ships the cloud `P1` only permuted parameters. This module computes the
+//! permuted set Θ′ in **our storage convention** (`W (out,in)`, activations
+//! `(n, d)`, `Y = X Wᵀ + b`):
+//!
+//! | layer | Θ′ held by the servers | algebra |
+//! |---|---|---|
+//! | embedding    | `W_E π` (vocab,d)          | `[X]·(W_Eπ) = X_Mπ` |
+//! | Q/K/V        | `W π` (in-perm only)       | `[Xπ](Wπ)ᵀ = XWᵀ` (shares, unpermuted → heads sliceable) |
+//! | attn out     | `πᵀ W_O` (out-perm)        | `[O₃](πᵀW_O)ᵀ = O₄π` |
+//! | FFN up       | `π₂ᵀ W₁ π`                 | `[L₁π](π₂ᵀW₁π)ᵀ = O₅π₂` |
+//! | FFN down     | `πᵀ W₂ π₂`                 | `[Gπ₂](πᵀW₂π₂)ᵀ = O₆π` |
+//! | LayerNorms   | `γπ, βπ` (f32, at P1)      | `LN(xπ, γπ, βπ) = LN(x)π` |
+//! | pooler       | `πᵀ W_P π`                 | `[cπ](πᵀW_Pπ)ᵀ = pπ` |
+//! | classifier   | `W_C π`                    | `[tπ](W_Cπ)ᵀ = logits` (unpermuted) |
+//!
+//! Biases consumed inside a permuted stream are permuted accordingly and
+//! held by `P0`, who adds them to its own share (`Π_Add` with plaintext —
+//! reveals nothing). Matrix weights used in `Π_ScalMul` are fixed-point
+//! encoded once here.
+
+use super::config::{ModelConfig, ModelKind};
+use super::weights::ModelWeights;
+use crate::fixed;
+use crate::perm::Perm;
+use crate::tensor::{FloatTensor, RingTensor};
+use crate::util::rng::Rng;
+
+/// The permutations drawn at initialization.
+#[derive(Clone, Debug)]
+pub struct PermSet {
+    /// Feature-dim permutation (d×d) — also sent to the client.
+    pub pi: Perm,
+    /// Sequence-dim permutation (n×n) — protects attention scores.
+    pub pi1: Perm,
+    /// FFN-intermediate permutation (k×k).
+    pub pi2: Perm,
+}
+
+impl PermSet {
+    pub fn random(cfg: &ModelConfig, rng: &mut Rng) -> Self {
+        PermSet {
+            pi: Perm::random(cfg.d, rng),
+            pi1: Perm::random(cfg.n_ctx, rng),
+            pi2: Perm::random(cfg.k, rng),
+        }
+    }
+
+    /// Identity permutations (ablation: permutation disabled).
+    pub fn identity(cfg: &ModelConfig) -> Self {
+        PermSet {
+            pi: Perm::identity(cfg.d),
+            pi1: Perm::identity(cfg.n_ctx),
+            pi2: Perm::identity(cfg.k),
+        }
+    }
+}
+
+/// One layer of Θ′ (fixed-point for Π_ScalMul; f32 affine for Π_PPLN at P1).
+#[derive(Clone)]
+pub struct PermLayer {
+    pub wq: RingTensor, // (d,d) = enc(Wq π)
+    pub wk: RingTensor,
+    pub wv: RingTensor,
+    pub bq: Vec<i64>, // enc(bq) — unpermuted stream (held by P0)
+    pub bk: Vec<i64>,
+    pub bv: Vec<i64>,
+    pub wo: RingTensor, // (d,d) = enc(πᵀ Wo)
+    pub bo: Vec<i64>,   // enc(bo π)
+    pub ln1_g: Vec<f32>, // γ₁π (P1 plaintext)
+    pub ln1_b: Vec<f32>,
+    pub w1: RingTensor, // (k,d) = enc(π₂ᵀ W₁ π)
+    pub b1: Vec<i64>,   // enc(b₁ π₂)
+    pub w2: RingTensor, // (d,k) = enc(πᵀ W₂ π₂)
+    pub b2: Vec<i64>,   // enc(b₂ π)
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+}
+
+/// Θ′ — everything the compute servers hold.
+#[derive(Clone)]
+pub struct PermutedModel {
+    pub cfg: ModelConfig,
+    pub perms: PermSet,
+    pub emb_word: RingTensor, // (vocab,d) = enc(W_E π)
+    pub emb_pos: RingTensor,  // (n,d) = enc(P π), added by P0
+    pub emb_ln_g: Vec<f32>,
+    pub emb_ln_b: Vec<f32>,
+    pub layers: Vec<PermLayer>,
+    // BERT adaptation
+    pub pooler_w: Option<RingTensor>, // enc(πᵀ W_P π)
+    pub pooler_b: Option<Vec<i64>>,   // enc(b_P π)
+    pub cls_w: Option<RingTensor>,    // enc(W_C π)
+    pub cls_b: Option<Vec<i64>>,      // enc(b_C)
+    // GPT-2 final LN (γπ, βπ)
+    pub final_ln_g: Option<Vec<f32>>,
+    pub final_ln_b: Option<Vec<f32>>,
+}
+
+fn enc(t: &FloatTensor) -> RingTensor {
+    fixed::encode_tensor(t)
+}
+
+fn enc_vec(v: &[f32]) -> Vec<i64> {
+    v.iter().map(|&x| fixed::encode(x as f64)).collect()
+}
+
+impl PermutedModel {
+    /// P0's initialization: permute + encode all parameters.
+    pub fn build(cfg: &ModelConfig, w: &ModelWeights, perms: PermSet) -> Self {
+        let pi = &perms.pi;
+        let pi2 = &perms.pi2;
+        let layers = w
+            .layers
+            .iter()
+            .map(|l| PermLayer {
+                wq: enc(&pi.apply_cols(&l.wq)),
+                wk: enc(&pi.apply_cols(&l.wk)),
+                wv: enc(&pi.apply_cols(&l.wv)),
+                bq: enc_vec(&l.bq),
+                bk: enc_vec(&l.bk),
+                bv: enc_vec(&l.bv),
+                wo: enc(&pi.apply_rows_t(&l.wo)),
+                bo: enc_vec(&pi.apply_vec(&l.bo)),
+                ln1_g: pi.apply_vec(&l.ln1_g),
+                ln1_b: pi.apply_vec(&l.ln1_b),
+                w1: enc(&pi2.apply_rows_t(&pi.apply_cols(&l.w1))),
+                b1: enc_vec(&pi2.apply_vec(&l.b1)),
+                w2: enc(&pi.apply_rows_t(&pi2.apply_cols(&l.w2))),
+                b2: enc_vec(&pi.apply_vec(&l.b2)),
+                ln2_g: pi.apply_vec(&l.ln2_g),
+                ln2_b: pi.apply_vec(&l.ln2_b),
+            })
+            .collect();
+        PermutedModel {
+            cfg: cfg.clone(),
+            emb_word: enc(&pi.apply_cols(&w.emb_word)),
+            emb_pos: enc(&pi.apply_cols(&w.emb_pos)),
+            emb_ln_g: pi.apply_vec(&w.emb_ln_g),
+            emb_ln_b: pi.apply_vec(&w.emb_ln_b),
+            layers,
+            pooler_w: w.pooler_w.as_ref().map(|p| enc(&pi.apply_rows_t(&pi.apply_cols(p)))),
+            pooler_b: w.pooler_b.as_ref().map(|b| enc_vec(&pi.apply_vec(b))),
+            cls_w: w.cls_w.as_ref().map(|c| enc(&pi.apply_cols(c))),
+            cls_b: w.cls_b.as_ref().map(|b| enc_vec(b)),
+            final_ln_g: w.final_ln_g.as_ref().map(|g| pi.apply_vec(g)),
+            final_ln_b: w.final_ln_b.as_ref().map(|b| pi.apply_vec(b)),
+            perms,
+        }
+    }
+
+    /// Total bytes of permuted parameters shipped to P1 (reports).
+    pub fn bytes(&self) -> u64 {
+        let mut n = self.emb_word.len() + self.emb_pos.len();
+        for l in &self.layers {
+            n += l.wq.len() + l.wk.len() + l.wv.len() + l.wo.len() + l.w1.len() + l.w2.len();
+        }
+        if let Some(p) = &self.pooler_w {
+            n += p.len();
+        }
+        if let Some(c) = &self.cls_w {
+            n += c.len();
+        }
+        (n as u64) * 8
+    }
+
+    pub fn is_bert(&self) -> bool {
+        self.cfg.kind == ModelKind::Bert
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::FloatTensor;
+
+    /// The central algebraic fact: permuted weights cancel against permuted
+    /// activations exactly as the module docs claim.
+    #[test]
+    fn qkv_cancellation() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 3);
+        let mut rng = Rng::new(4);
+        let perms = PermSet::random(&cfg, &mut rng);
+        let x = FloatTensor::from_fn(cfg.n_ctx, cfg.d, |r, c| ((r * 13 + c * 7) % 19) as f32 * 0.1 - 0.9);
+        let xp = perms.pi.apply_cols(&x);
+        // Xπ (Wqπ)ᵀ == X Wqᵀ
+        let wqp = perms.pi.apply_cols(&w.layers[0].wq);
+        let got = xp.matmul_nt(&wqp);
+        let want = x.matmul_nt(&w.layers[0].wq);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn wo_produces_pi_permuted_output() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 5);
+        let mut rng = Rng::new(6);
+        let perms = PermSet::random(&cfg, &mut rng);
+        let o3 = FloatTensor::from_fn(cfg.n_ctx, cfg.d, |r, c| ((r + c) % 13) as f32 * 0.2 - 1.0);
+        let wop = perms.pi.apply_rows_t(&w.layers[0].wo);
+        let got = o3.matmul_nt(&wop); // [O3](πᵀWo)ᵀ
+        let want = perms.pi.apply_cols(&o3.matmul_nt(&w.layers[0].wo)); // (O3 Woᵀ)π
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn ffn_chain_permutations() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 7);
+        let mut rng = Rng::new(8);
+        let perms = PermSet::random(&cfg, &mut rng);
+        let l1 = FloatTensor::from_fn(cfg.n_ctx, cfg.d, |r, c| ((r * 3 + c) % 17) as f32 * 0.1 - 0.8);
+        let l1p = perms.pi.apply_cols(&l1);
+        // up: [L1π](π2ᵀW1π)ᵀ == (L1 W1ᵀ)π2
+        let w1p = perms.pi2.apply_rows_t(&perms.pi.apply_cols(&w.layers[0].w1));
+        let o5p2 = l1p.matmul_nt(&w1p);
+        let want_up = perms.pi2.apply_cols(&l1.matmul_nt(&w.layers[0].w1));
+        assert!(o5p2.max_abs_diff(&want_up) < 1e-4);
+        // down: [Gπ2](πᵀW2π2)ᵀ == (G W2ᵀ)π
+        let g = o5p2; // reuse as arbitrary activations in π2 space
+        let w2p = perms.pi.apply_rows_t(&perms.pi2.apply_cols(&w.layers[0].w2));
+        let o6p = g.matmul_nt(&w2p);
+        let g_unperm = perms.pi2.inverse().apply_cols(&g);
+        let want_down = perms.pi.apply_cols(&g_unperm.matmul_nt(&w.layers[0].w2));
+        assert!(o6p.max_abs_diff(&want_down) < 1e-3);
+    }
+
+    #[test]
+    fn embedding_lookup_permutes_features() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 9);
+        let mut rng = Rng::new(10);
+        let perms = PermSet::random(&cfg, &mut rng);
+        // one-hot row selects a row of W_E π == (row of W_E) π
+        let token = 42usize;
+        let wep = perms.pi.apply_cols(&w.emb_word);
+        let direct: Vec<f32> = wep.row(token).to_vec();
+        let want = perms.pi.apply_vec(w.emb_word.row(token));
+        assert_eq!(direct, want);
+    }
+
+    #[test]
+    fn identity_perms_are_noop() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 11);
+        let pm = PermutedModel::build(&cfg, &w, PermSet::identity(&cfg));
+        let dec = fixed::decode_tensor(&pm.layers[0].wq);
+        assert!(dec.max_abs_diff(&w.layers[0].wq) < 2e-5);
+    }
+
+    #[test]
+    fn permuted_bytes_positive() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 12);
+        let mut rng = Rng::new(13);
+        let pm = PermutedModel::build(&cfg, &w, PermSet::random(&cfg, &mut rng));
+        assert!(pm.bytes() > (cfg.vocab * cfg.d * 8) as u64);
+    }
+}

@@ -1,0 +1,267 @@
+//! Plaintext reference forward pass in Rust — semantics identical to
+//! `python/compile/model.py` (same post-LN architecture, erf GeLU, eps).
+//!
+//! Used for (a) correctness oracles in integration tests (Centaur output
+//! must match this up to fixed-point noise), (b) the Table 3 accuracy
+//! evaluation of the substituted baselines, and (c) producing the
+//! intermediate tensors `O1/O4/O5/O6` that the DRA attack harness targets.
+
+use super::config::{ModelConfig, ModelKind};
+use super::weights::ModelWeights;
+use crate::runtime::native::{gelu_scalar, softmax_row};
+use crate::runtime::LN_EPS;
+use crate::tensor::FloatTensor;
+
+/// Non-linearity substitution variants (paper §3, Table 3 markers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Unmodified model (plaintext / PUMA / Centaur semantics).
+    Exact,
+    /// MPCFormer: Softmax→2Quad, GeLU→Quad.
+    MpcFormer,
+    /// SecFormer: Softmax→2Quad only.
+    SecFormer,
+}
+
+impl Variant {
+    pub fn by_name(s: &str) -> Option<Variant> {
+        match s {
+            "exact" => Some(Variant::Exact),
+            "mpcformer" => Some(Variant::MpcFormer),
+            "secformer" => Some(Variant::SecFormer),
+            _ => None,
+        }
+    }
+}
+
+/// `2Quad` softmax substitute (paper Eq. 8), c = 5.
+pub fn softmax_2quad_row(row: &mut [f32]) {
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        // masked positions (additive -1e9) get exactly zero weight,
+        // matching the SMPC engine's multiplicative mask semantics
+        *v = if *v < -1e8 { 0.0 } else { (*v + 5.0) * (*v + 5.0) };
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// `Quad` GeLU substitute.
+pub fn gelu_quad_scalar(x: f32) -> f32 {
+    0.125 * x * x + 0.25 * x + 0.5
+}
+
+fn softmax_variant(x: &mut FloatTensor, v: Variant) {
+    for r in 0..x.rows() {
+        match v {
+            Variant::Exact => softmax_row(x.row_mut(r)),
+            _ => softmax_2quad_row(x.row_mut(r)),
+        }
+    }
+}
+
+fn gelu_variant(x: &FloatTensor, v: Variant) -> FloatTensor {
+    match v {
+        Variant::MpcFormer => x.map(gelu_quad_scalar),
+        _ => x.map(gelu_scalar),
+    }
+}
+
+fn layernorm(x: &FloatTensor, g: &[f32], b: &[f32]) -> FloatTensor {
+    let d = x.cols();
+    let mut out = x.clone();
+    for r in 0..out.rows() {
+        let row = out.row_mut(r);
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let rstd = 1.0 / (var + LN_EPS).sqrt();
+        for c in 0..d {
+            row[c] = g[c] * (row[c] - mean) * rstd + b[c];
+        }
+    }
+    out
+}
+
+/// Intermediates of one layer (the paper's attack targets, Table 2).
+pub struct LayerTrace {
+    /// `QKᵀ/√dh + M`, heads stacked to `(h·n, n)`.
+    pub o1: FloatTensor,
+    /// Attention output after W_O: `(n, d)`.
+    pub o4: FloatTensor,
+    /// FFN up-projection (pre-GeLU): `(n, k)`.
+    pub o5: FloatTensor,
+    /// FFN down-projection: `(n, d)`.
+    pub o6: FloatTensor,
+    /// Layer output after the second LayerNorm.
+    pub l2: FloatTensor,
+}
+
+/// Full forward trace.
+pub struct Trace {
+    pub embedded: FloatTensor,
+    pub layers: Vec<LayerTrace>,
+    /// Final hidden states `(n, d)` (after GPT-2 final LN when applicable).
+    pub hidden: FloatTensor,
+    /// BERT: `(1, n_classes)` logits; GPT-2: `(n, vocab)` logits.
+    pub logits: FloatTensor,
+}
+
+/// Run the model over a token sequence, recording intermediates.
+pub fn forward_trace(cfg: &ModelConfig, w: &ModelWeights, ids: &[u32], variant: Variant) -> Trace {
+    let n = ids.len();
+    assert!(n <= cfg.n_ctx, "sequence longer than n_ctx");
+    // Embedding: lookup + positional + LayerNorm.
+    let mut x = FloatTensor::from_fn(n, cfg.d, |r, c| {
+        w.emb_word.get(ids[r] as usize, c) + w.emb_pos.get(r, c)
+    });
+    x = layernorm(&x, &w.emb_ln_g, &w.emb_ln_b);
+    let embedded = x.clone();
+
+    let causal = cfg.kind == ModelKind::Gpt2;
+    let dh = cfg.dh();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut layers = Vec::with_capacity(cfg.layers);
+    for l in &w.layers {
+        // attention
+        let q = x.matmul_nt(&l.wq).add_row(&l.bq);
+        let k = x.matmul_nt(&l.wk).add_row(&l.bk);
+        let v = x.matmul_nt(&l.wv).add_row(&l.bv);
+        let mut o1_stack = FloatTensor::zeros(cfg.h * n, n);
+        let mut o3 = FloatTensor::zeros(n, cfg.d);
+        for h in 0..cfg.h {
+            let qh = q.col_block(h * dh, (h + 1) * dh);
+            let kh = k.col_block(h * dh, (h + 1) * dh);
+            let vh = v.col_block(h * dh, (h + 1) * dh);
+            let mut scores = qh.matmul_nt(&kh);
+            scores.map_inplace(|s| s * scale);
+            if causal {
+                for r in 0..n {
+                    for c in (r + 1)..n {
+                        scores.set(r, c, scores.get(r, c) - 1e9);
+                    }
+                }
+            }
+            // record O1 before softmax
+            for r in 0..n {
+                o1_stack.row_mut(h * n + r).copy_from_slice(scores.row(r));
+            }
+            softmax_variant(&mut scores, variant);
+            let oh = scores.matmul(&vh);
+            o3.set_col_block(h * dh, &oh);
+        }
+        let o4 = o3.matmul_nt(&l.wo).add_row(&l.bo);
+        let res1 = o4.zip_with(&x, |a, b| a + b);
+        let l1 = layernorm(&res1, &l.ln1_g, &l.ln1_b);
+        let o5 = l1.matmul_nt(&l.w1).add_row(&l.b1);
+        let g = gelu_variant(&o5, variant);
+        let o6 = g.matmul_nt(&l.w2).add_row(&l.b2);
+        let res2 = o6.zip_with(&l1, |a, b| a + b);
+        let l2 = layernorm(&res2, &l.ln2_g, &l.ln2_b);
+        x = l2.clone();
+        layers.push(LayerTrace { o1: o1_stack, o4, o5, o6, l2 });
+    }
+
+    // adaptation
+    let (hidden, logits) = match cfg.kind {
+        ModelKind::Bert => {
+            let cls = x.col_block(0, cfg.d).row(0).to_vec(); // row 0
+            let cls_t = FloatTensor::from_vec(1, cfg.d, cls);
+            let pooled = cls_t
+                .matmul_nt(w.pooler_w.as_ref().unwrap())
+                .add_row(w.pooler_b.as_ref().unwrap())
+                .map(f32::tanh);
+            let logits = pooled
+                .matmul_nt(w.cls_w.as_ref().unwrap())
+                .add_row(w.cls_b.as_ref().unwrap());
+            (x, logits)
+        }
+        ModelKind::Gpt2 => {
+            let h = layernorm(&x, w.final_ln_g.as_ref().unwrap(), w.final_ln_b.as_ref().unwrap());
+            let logits = h.matmul_nt(&w.emb_word); // tied head: H @ W_Eᵀ
+            (h, logits)
+        }
+    };
+    Trace { embedded, layers, hidden, logits }
+}
+
+/// Logits only (convenience).
+pub fn forward(cfg: &ModelConfig, w: &ModelWeights, ids: &[u32], variant: Variant) -> FloatTensor {
+    forward_trace(cfg, w, ids, variant).logits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> (ModelConfig, ModelWeights) {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 21);
+        (cfg, w)
+    }
+
+    #[test]
+    fn bert_logit_shape_and_determinism() {
+        let (cfg, w) = tiny();
+        let ids: Vec<u32> = (0..cfg.n_ctx as u32).collect();
+        let a = forward(&cfg, &w, &ids, Variant::Exact);
+        let b = forward(&cfg, &w, &ids, Variant::Exact);
+        assert_eq!(a.shape(), (1, cfg.n_classes));
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn gpt_logits_and_causality() {
+        let cfg = ModelConfig::gpt2_tiny();
+        let w = ModelWeights::random(&cfg, 22);
+        let ids: Vec<u32> = vec![5; cfg.n_ctx];
+        let base = forward(&cfg, &w, &ids, Variant::Exact);
+        assert_eq!(base.shape(), (cfg.n_ctx, cfg.vocab));
+        let mut ids2 = ids.clone();
+        *ids2.last_mut().unwrap() = 9;
+        let pert = forward(&cfg, &w, &ids2, Variant::Exact);
+        // earlier rows unchanged (causal), last row changed
+        for r in 0..cfg.n_ctx - 1 {
+            for c in 0..8 {
+                assert!((base.get(r, c) - pert.get(r, c)).abs() < 1e-5);
+            }
+        }
+        assert!((0..8).any(|c| (base.get(cfg.n_ctx - 1, c) - pert.get(cfg.n_ctx - 1, c)).abs() > 1e-6));
+    }
+
+    #[test]
+    fn variants_change_output() {
+        let (cfg, w) = tiny();
+        let ids: Vec<u32> = (0..cfg.n_ctx as u32).map(|i| (i * 3) % 500).collect();
+        let e = forward(&cfg, &w, &ids, Variant::Exact);
+        let m = forward(&cfg, &w, &ids, Variant::MpcFormer);
+        let s = forward(&cfg, &w, &ids, Variant::SecFormer);
+        assert!(e.max_abs_diff(&m) > 1e-6);
+        assert!(e.max_abs_diff(&s) > 1e-6);
+        assert!(m.max_abs_diff(&s) > 1e-6);
+    }
+
+    #[test]
+    fn trace_shapes() {
+        let (cfg, w) = tiny();
+        let ids: Vec<u32> = (0..cfg.n_ctx as u32).collect();
+        let t = forward_trace(&cfg, &w, &ids, Variant::Exact);
+        assert_eq!(t.layers.len(), cfg.layers);
+        let lt = &t.layers[0];
+        assert_eq!(lt.o1.shape(), (cfg.h * cfg.n_ctx, cfg.n_ctx));
+        assert_eq!(lt.o4.shape(), (cfg.n_ctx, cfg.d));
+        assert_eq!(lt.o5.shape(), (cfg.n_ctx, cfg.k));
+        assert_eq!(lt.o6.shape(), (cfg.n_ctx, cfg.d));
+    }
+
+    #[test]
+    fn softmax_2quad_row_normalizes() {
+        let mut row = vec![0.5f32, -1.0, 2.0, 0.0];
+        softmax_2quad_row(&mut row);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(row.iter().all(|&v| v >= 0.0));
+    }
+}

@@ -1,0 +1,281 @@
+//! Model weights: CTWB checkpoint loading (written by
+//! `python/compile/train_tiny.py::export_ctwb`) and seeded random
+//! initialization for the paper-scale efficiency experiments.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::config::{ModelConfig, ModelKind};
+use crate::tensor::FloatTensor;
+use crate::util::json;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// One transformer layer's parameters (storage layout (out, in), matching
+/// `python/compile/model.py::init_params`).
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub wq: FloatTensor,
+    pub bq: Vec<f32>,
+    pub wk: FloatTensor,
+    pub bk: Vec<f32>,
+    pub wv: FloatTensor,
+    pub bv: Vec<f32>,
+    pub wo: FloatTensor,
+    pub bo: Vec<f32>,
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub w1: FloatTensor,
+    pub b1: Vec<f32>,
+    pub w2: FloatTensor,
+    pub b2: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+}
+
+/// Full parameter set of a model.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub emb_word: FloatTensor, // (vocab, d)
+    pub emb_pos: FloatTensor,  // (n_ctx, d)
+    pub emb_ln_g: Vec<f32>,
+    pub emb_ln_b: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+    /// BERT adaptation (None for GPT-2).
+    pub pooler_w: Option<FloatTensor>,
+    pub pooler_b: Option<Vec<f32>>,
+    pub cls_w: Option<FloatTensor>,
+    pub cls_b: Option<Vec<f32>>,
+    /// GPT-2 final LayerNorm (None for BERT).
+    pub final_ln_g: Option<Vec<f32>>,
+    pub final_ln_b: Option<Vec<f32>>,
+}
+
+impl ModelWeights {
+    /// Seeded gaussian init (std 0.02), mirroring the python initializer.
+    pub fn random(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut mat = |r: usize, c: usize| {
+            FloatTensor::from_vec(r, c, rng.vec_gaussian_f32(r * c, 0.02))
+        };
+        let layers = (0..cfg.layers)
+            .map(|_| LayerWeights {
+                wq: mat(cfg.d, cfg.d),
+                bq: vec![0.0; cfg.d],
+                wk: mat(cfg.d, cfg.d),
+                bk: vec![0.0; cfg.d],
+                wv: mat(cfg.d, cfg.d),
+                bv: vec![0.0; cfg.d],
+                wo: mat(cfg.d, cfg.d),
+                bo: vec![0.0; cfg.d],
+                ln1_g: vec![1.0; cfg.d],
+                ln1_b: vec![0.0; cfg.d],
+                w1: mat(cfg.k, cfg.d),
+                b1: vec![0.0; cfg.k],
+                w2: mat(cfg.d, cfg.k),
+                b2: vec![0.0; cfg.d],
+                ln2_g: vec![1.0; cfg.d],
+                ln2_b: vec![0.0; cfg.d],
+            })
+            .collect();
+        let is_bert = cfg.kind == ModelKind::Bert;
+        ModelWeights {
+            emb_word: mat(cfg.vocab, cfg.d),
+            emb_pos: mat(cfg.n_ctx, cfg.d),
+            emb_ln_g: vec![1.0; cfg.d],
+            emb_ln_b: vec![0.0; cfg.d],
+            layers,
+            pooler_w: is_bert.then(|| mat(cfg.d, cfg.d)),
+            pooler_b: is_bert.then(|| vec![0.0; cfg.d]),
+            cls_w: is_bert.then(|| mat(cfg.n_classes, cfg.d)),
+            cls_b: is_bert.then(|| vec![0.0; cfg.n_classes]),
+            final_ln_g: (!is_bert).then(|| vec![1.0; cfg.d]),
+            final_ln_b: (!is_bert).then(|| vec![0.0; cfg.d]),
+        }
+    }
+
+    /// Load a CTWB checkpoint directory (`manifest.json` + `weights.bin`).
+    /// Returns the (possibly task-specific) config together with weights.
+    pub fn load(dir: &Path) -> Result<(ModelConfig, Self)> {
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("read {}/manifest.json: {e}", dir.display()))?;
+        let man = json::parse(&manifest_text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let kind = match man.get("kind").as_str() {
+            Some("bert") => ModelKind::Bert,
+            Some("gpt2") => ModelKind::Gpt2,
+            other => anyhow::bail!("bad kind {other:?}"),
+        };
+        let cfg = ModelConfig {
+            name: man.get("model").as_str().unwrap_or("?").to_string(),
+            kind,
+            vocab: man.get("vocab").as_usize().unwrap_or(0),
+            n_ctx: man.get("n_ctx").as_usize().unwrap_or(0),
+            d: man.get("d").as_usize().unwrap_or(0),
+            h: man.get("h").as_usize().unwrap_or(0),
+            layers: man.get("layers").as_usize().unwrap_or(0),
+            k: man.get("k").as_usize().unwrap_or(0),
+            n_classes: man.get("n_classes").as_usize().unwrap_or(2),
+        };
+        let blob = std::fs::read(dir.join("weights.bin"))
+            .map_err(|e| anyhow::anyhow!("read weights.bin: {e}"))?;
+        let mut tensors: BTreeMap<String, FloatTensor> = BTreeMap::new();
+        for t in man.get("tensors").as_arr().unwrap_or(&[]) {
+            let name = t.get("name").as_str().unwrap_or_default().to_string();
+            let rows = t.get("rows").as_usize().unwrap_or(0);
+            let cols = t.get("cols").as_usize().unwrap_or(0);
+            let off = t.get("offset").as_usize().unwrap_or(0) * 4;
+            let need = rows * cols * 4;
+            anyhow::ensure!(off + need <= blob.len(), "tensor {name} out of range");
+            let mut data = Vec::with_capacity(rows * cols);
+            for i in 0..rows * cols {
+                let b = &blob[off + 4 * i..off + 4 * i + 4];
+                data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            tensors.insert(name, FloatTensor::from_vec(rows, cols, data));
+        }
+        let get = |n: &str| -> Result<FloatTensor> {
+            tensors.get(n).cloned().ok_or_else(|| anyhow::anyhow!("missing tensor {n}"))
+        };
+        let vec = |n: &str| -> Result<Vec<f32>> { Ok(get(n)?.into_data()) };
+
+        let mut layers = Vec::with_capacity(cfg.layers);
+        for i in 0..cfg.layers {
+            let p = |s: &str| format!("layer{i}.{s}");
+            layers.push(LayerWeights {
+                wq: get(&p("attn.wq"))?,
+                bq: vec(&p("attn.bq"))?,
+                wk: get(&p("attn.wk"))?,
+                bk: vec(&p("attn.bk"))?,
+                wv: get(&p("attn.wv"))?,
+                bv: vec(&p("attn.bv"))?,
+                wo: get(&p("attn.wo"))?,
+                bo: vec(&p("attn.bo"))?,
+                ln1_g: vec(&p("ln1.gamma"))?,
+                ln1_b: vec(&p("ln1.beta"))?,
+                w1: get(&p("ffn.w1"))?,
+                b1: vec(&p("ffn.b1"))?,
+                w2: get(&p("ffn.w2"))?,
+                b2: vec(&p("ffn.b2"))?,
+                ln2_g: vec(&p("ln2.gamma"))?,
+                ln2_b: vec(&p("ln2.beta"))?,
+            });
+        }
+        let is_bert = kind == ModelKind::Bert;
+        Ok((
+            cfg,
+            ModelWeights {
+                emb_word: get("emb.word")?,
+                emb_pos: get("emb.pos")?,
+                emb_ln_g: vec("emb.ln.gamma")?,
+                emb_ln_b: vec("emb.ln.beta")?,
+                layers,
+                pooler_w: if is_bert { Some(get("pooler.w")?) } else { None },
+                pooler_b: if is_bert { Some(vec("pooler.b")?) } else { None },
+                cls_w: if is_bert { Some(get("cls.w")?) } else { None },
+                cls_b: if is_bert { Some(vec("cls.b")?) } else { None },
+                final_ln_g: if is_bert { None } else { Some(vec("final_ln.gamma")?) },
+                final_ln_b: if is_bert { None } else { Some(vec("final_ln.beta")?) },
+            },
+        ))
+    }
+
+    /// Load `artifacts/weights/<tag>` relative to an artifacts dir.
+    pub fn load_tag(artifacts_dir: &str, tag: &str) -> Result<(ModelConfig, Self)> {
+        Self::load(&Path::new(artifacts_dir).join("weights").join(tag))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_weights_have_config_shapes() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 1);
+        assert_eq!(w.emb_word.shape(), (cfg.vocab, cfg.d));
+        assert_eq!(w.layers.len(), cfg.layers);
+        assert_eq!(w.layers[0].w1.shape(), (cfg.k, cfg.d));
+        assert_eq!(w.layers[0].w2.shape(), (cfg.d, cfg.k));
+        assert!(w.pooler_w.is_some());
+        assert!(w.final_ln_g.is_none());
+    }
+
+    #[test]
+    fn gpt_weights_have_final_ln() {
+        let cfg = ModelConfig::gpt2_tiny();
+        let w = ModelWeights::random(&cfg, 2);
+        assert!(w.pooler_w.is_none());
+        assert!(w.final_ln_g.is_some());
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let cfg = ModelConfig::bert_tiny();
+        let a = ModelWeights::random(&cfg, 7);
+        let b = ModelWeights::random(&cfg, 7);
+        assert_eq!(a.emb_word.data(), b.emb_word.data());
+        let c = ModelWeights::random(&cfg, 8);
+        assert_ne!(a.emb_word.data(), c.emb_word.data());
+    }
+
+    #[test]
+    fn ctwb_load_roundtrip() {
+        // Write a minimal CTWB checkpoint by hand and read it back.
+        let cfg = ModelConfig { layers: 1, ..ModelConfig::bert_tiny() };
+        let tmp = std::env::temp_dir().join(format!("centaur_ctwb_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        // build tensors in sorted-name order like export_ctwb
+        let names: Vec<(String, usize, usize)> = {
+            let mut v = vec![
+                ("cls.b".into(), 1, cfg.n_classes),
+                ("cls.w".into(), cfg.n_classes, cfg.d),
+                ("emb.ln.beta".into(), 1, cfg.d),
+                ("emb.ln.gamma".into(), 1, cfg.d),
+                ("emb.pos".into(), cfg.n_ctx, cfg.d),
+                ("emb.word".into(), cfg.vocab, cfg.d),
+                ("pooler.b".into(), 1, cfg.d),
+                ("pooler.w".into(), cfg.d, cfg.d),
+            ];
+            for s in ["attn.bk", "attn.bo", "attn.bq", "attn.bv"] {
+                v.push((format!("layer0.{s}"), 1, cfg.d));
+            }
+            for s in ["attn.wk", "attn.wo", "attn.wq", "attn.wv"] {
+                v.push((format!("layer0.{s}"), cfg.d, cfg.d));
+            }
+            v.push(("layer0.ffn.b1".into(), 1, cfg.k));
+            v.push(("layer0.ffn.b2".into(), 1, cfg.d));
+            v.push(("layer0.ffn.w1".into(), cfg.k, cfg.d));
+            v.push(("layer0.ffn.w2".into(), cfg.d, cfg.k));
+            for s in ["ln1.beta", "ln1.gamma", "ln2.beta", "ln2.gamma"] {
+                v.push((format!("layer0.{s}"), 1, cfg.d));
+            }
+            v.sort();
+            v
+        };
+        let mut blob: Vec<u8> = vec![];
+        let mut entries = vec![];
+        let mut off = 0usize;
+        for (name, r, c) in &names {
+            for i in 0..r * c {
+                blob.extend_from_slice(&((i % 97) as f32 * 0.01).to_le_bytes());
+            }
+            entries.push(format!(
+                r#"{{"name":"{name}","rows":{r},"cols":{c},"offset":{off}}}"#
+            ));
+            off += r * c;
+        }
+        let manifest = format!(
+            r#"{{"tag":"t","model":"bert-tiny","kind":"bert","vocab":{},"n_ctx":{},"d":{},"h":{},"layers":1,"k":{},"n_classes":{},"tensors":[{}]}}"#,
+            cfg.vocab, cfg.n_ctx, cfg.d, cfg.h, cfg.k, cfg.n_classes,
+            entries.join(",")
+        );
+        std::fs::write(tmp.join("manifest.json"), manifest).unwrap();
+        std::fs::write(tmp.join("weights.bin"), &blob).unwrap();
+        let (lcfg, w) = ModelWeights::load(&tmp).unwrap();
+        assert_eq!(lcfg.layers, 1);
+        assert_eq!(w.emb_word.shape(), (cfg.vocab, cfg.d));
+        assert_eq!(w.layers[0].wq.get(0, 1), 0.01);
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

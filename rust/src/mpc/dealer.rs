@@ -1,0 +1,125 @@
+//! Trusted dealer for correlated randomness (Beaver triples).
+//!
+//! CrypTen's TTP ("trusted first party") provider model: during an offline
+//! phase, a dealer generates multiplication triples and distributes shares.
+//! Like the paper (and CrypTen's cost reporting), dealer↔party traffic is
+//! **not** charged against the online communication ledger; it is tracked
+//! separately in [`Dealer::offline_bytes`] so the offline/online split can
+//! be reported (EXPERIMENTS.md notes it).
+
+use crate::ring;
+use crate::tensor::RingTensor;
+use crate::util::rng::Rng;
+
+use super::Share;
+
+/// A matrix Beaver triple `C = A·B` in shares.
+pub struct MatTriple {
+    pub a: Share,
+    pub b: Share,
+    pub c: Share,
+}
+
+/// A square pair `C = A∘A` in shares (for the cheap square protocol).
+pub struct SquarePair {
+    pub a: Share,
+    pub c: Share,
+}
+
+/// The dealer: a PRG plus offline-traffic accounting.
+pub struct Dealer {
+    rng: Rng,
+    /// Bytes of correlated randomness distributed (offline phase).
+    pub offline_bytes: u64,
+    /// Number of triples served (diagnostics).
+    pub triples_served: u64,
+}
+
+impl Dealer {
+    pub fn new(rng: Rng) -> Self {
+        Dealer { rng, offline_bytes: 0, triples_served: 0 }
+    }
+
+    fn share_of(&mut self, x: RingTensor) -> Share {
+        let s0 = RingTensor::from_vec(x.rows(), x.cols(), self.rng.vec_i64(x.len()));
+        let s1 = ring::sub(&x, &s0);
+        Share { s0, s1 }
+    }
+
+    fn rand_tensor(&mut self, rows: usize, cols: usize) -> RingTensor {
+        RingTensor::from_vec(rows, cols, self.rng.vec_i64(rows * cols))
+    }
+
+    /// Serve a matrix triple for `X (m×k) @ Y (k×n)`.
+    pub fn matmul_triple(&mut self, m: usize, k: usize, n: usize) -> MatTriple {
+        let a = self.rand_tensor(m, k);
+        let b = self.rand_tensor(k, n);
+        let c = ring::matmul(&a, &b);
+        self.offline_bytes += 8 * 2 * (m * k + k * n + m * n) as u64;
+        self.triples_served += 1;
+        MatTriple { a: self.share_of(a), b: self.share_of(b), c: self.share_of(c) }
+    }
+
+    /// Serve an elementwise triple of shape `rows×cols`.
+    pub fn elem_triple(&mut self, rows: usize, cols: usize) -> MatTriple {
+        let a = self.rand_tensor(rows, cols);
+        let b = self.rand_tensor(rows, cols);
+        let c = ring::mul_elem(&a, &b);
+        self.offline_bytes += 8 * 2 * 3 * (rows * cols) as u64;
+        self.triples_served += 1;
+        MatTriple { a: self.share_of(a), b: self.share_of(b), c: self.share_of(c) }
+    }
+
+    /// Serve a square pair of shape `rows×cols`.
+    pub fn square_pair(&mut self, rows: usize, cols: usize) -> SquarePair {
+        let a = self.rand_tensor(rows, cols);
+        let c = ring::mul_elem(&a, &a);
+        self.offline_bytes += 8 * 2 * 2 * (rows * cols) as u64;
+        self.triples_served += 1;
+        SquarePair { a: self.share_of(a), c: self.share_of(c) }
+    }
+
+    /// Dealer-held RNG fork (for ideal-functionality resharing).
+    pub fn fork_rng(&mut self, tag: u64) -> Rng {
+        self.rng.fork(tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triple_identity_holds() {
+        let mut d = Dealer::new(Rng::new(7));
+        let t = d.matmul_triple(3, 4, 5);
+        let a = t.a.reconstruct();
+        let b = t.b.reconstruct();
+        let c = t.c.reconstruct();
+        assert_eq!(ring::matmul(&a, &b), c);
+    }
+
+    #[test]
+    fn elem_triple_identity() {
+        let mut d = Dealer::new(Rng::new(8));
+        let t = d.elem_triple(4, 4);
+        assert_eq!(ring::mul_elem(&t.a.reconstruct(), &t.b.reconstruct()), t.c.reconstruct());
+    }
+
+    #[test]
+    fn square_pair_identity() {
+        let mut d = Dealer::new(Rng::new(9));
+        let p = d.square_pair(2, 6);
+        let a = p.a.reconstruct();
+        assert_eq!(ring::mul_elem(&a, &a), p.c.reconstruct());
+    }
+
+    #[test]
+    fn offline_accounting_grows() {
+        let mut d = Dealer::new(Rng::new(10));
+        let before = d.offline_bytes;
+        d.matmul_triple(8, 8, 8);
+        assert!(d.offline_bytes > before);
+        assert_eq!(d.triples_served, 1);
+    }
+}

@@ -1,0 +1,547 @@
+//! 2-out-of-2 additive secret sharing over `Z_{2^64}` with a trusted dealer
+//! (the CrypTen model the paper builds on, §2.2).
+//!
+//! [`Share`] holds both parties' shares inside the simulator; protocol code
+//! only ever combines them through the [`Mpc`] context, which charges every
+//! transfer to the [`crate::net::NetSim`] ledger. The primitive costs match
+//! the paper's Table 1 exactly (see module tests).
+
+pub mod dealer;
+pub mod nonlin;
+
+use crate::fixed;
+use crate::net::{NetSim, OpClass, PartyId};
+use crate::ring;
+use crate::tensor::RingTensor;
+use crate::util::rng::Rng;
+use dealer::Dealer;
+
+/// A 2-party additive sharing of a ring tensor: `x = s0 + s1 (mod 2^64)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Share {
+    pub s0: RingTensor,
+    pub s1: RingTensor,
+}
+
+impl Share {
+    pub fn rows(&self) -> usize {
+        self.s0.rows()
+    }
+    pub fn cols(&self) -> usize {
+        self.s0.cols()
+    }
+    pub fn shape(&self) -> (usize, usize) {
+        self.s0.shape()
+    }
+
+    /// Simulator-internal reconstruction (no communication charged) — for
+    /// tests and the ideal-functionality fallbacks documented in DESIGN.md.
+    pub fn reconstruct(&self) -> RingTensor {
+        ring::add(&self.s0, &self.s1)
+    }
+
+    /// Access one party's share.
+    pub fn of(&self, party: PartyId) -> &RingTensor {
+        match party {
+            PartyId::P0 => &self.s0,
+            PartyId::P1 => &self.s1,
+            _ => panic!("only compute servers hold shares"),
+        }
+    }
+
+    /// Local transpose of both shares.
+    pub fn transpose(&self) -> Share {
+        Share { s0: self.s0.transpose(), s1: self.s1.transpose() }
+    }
+
+    /// Local column-block slice of both shares.
+    pub fn col_block(&self, c0: usize, c1: usize) -> Share {
+        Share { s0: self.s0.col_block(c0, c1), s1: self.s1.col_block(c0, c1) }
+    }
+
+    /// Horizontal concatenation of shares.
+    pub fn concat_cols(blocks: &[Share]) -> Share {
+        Share {
+            s0: RingTensor::concat_cols(&blocks.iter().map(|b| b.s0.clone()).collect::<Vec<_>>()),
+            s1: RingTensor::concat_cols(&blocks.iter().map(|b| b.s1.clone()).collect::<Vec<_>>()),
+        }
+    }
+
+    /// Local row-block slice (rows `[r0, r1)`).
+    pub fn row_block(&self, r0: usize, r1: usize) -> Share {
+        let f = |t: &RingTensor| {
+            let mut out = RingTensor::zeros(r1 - r0, t.cols());
+            for r in r0..r1 {
+                out.row_mut(r - r0).copy_from_slice(t.row(r));
+            }
+            out
+        };
+        Share { s0: f(&self.s0), s1: f(&self.s1) }
+    }
+}
+
+/// MPC execution context: network simulator + dealer + share randomness.
+pub struct Mpc {
+    pub net: NetSim,
+    pub dealer: Dealer,
+    rng: Rng,
+}
+
+impl Mpc {
+    pub fn new(net: NetSim, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let dealer = Dealer::new(rng.fork(0xDEA1));
+        Mpc { net, dealer, rng }
+    }
+
+    // ------------------------------------------------------------------
+    // Sharing / opening
+    // ------------------------------------------------------------------
+
+    /// Split a plaintext into a fresh random sharing (no comm — used by the
+    /// party that owns the value; the transfer of shares to the compute
+    /// servers is charged by the caller via [`Mpc::input_share`]).
+    pub fn share_local(&mut self, x: &RingTensor) -> Share {
+        let s0 = RingTensor::from_vec(x.rows(), x.cols(), self.rng.vec_i64(x.len()));
+        let s1 = ring::sub(x, &s0);
+        Share { s0, s1 }
+    }
+
+    /// Client-side input sharing: generate shares and send `[x]_j` to each
+    /// compute server (1 round, `2·8·|x|` bytes — both messages in parallel).
+    pub fn input_share(&mut self, x: &RingTensor, class: OpClass) -> Share {
+        let sh = self.share_local(x);
+        let s0 = self.net.transfer(PartyId::P2, PartyId::P0, &sh.s0, class);
+        let s1 = self.net.transfer(PartyId::P2, PartyId::P1, &sh.s1, class);
+        self.net.round(class, 1);
+        Share { s0, s1 }
+    }
+
+    /// Open a sharing to both parties (1 round, each party sends its share
+    /// to the other: `2·8·|x|` bytes).
+    pub fn open(&mut self, s: &Share, class: OpClass) -> RingTensor {
+        let a = self.net.transfer(PartyId::P0, PartyId::P1, &s.s0, class);
+        let b = self.net.transfer(PartyId::P1, PartyId::P0, &s.s1, class);
+        self.net.round(class, 1);
+        ring::add(&a, &b)
+    }
+
+    /// Open to a single party (half the traffic, 1 round).
+    pub fn open_to(&mut self, s: &Share, to: PartyId, class: OpClass) -> RingTensor {
+        let from = if to == PartyId::P0 { PartyId::P1 } else { PartyId::P0 };
+        let other = self.net.transfer(from, to, s.of(from), class);
+        self.net.round(class, 1);
+        ring::add(s.of(to), &other)
+    }
+
+    /// Send an existing share tensor from one server to the other (e.g. the
+    /// `Π_PP*` state conversion) — charged, no round bookkeeping (caller
+    /// groups rounds).
+    pub fn send_share_half(&mut self, s: &Share, from: PartyId, to: PartyId, class: OpClass) -> RingTensor {
+        self.net.transfer(from, to, s.of(from), class)
+    }
+
+    // ------------------------------------------------------------------
+    // Linear (communication-free) protocols — Π_Add, Π_ScalMul
+    // ------------------------------------------------------------------
+
+    /// `Π_Add`: elementwise share addition (local).
+    pub fn add(&self, a: &Share, b: &Share) -> Share {
+        Share { s0: ring::add(&a.s0, &b.s0), s1: ring::add(&a.s1, &b.s1) }
+    }
+
+    /// Share subtraction (local).
+    pub fn sub(&self, a: &Share, b: &Share) -> Share {
+        Share { s0: ring::sub(&a.s0, &b.s0), s1: ring::sub(&a.s1, &b.s1) }
+    }
+
+    /// Add a public constant (P0 adjusts its share).
+    pub fn add_plain(&self, a: &Share, p: &RingTensor) -> Share {
+        Share { s0: ring::add(&a.s0, p), s1: a.s1.clone() }
+    }
+
+    /// Add a public broadcast row (P0 adjusts its share).
+    pub fn add_plain_row(&self, a: &Share, bias: &[i64]) -> Share {
+        Share { s0: ring::add_row(&a.s0, bias), s1: a.s1.clone() }
+    }
+
+    /// Elementwise multiply by a public *integer* matrix (e.g. a 0/1 mask)
+    /// — local, no truncation (the plaintext is not fixed-point scaled).
+    pub fn mul_plain_int(&self, a: &Share, m: &RingTensor) -> Share {
+        Share { s0: ring::mul_elem(&a.s0, m), s1: ring::mul_elem(&a.s1, m) }
+    }
+
+    /// Multiply by a public fixed-point scalar, with share truncation.
+    pub fn scale_fx(&self, a: &Share, scalar_fx: i64) -> Share {
+        let mut s0 = ring::scale(&a.s0, scalar_fx);
+        let mut s1 = ring::scale(&a.s1, scalar_fx);
+        fixed::trunc_share_tensor(&mut s0, 0);
+        fixed::trunc_share_tensor(&mut s1, 1);
+        Share { s0, s1 }
+    }
+
+    /// `Π_ScalMul` (matrix form): public fixed-point `A (m×k)` times shared
+    /// `[X] (k×n)` → `[A·X]`, communication-free; includes fixed-point
+    /// truncation. Each party's local matmul is timed separately.
+    pub fn scalmul(&mut self, a_fx: &RingTensor, x: &Share, class: OpClass) -> Share {
+        let mut s0 = self.net.timed(class, PartyId::P0, || ring::matmul(a_fx, &x.s0));
+        let mut s1 = self.net.timed(class, PartyId::P1, || ring::matmul(a_fx, &x.s1));
+        fixed::trunc_share_tensor(&mut s0, 0);
+        fixed::trunc_share_tensor(&mut s1, 1);
+        Share { s0, s1 }
+    }
+
+    /// `Π_ScalMul` with the shared operand on the left: `[X] (m×k)` times
+    /// public `Wᵀ` given as `W (n×k)` → `[X·Wᵀ] (m×n)`.
+    pub fn scalmul_nt(&mut self, x: &Share, w_fx: &RingTensor, class: OpClass) -> Share {
+        let mut s0 = self.net.timed(class, PartyId::P0, || ring::matmul_nt(&x.s0, w_fx));
+        let mut s1 = self.net.timed(class, PartyId::P1, || ring::matmul_nt(&x.s1, w_fx));
+        fixed::trunc_share_tensor(&mut s0, 0);
+        fixed::trunc_share_tensor(&mut s1, 1);
+        Share { s0, s1 }
+    }
+
+    // ------------------------------------------------------------------
+    // Π_MatMul / Π_Mul — Beaver-triple share×share products
+    // ------------------------------------------------------------------
+
+    /// `Π_ScalMul` with the plaintext on the right: `[X] (m×k)` times
+    /// public `W (k×n)` → `[X·W]` (embedding lookup), communication-free.
+    pub fn scalmul_rhs(&mut self, x: &Share, w_fx: &RingTensor, class: OpClass) -> Share {
+        let mut s0 = self.net.timed(class, PartyId::P0, || ring::matmul(&x.s0, w_fx));
+        let mut s1 = self.net.timed(class, PartyId::P1, || ring::matmul(&x.s1, w_fx));
+        fixed::trunc_share_tensor(&mut s0, 0);
+        fixed::trunc_share_tensor(&mut s1, 1);
+        Share { s0, s1 }
+    }
+
+    /// `Π_MatMul` with identical communication charges but the product
+    /// computed directly (ideal functionality) — the *fast-sim* execution
+    /// mode for paper-scale models on this 1-core testbed, and for very
+    /// large operands (embedding tables) where materializing Beaver
+    /// triples would need gigabytes. Wire costs are exact; local compute
+    /// is the single plaintext product (the per-op compute for the time
+    /// model is measured separately by full-mode microbenches).
+    /// DESIGN.md §CostModel documents this.
+    pub fn matmul_charged_ideal(&mut self, x: &Share, y: &Share, class: OpClass) -> Share {
+        let out = self.matmul_charged_ideal_core(x, y, class);
+        self.net.round(class, 1);
+        out
+    }
+
+    fn matmul_charged_ideal_core(&mut self, x: &Share, y: &Share, class: OpClass) -> Share {
+        let (m, k) = x.shape();
+        let (k2, n) = y.shape();
+        assert_eq!(k, k2);
+        // identical wire cost to the Beaver path: open E (m×k) + F (k×n)
+        // in both directions.
+        self.net.charge_bytes(class, (2 * 8 * (m * k + k * n)) as u64);
+        let prod = self.net.timed(class, PartyId::P1, || {
+            ring::matmul(&x.reconstruct(), &y.reconstruct())
+        });
+        let truncated = prod.map(|v| v >> crate::fixed::FRAC_BITS);
+        let mut rng = self.dealer.fork_rng(0x1DEA ^ (m * n) as u64);
+        let s0 = RingTensor::from_vec(m, n, rng.vec_i64(m * n));
+        let s1 = ring::sub(&truncated, &s0);
+        Share { s0, s1 }
+    }
+
+    /// Batched charged-ideal matmul (single round, like [`Mpc::matmul_batch`]).
+    pub fn matmul_charged_ideal_batch(&mut self, pairs: &[(&Share, &Share)], class: OpClass) -> Vec<Share> {
+        let outs = pairs.iter().map(|(x, y)| self.matmul_charged_ideal_core(x, y, class)).collect();
+        self.net.round(class, 1);
+        outs
+    }
+
+    /// `Π_ScalMul` as a charged-ideal (fast-sim): one plaintext product
+    /// instead of one per party; zero communication, same as the real
+    /// protocol.
+    pub fn scalmul_nt_ideal(&mut self, x: &Share, w_fx: &RingTensor, class: OpClass) -> Share {
+        let prod = self.net.timed(class, PartyId::P1, || ring::matmul_nt(&x.reconstruct(), w_fx));
+        let truncated = prod.map(|v| v >> crate::fixed::FRAC_BITS);
+        let (m, n) = truncated.shape();
+        let mut rng = self.dealer.fork_rng(0x5CA1 ^ (m * n) as u64);
+        let s0 = RingTensor::from_vec(m, n, rng.vec_i64(m * n));
+        let s1 = ring::sub(&truncated, &s0);
+        Share { s0, s1 }
+    }
+
+    /// Right-plaintext variant of [`Mpc::scalmul_nt_ideal`].
+    pub fn scalmul_rhs_ideal(&mut self, x: &Share, w_fx: &RingTensor, class: OpClass) -> Share {
+        let prod = self.net.timed(class, PartyId::P1, || ring::matmul(&x.reconstruct(), w_fx));
+        let truncated = prod.map(|v| v >> crate::fixed::FRAC_BITS);
+        let (m, n) = truncated.shape();
+        let mut rng = self.dealer.fork_rng(0x5CA2 ^ (m * n) as u64);
+        let s0 = RingTensor::from_vec(m, n, rng.vec_i64(m * n));
+        let s1 = ring::sub(&truncated, &s0);
+        Share { s0, s1 }
+    }
+
+    /// `Π_MatMul`: `[X] (m×k) @ [Y] (k×n)` via a Beaver matrix triple.
+    /// 1 round; traffic `2·8·(mk + kn)` bytes (= 256·n² bits when m=k=n,
+    /// matching Table 1). Includes fixed-point truncation.
+    pub fn matmul(&mut self, x: &Share, y: &Share, class: OpClass) -> Share {
+        let out = self.matmul_core(x, y, class);
+        self.net.round(class, 1);
+        out
+    }
+
+    /// Batched `Π_MatMul`: all products exchanged in a single parallel
+    /// round (the per-head attention products).
+    pub fn matmul_batch(&mut self, pairs: &[(&Share, &Share)], class: OpClass) -> Vec<Share> {
+        let outs: Vec<Share> = pairs.iter().map(|(x, y)| self.matmul_core(x, y, class)).collect();
+        self.net.round(class, 1);
+        outs
+    }
+
+    fn matmul_core(&mut self, x: &Share, y: &Share, class: OpClass) -> Share {
+        let (m, k) = x.shape();
+        let (k2, n) = y.shape();
+        assert_eq!(k, k2, "Π_MatMul inner dim");
+        let trip = self.dealer.matmul_triple(m, k, n);
+        // E = X - A, F = Y - B, opened in one parallel round.
+        let e_sh = self.sub(x, &trip.a);
+        let f_sh = self.sub(y, &trip.b);
+        let e0 = self.net.transfer(PartyId::P0, PartyId::P1, &e_sh.s0, class);
+        let e1 = self.net.transfer(PartyId::P1, PartyId::P0, &e_sh.s1, class);
+        let f0 = self.net.transfer(PartyId::P0, PartyId::P1, &f_sh.s0, class);
+        let f1 = self.net.transfer(PartyId::P1, PartyId::P0, &f_sh.s1, class);
+        // (round charged by the caller: matmul/matmul_batch)
+        let e = ring::add(&e0, &e1);
+        let f = ring::add(&f0, &f1);
+        // [Z] = [C] + E·[B] + [A]·F + E·F (P0 adds the public term).
+        let mut s0 = self.net.timed(class, PartyId::P0, || {
+            let mut z = ring::matmul(&e, &trip.b.s0);
+            ring::add_assign(&mut z, &ring::matmul(&trip.a.s0, &f));
+            ring::add_assign(&mut z, &trip.c.s0);
+            ring::add_assign(&mut z, &ring::matmul(&e, &f));
+            z
+        });
+        let mut s1 = self.net.timed(class, PartyId::P1, || {
+            let mut z = ring::matmul(&e, &trip.b.s1);
+            ring::add_assign(&mut z, &ring::matmul(&trip.a.s1, &f));
+            ring::add_assign(&mut z, &trip.c.s1);
+            z
+        });
+        fixed::trunc_share_tensor(&mut s0, 0);
+        fixed::trunc_share_tensor(&mut s1, 1);
+        Share { s0, s1 }
+    }
+
+    /// `Π_Mul`: elementwise share×share product (Beaver), 1 round,
+    /// `2·2·8·N` bytes (256·N bits). Includes truncation.
+    pub fn mul_elem(&mut self, x: &Share, y: &Share, class: OpClass) -> Share {
+        assert_eq!(x.shape(), y.shape());
+        let trip = self.dealer.elem_triple(x.rows(), x.cols());
+        let e_sh = self.sub(x, &trip.a);
+        let f_sh = self.sub(y, &trip.b);
+        let e0 = self.net.transfer(PartyId::P0, PartyId::P1, &e_sh.s0, class);
+        let e1 = self.net.transfer(PartyId::P1, PartyId::P0, &e_sh.s1, class);
+        let f0 = self.net.transfer(PartyId::P0, PartyId::P1, &f_sh.s0, class);
+        let f1 = self.net.transfer(PartyId::P1, PartyId::P0, &f_sh.s1, class);
+        self.net.round(class, 1);
+        let e = ring::add(&e0, &e1);
+        let f = ring::add(&f0, &f1);
+        let mut s0 = ring::add(
+            &ring::add(&ring::mul_elem(&e, &trip.b.s0), &ring::mul_elem(&trip.a.s0, &f)),
+            &ring::add(&trip.c.s0, &ring::mul_elem(&e, &f)),
+        );
+        let mut s1 = ring::add(
+            &ring::add(&ring::mul_elem(&e, &trip.b.s1), &ring::mul_elem(&trip.a.s1, &f)),
+            &trip.c.s1,
+        );
+        fixed::trunc_share_tensor(&mut s0, 0);
+        fixed::trunc_share_tensor(&mut s1, 1);
+        Share { s0, s1 }
+    }
+
+    /// Elementwise square with a square triple `(A, A²)` — CrypTen's cheap
+    /// square: only `E = X − A` is opened (1 round, `2·8·N` bytes =
+    /// 128·N bits; 8 squarings of a scalar = 1024 bits, Table 1's `exp`).
+    pub fn square(&mut self, x: &Share, class: OpClass) -> Share {
+        let trip = self.dealer.square_pair(x.rows(), x.cols());
+        let e_sh = self.sub(x, &trip.a);
+        let e0 = self.net.transfer(PartyId::P0, PartyId::P1, &e_sh.s0, class);
+        let e1 = self.net.transfer(PartyId::P1, PartyId::P0, &e_sh.s1, class);
+        self.net.round(class, 1);
+        let e = ring::add(&e0, &e1);
+        // X² = E² + 2·E·A + A² → [X²] = E² (public, P0) + 2E·[A] + [C]
+        let two_e = ring::scale(&e, 2);
+        let mut s0 = ring::add(
+            &ring::add(&ring::mul_elem(&two_e, &trip.a.s0), &trip.c.s0),
+            &ring::mul_elem(&e, &e),
+        );
+        let mut s1 = ring::add(&ring::mul_elem(&two_e, &trip.a.s1), &trip.c.s1);
+        fixed::trunc_share_tensor(&mut s0, 0);
+        fixed::trunc_share_tensor(&mut s1, 1);
+        Share { s0, s1 }
+    }
+
+    /// Fresh re-sharing of a plaintext known to one party (that party
+    /// splits and sends the counter-share: 1 transfer; round charged by the
+    /// caller as part of the enclosing protocol step).
+    pub fn reshare_from(&mut self, x: &RingTensor, holder: PartyId, class: OpClass) -> Share {
+        let mask = RingTensor::from_vec(x.rows(), x.cols(), self.rng.vec_i64(x.len()));
+        let other_share = ring::sub(x, &mask);
+        let to = if holder == PartyId::P0 { PartyId::P1 } else { PartyId::P0 };
+        let sent = self.net.transfer(holder, to, &other_share, class);
+        if holder == PartyId::P1 {
+            Share { s0: sent, s1: mask }
+        } else {
+            Share { s0: mask, s1: sent }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NetworkProfile;
+    use crate::tensor::FloatTensor;
+    use crate::util::prop::check;
+
+    fn mk() -> Mpc {
+        Mpc::new(NetSim::new(NetworkProfile::lan()), 42)
+    }
+
+    fn enc(t: &FloatTensor) -> RingTensor {
+        fixed::encode_tensor(t)
+    }
+    fn dec(t: &RingTensor) -> FloatTensor {
+        fixed::decode_tensor(t)
+    }
+
+    #[test]
+    fn share_reconstruct_identity() {
+        check("share/reconstruct", 100, |g| {
+            let mut mpc = mk();
+            let n = g.dim(16);
+            let x = RingTensor::from_vec(1, n, g.vec_i64(n));
+            let sh = mpc.share_local(&x);
+            assert_eq!(sh.reconstruct(), x);
+        });
+    }
+
+    #[test]
+    fn shares_are_uniformly_masked() {
+        // Each individual share of a constant tensor should look random:
+        // its values must not equal the plaintext (w.h.p.) and two sharings
+        // must differ.
+        let mut mpc = mk();
+        let x = RingTensor::from_vec(1, 64, vec![fixed::encode(1.0); 64]);
+        let a = mpc.share_local(&x);
+        let b = mpc.share_local(&x);
+        assert_ne!(a.s0, b.s0);
+        let hits = a.s0.data().iter().filter(|&&v| v == fixed::encode(1.0)).count();
+        assert!(hits <= 1);
+    }
+
+    #[test]
+    fn add_matches_plaintext() {
+        check("Π_Add", 50, |g| {
+            let mut mpc = mk();
+            let n = g.dim(12);
+            let x = RingTensor::from_vec(1, n, g.vec_i64(n));
+            let y = RingTensor::from_vec(1, n, g.vec_i64(n));
+            let sx = mpc.share_local(&x);
+            let sy = mpc.share_local(&y);
+            assert_eq!(mpc.add(&sx, &sy).reconstruct(), ring::add(&x, &y));
+        });
+    }
+
+    #[test]
+    fn scalmul_matches_float_matmul() {
+        check("Π_ScalMul", 25, |g| {
+            let mut mpc = mk();
+            let (m, k, n) = (g.dim(6), g.dim(8), g.dim(6));
+            let a = FloatTensor::from_vec(m, k, g.vec_small_f64(m * k).iter().map(|&v| v as f32 * 0.2).collect());
+            let x = FloatTensor::from_vec(k, n, g.vec_small_f64(k * n).iter().map(|&v| v as f32 * 0.2).collect());
+            let sx = mpc.share_local(&enc(&x));
+            let out = mpc.scalmul(&enc(&a), &sx, OpClass::Linear);
+            let got = dec(&out.reconstruct());
+            let want = a.matmul(&x);
+            assert!(got.max_abs_diff(&want) < 1e-2, "diff {}", got.max_abs_diff(&want));
+            // communication-free:
+            assert_eq!(mpc.net.ledger.bytes_total(), 0);
+            assert_eq!(mpc.net.ledger.rounds_total(), 0);
+        });
+    }
+
+    #[test]
+    fn matmul_beaver_correct_and_costed() {
+        let mut mpc = mk();
+        let n = 8usize;
+        let x = FloatTensor::from_fn(n, n, |r, c| ((r + 2 * c) % 5) as f32 * 0.3 - 0.5);
+        let y = FloatTensor::from_fn(n, n, |r, c| ((3 * r + c) % 7) as f32 * 0.2 - 0.4);
+        let sx = mpc.share_local(&enc(&x));
+        let sy = mpc.share_local(&enc(&y));
+        let out = mpc.matmul(&sx, &sy, OpClass::Linear);
+        let got = dec(&out.reconstruct());
+        let want = x.matmul(&y);
+        assert!(got.max_abs_diff(&want) < 1e-2, "diff {}", got.max_abs_diff(&want));
+        // Table 1: 256·n² bits for n×n (two opened n×n matrices, both directions)
+        let bits = mpc.net.ledger.bytes_total() * 8;
+        assert_eq!(bits, 256 * (n as u64) * (n as u64));
+        assert_eq!(mpc.net.ledger.rounds_total(), 1);
+    }
+
+    #[test]
+    fn mul_elem_cost_matches_table1() {
+        let mut mpc = mk();
+        let x = FloatTensor::from_fn(4, 8, |r, c| (r as f32 - c as f32) * 0.1);
+        let sx = mpc.share_local(&enc(&x));
+        let sy = mpc.share_local(&enc(&x));
+        let out = mpc.mul_elem(&sx, &sy, OpClass::Gelu);
+        let got = dec(&out.reconstruct());
+        let want = x.zip_with(&x, |a, b| a * b);
+        assert!(got.max_abs_diff(&want) < 1e-2);
+        assert_eq!(mpc.net.ledger.bytes_total() * 8, 256 * 32);
+    }
+
+    #[test]
+    fn square_half_traffic() {
+        let mut mpc = mk();
+        let x = FloatTensor::from_fn(1, 16, |_, c| c as f32 * 0.25 - 2.0);
+        let sx = mpc.share_local(&enc(&x));
+        let out = mpc.square(&sx, OpClass::Softmax);
+        let got = dec(&out.reconstruct());
+        let want = x.map(|v| v * v);
+        assert!(got.max_abs_diff(&want) < 1e-2, "diff={}", got.max_abs_diff(&want));
+        // 128·N bits
+        assert_eq!(mpc.net.ledger.bytes_total() * 8, 128 * 16);
+        assert_eq!(mpc.net.ledger.rounds_total(), 1);
+    }
+
+    #[test]
+    fn open_costs_one_round() {
+        let mut mpc = mk();
+        let x = RingTensor::zeros(4, 4);
+        let sx = mpc.share_local(&x);
+        let opened = mpc.open(&sx, OpClass::Other);
+        assert_eq!(opened, x);
+        assert_eq!(mpc.net.ledger.rounds_total(), 1);
+        assert_eq!(mpc.net.ledger.bytes_total(), 2 * 16 * 8);
+    }
+
+    #[test]
+    fn reshare_hides_and_reconstructs() {
+        check("reshare", 30, |g| {
+            let mut mpc = mk();
+            let n = g.dim(10);
+            let x = RingTensor::from_vec(1, n, g.vec_i64(n));
+            let sh = mpc.reshare_from(&x, PartyId::P1, OpClass::Other);
+            assert_eq!(sh.reconstruct(), x);
+        });
+    }
+
+    #[test]
+    fn scale_fx_matches_plaintext() {
+        let mut mpc = mk();
+        let x = FloatTensor::from_fn(2, 8, |r, c| (r + c) as f32 * 0.5 - 1.0);
+        let sx = mpc.share_local(&enc(&x));
+        let out = mpc.scale_fx(&sx, fixed::encode(0.125));
+        let got = dec(&out.reconstruct());
+        let want = x.map(|v| v * 0.125);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+}

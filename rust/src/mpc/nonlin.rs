@@ -1,0 +1,484 @@
+//! SMPC non-linear operator library — the machinery the **baseline** PPTI
+//! frameworks (MPCFormer / PUMA / SecFormer) spend their communication on.
+//!
+//! Centaur itself never calls these during Transformer layers (it converts
+//! to the permuted-plaintext state instead); they exist so the baselines are
+//! *operationally real*: every exp/reciprocal/rsqrt/compare below computes
+//! correct shares through the primitive protocols and therefore charges the
+//! ledger its true communication (DESIGN.md §CostModel).
+//!
+//! Methods follow CrypTen's approximations:
+//! * `exp`: limit approximation `(1 + x/2^8)^{2^8}` — 8 cheap squarings
+//!   (8 rounds, 1024 bits/scalar; paper §2.2).
+//! * `reciprocal`: Newton–Raphson `y ← y(2 − xy)` with `y₀ = 3e^{0.5−x} + 0.003`.
+//! * `inv_sqrt`: NR `y ← y(3 − xy²)/2` with CrypTen's exp-based init.
+//! * `ltz` (secure comparison): dealer-assisted ideal functionality charged
+//!   at 7 rounds / 384 bits per element (A2B + adder tree, CrypTen-style).
+
+use crate::fixed::encode;
+use crate::net::OpClass;
+use crate::ring;
+use crate::tensor::RingTensor;
+
+use super::{Mpc, Share};
+
+/// Newton iterations for `reciprocal` (CrypTen default is 10).
+pub const RECIP_ITERS: usize = 10;
+/// Newton iterations for `inv_sqrt` (CrypTen uses 3 on a narrow domain; we
+/// use 12 to cover LayerNorm variances in `[1e-4, 100]`, see tests).
+pub const RSQRT_ITERS: usize = 12;
+/// Squarings in the exp limit approximation (2^8 = 256).
+pub const EXP_ITERS: usize = 8;
+
+/// Charged cost of one secure comparison, per element (DESIGN.md §CostModel).
+pub const LTZ_ROUNDS: u64 = 7;
+pub const LTZ_BYTES_PER_ELEM: u64 = 48; // 384 bits
+
+// ---------------------------------------------------------------------
+// Broadcast / reduction helpers (all local)
+// ---------------------------------------------------------------------
+
+/// Expand a `n×1` share column to `n×m` by repetition (local).
+pub fn expand_col(s: &Share, m: usize) -> Share {
+    let f = |t: &RingTensor| {
+        RingTensor::from_fn(t.rows(), m, |r, _| t.get(r, 0))
+    };
+    Share { s0: f(&s.s0), s1: f(&s.s1) }
+}
+
+/// Expand a `1×d` share row to `n×d` by repetition (local).
+pub fn expand_row(s: &Share, n: usize) -> Share {
+    let f = |t: &RingTensor| RingTensor::from_fn(n, t.cols(), |_, c| t.get(0, c));
+    Share { s0: f(&s.s0), s1: f(&s.s1) }
+}
+
+/// Row-wise sum → `n×1` (local).
+pub fn sum_rows(s: &Share) -> Share {
+    let f = |t: &RingTensor| {
+        RingTensor::from_fn(t.rows(), 1, |r, _| {
+            t.row(r).iter().fold(0i64, |acc, &v| acc.wrapping_add(v))
+        })
+    };
+    Share { s0: f(&s.s0), s1: f(&s.s1) }
+}
+
+// ---------------------------------------------------------------------
+// Exponential / reciprocal / inverse sqrt
+// ---------------------------------------------------------------------
+
+/// SMPC `exp(x)` via the limit approximation (accurate for `x ≤ 0`, the
+/// post-max-subtraction softmax domain). 8 rounds, 128 bits/elem/round.
+pub fn exp(mpc: &mut Mpc, x: &Share, class: OpClass) -> Share {
+    // y = 1 + x / 2^8   (local: public scalar multiply + public add)
+    let mut y = mpc.scale_fx(x, encode(1.0 / 256.0));
+    let one = RingTensor::from_fn(x.rows(), x.cols(), |_, _| encode(1.0));
+    y = mpc.add_plain(&y, &one);
+    for _ in 0..EXP_ITERS {
+        y = mpc.square(&y, class);
+    }
+    y
+}
+
+/// SMPC reciprocal `1/x` for `x > 0` (softmax denominators, variances).
+pub fn reciprocal(mpc: &mut Mpc, x: &Share, class: OpClass) -> Share {
+    // y0 = 3·exp(0.5 − x) + 0.003
+    let neg_x = Share { s0: ring::neg(&x.s0), s1: ring::neg(&x.s1) };
+    let half = RingTensor::from_fn(x.rows(), x.cols(), |_, _| encode(0.5));
+    let shifted = mpc.add_plain(&neg_x, &half);
+    let e = exp(mpc, &shifted, class);
+    let mut y = mpc.scale_fx(&e, encode(3.0));
+    let c = RingTensor::from_fn(x.rows(), x.cols(), |_, _| encode(0.003));
+    y = mpc.add_plain(&y, &c);
+    // Newton: y ← y (2 − x y)
+    let two = RingTensor::from_fn(x.rows(), x.cols(), |_, _| encode(2.0));
+    for _ in 0..RECIP_ITERS {
+        let xy = mpc.mul_elem(x, &y, class);
+        let neg_xy = Share { s0: ring::neg(&xy.s0), s1: ring::neg(&xy.s1) };
+        let t = mpc.add_plain(&neg_xy, &two);
+        y = mpc.mul_elem(&y, &t, class);
+    }
+    y
+}
+
+/// SMPC `1/sqrt(x)` for `x ∈ [1e-4, 100]` (LayerNorm variances).
+pub fn inv_sqrt(mpc: &mut Mpc, x: &Share, class: OpClass) -> Share {
+    // y0 = 2.2·exp(−(x/2 + 0.2)) + 0.2 − x/1024  (CrypTen init)
+    let neg_half_x = mpc.scale_fx(x, encode(-0.5));
+    let c02 = RingTensor::from_fn(x.rows(), x.cols(), |_, _| encode(-0.2));
+    let e = exp(mpc, &mpc.add_plain(&neg_half_x, &c02), class);
+    let mut y = mpc.scale_fx(&e, encode(2.2));
+    let c = RingTensor::from_fn(x.rows(), x.cols(), |_, _| encode(0.2));
+    y = mpc.add_plain(&y, &c);
+    let corr = mpc.scale_fx(x, encode(-1.0 / 1024.0));
+    y = mpc.add(&y, &corr);
+    // Newton: y ← y (3 − x y²) / 2
+    let three = RingTensor::from_fn(x.rows(), x.cols(), |_, _| encode(3.0));
+    for _ in 0..RSQRT_ITERS {
+        let y2 = mpc.square(&y, class);
+        let xy2 = mpc.mul_elem(x, &y2, class);
+        let neg = Share { s0: ring::neg(&xy2.s0), s1: ring::neg(&xy2.s1) };
+        let t = mpc.add_plain(&neg, &three);
+        let ty = mpc.mul_elem(&y, &t, class);
+        y = mpc.scale_fx(&ty, encode(0.5));
+    }
+    y
+}
+
+// ---------------------------------------------------------------------
+// Secure comparison (charged ideal functionality) and derived ops
+// ---------------------------------------------------------------------
+
+/// `ltz(x)` → fixed-point share of the indicator `1{x < 0}`.
+///
+/// Implemented as a dealer-assisted ideal functionality whose communication
+/// is *charged* at the documented CrypTen-style cost (7 rounds, 384
+/// bits/element); see DESIGN.md §CostModel for the justification.
+pub fn ltz(mpc: &mut Mpc, x: &Share, class: OpClass) -> Share {
+    let n = x.s0.len() as u64;
+    mpc.net.charge_bytes(class, n * LTZ_BYTES_PER_ELEM);
+    mpc.net.round(class, LTZ_ROUNDS);
+    let plain = x.reconstruct(); // simulator-internal
+    let ind = plain.map(|v| if v < 0 { encode(1.0) } else { 0 });
+    // fresh dealer-randomness sharing
+    let mut rng = mpc.dealer.fork_rng(0x17Cu64 ^ n);
+    let s0 = RingTensor::from_vec(ind.rows(), ind.cols(), rng.vec_i64(ind.len()));
+    let s1 = ring::sub(&ind, &s0);
+    Share { s0, s1 }
+}
+
+/// `select(c, a, b) = b + c·(a − b)` where `c` is a 0/1 fixed-point share.
+pub fn select(mpc: &mut Mpc, c: &Share, a: &Share, b: &Share, class: OpClass) -> Share {
+    let diff = mpc.sub(a, b);
+    let picked = mpc.mul_elem(c, &diff, class);
+    mpc.add(b, &picked)
+}
+
+/// Elementwise max of two shares: `max(a,b) = select(b−a < 0, a, b)`.
+pub fn max_pair(mpc: &mut Mpc, a: &Share, b: &Share, class: OpClass) -> Share {
+    let d = mpc.sub(b, a);
+    let c = ltz(mpc, &d, class);
+    select(mpc, &c, a, b, class)
+}
+
+/// Row-wise max over columns → `n×1`, by tournament reduction
+/// (⌈log₂ m⌉ compare+select stages, the PUMA/CrypTen softmax-τ pattern).
+pub fn max_rows(mpc: &mut Mpc, x: &Share, class: OpClass) -> Share {
+    let (_n, m) = x.shape();
+    let col = |s: &Share, c: usize| Share {
+        s0: s.s0.col_block(c, c + 1),
+        s1: s.s1.col_block(c, c + 1),
+    };
+    let mut cols: Vec<Share> = (0..m).map(|c| col(x, c)).collect();
+    while cols.len() > 1 {
+        let mut next = Vec::with_capacity(cols.len().div_ceil(2));
+        // One tournament stage: all pairs compared in parallel → a single
+        // round of ltz cost for the whole stage. We batch them into one
+        // concatenated tensor so the charge reflects the parallelism.
+        let pairs: Vec<(Share, Share)> = cols
+            .chunks(2)
+            .filter(|ch| ch.len() == 2)
+            .map(|ch| (ch[0].clone(), ch[1].clone()))
+            .collect();
+        if !pairs.is_empty() {
+            let a = Share {
+                s0: RingTensor::concat_cols(&pairs.iter().map(|p| p.0.s0.clone()).collect::<Vec<_>>()),
+                s1: RingTensor::concat_cols(&pairs.iter().map(|p| p.0.s1.clone()).collect::<Vec<_>>()),
+            };
+            let b = Share {
+                s0: RingTensor::concat_cols(&pairs.iter().map(|p| p.1.s0.clone()).collect::<Vec<_>>()),
+                s1: RingTensor::concat_cols(&pairs.iter().map(|p| p.1.s1.clone()).collect::<Vec<_>>()),
+            };
+            let m = max_pair(mpc, &a, &b, class);
+            for (i, _) in pairs.iter().enumerate() {
+                next.push(Share {
+                    s0: m.s0.col_block(i, i + 1),
+                    s1: m.s1.col_block(i, i + 1),
+                });
+            }
+        }
+        if cols.len() % 2 == 1 {
+            next.push(cols.last().unwrap().clone());
+        }
+        cols = next;
+    }
+    cols.pop().unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Composite layers used by the SMPC baselines
+// ---------------------------------------------------------------------
+
+/// Reciprocal of a row-sum with a public `1/m` pre-scale so the Newton
+/// iteration stays inside the exp-init's convergence domain even when the
+/// sum is large (`recip(x) = (1/m)·recip(x/m)`).
+fn reciprocal_scaled(mpc: &mut Mpc, x: &Share, m: f64, class: OpClass) -> Share {
+    let scaled = mpc.scale_fx(x, encode(1.0 / m));
+    let inv = reciprocal(mpc, &scaled, class);
+    mpc.scale_fx(&inv, encode(1.0 / m))
+}
+
+/// Accurate SMPC softmax over rows (PUMA-style): max-stabilized exp +
+/// reciprocal of the row sum.
+pub fn softmax(mpc: &mut Mpc, x: &Share, class: OpClass) -> Share {
+    let (_n, m) = x.shape();
+    let tau = max_rows(mpc, x, class);
+    let tau_b = expand_col(&tau, m);
+    let centered = mpc.sub(x, &tau_b);
+    let e = exp(mpc, &centered, class);
+    let denom = sum_rows(&e);
+    // Σexp ∈ [1, m]; scale into the reciprocal's sweet spot.
+    let inv = reciprocal_scaled(mpc, &denom, (m as f64 / 8.0).max(1.0), class);
+    let inv_b = expand_col(&inv, m);
+    mpc.mul_elem(&e, &inv_b, class)
+}
+
+/// MPCFormer's `2Quad` softmax substitute: `(x+c)² / Σ(x+c)²` (Eq. 8).
+pub fn softmax_2quad(mpc: &mut Mpc, x: &Share, c: f64, class: OpClass) -> Share {
+    let (_n, m) = x.shape();
+    let cc = RingTensor::from_fn(x.rows(), x.cols(), |_, _| encode(c));
+    let shifted = mpc.add_plain(x, &cc);
+    let sq = mpc.square(&shifted, class);
+    let denom = sum_rows(&sq);
+    // Σ(x+c)² ~ m·c²: rescale so exp-init converges (DESIGN.md §CostModel).
+    let inv = reciprocal_scaled(mpc, &denom, m as f64 * c * c / 4.0, class);
+    let inv_b = expand_col(&inv, m);
+    mpc.mul_elem(&sq, &inv_b, class)
+}
+
+/// SMPC tanh via `tanh(z) = sign(z)·(1 − 2/(e^{2|z|} + 1))`.
+pub fn tanh(mpc: &mut Mpc, x: &Share, class: OpClass) -> Share {
+    let neg = ltz(mpc, x, class); // 1{x<0}
+    // |x| = x − 2·x·1{x<0}
+    let nx = mpc.mul_elem(&neg, x, class);
+    let abs = mpc.sub(x, &mpc.scale_fx(&nx, encode(2.0)));
+    // e^{-2|x|} ∈ (0,1]; tanh(|x|) = (1 − e^{−2|x|}) / (1 + e^{−2|x|})
+    let m2abs = mpc.scale_fx(&abs, encode(-2.0));
+    let e = exp(mpc, &m2abs, class);
+    let one = RingTensor::from_fn(x.rows(), x.cols(), |_, _| encode(1.0));
+    let denom = mpc.add_plain(&e, &one);
+    let inv = reciprocal(mpc, &denom, class);
+    let neg_e = Share { s0: ring::neg(&e.s0), s1: ring::neg(&e.s1) };
+    let num = mpc.add_plain(&neg_e, &one);
+    let t_abs = mpc.mul_elem(&num, &inv, class);
+    // restore sign: t = t_abs · (1 − 2·1{x<0})
+    let sign = {
+        let m2 = mpc.scale_fx(&neg, encode(-2.0));
+        let one2 = RingTensor::from_fn(x.rows(), x.cols(), |_, _| encode(1.0));
+        mpc.add_plain(&m2, &one2)
+    };
+    mpc.mul_elem(&t_abs, &sign, class)
+}
+
+/// Accurate SMPC GeLU (PUMA-style cost structure): the tanh formulation
+/// `0.5x(1 + tanh(√(2/π)(x + 0.044715x³)))`.
+pub fn gelu(mpc: &mut Mpc, x: &Share, class: OpClass) -> Share {
+    let x2 = mpc.square(x, class);
+    let x3 = mpc.mul_elem(&x2, x, class);
+    let inner = mpc.add(x, &mpc.scale_fx(&x3, encode(0.044715)));
+    let scaled = mpc.scale_fx(&inner, encode(0.7978845608028654));
+    let t = tanh(mpc, &scaled, class);
+    let one = RingTensor::from_fn(x.rows(), x.cols(), |_, _| encode(1.0));
+    let g = mpc.add_plain(&t, &one);
+    let xg = mpc.mul_elem(x, &g, class);
+    mpc.scale_fx(&xg, encode(0.5))
+}
+
+/// MPCFormer's `Quad` GeLU substitute: `0.125x² + 0.25x + 0.5`.
+pub fn gelu_quad(mpc: &mut Mpc, x: &Share, class: OpClass) -> Share {
+    let x2 = mpc.square(x, class);
+    let a = mpc.scale_fx(&x2, encode(0.125));
+    let b = mpc.scale_fx(x, encode(0.25));
+    let half = RingTensor::from_fn(x.rows(), x.cols(), |_, _| encode(0.5));
+    mpc.add_plain(&mpc.add(&a, &b), &half)
+}
+
+/// SMPC LayerNorm over rows with **shared** affine parameters γ, β (the
+/// all-SMPC baselines keep parameters secret-shared).
+pub fn layernorm(
+    mpc: &mut Mpc,
+    x: &Share,
+    gamma: &Share, // 1×d
+    beta: &Share,  // 1×d
+    eps: f64,
+    class: OpClass,
+) -> Share {
+    let (n, d) = x.shape();
+    // mean over columns (local)
+    let mean = mpc.scale_fx(&sum_rows(x), encode(1.0 / d as f64));
+    let centered = mpc.sub(x, &expand_col(&mean, d));
+    // variance
+    let sq = mpc.square(&centered, class);
+    let var = mpc.scale_fx(&sum_rows(&sq), encode(1.0 / d as f64));
+    let epsc = RingTensor::from_fn(n, 1, |_, _| encode(eps));
+    let var_eps = mpc.add_plain(&var, &epsc);
+    let rstd = inv_sqrt(mpc, &var_eps, class);
+    let normed = mpc.mul_elem(&centered, &expand_col(&rstd, d), class);
+    let scaled = mpc.mul_elem(&normed, &expand_row(gamma, n), class);
+    mpc.add(&scaled, &expand_row(beta, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed;
+    use crate::net::{NetSim, NetworkProfile};
+    use crate::tensor::FloatTensor;
+
+    fn mk() -> Mpc {
+        Mpc::new(NetSim::new(NetworkProfile::lan()), 1234)
+    }
+    fn enc(t: &FloatTensor) -> RingTensor {
+        fixed::encode_tensor(t)
+    }
+    fn dec(s: &Share) -> FloatTensor {
+        fixed::decode_tensor(&s.reconstruct())
+    }
+
+    #[test]
+    fn exp_accurate_on_negative_domain() {
+        let mut mpc = mk();
+        let xs = FloatTensor::from_vec(1, 6, vec![0.0, -0.5, -1.0, -2.0, -5.0, -10.0]);
+        let sh = mpc.share_local(&enc(&xs));
+        let got = dec(&exp(&mut mpc, &sh, OpClass::Softmax));
+        for (i, &x) in xs.data().iter().enumerate() {
+            let want = (x as f64).exp();
+            let err = (got.data()[i] as f64 - want).abs();
+            assert!(err < 0.02 * want.max(0.02), "exp({x}) got {} want {want}", got.data()[i]);
+        }
+    }
+
+    #[test]
+    fn reciprocal_accurate() {
+        let mut mpc = mk();
+        let xs = FloatTensor::from_vec(1, 5, vec![0.5, 1.0, 3.0, 17.0, 96.0]);
+        let sh = mpc.share_local(&enc(&xs));
+        let got = dec(&reciprocal(&mut mpc, &sh, OpClass::Softmax));
+        for (i, &x) in xs.data().iter().enumerate() {
+            let want = 1.0 / x as f64;
+            let rel = ((got.data()[i] as f64 - want) / want).abs();
+            assert!(rel < 0.01, "1/{x}: got {} want {want}", got.data()[i]);
+        }
+    }
+
+    #[test]
+    fn inv_sqrt_accurate_over_layernorm_domain() {
+        let mut mpc = mk();
+        let xs = FloatTensor::from_vec(1, 6, vec![1e-3, 0.01, 0.25, 1.0, 9.0, 64.0]);
+        let sh = mpc.share_local(&enc(&xs));
+        let got = dec(&inv_sqrt(&mut mpc, &sh, OpClass::LayerNorm));
+        for (i, &x) in xs.data().iter().enumerate() {
+            let want = 1.0 / (x as f64).sqrt();
+            let rel = ((got.data()[i] as f64 - want) / want).abs();
+            assert!(rel < 0.03, "rsqrt({x}): got {} want {want}", got.data()[i]);
+        }
+    }
+
+    #[test]
+    fn ltz_and_select() {
+        let mut mpc = mk();
+        let xs = FloatTensor::from_vec(1, 4, vec![-2.0, -0.001, 0.0, 3.0]);
+        let sh = mpc.share_local(&enc(&xs));
+        let c = dec(&ltz(&mut mpc, &sh, OpClass::Other));
+        assert_eq!(c.data(), &[1.0, 1.0, 0.0, 0.0]);
+        // cost: 7 rounds, 384 bits/elem charged (plus select's mul)
+        assert_eq!(mpc.net.ledger.class(OpClass::Other).rounds, 7);
+        assert_eq!(mpc.net.ledger.class(OpClass::Other).bytes, 4 * 48);
+    }
+
+    #[test]
+    fn max_rows_matches_plaintext() {
+        let mut mpc = mk();
+        let x = FloatTensor::from_vec(2, 5, vec![0.5, -1.0, 2.25, 0.0, 1.0, -3.0, -0.5, -2.0, -0.25, -1.5]);
+        let sh = mpc.share_local(&enc(&x));
+        let got = dec(&max_rows(&mut mpc, &sh, OpClass::Softmax));
+        assert!((got.get(0, 0) - 2.25).abs() < 1e-2);
+        assert!((got.get(1, 0) - -0.25).abs() < 1e-2);
+    }
+
+    #[test]
+    fn softmax_matches_plaintext() {
+        let mut mpc = mk();
+        let x = FloatTensor::from_vec(2, 4, vec![1.0, 2.0, 0.5, -1.0, 0.0, 0.1, -0.2, 0.3]);
+        let sh = mpc.share_local(&enc(&x));
+        let got = dec(&softmax(&mut mpc, &sh, OpClass::Softmax));
+        for r in 0..2 {
+            let row: Vec<f64> = x.row(r).iter().map(|&v| v as f64).collect();
+            let m = row.iter().cloned().fold(f64::MIN, f64::max);
+            let es: Vec<f64> = row.iter().map(|v| (v - m).exp()).collect();
+            let s: f64 = es.iter().sum();
+            for c in 0..4 {
+                let want = es[c] / s;
+                assert!(
+                    (got.get(r, c) as f64 - want).abs() < 0.02,
+                    "softmax[{r},{c}] got {} want {want}",
+                    got.get(r, c)
+                );
+            }
+            let rowsum: f32 = (0..4).map(|c| got.get(r, c)).sum();
+            assert!((rowsum - 1.0).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn tanh_and_gelu_accurate() {
+        let mut mpc = mk();
+        let xs = FloatTensor::from_vec(1, 7, vec![-3.0, -1.0, -0.5, 0.0, 0.5, 1.0, 3.0]);
+        let sh = mpc.share_local(&enc(&xs));
+        let t = dec(&tanh(&mut mpc, &sh, OpClass::Adaptation));
+        for (i, &x) in xs.data().iter().enumerate() {
+            let want = (x as f64).tanh();
+            assert!((t.data()[i] as f64 - want).abs() < 0.02, "tanh({x})={} want {want}", t.data()[i]);
+        }
+        let g = dec(&gelu(&mut mpc, &sh, OpClass::Gelu));
+        for (i, &x) in xs.data().iter().enumerate() {
+            let xf = x as f64;
+            let want = 0.5 * xf * (1.0 + (0.7978845608 * (xf + 0.044715 * xf.powi(3))).tanh());
+            assert!((g.data()[i] as f64 - want).abs() < 0.03, "gelu({x})={} want {want}", g.data()[i]);
+        }
+    }
+
+    #[test]
+    fn quad_substitutes_match_their_formulas() {
+        let mut mpc = mk();
+        let x = FloatTensor::from_vec(1, 4, vec![-1.0, 0.0, 1.0, 2.0]);
+        let sh = mpc.share_local(&enc(&x));
+        let q = dec(&gelu_quad(&mut mpc, &sh, OpClass::Gelu));
+        for (i, &v) in x.data().iter().enumerate() {
+            let want = 0.125 * v * v + 0.25 * v + 0.5;
+            assert!((q.data()[i] - want).abs() < 1e-2);
+        }
+        let sm = dec(&softmax_2quad(&mut mpc, &sh, 5.0, OpClass::Softmax));
+        let shifted: Vec<f64> = x.data().iter().map(|&v| ((v + 5.0) as f64).powi(2)).collect();
+        let s: f64 = shifted.iter().sum();
+        for (i, &v) in shifted.iter().enumerate() {
+            assert!((sm.data()[i] as f64 - v / s).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn layernorm_matches_plaintext() {
+        let mut mpc = mk();
+        let d = 8;
+        let x = FloatTensor::from_fn(3, d, |r, c| ((r * d + c) as f32 * 0.37).sin());
+        let gamma = FloatTensor::from_fn(1, d, |_, c| 1.0 + 0.1 * c as f32);
+        let beta = FloatTensor::from_fn(1, d, |_, c| -0.05 * c as f32);
+        let sx = mpc.share_local(&enc(&x));
+        let sg = mpc.share_local(&enc(&gamma));
+        let sb = mpc.share_local(&enc(&beta));
+        let got = dec(&layernorm(&mut mpc, &sx, &sg, &sb, 1e-5, OpClass::LayerNorm));
+        for r in 0..3 {
+            let row: Vec<f64> = x.row(r).iter().map(|&v| v as f64).collect();
+            let mean = row.iter().sum::<f64>() / d as f64;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / d as f64;
+            for c in 0..d {
+                let want = (row[c] - mean) / (var + 1e-5).sqrt() * gamma.get(0, c) as f64
+                    + beta.get(0, c) as f64;
+                assert!(
+                    (got.get(r, c) as f64 - want).abs() < 0.05,
+                    "ln[{r},{c}] got {} want {want}",
+                    got.get(r, c)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,401 @@
+//! Deterministic network simulator and communication-cost ledger.
+//!
+//! The paper's efficiency claims are communication-bound, so the simulator's
+//! job is to account **exactly** for every byte and round each protocol
+//! moves, per *operation class* (the paper's breakdown axes: Linear,
+//! Softmax, GeLU, LayerNorm, Embedding, Adaptation), and to convert those
+//! into wall time under the three network profiles of §7.1:
+//! LAN {3 Gbps, 0.8 ms}, WAN1 {200 Mbps, 40 ms}, WAN2 {100 Mbps, 80 ms}.
+//!
+//! Wall-time model (DESIGN.md §CostModel):
+//! `T = T_compute(measured) + rounds·RTT + bytes·8/bandwidth`.
+//!
+//! Parties are simulated in-process; a "transfer" physically clones the
+//! tensor (so protocols cannot accidentally alias plaintext) and charges
+//! its serialized size.
+
+use crate::tensor::RingTensor;
+use std::time::Duration;
+
+/// Identities of the protocol participants (paper Fig. 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PartyId {
+    /// Model developer (holds permutations, acts as compute server 0).
+    P0,
+    /// Cloud platform (compute server 1; sees permuted plaintext).
+    P1,
+    /// Client (data owner).
+    P2,
+    /// Trusted dealer for correlated randomness (CrypTen TTP model).
+    Dealer,
+}
+
+impl PartyId {
+    pub fn index(self) -> usize {
+        match self {
+            PartyId::P0 => 0,
+            PartyId::P1 => 1,
+            PartyId::P2 => 2,
+            PartyId::Dealer => 3,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            PartyId::P0 => "P0(developer)",
+            PartyId::P1 => "P1(cloud)",
+            PartyId::P2 => "P2(client)",
+            PartyId::Dealer => "dealer",
+        }
+    }
+}
+
+/// Operation classes used by the paper's per-layer breakdowns (Figs. 3/7/8/10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    Linear,
+    Softmax,
+    Gelu,
+    LayerNorm,
+    Embedding,
+    Adaptation,
+    Other,
+}
+
+impl OpClass {
+    pub const ALL: [OpClass; 7] = [
+        OpClass::Linear,
+        OpClass::Softmax,
+        OpClass::Gelu,
+        OpClass::LayerNorm,
+        OpClass::Embedding,
+        OpClass::Adaptation,
+        OpClass::Other,
+    ];
+    pub fn index(self) -> usize {
+        match self {
+            OpClass::Linear => 0,
+            OpClass::Softmax => 1,
+            OpClass::Gelu => 2,
+            OpClass::LayerNorm => 3,
+            OpClass::Embedding => 4,
+            OpClass::Adaptation => 5,
+            OpClass::Other => 6,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Linear => "Linear",
+            OpClass::Softmax => "Softmax",
+            OpClass::Gelu => "GeLU",
+            OpClass::LayerNorm => "LayerNorm",
+            OpClass::Embedding => "Embedding",
+            OpClass::Adaptation => "Adaptation",
+            OpClass::Other => "Other",
+        }
+    }
+}
+
+/// A bandwidth/latency profile (paper §7.1 experimental setup).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetworkProfile {
+    pub name: &'static str,
+    /// Link bandwidth in bits/second.
+    pub bandwidth_bps: f64,
+    /// Round-trip time in seconds.
+    pub rtt: f64,
+}
+
+impl NetworkProfile {
+    /// LAN: 3 Gbps, 0.8 ms RTT.
+    pub fn lan() -> Self {
+        NetworkProfile { name: "LAN(3Gbps,0.8ms)", bandwidth_bps: 3e9, rtt: 0.8e-3 }
+    }
+    /// WAN: 200 Mbps, 40 ms RTT.
+    pub fn wan1() -> Self {
+        NetworkProfile { name: "WAN(200Mbps,40ms)", bandwidth_bps: 200e6, rtt: 40e-3 }
+    }
+    /// WAN: 100 Mbps, 80 ms RTT.
+    pub fn wan2() -> Self {
+        NetworkProfile { name: "WAN(100Mbps,80ms)", bandwidth_bps: 100e6, rtt: 80e-3 }
+    }
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "lan" => Some(Self::lan()),
+            "wan1" => Some(Self::wan1()),
+            "wan2" => Some(Self::wan2()),
+            _ => None,
+        }
+    }
+    pub const ALL_NAMES: [&'static str; 3] = ["lan", "wan1", "wan2"];
+
+    /// Time to complete `rounds` rounds moving `bytes` in total.
+    pub fn time_for(&self, rounds: u64, bytes: u64) -> f64 {
+        rounds as f64 * self.rtt + (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+}
+
+/// Per-op-class accumulated cost.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassCost {
+    pub bytes: u64,
+    pub rounds: u64,
+    /// Measured local compute per party (seconds).
+    pub compute: [f64; 4],
+}
+
+impl ClassCost {
+    /// Compute time assuming parties run concurrently (max across parties).
+    pub fn compute_critical_path(&self) -> f64 {
+        self.compute.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Ledger of all communication + compute per op class.
+#[derive(Clone, Debug, Default)]
+pub struct CostLedger {
+    per_class: [ClassCost; 7],
+}
+
+impl CostLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn class(&self, c: OpClass) -> &ClassCost {
+        &self.per_class[c.index()]
+    }
+
+    pub fn add_bytes(&mut self, c: OpClass, bytes: u64) {
+        self.per_class[c.index()].bytes += bytes;
+    }
+
+    pub fn add_rounds(&mut self, c: OpClass, rounds: u64) {
+        self.per_class[c.index()].rounds += rounds;
+    }
+
+    pub fn add_compute(&mut self, c: OpClass, party: PartyId, secs: f64) {
+        self.per_class[c.index()].compute[party.index()] += secs;
+    }
+
+    pub fn bytes_total(&self) -> u64 {
+        self.per_class.iter().map(|c| c.bytes).sum()
+    }
+
+    pub fn rounds_total(&self) -> u64 {
+        self.per_class.iter().map(|c| c.rounds).sum()
+    }
+
+    pub fn compute_total(&self) -> f64 {
+        self.per_class.iter().map(|c| c.compute_critical_path()).sum()
+    }
+
+    /// Wall time for one class under a profile.
+    pub fn class_time(&self, c: OpClass, p: &NetworkProfile) -> f64 {
+        let cc = self.class(c);
+        cc.compute_critical_path() + p.time_for(cc.rounds, cc.bytes)
+    }
+
+    /// Total wall time under a profile.
+    pub fn total_time(&self, p: &NetworkProfile) -> f64 {
+        OpClass::ALL.iter().map(|&c| self.class_time(c, p)).sum()
+    }
+
+    /// Merge another ledger into this one.
+    pub fn merge(&mut self, other: &CostLedger) {
+        for i in 0..self.per_class.len() {
+            self.per_class[i].bytes += other.per_class[i].bytes;
+            self.per_class[i].rounds += other.per_class[i].rounds;
+            for p in 0..4 {
+                self.per_class[i].compute[p] += other.per_class[i].compute[p];
+            }
+        }
+    }
+
+    /// Per-class difference (`self − other`), saturating at zero — used by
+    /// the layer-extrapolation in `report::measure_framework`.
+    pub fn delta(&self, other: &CostLedger) -> CostLedger {
+        let mut out = CostLedger::new();
+        for i in 0..self.per_class.len() {
+            out.per_class[i].bytes = self.per_class[i].bytes.saturating_sub(other.per_class[i].bytes);
+            out.per_class[i].rounds = self.per_class[i].rounds.saturating_sub(other.per_class[i].rounds);
+            for p in 0..4 {
+                out.per_class[i].compute[p] =
+                    (self.per_class[i].compute[p] - other.per_class[i].compute[p]).max(0.0);
+            }
+        }
+        out
+    }
+
+    /// Scale all quantities by an integer factor (layer replication).
+    pub fn scaled(&self, factor: u64) -> CostLedger {
+        let mut out = CostLedger::new();
+        for i in 0..self.per_class.len() {
+            out.per_class[i].bytes = self.per_class[i].bytes * factor;
+            out.per_class[i].rounds = self.per_class[i].rounds * factor;
+            for p in 0..4 {
+                out.per_class[i].compute[p] = self.per_class[i].compute[p] * factor as f64;
+            }
+        }
+        out
+    }
+
+    /// Pretty per-class breakdown table.
+    pub fn breakdown(&self, profile: &NetworkProfile) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<12} {:>14} {:>8} {:>12} {:>12}\n",
+            "class", "bytes", "rounds", "compute", "wall"
+        ));
+        for &c in OpClass::ALL.iter() {
+            let cc = self.class(c);
+            if cc.bytes == 0 && cc.rounds == 0 && cc.compute_critical_path() == 0.0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "{:<12} {:>14} {:>8} {:>12} {:>12}\n",
+                c.name(),
+                crate::util::human_bytes(cc.bytes),
+                cc.rounds,
+                crate::util::human_secs(cc.compute_critical_path()),
+                crate::util::human_secs(self.class_time(c, profile)),
+            ));
+        }
+        out.push_str(&format!(
+            "{:<12} {:>14} {:>8} {:>12} {:>12}\n",
+            "TOTAL",
+            crate::util::human_bytes(self.bytes_total()),
+            self.rounds_total(),
+            crate::util::human_secs(self.compute_total()),
+            crate::util::human_secs(self.total_time(profile)),
+        ));
+        out
+    }
+}
+
+/// The in-process network simulator handed to every protocol.
+#[derive(Debug)]
+pub struct NetSim {
+    pub profile: NetworkProfile,
+    pub ledger: CostLedger,
+    /// When true, optionally sleep to emulate latency in live demos.
+    pub realtime: bool,
+    /// Count of individual messages (diagnostics).
+    pub messages: u64,
+}
+
+impl NetSim {
+    pub fn new(profile: NetworkProfile) -> Self {
+        NetSim { profile, ledger: CostLedger::new(), realtime: false, messages: 0 }
+    }
+
+    /// Transfer a ring tensor between parties as part of the *current*
+    /// round: clones the payload and charges its serialized size.
+    /// Rounds are charged separately with [`NetSim::round`] so that
+    /// messages sent in parallel count as one round.
+    pub fn transfer(&mut self, _from: PartyId, _to: PartyId, t: &RingTensor, class: OpClass) -> RingTensor {
+        let bytes = (t.len() as u64) * crate::fixed::ELEM_BYTES;
+        self.ledger.add_bytes(class, bytes);
+        self.messages += 1;
+        if self.realtime {
+            std::thread::sleep(Duration::from_secs_f64(
+                (bytes as f64 * 8.0) / self.profile.bandwidth_bps,
+            ));
+        }
+        t.clone()
+    }
+
+    /// Charge raw bytes without a payload (e.g. cost-model charges for the
+    /// dealer-assisted comparison, scalar side-channels).
+    pub fn charge_bytes(&mut self, class: OpClass, bytes: u64) {
+        self.ledger.add_bytes(class, bytes);
+    }
+
+    /// Mark the completion of `n` communication rounds in `class`.
+    pub fn round(&mut self, class: OpClass, n: u64) {
+        self.ledger.add_rounds(class, n);
+        if self.realtime {
+            std::thread::sleep(Duration::from_secs_f64(self.profile.rtt * n as f64));
+        }
+    }
+
+    /// Record measured local compute.
+    pub fn compute(&mut self, class: OpClass, party: PartyId, secs: f64) {
+        self.ledger.add_compute(class, party, secs);
+    }
+
+    /// Run `f` and attribute its wall time to `(class, party)` compute.
+    pub fn timed<T>(&mut self, class: OpClass, party: PartyId, f: impl FnOnce() -> T) -> T {
+        let t0 = std::time::Instant::now();
+        let out = f();
+        self.compute(class, party, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Reset the ledger (keep the profile).
+    pub fn reset(&mut self) {
+        self.ledger = CostLedger::new();
+        self.messages = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_times() {
+        let wan = NetworkProfile::wan1();
+        // 1 round of 1 MB: 40ms + 8e6/200e6 s = 40ms + 40ms
+        let t = wan.time_for(1, 1_000_000);
+        assert!((t - 0.08).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn transfer_charges_bytes() {
+        let mut net = NetSim::new(NetworkProfile::lan());
+        let t = RingTensor::zeros(4, 8);
+        let got = net.transfer(PartyId::P0, PartyId::P1, &t, OpClass::Softmax);
+        assert_eq!(got, t);
+        assert_eq!(net.ledger.class(OpClass::Softmax).bytes, 32 * 8);
+        assert_eq!(net.ledger.bytes_total(), 256);
+    }
+
+    #[test]
+    fn rounds_accumulate_per_class() {
+        let mut net = NetSim::new(NetworkProfile::wan2());
+        net.round(OpClass::Linear, 1);
+        net.round(OpClass::Linear, 2);
+        net.round(OpClass::Gelu, 2);
+        assert_eq!(net.ledger.class(OpClass::Linear).rounds, 3);
+        assert_eq!(net.ledger.rounds_total(), 5);
+    }
+
+    #[test]
+    fn ledger_merge_and_time() {
+        let mut a = CostLedger::new();
+        a.add_bytes(OpClass::Linear, 100);
+        a.add_rounds(OpClass::Linear, 1);
+        let mut b = CostLedger::new();
+        b.add_bytes(OpClass::Linear, 50);
+        b.add_compute(OpClass::Linear, PartyId::P0, 0.25);
+        b.add_compute(OpClass::Linear, PartyId::P1, 0.75);
+        a.merge(&b);
+        assert_eq!(a.class(OpClass::Linear).bytes, 150);
+        // critical path takes the max across parties
+        assert!((a.class(OpClass::Linear).compute_critical_path() - 0.75).abs() < 1e-12);
+        let p = NetworkProfile::lan();
+        let expect = 0.75 + p.time_for(1, 150);
+        assert!((a.total_time(&p) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timed_attributes_compute() {
+        let mut net = NetSim::new(NetworkProfile::lan());
+        let v = net.timed(OpClass::Other, PartyId::P1, || {
+            std::thread::sleep(Duration::from_millis(3));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(net.ledger.class(OpClass::Other).compute[1] >= 0.002);
+    }
+}

@@ -1,0 +1,203 @@
+//! Random permutations — the parameter-privacy mechanism (paper §2.3).
+//!
+//! A permutation matrix `π` of order `n` is stored as an index vector
+//! (`idx[j] = i` means output column `j` takes input column `i`), so
+//! applying `Xπ` is `O(rows·n)` instead of a dense matmul. The module
+//! provides the three permutations Centaur's initialization generates:
+//! `π ∈ R^{d×d}` (feature dim), `π₁ ∈ R^{n×n}` (sequence dim) and
+//! `π₂ ∈ R^{k×k}` (FFN intermediate dim).
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// A permutation of `0..n`, representing the permutation matrix whose
+/// column `j` has its 1 in row `idx[j]`: right-multiplying `X · π` yields
+/// `Y[:, j] = X[:, idx[j]]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Perm {
+    idx: Vec<usize>,
+}
+
+impl Perm {
+    /// Identity permutation.
+    pub fn identity(n: usize) -> Perm {
+        Perm { idx: (0..n).collect() }
+    }
+
+    /// Uniformly random permutation.
+    pub fn random(n: usize, rng: &mut Rng) -> Perm {
+        Perm { idx: rng.permutation(n) }
+    }
+
+    /// Build from an index vector (must be a bijection of `0..n`).
+    pub fn from_indices(idx: Vec<usize>) -> Perm {
+        let mut seen = vec![false; idx.len()];
+        for &i in &idx {
+            assert!(i < idx.len() && !seen[i], "not a permutation");
+            seen[i] = true;
+        }
+        Perm { idx }
+    }
+
+    /// Order of the permutation.
+    pub fn n(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Index vector accessor.
+    pub fn indices(&self) -> &[usize] {
+        &self.idx
+    }
+
+    /// Inverse permutation (`π · π⁻¹ = I`, orthogonality: `π⁻¹ = πᵀ`).
+    pub fn inverse(&self) -> Perm {
+        let mut inv = vec![0usize; self.idx.len()];
+        for (j, &i) in self.idx.iter().enumerate() {
+            inv[i] = j;
+        }
+        Perm { idx: inv }
+    }
+
+    /// Composition `self ∘ other`: applying the result equals applying
+    /// `other` then `self` on columns.
+    pub fn compose(&self, other: &Perm) -> Perm {
+        assert_eq!(self.n(), other.n());
+        Perm { idx: self.idx.iter().map(|&i| other.idx[i]).collect() }
+    }
+
+    /// `X · π` — permute **columns** (feature permutation of activations,
+    /// the common case in Centaur).
+    pub fn apply_cols<T: Copy + Default>(&self, x: &Tensor<T>) -> Tensor<T> {
+        assert_eq!(x.cols(), self.n(), "perm order != cols");
+        Tensor::from_fn(x.rows(), x.cols(), |r, c| x.get(r, self.idx[c]))
+    }
+
+    /// `πᵀ · X` — permute **rows** with the transpose; combined with
+    /// [`Self::apply_cols`] this expresses `πᵀ W π`-style weight hiding.
+    pub fn apply_rows_t<T: Copy + Default>(&self, x: &Tensor<T>) -> Tensor<T> {
+        assert_eq!(x.rows(), self.n(), "perm order != rows");
+        Tensor::from_fn(x.rows(), x.cols(), |r, c| x.get(self.idx[r], c))
+    }
+
+    /// `π · X` — permute rows (for left-multiplication by π itself).
+    pub fn apply_rows<T: Copy + Default>(&self, x: &Tensor<T>) -> Tensor<T> {
+        let inv = self.inverse();
+        assert_eq!(x.rows(), self.n(), "perm order != rows");
+        Tensor::from_fn(x.rows(), x.cols(), |r, c| x.get(inv.idx[r], c))
+    }
+
+    /// Permute a flat vector as columns of a 1×n tensor (biases, γ/β).
+    pub fn apply_vec<T: Copy + Default>(&self, v: &[T]) -> Vec<T> {
+        assert_eq!(v.len(), self.n());
+        self.idx.iter().map(|&i| v[i]).collect()
+    }
+
+    /// Dense 0/1 matrix representation (tests / didactic only).
+    pub fn to_matrix(&self) -> Tensor<f32> {
+        Tensor::from_fn(self.n(), self.n(), |r, c| if self.idx[c] == r { 1.0 } else { 0.0 })
+    }
+
+    /// log2(n!) — the brute-force security bits quoted in the paper (§2.3:
+    /// n=1280 → ≈ 2^11372 possibilities).
+    pub fn security_bits(n: usize) -> f64 {
+        // Stirling-corrected exact sum of log2(i)
+        (2..=n).map(|i| (i as f64).log2()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::FloatTensor;
+    use crate::util::prop::check;
+
+    #[test]
+    fn inverse_roundtrip_cols() {
+        check("perm inverse roundtrip", 50, |g| {
+            let n = g.dim(64);
+            let p = Perm::random(n, g.rng());
+            let x = FloatTensor::from_fn(3, n, |r, c| (r * n + c) as f32);
+            let y = p.apply_cols(&x);
+            let back = p.inverse().apply_cols(&y);
+            assert_eq!(back.data(), x.data());
+        });
+    }
+
+    #[test]
+    fn matches_dense_matrix_product() {
+        check("perm == dense π", 20, |g| {
+            let n = g.dim(16);
+            let p = Perm::random(n, g.rng());
+            let x = FloatTensor::from_fn(4, n, |r, c| (r as f32) * 0.5 + c as f32);
+            let fast = p.apply_cols(&x);
+            let dense = x.matmul(&p.to_matrix());
+            assert!(fast.max_abs_diff(&dense) == 0.0);
+        });
+    }
+
+    #[test]
+    fn orthogonality_pi_pit_identity() {
+        check("π πᵀ = I", 30, |g| {
+            let n = g.dim(32);
+            let p = Perm::random(n, g.rng());
+            assert_eq!(p.compose(&p.inverse()), Perm::identity(n));
+            assert_eq!(p.inverse().compose(&p), Perm::identity(n));
+        });
+    }
+
+    #[test]
+    fn elementwise_commutes_with_perm() {
+        // f_e(Xπ) = f_e(X)π — Eq. (7) of the paper.
+        check("elementwise commutes", 30, |g| {
+            let n = g.dim(32);
+            let p = Perm::random(n, g.rng());
+            let x = FloatTensor::from_fn(2, n, |r, c| (r + c) as f32 - 3.0);
+            let f = |v: f32| 0.5 * v * (1.0 + (v * 0.7978845608).tanh()); // gelu-ish
+            let lhs = p.apply_cols(&x).map(f);
+            let rhs = p.apply_cols(&x.map(f));
+            assert_eq!(lhs.data(), rhs.data());
+        });
+    }
+
+    #[test]
+    fn linear_layer_cancellation() {
+        // X π (W π)ᵀ = X Wᵀ — Eq. (6) of the paper.
+        check("Xπ(Wπ)ᵀ = XWᵀ", 20, |g| {
+            let n = g.dim(12);
+            let m = g.dim(6);
+            let p = Perm::random(n, g.rng());
+            let x = FloatTensor::from_fn(m, n, |r, c| ((r * 7 + c * 3) % 11) as f32 - 5.0);
+            let w = FloatTensor::from_fn(m, n, |r, c| ((r * 5 + c) % 7) as f32 - 3.0);
+            let lhs = p.apply_cols(&x).matmul_nt(&p.apply_cols(&w));
+            let rhs = x.matmul_nt(&w);
+            assert!(lhs.max_abs_diff(&rhs) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn rows_and_cols_consistent() {
+        check("apply_rows == (apply_cols on transpose)", 20, |g| {
+            let n = g.dim(16);
+            let p = Perm::random(n, g.rng());
+            let x = FloatTensor::from_fn(n, 5, |r, c| (r * 5 + c) as f32);
+            let via_t = p.apply_cols(&x.transpose()).transpose();
+            // X·π on Xᵀ equals πᵀ·X... verify consistency definitionally:
+            let direct = p.apply_rows_t(&x);
+            // apply_rows_t picks row idx[r]; apply_cols on transpose picks col idx[c].
+            assert_eq!(via_t.data(), direct.data());
+        });
+    }
+
+    #[test]
+    fn security_bits_match_paper() {
+        // paper: n=1280 → ~2^11372
+        let bits = Perm::security_bits(1280);
+        assert!((bits - 11372.0).abs() < 60.0, "bits={bits}");
+    }
+
+    #[test]
+    #[should_panic(expected = "not a permutation")]
+    fn rejects_non_bijection() {
+        Perm::from_indices(vec![0, 0, 2]);
+    }
+}

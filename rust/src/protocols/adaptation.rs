@@ -1,0 +1,124 @@
+//! `Π_PPAdaptation` (paper Algorithm 5): the task head.
+//!
+//! * BERT: pooler (`Π_ScalMul` + `Π_PPTanh`) on the [CLS] position, then a
+//!   classifier `Π_ScalMul`; logit shares are returned to the client.
+//! * GPT-2: final `Π_PPLN`, then the tied LM head as `Π_ScalMul` against
+//!   the (already permuted) embedding table; logit shares go to the client,
+//!   which applies the prediction softmax locally in plaintext.
+
+use crate::model::PermutedModel;
+use crate::mpc::{Mpc, Share};
+use crate::net::{OpClass, PartyId};
+use crate::Result;
+
+use super::layer::ProtoCtx;
+use super::nonlin::{pp_layernorm, pp_tanh};
+
+/// BERT head: `[L2π] → [logits]` (unpermuted shares, `1×n_classes`).
+pub fn pp_adaptation_bert(ctx: &mut ProtoCtx, pm: &PermutedModel, l2_pi: &Share) -> Result<Share> {
+    // [CLS] row (position 0).
+    let cls_pi = l2_pi.row_block(0, 1);
+    // pooled π = Π_ScalMul([cπ], πᵀW_Pπ) + b_Pπ
+    let pooler_w = pm.pooler_w.as_ref().expect("bert weights");
+    let mut pooled = ctx.scalmul_nt(&cls_pi, pooler_w, OpClass::Adaptation);
+    pooled = ctx.mpc.add_plain_row(&pooled, pm.pooler_b.as_ref().unwrap());
+    // Π_PPTanh at P1 (sees tanh input in π-permuted state).
+    let t_pi = pp_tanh(ctx.mpc, ctx.backend, ctx.views, &pooled, "pooler pre-tanh pi")?;
+    // classifier: [tπ](W_Cπ)ᵀ = t W_Cᵀ — logits unpermuted in shares.
+    let cls_w = pm.cls_w.as_ref().unwrap();
+    let mut logits = ctx.scalmul_nt(&t_pi, cls_w, OpClass::Adaptation);
+    logits = ctx.mpc.add_plain_row(&logits, pm.cls_b.as_ref().unwrap());
+    Ok(logits)
+}
+
+/// GPT-2 head: `[L2π] → [logits]` (`n × vocab` shares).
+pub fn pp_adaptation_gpt2(ctx: &mut ProtoCtx, pm: &PermutedModel, l2_pi: &Share) -> Result<Share> {
+    let h_pi = pp_layernorm(
+        ctx.mpc,
+        ctx.backend,
+        ctx.views,
+        l2_pi,
+        pm.final_ln_g.as_ref().expect("gpt weights"),
+        pm.final_ln_b.as_ref().unwrap(),
+        OpClass::Adaptation,
+        "final LN pi",
+    )?;
+    // tied LM head: [Hπ](W_Eπ)ᵀ = H W_Eᵀ
+    Ok(ctx.scalmul_nt(&h_pi, &pm.emb_word, OpClass::Adaptation))
+}
+
+/// Return the inference result to the client: both servers send their
+/// logit shares to P2 (1 round). Returns the reconstructed plaintext.
+pub fn return_to_client(mpc: &mut Mpc, logits: &Share) -> Result<crate::tensor::FloatTensor> {
+    let s0 = mpc.net.transfer(PartyId::P0, PartyId::P2, &logits.s0, OpClass::Adaptation);
+    let s1 = mpc.net.transfer(PartyId::P1, PartyId::P2, &logits.s1, OpClass::Adaptation);
+    mpc.net.round(OpClass::Adaptation, 1);
+    let recon = crate::ring::add(&s0, &s1);
+    Ok(crate::fixed::decode_tensor(&recon))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed;
+    use crate::model::{ModelConfig, ModelWeights, PermSet, PermutedModel};
+    use crate::net::{NetSim, NetworkProfile};
+    use crate::runtime::{Backend, NativeBackend};
+    use crate::tensor::FloatTensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bert_head_matches_plaintext() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 51);
+        let mut rng = Rng::new(52);
+        let perms = PermSet::random(&cfg, &mut rng);
+        let pm = PermutedModel::build(&cfg, &w, perms.clone());
+        let l2 = FloatTensor::from_fn(cfg.n_ctx, cfg.d, |r, c| ((r * 5 + c * 3) % 11) as f32 * 0.1 - 0.5);
+        let l2_pi = perms.pi.apply_cols(&l2);
+
+        let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 53);
+        let mut backend = NativeBackend::new();
+        let mut views = crate::engine::views::Views::new(false);
+        let sh = mpc.share_local(&fixed::encode_tensor(&l2_pi));
+        let mut ctx = ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+        let logits_sh = pp_adaptation_bert(&mut ctx, &pm, &sh).unwrap();
+        let got = return_to_client(&mut mpc, &logits_sh).unwrap();
+
+        // plaintext reference
+        let cls = FloatTensor::from_vec(1, cfg.d, l2.row(0).to_vec());
+        let pooled = cls
+            .matmul_nt(w.pooler_w.as_ref().unwrap())
+            .add_row(w.pooler_b.as_ref().unwrap())
+            .map(f32::tanh);
+        let want = pooled.matmul_nt(w.cls_w.as_ref().unwrap()).add_row(w.cls_b.as_ref().unwrap());
+        assert_eq!(got.shape(), (1, cfg.n_classes));
+        assert!(got.max_abs_diff(&want) < 0.02, "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn gpt_head_matches_plaintext() {
+        let cfg = ModelConfig::gpt2_tiny();
+        let w = ModelWeights::random(&cfg, 54);
+        let mut rng = Rng::new(55);
+        let perms = PermSet::random(&cfg, &mut rng);
+        let pm = PermutedModel::build(&cfg, &w, perms.clone());
+        let l2 = FloatTensor::from_fn(cfg.n_ctx, cfg.d, |r, c| ((r + c) % 9) as f32 * 0.2 - 0.8);
+        let l2_pi = perms.pi.apply_cols(&l2);
+
+        let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 56);
+        let mut backend = NativeBackend::new();
+        let mut views = crate::engine::views::Views::new(false);
+        let sh = mpc.share_local(&fixed::encode_tensor(&l2_pi));
+        let mut ctx = ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+        let logits_sh = pp_adaptation_gpt2(&mut ctx, &pm, &sh).unwrap();
+        let got = return_to_client(&mut mpc, &logits_sh).unwrap();
+
+        let mut nb = NativeBackend::new();
+        let h = nb.layernorm(&l2, w.final_ln_g.as_ref().unwrap(), w.final_ln_b.as_ref().unwrap()).unwrap();
+        let want = h.matmul_nt(&w.emb_word);
+        assert_eq!(got.shape(), (cfg.n_ctx, cfg.vocab));
+        // fixed-point noise accumulates over the vocab matmul; bound loosely
+        assert!(got.max_abs_diff(&want) < 0.05, "diff {}", got.max_abs_diff(&want));
+    }
+}

@@ -1,0 +1,139 @@
+//! `Π_PPEmbedding` (paper Algorithm 4): one-hot lookup through the
+//! communication-free `Π_ScalMul`, positional embeddings added by P0, then
+//! `Π_PPLN` with P1-held permuted affine parameters.
+
+use crate::fixed;
+use crate::model::PermutedModel;
+use crate::mpc::Share;
+use crate::net::OpClass;
+use crate::runtime::Backend;
+use crate::tensor::RingTensor;
+use crate::Result;
+
+use super::layer::ProtoCtx;
+use super::nonlin::pp_layernorm;
+
+/// Client-side: one-hot encode a token sequence in fixed point `(n, vocab)`.
+pub fn one_hot_fx(tokens: &[u32], vocab: usize) -> RingTensor {
+    let mut t = RingTensor::zeros(tokens.len(), vocab);
+    for (r, &tok) in tokens.iter().enumerate() {
+        assert!((tok as usize) < vocab, "token {tok} out of vocab {vocab}");
+        t.set(r, tok as usize, fixed::encode(1.0));
+    }
+    t
+}
+
+/// Full embedding layer: token ids → `[X_Eπ]`.
+///
+/// The client's input sharing (1 round, `2·8·n·vocab` bytes) is charged to
+/// the Embedding class, mirroring how the paper accounts the lookup.
+pub fn pp_embedding(ctx: &mut ProtoCtx, pm: &PermutedModel, tokens: &[u32]) -> Result<Share> {
+    // P2 shares the one-hot input with both servers.
+    let onehot = one_hot_fx(tokens, pm.cfg.vocab);
+    let x_sh = ctx.mpc.input_share(&onehot, OpClass::Embedding);
+    // Lookup: [X]·(W_Eπ) = [X_Mπ] — communication-free.
+    let mut x_m = ctx.scalmul_rhs(&x_sh, &pm.emb_word, OpClass::Embedding);
+    // P0 adds the permuted positional embeddings to its share.
+    let n = tokens.len();
+    let pos = {
+        let mut p = RingTensor::zeros(n, pm.cfg.d);
+        for r in 0..n {
+            p.row_mut(r).copy_from_slice(pm.emb_pos.row(r));
+        }
+        p
+    };
+    x_m = ctx.mpc.add_plain(&x_m, &pos);
+    // LayerNorm in the permuted-plaintext state at P1.
+    pp_layernorm(
+        ctx.mpc,
+        ctx.backend,
+        ctx.views,
+        &x_m,
+        &pm.emb_ln_g,
+        &pm.emb_ln_b,
+        OpClass::Embedding,
+        "X_M pi (embedding)",
+    )
+}
+
+/// Plaintext reference of the embedding output (unpermuted), for tests.
+pub fn embedding_reference(
+    pm: &PermutedModel,
+    weights_word: &crate::tensor::FloatTensor,
+    weights_pos: &crate::tensor::FloatTensor,
+    ln_g: &[f32],
+    ln_b: &[f32],
+    tokens: &[u32],
+    backend: &mut dyn Backend,
+) -> Result<crate::tensor::FloatTensor> {
+    let n = tokens.len();
+    let d = pm.cfg.d;
+    let x = crate::tensor::FloatTensor::from_fn(n, d, |r, c| {
+        weights_word.get(tokens[r] as usize, c) + weights_pos.get(r, c)
+    });
+    backend.layernorm(&x, ln_g, ln_b)
+}
+
+/// Byte cost of the client input sharing for a given config (reports).
+pub fn input_share_bytes(n: usize, vocab: usize) -> u64 {
+    2 * 8 * (n as u64) * (vocab as u64)
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::views::Views;
+    use crate::mpc::Mpc;
+    use crate::model::{ModelConfig, ModelWeights, PermSet, PermutedModel};
+    use crate::net::{NetSim, NetworkProfile};
+    use crate::runtime::NativeBackend;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn one_hot_rows_sum_to_one() {
+        let t = one_hot_fx(&[3, 0, 7], 8);
+        for r in 0..3 {
+            let s: i64 = t.row(r).iter().sum();
+            assert_eq!(s, fixed::encode(1.0));
+        }
+        assert_eq!(t.get(0, 3), fixed::encode(1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of vocab")]
+    fn one_hot_rejects_oov() {
+        one_hot_fx(&[9], 8);
+    }
+
+    #[test]
+    fn embedding_matches_reference() {
+        let cfg = ModelConfig::bert_tiny();
+        let w = ModelWeights::random(&cfg, 41);
+        let mut rng = Rng::new(42);
+        let perms = PermSet::random(&cfg, &mut rng);
+        let pm = PermutedModel::build(&cfg, &w, perms.clone());
+        let tokens: Vec<u32> = (0..cfg.n_ctx as u32).map(|i| (i * 13) % cfg.vocab as u32).collect();
+
+        let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 43);
+        let mut backend = NativeBackend::new();
+        let mut views = Views::new(false);
+        let mut ctx = ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+        let out = pp_embedding(&mut ctx, &pm, &tokens).unwrap();
+        let got = fixed::decode_tensor(&out.reconstruct());
+
+        let mut nb = NativeBackend::new();
+        let want = embedding_reference(&pm, &w.emb_word, &w.emb_pos, &w.emb_ln_g, &w.emb_ln_b, &tokens, &mut nb).unwrap();
+        let want_pi = perms.pi.apply_cols(&want);
+        let diff = got.max_abs_diff(&want_pi);
+        assert!(diff < 0.02, "embedding diff {diff}");
+        // embedding cost: input share + PPLN — all charged to Embedding
+        assert!(mpc.net.ledger.class(OpClass::Embedding).bytes > 0);
+        assert_eq!(mpc.net.ledger.class(OpClass::Linear).bytes, 0);
+    }
+
+    #[test]
+    fn input_share_cost_formula() {
+        assert_eq!(input_share_bytes(128, 30522), 2 * 8 * 128 * 30522);
+    }
+}

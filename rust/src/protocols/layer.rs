@@ -1,0 +1,322 @@
+//! The full privacy-preserving Transformer layer (paper Fig. 6):
+//! multi-head attention + feed-forward, with Centaur's hybrid state
+//! management. See `rust/src/model/permute.rs` for the algebra table.
+//!
+//! Per-layer protocol sequence (classes in parentheses):
+//!
+//! 1. `[Q],[K],[V] = Π_ScalMul([Xπ], Wπ) + b`            (Linear, 0 comm)
+//! 2. per head: `[O1] = Π_MatMul([Q_h],[K_hᵀ])/√dh + M`  (Linear, 1 round batched)
+//! 3. `[O1π₁] = Π_PPP([O1], [π₁])`                        (Linear, 1 round)
+//! 4. `[O2π₁] = Π_PPSM([O1π₁])`                           (Softmax, 2 rounds)
+//! 5. `[Ṽ] = Π_PPP([π₁ᵀ],[V])`                            (Linear, 1 round)
+//! 6. per head: `[O3_h] = Π_MatMul([O2π₁]_h,[Ṽ_h])`       (Linear, 1 round batched)
+//! 7. `[O4π] = Π_ScalMul([O3], πᵀW_O) + b_Oπ`             (Linear, 0 comm)
+//! 8. `[L1π] = Π_PPLN([O4π + Xπ], γ₁π, β₁π)`              (LayerNorm, 2 rounds)
+//! 9. `[O5π₂] = Π_ScalMul([L1π], π₂ᵀW₁π) + b₁π₂`          (Linear, 0 comm)
+//! 10. `[Gπ₂] = Π_PPGeLU([O5π₂])`                          (GeLU, 2 rounds)
+//! 11. `[O6π] = Π_ScalMul([Gπ₂], πᵀW₂π₂) + b₂π`            (Linear, 0 comm)
+//! 12. `[L2π] = Π_PPLN([O6π + L1π], γ₂π, β₂π)`             (LayerNorm, 2 rounds)
+
+use crate::engine::views::Views;
+use crate::fixed;
+use crate::model::{ModelConfig, PermLayer};
+use crate::mpc::{Mpc, Share};
+use crate::net::OpClass;
+use crate::runtime::Backend;
+use crate::tensor::RingTensor;
+use crate::Result;
+
+use super::nonlin::{pp_gelu, pp_layernorm, pp_softmax};
+
+/// Mask value standing in for −∞ in causal attention (exp(−1e5) == 0 in
+/// f32 while staying comfortably inside the fixed-point range).
+pub const MASK_NEG: f64 = -1e5;
+
+/// Protocol execution context threaded through the per-layer protocols.
+pub struct ProtoCtx<'a> {
+    pub mpc: &'a mut Mpc,
+    pub backend: &'a mut dyn Backend,
+    pub views: &'a mut Views,
+    /// Fast-sim: share×share products via charged-ideal (exact wire costs,
+    /// single local product) — used for paper-scale models on this testbed.
+    pub fast_sim: bool,
+}
+
+impl<'a> ProtoCtx<'a> {
+    pub fn matmul_batch(&mut self, pairs: &[(&Share, &Share)], class: OpClass) -> Vec<Share> {
+        if self.fast_sim {
+            self.mpc.matmul_charged_ideal_batch(pairs, class)
+        } else {
+            self.mpc.matmul_batch(pairs, class)
+        }
+    }
+
+    pub fn matmul(&mut self, x: &Share, y: &Share, class: OpClass) -> Share {
+        if self.fast_sim {
+            self.mpc.matmul_charged_ideal(x, y, class)
+        } else {
+            self.mpc.matmul(x, y, class)
+        }
+    }
+
+    pub fn scalmul_nt(&mut self, x: &Share, w_fx: &RingTensor, class: OpClass) -> Share {
+        if self.fast_sim {
+            self.mpc.scalmul_nt_ideal(x, w_fx, class)
+        } else {
+            self.mpc.scalmul_nt(x, w_fx, class)
+        }
+    }
+
+    pub fn scalmul_rhs(&mut self, x: &Share, w_fx: &RingTensor, class: OpClass) -> Share {
+        if self.fast_sim {
+            self.mpc.scalmul_rhs_ideal(x, w_fx, class)
+        } else {
+            self.mpc.scalmul_rhs(x, w_fx, class)
+        }
+    }
+}
+
+/// Stack shares vertically (head stacking for the Π_PPSM batch).
+pub fn stack_rows(blocks: &[Share]) -> Share {
+    let cols = blocks[0].cols();
+    let rows: usize = blocks.iter().map(|b| b.rows()).sum();
+    let f = |pick: fn(&Share) -> &RingTensor| {
+        let mut out = RingTensor::zeros(rows, cols);
+        let mut r0 = 0;
+        for b in blocks {
+            let t = pick(b);
+            for r in 0..t.rows() {
+                out.row_mut(r0 + r).copy_from_slice(t.row(r));
+            }
+            r0 += t.rows();
+        }
+        out
+    };
+    Share { s0: f(|b| &b.s0), s1: f(|b| &b.s1) }
+}
+
+/// Causal mask in fixed point, stacked for `h` heads: `(h·n, n)`.
+pub fn causal_mask_fx(h: usize, n: usize) -> RingTensor {
+    let neg = fixed::encode(MASK_NEG);
+    RingTensor::from_fn(h * n, n, |r, c| if c > (r % n) { neg } else { 0 })
+}
+
+/// Multi-head attention + FFN for one layer: `[Xπ] → [L2π]`.
+#[allow(clippy::too_many_arguments)]
+pub fn transformer_layer(
+    ctx: &mut ProtoCtx,
+    cfg: &ModelConfig,
+    pl: &PermLayer,
+    pi1_sh: &Share,
+    pi1_t_sh: &Share,
+    x_pi: &Share,
+    mask_fx: Option<&RingTensor>,
+    layer_idx: usize,
+) -> Result<Share> {
+    let n = x_pi.rows();
+    let dh = cfg.dh();
+    let scale = fixed::encode(1.0 / (dh as f64).sqrt());
+
+    // 1. Q, K, V (shares, unpermuted): Π_ScalMul + bias via P0.
+    let q = {
+        let s = ctx.scalmul_nt(x_pi, &pl.wq, OpClass::Linear);
+        ctx.mpc.add_plain_row(&s, &pl.bq)
+    };
+    let k = {
+        let s = ctx.scalmul_nt(x_pi, &pl.wk, OpClass::Linear);
+        ctx.mpc.add_plain_row(&s, &pl.bk)
+    };
+    let v = {
+        let s = ctx.scalmul_nt(x_pi, &pl.wv, OpClass::Linear);
+        ctx.mpc.add_plain_row(&s, &pl.bv)
+    };
+
+    // 2. O1 per head = Q_h K_hᵀ (one batched round).
+    let kt: Vec<Share> = (0..cfg.h).map(|h| k.col_block(h * dh, (h + 1) * dh).transpose()).collect();
+    let qh: Vec<Share> = (0..cfg.h).map(|h| q.col_block(h * dh, (h + 1) * dh)).collect();
+    let pairs: Vec<(&Share, &Share)> = qh.iter().zip(kt.iter()).collect();
+    let o1_heads = ctx.matmul_batch(&pairs, OpClass::Linear);
+    let mut o1 = stack_rows(&o1_heads); // (h·n, n)
+    o1 = ctx.mpc.scale_fx(&o1, scale);
+    if let Some(m) = mask_fx {
+        o1 = ctx.mpc.add_plain(&o1, m);
+    }
+
+    // 3. Π_PPP: restore a permuted state for the softmax opening.
+    let o1_p1 = ctx.matmul(&o1, pi1_sh, OpClass::Linear);
+
+    // 4. Π_PPSM at P1 (sees O1π₁ — the paper's Table 2 attack surface).
+    let o2_p1 = pp_softmax(
+        ctx.mpc,
+        ctx.backend,
+        ctx.views,
+        &o1_p1,
+        &format!("O1pi1 layer{layer_idx}"),
+    )?;
+
+    // 5. Ṽ = π₁ᵀ V so the π₁ in O2π₁ cancels.
+    let v_tilde = ctx.matmul(pi1_t_sh, &v, OpClass::Linear);
+
+    // 6. O3 per head (one batched round), then concat heads.
+    let o2h: Vec<Share> = (0..cfg.h).map(|h| o2_p1.row_block(h * n, (h + 1) * n)).collect();
+    let vth: Vec<Share> = (0..cfg.h).map(|h| v_tilde.col_block(h * dh, (h + 1) * dh)).collect();
+    let pairs3: Vec<(&Share, &Share)> = o2h.iter().zip(vth.iter()).collect();
+    let o3_heads = ctx.matmul_batch(&pairs3, OpClass::Linear);
+    let o3 = Share::concat_cols(&o3_heads); // (n, d)
+
+    // 7. O4π = Π_ScalMul([O3], πᵀW_O) + b_Oπ.
+    let o4_pi = {
+        let s = ctx.scalmul_nt(&o3, &pl.wo, OpClass::Linear);
+        ctx.mpc.add_plain_row(&s, &pl.bo)
+    };
+
+    // 8. residual + Π_PPLN (P1 holds γ₁π, β₁π).
+    let res1 = ctx.mpc.add(&o4_pi, x_pi);
+    let l1_pi = pp_layernorm(
+        ctx.mpc,
+        ctx.backend,
+        ctx.views,
+        &res1,
+        &pl.ln1_g,
+        &pl.ln1_b,
+        OpClass::LayerNorm,
+        &format!("O4+X pi layer{layer_idx}"),
+    )?;
+
+    // 9-12. FFN.
+    let o5_pi2 = {
+        let s = ctx.scalmul_nt(&l1_pi, &pl.w1, OpClass::Linear);
+        ctx.mpc.add_plain_row(&s, &pl.b1)
+    };
+    let g_pi2 = pp_gelu(
+        ctx.mpc,
+        ctx.backend,
+        ctx.views,
+        &o5_pi2,
+        &format!("O5pi2 layer{layer_idx}"),
+    )?;
+    let o6_pi = {
+        let s = ctx.scalmul_nt(&g_pi2, &pl.w2, OpClass::Linear);
+        ctx.mpc.add_plain_row(&s, &pl.b2)
+    };
+    let res2 = ctx.mpc.add(&o6_pi, &l1_pi);
+    let l2_pi = pp_layernorm(
+        ctx.mpc,
+        ctx.backend,
+        ctx.views,
+        &res2,
+        &pl.ln2_g,
+        &pl.ln2_b,
+        OpClass::LayerNorm,
+        &format!("O6+L1 pi layer{layer_idx}"),
+    )?;
+    Ok(l2_pi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::views::Views;
+    use crate::model::{ModelConfig, ModelWeights, PermSet, PermutedModel};
+    use crate::protocols::ppp;
+    use crate::net::{NetSim, NetworkProfile};
+    use crate::runtime::NativeBackend;
+    use crate::tensor::FloatTensor;
+    use crate::util::rng::Rng;
+
+    /// One full layer through the protocols vs the plaintext reference.
+    fn run_layer(fast_sim: bool) {
+        let mut cfg = ModelConfig::bert_tiny();
+        cfg.layers = 1;
+        let w = ModelWeights::random(&cfg, 31);
+        let mut rng = Rng::new(32);
+        let perms = PermSet::random(&cfg, &mut rng);
+        let pm = PermutedModel::build(&cfg, &w, perms.clone());
+
+        // random activations standing in for X_E
+        let x = FloatTensor::from_fn(cfg.n_ctx, cfg.d, |r, c| ((r * 31 + c * 7) % 23) as f32 * 0.08 - 0.8);
+        let x_pi = perms.pi.apply_cols(&x);
+
+        let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 33);
+        let mut backend = NativeBackend::new();
+        let mut views = Views::new(false);
+        let x_sh = mpc.share_local(&fixed::encode_tensor(&x_pi));
+        let pi1_sh = ppp::share_perm(&mut mpc, &perms.pi1, OpClass::Linear);
+        let pi1_t_sh = ppp::share_perm_t(&mut mpc, &perms.pi1, OpClass::Linear);
+        let mut ctx = ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim };
+        let out = transformer_layer(&mut ctx, &cfg, &pm.layers[0], &pi1_sh, &pi1_t_sh, &x_sh, None, 0).unwrap();
+
+        // plaintext reference: build a pseudo-model that starts from x
+        // directly (reuse forward_trace by setting embeddings to x rows).
+        let got = fixed::decode_tensor(&out.reconstruct());
+        let want_pi = {
+            // compute reference layer on x with plaintext ops
+            use crate::model::plaintext;
+            // quick manual reference using the same weights
+            let mut w1 = w.clone();
+            w1.layers.truncate(1);
+            // manual: reuse forward internals via a tiny embedding hack is
+            // messier than just recomputing here:
+            let _ = plaintext::Variant::Exact;
+            let l = &w.layers[0];
+            let q = x.matmul_nt(&l.wq).add_row(&l.bq);
+            let k = x.matmul_nt(&l.wk).add_row(&l.bk);
+            let v = x.matmul_nt(&l.wv).add_row(&l.bv);
+            let dh = cfg.dh();
+            let mut o3 = FloatTensor::zeros(cfg.n_ctx, cfg.d);
+            for h in 0..cfg.h {
+                let qh = q.col_block(h * dh, (h + 1) * dh);
+                let kh = k.col_block(h * dh, (h + 1) * dh);
+                let vh = v.col_block(h * dh, (h + 1) * dh);
+                let mut s = qh.matmul_nt(&kh);
+                s.map_inplace(|v| v / (dh as f32).sqrt());
+                for r in 0..s.rows() {
+                    crate::runtime::native::softmax_row(s.row_mut(r));
+                }
+                o3.set_col_block(h * dh, &s.matmul(&vh));
+            }
+            let o4 = o3.matmul_nt(&l.wo).add_row(&l.bo);
+            let mut nb = NativeBackend::new();
+            use crate::runtime::Backend as _;
+            let l1 = nb.layernorm(&o4.zip_with(&x, |a, b| a + b), &l.ln1_g, &l.ln1_b).unwrap();
+            let o5 = l1.matmul_nt(&l.w1).add_row(&l.b1);
+            let g = o5.map(crate::runtime::native::gelu_scalar);
+            let o6 = g.matmul_nt(&l.w2).add_row(&l.b2);
+            let l2 = nb.layernorm(&o6.zip_with(&l1, |a, b| a + b), &l.ln2_g, &l.ln2_b).unwrap();
+            perms.pi.apply_cols(&l2)
+        };
+        let diff = got.max_abs_diff(&want_pi);
+        assert!(diff < 0.05, "layer output diff {diff} (fast_sim={fast_sim})");
+    }
+
+    #[test]
+    fn layer_matches_plaintext_full() {
+        run_layer(false);
+    }
+
+    #[test]
+    fn layer_matches_plaintext_fast_sim() {
+        run_layer(true);
+    }
+
+    #[test]
+    fn causal_mask_shape_and_values() {
+        let m = causal_mask_fx(2, 4);
+        assert_eq!(m.shape(), (8, 4));
+        assert_eq!(m.get(0, 0), 0);
+        assert_eq!(m.get(0, 3), fixed::encode(MASK_NEG));
+        assert_eq!(m.get(3, 3), 0); // row 3 of head 0 sees everything
+        assert_eq!(m.get(4, 1), fixed::encode(MASK_NEG)); // head 1, row 0
+    }
+
+    #[test]
+    fn stack_rows_roundtrip() {
+        let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 3);
+        let a = mpc.share_local(&RingTensor::from_fn(2, 3, |r, c| (r * 3 + c) as i64));
+        let b = mpc.share_local(&RingTensor::from_fn(2, 3, |r, c| (100 + r * 3 + c) as i64));
+        let s = stack_rows(&[a.clone(), b.clone()]);
+        assert_eq!(s.rows(), 4);
+        assert_eq!(s.row_block(0, 2).reconstruct(), a.reconstruct());
+        assert_eq!(s.row_block(2, 4).reconstruct(), b.reconstruct());
+    }
+}

@@ -1,0 +1,16 @@
+//! Centaur's privacy-preserving protocols (paper §5.2 + Appendix A).
+//!
+//! * [`nonlin`] — `Π_PPSM`, `Π_PPGeLU`, `Π_PPLN`, `Π_PPTanh`: the
+//!   share → permuted-plaintext → share conversion pattern (Algorithms 1-3).
+//! * [`ppp`] — `Π_PPP` (Algorithm 6): re-permuting shares whose permutation
+//!   was cancelled by a linear protocol.
+//! * [`embedding`] — `Π_PPEmbedding` (Algorithm 4).
+//! * [`layer`] — the full Transformer layer (attention + FFN) from Fig. 6.
+//! * [`adaptation`] — `Π_PPAdaptation` (Algorithm 5) for BERT and the GPT-2
+//!   LM-head variant.
+
+pub mod adaptation;
+pub mod embedding;
+pub mod layer;
+pub mod nonlin;
+pub mod ppp;

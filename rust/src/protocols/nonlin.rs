@@ -1,0 +1,187 @@
+//! `Π_PP*` non-linear protocols (paper Algorithms 1–3): Centaur converts a
+//! share of a *permuted* tensor into permuted plaintext at the cloud party
+//! `P1`, evaluates the non-linearity exactly (through the [`Backend`] — the
+//! AOT Pallas kernels or their native mirror), and re-shares the result.
+//!
+//! Cost: 2 rounds, `8·(|X| + |Y|)` bytes — the paper's Table 1 row
+//! (`128·n²` bits for an n×n input).
+
+use crate::engine::views::{PermTag, Views};
+use crate::fixed;
+use crate::mpc::{Mpc, Share};
+use crate::net::{OpClass, PartyId};
+use crate::ring;
+use crate::runtime::Backend;
+use crate::tensor::FloatTensor;
+use crate::Result;
+
+/// Shared implementation of the state-conversion pattern.
+fn pp_apply(
+    mpc: &mut Mpc,
+    backend: &mut dyn Backend,
+    views: &mut Views,
+    x: &Share,
+    class: OpClass,
+    label: &str,
+    tag: PermTag,
+    f: impl FnOnce(&mut dyn Backend, &FloatTensor) -> Result<FloatTensor>,
+) -> Result<Share> {
+    // 1. P0 → P1: its input share; P1 reconstructs the permuted plaintext.
+    let s0 = mpc.send_share_half(x, PartyId::P0, PartyId::P1, class);
+    let xp_ring = ring::add(&s0, &x.s1);
+    let xp = fixed::decode_tensor(&xp_ring);
+    views.observe_p1(label, &xp, tag);
+    // 2. P1 computes the non-linearity in plaintext (timed as P1 compute).
+    let t0 = std::time::Instant::now();
+    let y = f(backend, &xp)?;
+    mpc.net.compute(class, PartyId::P1, t0.elapsed().as_secs_f64());
+    // 3. P1 re-shares the permuted output; P0 gets its fresh share.
+    let y_ring = fixed::encode_tensor(&y);
+    let sh = mpc.reshare_from(&y_ring, PartyId::P1, class);
+    // Two rounds in total (input half + output half).
+    mpc.net.round(class, 2);
+    Ok(sh)
+}
+
+/// `Π_PPSM` (Algorithm 1): softmax over rows of `[Xπ₁]` → `[Softmax(X)π₁]`.
+/// Works because row-wise softmax commutes with a column permutation.
+pub fn pp_softmax(
+    mpc: &mut Mpc,
+    backend: &mut dyn Backend,
+    views: &mut Views,
+    x: &Share,
+    label: &str,
+) -> Result<Share> {
+    pp_apply(mpc, backend, views, x, OpClass::Softmax, label, PermTag::Pi1, |b, t| b.softmax(t))
+}
+
+/// `Π_PPGeLU` (Algorithm 2): elementwise GeLU of `[Xπ₂]` → `[GeLU(X)π₂]`.
+pub fn pp_gelu(
+    mpc: &mut Mpc,
+    backend: &mut dyn Backend,
+    views: &mut Views,
+    x: &Share,
+    label: &str,
+) -> Result<Share> {
+    pp_apply(mpc, backend, views, x, OpClass::Gelu, label, PermTag::Pi2, |b, t| b.gelu(t))
+}
+
+/// `Π_PPLN` (Algorithm 3): LayerNorm of `[Xπ]` with P1-held permuted affine
+/// parameters `(γπ, βπ)` → `[LayerNorm(X)π]`. Row statistics are
+/// permutation-invariant and the affine part is elementwise.
+pub fn pp_layernorm(
+    mpc: &mut Mpc,
+    backend: &mut dyn Backend,
+    views: &mut Views,
+    x: &Share,
+    gamma_p: &[f32],
+    beta_p: &[f32],
+    class: OpClass,
+    label: &str,
+) -> Result<Share> {
+    pp_apply(mpc, backend, views, x, class, label, PermTag::Pi, |b, t| {
+        b.layernorm(t, gamma_p, beta_p)
+    })
+}
+
+/// `Π_PPTanh` (inside Algorithm 5): elementwise tanh of `[Xπ]`.
+pub fn pp_tanh(
+    mpc: &mut Mpc,
+    backend: &mut dyn Backend,
+    views: &mut Views,
+    x: &Share,
+    label: &str,
+) -> Result<Share> {
+    pp_apply(mpc, backend, views, x, OpClass::Adaptation, label, PermTag::Pi, |b, t| b.tanh(t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{NetSim, NetworkProfile};
+    use crate::perm::Perm;
+    use crate::runtime::NativeBackend;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (Mpc, NativeBackend, Views) {
+        (
+            Mpc::new(NetSim::new(NetworkProfile::lan()), 77),
+            NativeBackend::new(),
+            Views::new(true),
+        )
+    }
+
+    #[test]
+    fn ppsm_commutes_with_permutation() {
+        let (mut mpc, mut be, mut views) = setup();
+        let mut rng = Rng::new(1);
+        let n = 8;
+        let x = FloatTensor::from_fn(4, n, |r, c| ((r * n + c) as f32 * 0.37).sin() * 2.0);
+        let p = Perm::random(n, &mut rng);
+        let xp = p.apply_cols(&x);
+        let sh = mpc.share_local(&fixed::encode_tensor(&xp));
+        let out = pp_softmax(&mut mpc, &mut be, &mut views, &sh, "test O1").unwrap();
+        let got = fixed::decode_tensor(&out.reconstruct());
+        // expected: softmax(X) then permute
+        let mut want = x.clone();
+        for r in 0..want.rows() {
+            crate::runtime::native::softmax_row(want.row_mut(r));
+        }
+        let want_p = p.apply_cols(&want);
+        assert!(got.max_abs_diff(&want_p) < 1e-3, "diff {}", got.max_abs_diff(&want_p));
+        // Table 1 cost: 2 rounds, 128 bits/elem
+        assert_eq!(mpc.net.ledger.class(OpClass::Softmax).rounds, 2);
+        assert_eq!(mpc.net.ledger.class(OpClass::Softmax).bytes, 2 * (4 * n as u64) * 8);
+        // view recorded with the π₁ tag
+        assert_eq!(views.p1.len(), 1);
+        assert_eq!(views.p1[0].tag, PermTag::Pi1);
+    }
+
+    #[test]
+    fn ppgelu_matches_plaintext() {
+        let (mut mpc, mut be, mut views) = setup();
+        let x = FloatTensor::from_fn(3, 16, |r, c| (r as f32 - 1.0) + c as f32 * 0.2 - 1.5);
+        let sh = mpc.share_local(&fixed::encode_tensor(&x));
+        let out = pp_gelu(&mut mpc, &mut be, &mut views, &sh, "test O5").unwrap();
+        let got = fixed::decode_tensor(&out.reconstruct());
+        let want = x.map(crate::runtime::native::gelu_scalar);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn ppln_with_permuted_affine() {
+        let (mut mpc, mut be, mut views) = setup();
+        let mut rng = Rng::new(3);
+        let d = 12;
+        let p = Perm::random(d, &mut rng);
+        let x = FloatTensor::from_fn(2, d, |r, c| ((r + c * 3) % 7) as f32 * 0.5 - 1.0);
+        let gamma: Vec<f32> = (0..d).map(|i| 1.0 + i as f32 * 0.05).collect();
+        let beta: Vec<f32> = (0..d).map(|i| i as f32 * -0.02).collect();
+        // share the permuted input; give P1 permuted affine params
+        let sh = mpc.share_local(&fixed::encode_tensor(&p.apply_cols(&x)));
+        let out = pp_layernorm(
+            &mut mpc, &mut be, &mut views, &sh,
+            &p.apply_vec(&gamma), &p.apply_vec(&beta),
+            OpClass::LayerNorm, "test LN",
+        )
+        .unwrap();
+        let got = fixed::decode_tensor(&out.reconstruct());
+        // want: LN(x, γ, β) π
+        let mut nb = NativeBackend::new();
+        let want = p.apply_cols(&crate::runtime::Backend::layernorm(&mut nb, &x, &gamma, &beta).unwrap());
+        assert!(got.max_abs_diff(&want) < 2e-3, "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn fresh_resharing_randomizes() {
+        // Re-running the same Π_PPGeLU must produce different share halves
+        // (fresh randomness) that reconstruct identically.
+        let (mut mpc, mut be, mut views) = setup();
+        let x = FloatTensor::from_fn(2, 8, |_, c| c as f32 * 0.1);
+        let sh = mpc.share_local(&fixed::encode_tensor(&x));
+        let a = pp_gelu(&mut mpc, &mut be, &mut views, &sh, "a").unwrap();
+        let b = pp_gelu(&mut mpc, &mut be, &mut views, &sh, "b").unwrap();
+        assert_ne!(a.s0, b.s0);
+        assert_eq!(a.reconstruct(), b.reconstruct());
+    }
+}

@@ -1,0 +1,145 @@
+//! `Π_PPP` — privacy-preserving permutation (paper Algorithm 6).
+//!
+//! When a linear protocol cancels the permutation (e.g. `Q Kᵀ` in
+//! attention), the resulting shares `[X]` are unpermuted and therefore
+//! cannot be opened at P1 for a plaintext non-linearity. `Π_PPP` restores a
+//! permuted state by multiplying with a *secret-shared* permutation matrix:
+//! `[Xπ] = Π_MatMul([X], [π])`. The shares of `π` come from the permutation
+//! holder (the client in Algorithm 6; equivalently P0/dealer — we follow
+//! the algorithm and charge the dealing transfer).
+
+use crate::fixed;
+use crate::mpc::{Mpc, Share};
+use crate::net::OpClass;
+use crate::perm::Perm;
+use crate::tensor::RingTensor;
+
+/// Fixed-point encoding of a permutation matrix (column convention matches
+/// [`Perm::apply_cols`]: right-multiplying selects `out[:, j] = in[:, idx[j]]`).
+pub fn perm_matrix_fx(p: &Perm) -> RingTensor {
+    let n = p.n();
+    let mut m = RingTensor::zeros(n, n);
+    for (j, &i) in p.indices().iter().enumerate() {
+        m.set(i, j, fixed::encode(1.0));
+    }
+    m
+}
+
+/// Transposed encoding (`πᵀ`, for row permutations).
+pub fn perm_matrix_t_fx(p: &Perm) -> RingTensor {
+    perm_matrix_fx(p).transpose()
+}
+
+/// Share a permutation matrix (the one-time dealing step of Algorithm 6;
+/// the transfer of the two share halves is charged to `class`).
+pub fn share_perm(mpc: &mut Mpc, p: &Perm, class: OpClass) -> Share {
+    let m = perm_matrix_fx(p);
+    let sh = mpc.share_local(&m);
+    // dealing: holder sends one half to each server (1 round, 2·|π| bytes)
+    mpc.net.charge_bytes(class, 2 * (m.len() as u64) * 8);
+    mpc.net.round(class, 1);
+    sh
+}
+
+/// Share `πᵀ` (for left-multiplication / row permutation).
+pub fn share_perm_t(mpc: &mut Mpc, p: &Perm, class: OpClass) -> Share {
+    let m = perm_matrix_t_fx(p);
+    let sh = mpc.share_local(&m);
+    mpc.net.charge_bytes(class, 2 * (m.len() as u64) * 8);
+    mpc.net.round(class, 1);
+    sh
+}
+
+/// `Π_PPP`: `[X] → [Xπ]` via `Π_MatMul([X], [π])`.
+pub fn ppp_cols(mpc: &mut Mpc, x: &Share, pi_sh: &Share, class: OpClass) -> Share {
+    mpc.matmul(x, pi_sh, class)
+}
+
+/// Row variant: `[X] → [πᵀX]` via `Π_MatMul([πᵀ], [X])`.
+pub fn ppp_rows_t(mpc: &mut Mpc, pi_t_sh: &Share, x: &Share, class: OpClass) -> Share {
+    mpc.matmul(pi_t_sh, x, class)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{NetSim, NetworkProfile};
+    use crate::tensor::FloatTensor;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn mk() -> Mpc {
+        Mpc::new(NetSim::new(NetworkProfile::lan()), 5)
+    }
+
+    #[test]
+    fn perm_matrix_matches_apply_cols() {
+        check("perm matrix == apply_cols", 20, |g| {
+            let n = g.dim(10);
+            let p = Perm::random(n, g.rng());
+            let x = FloatTensor::from_fn(3, n, |r, c| (r * n + c) as f32 * 0.1);
+            let dense = fixed::decode_tensor(&perm_matrix_fx(&p));
+            let via_matmul = x.matmul(&dense);
+            let via_perm = p.apply_cols(&x);
+            assert!(via_matmul.max_abs_diff(&via_perm) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn ppp_restores_permuted_state() {
+        let mut mpc = mk();
+        let mut rng = Rng::new(9);
+        let n = 8;
+        let p = Perm::random(n, &mut rng);
+        let x = FloatTensor::from_fn(4, n, |r, c| ((r + 2 * c) % 5) as f32 * 0.3 - 0.6);
+        let x_sh = mpc.share_local(&fixed::encode_tensor(&x));
+        let pi_sh = share_perm(&mut mpc, &p, OpClass::Linear);
+        let out = ppp_cols(&mut mpc, &x_sh, &pi_sh, OpClass::Linear);
+        let got = fixed::decode_tensor(&out.reconstruct());
+        let want = p.apply_cols(&x);
+        assert!(got.max_abs_diff(&want) < 1e-2, "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn ppp_rows_permutes_rows() {
+        let mut mpc = mk();
+        let mut rng = Rng::new(10);
+        let n = 6;
+        let p = Perm::random(n, &mut rng);
+        let x = FloatTensor::from_fn(n, 4, |r, c| (r * 4 + c) as f32 * 0.2);
+        let x_sh = mpc.share_local(&fixed::encode_tensor(&x));
+        let pit_sh = share_perm_t(&mut mpc, &p, OpClass::Linear);
+        let out = ppp_rows_t(&mut mpc, &pit_sh, &x_sh, OpClass::Linear);
+        let got = fixed::decode_tensor(&out.reconstruct());
+        let want = p.apply_rows_t(&x);
+        assert!(got.max_abs_diff(&want) < 1e-2);
+    }
+
+    #[test]
+    fn ppp_then_inverse_is_identity() {
+        let mut mpc = mk();
+        let mut rng = Rng::new(11);
+        let n = 8;
+        let p = Perm::random(n, &mut rng);
+        let x = FloatTensor::from_fn(2, n, |r, c| (r + c) as f32 * 0.25);
+        let x_sh = mpc.share_local(&fixed::encode_tensor(&x));
+        let pi_sh = share_perm(&mut mpc, &p, OpClass::Linear);
+        let inv_sh = share_perm(&mut mpc, &p.inverse(), OpClass::Linear);
+        let permuted = ppp_cols(&mut mpc, &x_sh, &pi_sh, OpClass::Linear);
+        let back = ppp_cols(&mut mpc, &permuted, &inv_sh, OpClass::Linear);
+        let got = fixed::decode_tensor(&back.reconstruct());
+        assert!(got.max_abs_diff(&x) < 1e-2);
+    }
+
+    #[test]
+    fn costs_are_one_round_per_matmul() {
+        let mut mpc = mk();
+        let mut rng = Rng::new(12);
+        let p = Perm::random(8, &mut rng);
+        let x = mpc.share_local(&RingTensor::zeros(8, 8));
+        let before_rounds = mpc.net.ledger.rounds_total();
+        let pi_sh = share_perm(&mut mpc, &p, OpClass::Linear); // 1 round dealing
+        let _ = ppp_cols(&mut mpc, &x, &pi_sh, OpClass::Linear); // 1 round matmul
+        assert_eq!(mpc.net.ledger.rounds_total() - before_rounds, 2);
+    }
+}

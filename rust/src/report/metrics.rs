@@ -1,0 +1,186 @@
+//! Task metrics (paper §7.1): accuracy (QNLI/RTE), F1 (MRPC), Matthews
+//! (CoLA), Pearson+Spearman (STS-B), perplexity (Wikitext).
+
+use crate::data::{Split, TaskType};
+use crate::model::{forward, ModelConfig, ModelWeights, Variant};
+use crate::tensor::FloatTensor;
+
+/// Predict class logits / regression value for every example.
+pub fn predict(cfg: &ModelConfig, w: &ModelWeights, split: &Split, variant: Variant) -> Vec<Vec<f32>> {
+    split.ids.iter().map(|ids| forward(cfg, w, ids, variant).row(0).to_vec()).collect()
+}
+
+pub fn accuracy(preds: &[Vec<f32>], labels: &[f32]) -> f64 {
+    let hits = preds
+        .iter()
+        .zip(labels)
+        .filter(|(p, &y)| argmax(p) == y as usize)
+        .count();
+    100.0 * hits as f64 / preds.len().max(1) as f64
+}
+
+pub fn f1(preds: &[Vec<f32>], labels: &[f32]) -> f64 {
+    let (mut tp, mut fp, mut fnn) = (0.0f64, 0.0f64, 0.0f64);
+    for (p, &y) in preds.iter().zip(labels) {
+        let pred = argmax(p);
+        match (pred, y as usize) {
+            (1, 1) => tp += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fnn += 1.0,
+            _ => {}
+        }
+    }
+    let prec = tp / (tp + fp).max(1.0);
+    let rec = tp / (tp + fnn).max(1.0);
+    if prec + rec == 0.0 {
+        0.0
+    } else {
+        100.0 * 2.0 * prec * rec / (prec + rec)
+    }
+}
+
+pub fn matthews(preds: &[Vec<f32>], labels: &[f32]) -> f64 {
+    let (mut tp, mut fp, mut fnn, mut tn) = (0.0f64, 0.0, 0.0, 0.0);
+    for (p, &y) in preds.iter().zip(labels) {
+        match (argmax(p), y as usize) {
+            (1, 1) => tp += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fnn += 1.0,
+            _ => tn += 1.0,
+        }
+    }
+    let denom = ((tp + fp) * (tp + fnn) * (tn + fp) * (tn + fnn)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        100.0 * (tp * tn - fp * fnn) / denom
+    }
+}
+
+pub fn pearson_spearman(preds: &[Vec<f32>], labels: &[f32]) -> f64 {
+    let xs: Vec<f64> = preds.iter().map(|p| p[0] as f64).collect();
+    let ys: Vec<f64> = labels.iter().map(|&y| y as f64).collect();
+    let pearson = corr(&xs, &ys);
+    let spearman = corr(&ranks(&xs), &ranks(&ys));
+    100.0 * (pearson + spearman) / 2.0
+}
+
+fn corr(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let (mut num, mut va, mut vb) = (0.0, 0.0, 0.0);
+    for (&x, &y) in a.iter().zip(b) {
+        num += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    if va == 0.0 || vb == 0.0 {
+        0.0
+    } else {
+        num / (va.sqrt() * vb.sqrt())
+    }
+}
+
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&i, &j| xs[i].partial_cmp(&xs[j]).unwrap());
+    let mut r = vec![0.0; xs.len()];
+    for (rank, &i) in idx.iter().enumerate() {
+        r[i] = rank as f64;
+    }
+    r
+}
+
+fn argmax(p: &[f32]) -> usize {
+    p.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap_or(0)
+}
+
+/// Task-appropriate score (matches the paper's metric per dataset).
+pub fn task_score(task: &str, ttype: TaskType, preds: &[Vec<f32>], labels: &[f32]) -> f64 {
+    match (task, ttype) {
+        ("mrpc", _) => f1(preds, labels),
+        ("cola", _) => matthews(preds, labels),
+        (_, TaskType::Reg) => pearson_spearman(preds, labels),
+        _ => accuracy(preds, labels),
+    }
+}
+
+/// Perplexity of a GPT-2 model over a corpus (PAD-masked next-token NLL).
+pub fn perplexity(cfg: &ModelConfig, w: &ModelWeights, seqs: &[Vec<u32>], variant: Variant) -> f64 {
+    let mut tot = 0.0f64;
+    let mut cnt = 0.0f64;
+    for seq in seqs {
+        let logits = forward(cfg, w, seq, variant);
+        for r in 0..seq.len() - 1 {
+            let target = seq[r + 1];
+            if target == 0 {
+                continue; // PAD
+            }
+            tot += nll_row(logits.row(r), target as usize);
+            cnt += 1.0;
+        }
+    }
+    (tot / cnt.max(1.0)).exp()
+}
+
+fn nll_row(row: &[f32], target: usize) -> f64 {
+    let m = row.iter().cloned().fold(f32::MIN, f32::max) as f64;
+    let logsum = row.iter().map(|&v| ((v as f64) - m).exp()).sum::<f64>().ln() + m;
+    logsum - row[target] as f64
+}
+
+/// Perplexity from already-computed logits (engine-output evaluation).
+pub fn perplexity_from_logits(logits: &FloatTensor, seq: &[u32]) -> (f64, f64) {
+    let mut tot = 0.0;
+    let mut cnt = 0.0;
+    for r in 0..seq.len() - 1 {
+        let target = seq[r + 1];
+        if target == 0 {
+            continue;
+        }
+        tot += nll_row(logits.row(r), target as usize);
+        cnt += 1.0;
+    }
+    (tot, cnt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn onehotish(cls: usize) -> Vec<f32> {
+        let mut v = vec![0.0; 2];
+        v[cls] = 5.0;
+        v
+    }
+
+    #[test]
+    fn accuracy_and_f1_perfect() {
+        let labels = vec![0.0, 1.0, 1.0, 0.0];
+        let preds: Vec<Vec<f32>> = labels.iter().map(|&y| onehotish(y as usize)).collect();
+        assert_eq!(accuracy(&preds, &labels), 100.0);
+        assert_eq!(f1(&preds, &labels), 100.0);
+        assert!((matthews(&preds, &labels) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matthews_zero_for_constant_predictor() {
+        let labels = vec![0.0, 1.0, 1.0, 0.0];
+        let preds: Vec<Vec<f32>> = labels.iter().map(|_| onehotish(1)).collect();
+        assert_eq!(matthews(&preds, &labels), 0.0);
+    }
+
+    #[test]
+    fn pearson_spearman_monotone() {
+        let labels = vec![0.0, 1.0, 2.0, 3.0, 4.0];
+        let preds: Vec<Vec<f32>> = labels.iter().map(|&y| vec![y * 2.0 + 1.0]).collect();
+        assert!((pearson_spearman(&preds, &labels) - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nll_uniform() {
+        let row = vec![0.0f32; 10];
+        assert!((nll_row(&row, 3) - (10.0f64).ln()).abs() < 1e-9);
+    }
+}

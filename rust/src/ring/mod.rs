@@ -1,0 +1,223 @@
+//! Arithmetic in the ring `Z_{2^64}` on [`RingTensor`]s.
+//!
+//! Everything here is **wrapping** two's-complement arithmetic — exactly the
+//! ring used by CrypTen and the paper (§2.2). The blocked, multi-threaded
+//! [`matmul`] is the L3 performance hot spot: every `Π_ScalMul` (plaintext
+//! weights × share) and every Beaver-triple `Π_MatMul` lowers to it. Tile
+//! sizes were tuned in EXPERIMENTS.md §Perf.
+
+use crate::tensor::RingTensor;
+use crate::util::pool;
+
+/// Elementwise wrapping addition.
+pub fn add(a: &RingTensor, b: &RingTensor) -> RingTensor {
+    a.zip_with(b, |x, y| x.wrapping_add(y))
+}
+
+/// Elementwise wrapping subtraction.
+pub fn sub(a: &RingTensor, b: &RingTensor) -> RingTensor {
+    a.zip_with(b, |x, y| x.wrapping_sub(y))
+}
+
+/// Elementwise wrapping negation.
+pub fn neg(a: &RingTensor) -> RingTensor {
+    a.map(|x| x.wrapping_neg())
+}
+
+/// Elementwise wrapping Hadamard product.
+pub fn mul_elem(a: &RingTensor, b: &RingTensor) -> RingTensor {
+    a.zip_with(b, |x, y| x.wrapping_mul(y))
+}
+
+/// Multiply every element by a ring scalar.
+pub fn scale(a: &RingTensor, s: i64) -> RingTensor {
+    a.map(|x| x.wrapping_mul(s))
+}
+
+/// Add a broadcast row vector (wrapping).
+pub fn add_row(a: &RingTensor, bias: &[i64]) -> RingTensor {
+    assert_eq!(bias.len(), a.cols());
+    let mut out = a.clone();
+    for r in 0..out.rows() {
+        for (v, b) in out.row_mut(r).iter_mut().zip(bias) {
+            *v = v.wrapping_add(*b);
+        }
+    }
+    out
+}
+
+/// In-place `a += b` (wrapping).
+pub fn add_assign(a: &mut RingTensor, b: &RingTensor) {
+    assert_eq!(a.shape(), b.shape());
+    for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
+        *x = x.wrapping_add(*y);
+    }
+}
+
+/// k-tile edge for the blocked matmul. §Perf iteration 2/3: the model
+/// dims (d ≤ 1280, k ≤ 5120) run fastest untiled — re-walking the output
+/// row per tile cost more than the L1 reuse bought — so the tile only
+/// engages for vocabulary-sized inner dims (embedding lookups, k ≈ 50k).
+const TILE_K: usize = 4096;
+
+/// Wrapping dot product, 4-lane unrolled with chunked iterators so the
+/// compiler drops all bounds checks (EXPERIMENTS.md §Perf iteration 1:
+/// indexed `while` loop → chunks_exact, ~1.2-1.4× on the hot shapes).
+#[inline]
+fn dot_wrapping(a: &[i64], b: &[i64]) -> i64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0i64; 4];
+    let mut ac = a.chunks_exact(4);
+    let mut bc = b.chunks_exact(4);
+    for (ca, cb) in (&mut ac).zip(&mut bc) {
+        acc[0] = acc[0].wrapping_add(ca[0].wrapping_mul(cb[0]));
+        acc[1] = acc[1].wrapping_add(ca[1].wrapping_mul(cb[1]));
+        acc[2] = acc[2].wrapping_add(ca[2].wrapping_mul(cb[2]));
+        acc[3] = acc[3].wrapping_add(ca[3].wrapping_mul(cb[3]));
+    }
+    let mut tail = 0i64;
+    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail = tail.wrapping_add(x.wrapping_mul(y));
+    }
+    acc[0]
+        .wrapping_add(acc[1])
+        .wrapping_add(acc[2])
+        .wrapping_add(acc[3])
+        .wrapping_add(tail)
+}
+
+/// Wrapping matrix product `A (m×k) @ B (k×n)`.
+///
+/// Implementation notes (perf):
+/// * `B` is transposed once so both operands stream row-major.
+/// * The inner kernel accumulates in four independent lanes to expose ILP —
+///   wrapping i64 mul/add vectorize on AVX2 (`vpmullq` fallback is fine).
+/// * Rows are distributed over the thread pool in contiguous chunks.
+pub fn matmul(a: &RingTensor, b: &RingTensor) -> RingTensor {
+    assert_eq!(a.cols(), b.rows(), "ring matmul inner dim");
+    let bt = b.transpose();
+    matmul_nt(a, &bt)
+}
+
+/// Wrapping `A (m×k) @ B^T` where `B` is given as `(n×k)` (row-major), the
+/// natural layout for weights stored (out_features, in_features).
+pub fn matmul_nt(a: &RingTensor, bt: &RingTensor) -> RingTensor {
+    assert_eq!(a.cols(), bt.cols(), "ring matmul_nt inner dim");
+    let (m, k, n) = (a.rows(), a.cols(), bt.rows());
+    let mut out = RingTensor::zeros(m, n);
+    let rows_per_chunk = 1usize.max(m.div_ceil(pool::num_threads() * 2));
+    let chunk_elems = rows_per_chunk * n;
+    let a_data = a.data();
+    let bt_data = bt.data();
+    pool::par_chunks_mut(out.data_mut(), chunk_elems, |ci, chunk| {
+        let r0 = ci * rows_per_chunk;
+        let rows_here = chunk.len() / n;
+        for dr in 0..rows_here {
+            let r = r0 + dr;
+            let arow = &a_data[r * k..(r + 1) * k];
+            let orow = &mut chunk[dr * n..(dr + 1) * n];
+            // k-tiling keeps arow tile in L1 across all n columns.
+            for k0 in (0..k).step_by(TILE_K) {
+                let k1 = (k0 + TILE_K).min(k);
+                for c in 0..n {
+                    let brow = &bt_data[c * k + k0..c * k + k1];
+                    let atile = &arow[k0..k1];
+                    orow[c] = orow[c].wrapping_add(dot_wrapping(atile, brow));
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Reference (naive) matmul for testing the blocked kernel.
+pub fn matmul_naive(a: &RingTensor, b: &RingTensor) -> RingTensor {
+    assert_eq!(a.cols(), b.rows());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = RingTensor::zeros(m, n);
+    for r in 0..m {
+        for c in 0..n {
+            let mut acc = 0i64;
+            for i in 0..k {
+                acc = acc.wrapping_add(a.get(r, i).wrapping_mul(b.get(i, c)));
+            }
+            out.set(r, c, acc);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn blocked_matches_naive() {
+        check("ring matmul blocked==naive", 25, |g| {
+            let m = g.dim(17);
+            let k = g.dim(40);
+            let n = g.dim(23);
+            let a = RingTensor::from_vec(m, k, g.vec_i64(m * k));
+            let b = RingTensor::from_vec(k, n, g.vec_i64(k * n));
+            assert_eq!(matmul(&a, &b), matmul_naive(&a, &b));
+        });
+    }
+
+    #[test]
+    fn matmul_distributes_over_share_split() {
+        // (A @ X0) + (A @ X1) == A @ (X0 + X1) — the algebraic fact behind
+        // Π_ScalMul being communication-free.
+        check("matmul distributes", 20, |g| {
+            let m = g.dim(8);
+            let k = g.dim(12);
+            let n = g.dim(8);
+            let a = RingTensor::from_vec(m, k, g.vec_i64(m * k));
+            let x0 = RingTensor::from_vec(k, n, g.vec_i64(k * n));
+            let x1 = RingTensor::from_vec(k, n, g.vec_i64(k * n));
+            let lhs = add(&matmul(&a, &x0), &matmul(&a, &x1));
+            let rhs = matmul(&a, &add(&x0, &x1));
+            assert_eq!(lhs, rhs);
+        });
+    }
+
+    #[test]
+    fn add_sub_inverse() {
+        check("add/sub inverse", 100, |g| {
+            let n = g.dim(32);
+            let a = RingTensor::from_vec(1, n, g.vec_i64(n));
+            let b = RingTensor::from_vec(1, n, g.vec_i64(n));
+            assert_eq!(sub(&add(&a, &b), &b), a);
+            assert_eq!(add(&sub(&a, &b), &b), a);
+        });
+    }
+
+    #[test]
+    fn neg_is_additive_inverse() {
+        check("neg inverse", 100, |g| {
+            let n = g.dim(32);
+            let a = RingTensor::from_vec(1, n, g.vec_i64(n));
+            let z = add(&a, &neg(&a));
+            assert!(z.data().iter().all(|&v| v == 0));
+        });
+    }
+
+    #[test]
+    fn matmul_nt_consistent() {
+        check("matmul_nt == matmul(bT)", 20, |g| {
+            let m = g.dim(9);
+            let k = g.dim(9);
+            let n = g.dim(9);
+            let a = RingTensor::from_vec(m, k, g.vec_i64(m * k));
+            let bt = RingTensor::from_vec(n, k, g.vec_i64(n * k));
+            assert_eq!(matmul_nt(&a, &bt), matmul(&a, &bt.transpose()));
+        });
+    }
+
+    #[test]
+    fn wrapping_behaviour_is_modular() {
+        let a = RingTensor::from_vec(1, 1, vec![i64::MAX]);
+        let b = RingTensor::from_vec(1, 1, vec![1]);
+        assert_eq!(add(&a, &b).get(0, 0), i64::MIN); // 2^63-1 + 1 wraps
+    }
+}

@@ -1,0 +1,57 @@
+//! Execution backends for the plaintext compute Centaur's cloud party (P1)
+//! performs on permuted data.
+//!
+//! Two interchangeable backends implement [`Backend`]:
+//!
+//! * [`NativeBackend`] — pure Rust, semantics mirrored 1:1 from the pure-jnp
+//!   oracle `python/compile/kernels/ref.py`. Always available; `cargo test`
+//!   never needs artifacts.
+//! * [`XlaBackend`] — loads the AOT artifacts produced by
+//!   `python/compile/aot.py` (HLO text lowered from the L1 Pallas kernels)
+//!   and executes them on the PJRT CPU client via the `xla` crate. This is
+//!   the production path: Python never runs at request time.
+//!
+//! The engine asks for ops by shape; `XlaBackend` dispatches to a compiled
+//! executable when the model's manifest has that shape and falls back to
+//! native otherwise (counted, so benches can assert zero fallbacks).
+
+pub mod native;
+mod registry;
+mod xla_backend;
+
+pub use native::NativeBackend;
+pub use registry::{ArtifactRegistry, OpKey};
+pub use xla_backend::XlaBackend;
+
+use crate::tensor::FloatTensor;
+use crate::Result;
+
+/// Plaintext op executor used by the Centaur engine at P1.
+pub trait Backend {
+    /// Row-softmax (paper Eq. 3) over a 2-D tensor.
+    fn softmax(&mut self, x: &FloatTensor) -> Result<FloatTensor>;
+    /// Exact erf-GeLU (paper Eq. 5), elementwise.
+    fn gelu(&mut self, x: &FloatTensor) -> Result<FloatTensor>;
+    /// LayerNorm over rows with affine γ/β (paper Eq. 1), eps = 1e-5.
+    fn layernorm(&mut self, x: &FloatTensor, gamma: &[f32], beta: &[f32]) -> Result<FloatTensor>;
+    /// Elementwise tanh (BERT pooler).
+    fn tanh(&mut self, x: &FloatTensor) -> Result<FloatTensor>;
+    /// Backend label for reports.
+    fn name(&self) -> &'static str;
+    /// How many op calls could not be served by AOT artifacts (native = 0).
+    fn fallbacks(&self) -> u64 {
+        0
+    }
+}
+
+/// Construct a backend by name: `"native"` or `"xla"` (requires artifacts).
+pub fn backend_by_name(name: &str, model: &str, artifacts_dir: &str) -> Result<Box<dyn Backend>> {
+    match name {
+        "native" => Ok(Box::new(NativeBackend::new())),
+        "xla" => Ok(Box::new(XlaBackend::new(artifacts_dir, model)?)),
+        other => anyhow::bail!("unknown backend '{other}' (expected native|xla)"),
+    }
+}
+
+/// LayerNorm epsilon — keep in sync with python/compile/model.py LN_EPS.
+pub const LN_EPS: f32 = 1e-5;

@@ -1,0 +1,144 @@
+//! Pure-Rust backend — semantics mirror `python/compile/kernels/ref.py`.
+
+use super::{Backend, LN_EPS};
+use crate::tensor::FloatTensor;
+use crate::Result;
+
+/// erf via Abramowitz & Stegun 7.1.26 (|err| ≤ 1.5e-7 — below f32 ULP for
+/// the GeLU use). Matches jax's erf to f32 precision on the tested domain.
+pub fn erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    const A1: f32 = 0.254829592;
+    const A2: f32 = -0.284496736;
+    const A3: f32 = 1.421413741;
+    const A4: f32 = -1.453152027;
+    const A5: f32 = 1.061405429;
+    const P: f32 = 0.3275911;
+    let t = 1.0 / (1.0 + P * x);
+    let y = 1.0 - (((((A5 * t + A4) * t) + A3) * t + A2) * t + A1) * t * (-x * x).exp();
+    sign * y
+}
+
+/// Exact-formula GeLU (paper Eq. 5).
+pub fn gelu_scalar(x: f32) -> f32 {
+    0.5 * x * (1.0 + erf(x / std::f32::consts::SQRT_2))
+}
+
+/// Row softmax on a slice.
+pub fn softmax_row(row: &mut [f32]) {
+    let tau = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - tau).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Pure-Rust plaintext op executor.
+#[derive(Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn softmax(&mut self, x: &FloatTensor) -> Result<FloatTensor> {
+        let mut out = x.clone();
+        for r in 0..out.rows() {
+            softmax_row(out.row_mut(r));
+        }
+        Ok(out)
+    }
+
+    fn gelu(&mut self, x: &FloatTensor) -> Result<FloatTensor> {
+        Ok(x.map(gelu_scalar))
+    }
+
+    fn layernorm(&mut self, x: &FloatTensor, gamma: &[f32], beta: &[f32]) -> Result<FloatTensor> {
+        anyhow::ensure!(gamma.len() == x.cols() && beta.len() == x.cols(), "ln affine dims");
+        let d = x.cols();
+        let mut out = x.clone();
+        for r in 0..out.rows() {
+            let row = out.row_mut(r);
+            let mean = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            let rstd = 1.0 / (var + LN_EPS).sqrt();
+            for c in 0..d {
+                row[c] = gamma[c] * (row[c] - mean) * rstd + beta[c];
+            }
+        }
+        Ok(out)
+    }
+
+    fn tanh(&mut self, x: &FloatTensor) -> Result<FloatTensor> {
+        Ok(x.map(f32::tanh))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        // table values of erf
+        for (x, want) in [(0.0, 0.0), (0.5, 0.5204999), (1.0, 0.8427008), (2.0, 0.9953223)] {
+            assert!((erf(x) - want).abs() < 2e-6, "erf({x})={}", erf(x));
+            assert!((erf(-x) + want).abs() < 2e-6);
+        }
+    }
+
+    #[test]
+    fn gelu_matches_ref_values() {
+        // same table as python/tests/test_kernels.py::test_known_values
+        for (x, want) in [(0.0, 0.0), (1.0, 0.84134), (-1.0, -0.15866), (2.0, 1.95450)] {
+            assert!((gelu_scalar(x) - want).abs() < 1e-4, "gelu({x})={}", gelu_scalar(x));
+        }
+    }
+
+    #[test]
+    fn softmax_rows_normalized_and_stable() {
+        let mut b = NativeBackend::new();
+        let x = FloatTensor::from_vec(2, 4, vec![1e4, 0.0, -1e4, 5.0, 0.1, 0.2, 0.3, 0.4]);
+        let y = b.softmax(&x).unwrap();
+        for r in 0..2 {
+            let s: f32 = y.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(y.row(r).iter().all(|v| v.is_finite()));
+        }
+        assert!(y.get(0, 0) > 0.999); // dominant logit
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut b = NativeBackend::new();
+        let d = 64;
+        let x = FloatTensor::from_fn(3, d, |r, c| ((r * d + c) as f32 * 0.1).sin() * 7.0);
+        let y = b.layernorm(&x, &vec![1.0; d], &vec![0.0; d]).unwrap();
+        for r in 0..3 {
+            let mean: f32 = y.row(r).iter().sum::<f32>() / d as f32;
+            let var: f32 = y.row(r).iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn layernorm_rejects_bad_affine() {
+        let mut b = NativeBackend::new();
+        let x = FloatTensor::zeros(2, 4);
+        assert!(b.layernorm(&x, &[1.0; 3], &[0.0; 4]).is_err());
+    }
+}

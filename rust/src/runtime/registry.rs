@@ -1,0 +1,121 @@
+//! Artifact registry: reads the manifests emitted by `python/compile/aot.py`
+//! and resolves (op, shape) → HLO text file.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json;
+use crate::Result;
+
+/// Key identifying one lowered op artifact.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct OpKey {
+    pub op: String,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Parsed per-model artifact manifest.
+#[derive(Debug)]
+pub struct ArtifactRegistry {
+    /// Model tag this registry serves.
+    pub model: String,
+    dir: PathBuf,
+    ops: BTreeMap<OpKey, PathBuf>,
+    /// Ring-matmul ablation kernels: (m, k, n) → file.
+    ring: BTreeMap<(usize, usize, usize), PathBuf>,
+}
+
+impl ArtifactRegistry {
+    /// Load `artifacts/<model>/manifest.json` (and the shared ring set).
+    pub fn load(artifacts_dir: &str, model: &str) -> Result<Self> {
+        let dir = Path::new(artifacts_dir).join(model);
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e} (run `make artifacts`)", manifest_path.display()))?;
+        let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest: {e}"))?;
+        let mut ops = BTreeMap::new();
+        for op in doc.get("ops").as_arr().unwrap_or(&[]) {
+            let key = OpKey {
+                op: op.get("op").as_str().unwrap_or_default().to_string(),
+                rows: op.get("rows").as_usize().unwrap_or(0),
+                cols: op.get("cols").as_usize().unwrap_or(0),
+            };
+            let file = dir.join(op.get("file").as_str().unwrap_or_default());
+            anyhow::ensure!(file.exists(), "missing artifact {}", file.display());
+            ops.insert(key, file);
+        }
+        let mut ring = BTreeMap::new();
+        let ring_manifest = Path::new(artifacts_dir).join("ring").join("manifest.json");
+        if let Ok(rt) = std::fs::read_to_string(&ring_manifest) {
+            if let Ok(rdoc) = json::parse(&rt) {
+                for e in rdoc.get("shapes").as_arr().unwrap_or(&[]) {
+                    let key = (
+                        e.get("m").as_usize().unwrap_or(0),
+                        e.get("k").as_usize().unwrap_or(0),
+                        e.get("n").as_usize().unwrap_or(0),
+                    );
+                    ring.insert(
+                        key,
+                        Path::new(artifacts_dir).join("ring").join(e.get("file").as_str().unwrap_or_default()),
+                    );
+                }
+            }
+        }
+        Ok(ArtifactRegistry { model: model.to_string(), dir, ops, ring })
+    }
+
+    /// Resolve an op artifact path.
+    pub fn lookup(&self, op: &str, rows: usize, cols: usize) -> Option<&PathBuf> {
+        self.ops.get(&OpKey { op: op.to_string(), rows, cols })
+    }
+
+    /// Resolve a ring-matmul artifact path.
+    pub fn lookup_ring(&self, m: usize, k: usize, n: usize) -> Option<&PathBuf> {
+        self.ring.get(&(m, k, n))
+    }
+
+    /// All op keys (diagnostics).
+    pub fn keys(&self) -> impl Iterator<Item = &OpKey> {
+        self.ops.keys()
+    }
+
+    /// Base directory of this model's artifacts.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Build a registry from an in-memory manifest (tests).
+    pub fn from_parts(model: &str, dir: PathBuf, ops: BTreeMap<OpKey, PathBuf>) -> Self {
+        ArtifactRegistry { model: model.to_string(), dir, ops, ring: BTreeMap::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_and_lookup() {
+        let tmp = std::env::temp_dir().join(format!("centaur_reg_{}", std::process::id()));
+        let mdir = tmp.join("toy");
+        std::fs::create_dir_all(&mdir).unwrap();
+        std::fs::write(mdir.join("softmax_4x4.hlo.txt"), "HloModule x").unwrap();
+        std::fs::write(
+            mdir.join("manifest.json"),
+            r#"{"model":"toy","ops":[{"op":"softmax","rows":4,"cols":4,"file":"softmax_4x4.hlo.txt"}]}"#,
+        )
+        .unwrap();
+        let reg = ArtifactRegistry::load(tmp.to_str().unwrap(), "toy").unwrap();
+        assert!(reg.lookup("softmax", 4, 4).is_some());
+        assert!(reg.lookup("softmax", 8, 4).is_none());
+        assert!(reg.lookup("gelu", 4, 4).is_none());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = ArtifactRegistry::load("/nonexistent", "toy").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

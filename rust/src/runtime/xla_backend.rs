@@ -1,0 +1,164 @@
+//! PJRT execution of the AOT artifacts (the production request path).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Executables are compiled once per
+//! (op, shape) and cached for the life of the backend.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::{ArtifactRegistry, Backend, NativeBackend};
+use crate::tensor::{FloatTensor, RingTensor};
+use crate::Result;
+
+/// Backend running the Pallas-lowered HLO artifacts through PJRT.
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    native: NativeBackend,
+    fallbacks: u64,
+    /// Executions served from artifacts (diagnostics).
+    pub hits: u64,
+}
+
+impl XlaBackend {
+    pub fn new(artifacts_dir: &str, model: &str) -> Result<Self> {
+        let registry = ArtifactRegistry::load(artifacts_dir, model)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(XlaBackend {
+            client,
+            registry,
+            cache: BTreeMap::new(),
+            native: NativeBackend::new(),
+            fallbacks: 0,
+            hits: 0,
+        })
+    }
+
+    fn executable(&mut self, key: String, path: &Path) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&key) {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(self.cache.get(&key).unwrap())
+    }
+
+    fn lit_f32(t: &FloatTensor) -> Result<xla::Literal> {
+        xla::Literal::vec1(t.data())
+            .reshape(&[t.rows() as i64, t.cols() as i64])
+            .map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))
+    }
+
+    fn lit_vec_f32(v: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(v)
+    }
+
+    fn run(&mut self, key: String, path: &Path, args: &[xla::Literal], rows: usize, cols: usize) -> Result<FloatTensor> {
+        let exe = self.executable(key, path)?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("tuple1: {e:?}"))?;
+        let values = out.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        anyhow::ensure!(values.len() == rows * cols, "xla output size {} != {rows}x{cols}", values.len());
+        self.hits += 1;
+        Ok(FloatTensor::from_vec(rows, cols, values))
+    }
+
+    fn unary(&mut self, op: &str, x: &FloatTensor) -> Result<Option<FloatTensor>> {
+        let (rows, cols) = x.shape();
+        let Some(path) = self.registry.lookup(op, rows, cols).cloned() else {
+            self.fallbacks += 1;
+            return Ok(None);
+        };
+        let key = format!("{op}_{rows}x{cols}");
+        let arg = Self::lit_f32(x)?;
+        Ok(Some(self.run(key, &path, &[arg], rows, cols)?))
+    }
+
+    /// Ring matmul through the AOT s64 Pallas kernel (ablation path).
+    /// Returns None when no artifact exists for this shape.
+    pub fn ring_matmul(&mut self, a: &RingTensor, b: &RingTensor) -> Result<Option<RingTensor>> {
+        let (m, k) = a.shape();
+        let (k2, n) = b.shape();
+        anyhow::ensure!(k == k2, "ring matmul inner dim");
+        let Some(path) = self.registry.lookup_ring(m, k, n).cloned() else {
+            return Ok(None);
+        };
+        let key = format!("ring_{m}x{k}x{n}");
+        let la = xla::Literal::vec1(a.data())
+            .reshape(&[m as i64, k as i64])
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let lb = xla::Literal::vec1(b.data())
+            .reshape(&[k as i64, n as i64])
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let exe = self.executable(key, &path)?;
+        let result = exe
+            .execute::<xla::Literal>(&[la, lb])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let values = out.to_vec::<i64>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        self.hits += 1;
+        Ok(Some(RingTensor::from_vec(m, n, values)))
+    }
+
+    /// Number of distinct compiled executables held.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+impl Backend for XlaBackend {
+    fn softmax(&mut self, x: &FloatTensor) -> Result<FloatTensor> {
+        match self.unary("softmax", x)? {
+            Some(y) => Ok(y),
+            None => self.native.softmax(x),
+        }
+    }
+
+    fn gelu(&mut self, x: &FloatTensor) -> Result<FloatTensor> {
+        match self.unary("gelu", x)? {
+            Some(y) => Ok(y),
+            None => self.native.gelu(x),
+        }
+    }
+
+    fn layernorm(&mut self, x: &FloatTensor, gamma: &[f32], beta: &[f32]) -> Result<FloatTensor> {
+        let (rows, cols) = x.shape();
+        let Some(path) = self.registry.lookup("layernorm", rows, cols).cloned() else {
+            self.fallbacks += 1;
+            return self.native.layernorm(x, gamma, beta);
+        };
+        let key = format!("layernorm_{rows}x{cols}");
+        let args = [Self::lit_f32(x)?, Self::lit_vec_f32(gamma), Self::lit_vec_f32(beta)];
+        self.run(key, &path, &args, rows, cols)
+    }
+
+    fn tanh(&mut self, x: &FloatTensor) -> Result<FloatTensor> {
+        match self.unary("tanh", x)? {
+            Some(y) => Ok(y),
+            None => self.native.tanh(x),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn fallbacks(&self) -> u64 {
+        self.fallbacks
+    }
+}

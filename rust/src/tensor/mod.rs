@@ -1,0 +1,321 @@
+//! Dense row-major tensors for the protocol engine.
+//!
+//! Two element domains are used throughout the crate:
+//! * [`RingTensor`] — `i64` elements interpreted in `Z_{2^64}` (secret
+//!   shares, fixed-point encodings). All arithmetic wraps.
+//! * [`FloatTensor`] — `f32` elements (plaintext weights, permuted
+//!   plaintext activations at the cloud party, reference model).
+//!
+//! Tensors are logically 2-D (`rows × cols`); attention treats the head
+//! dimension by slicing column blocks, which keeps the protocol code close
+//! to the paper's matrix notation.
+
+use std::fmt;
+
+/// Generic dense 2-D tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor<T> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+/// `Z_{2^64}` tensor (shares / fixed-point values).
+pub type RingTensor = Tensor<i64>;
+/// `f32` tensor (plaintext values).
+pub type FloatTensor = Tensor<f32>;
+
+impl<T: Copy + Default> Tensor<T> {
+    /// All-default (zero) tensor.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Tensor { rows, cols, data: vec![T::default(); rows * cols] }
+    }
+
+    /// Build from a row-major vector. Panics if the length mismatches.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "tensor shape {}x{} != data len {}", rows, cols, data.len());
+        Tensor { rows, cols, data }
+    }
+
+    /// Build by evaluating `f(r, c)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Tensor { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    /// Total number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    /// `(rows, cols)` pair.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> T {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: T) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Row slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[T] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Raw row-major data.
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+    /// Consume into the raw buffer.
+    pub fn into_data(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Self {
+        let mut out = Tensor::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Copy of a contiguous column block `[c0, c1)` (used for head slicing).
+    pub fn col_block(&self, c0: usize, c1: usize) -> Self {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let w = c1 - c0;
+        let mut out = Tensor::zeros(self.rows, w);
+        for r in 0..self.rows {
+            out.data[r * w..(r + 1) * w].copy_from_slice(&self.data[r * self.cols + c0..r * self.cols + c1]);
+        }
+        out
+    }
+
+    /// Write `block` into columns `[c0, c0+block.cols)`.
+    pub fn set_col_block(&mut self, c0: usize, block: &Tensor<T>) {
+        assert_eq!(self.rows, block.rows);
+        assert!(c0 + block.cols <= self.cols);
+        for r in 0..self.rows {
+            let dst = r * self.cols + c0;
+            self.data[dst..dst + block.cols].copy_from_slice(block.row(r));
+        }
+    }
+
+    /// Horizontal concatenation of equal-height tensors.
+    pub fn concat_cols(blocks: &[Tensor<T>]) -> Self {
+        assert!(!blocks.is_empty());
+        let rows = blocks[0].rows;
+        let cols: usize = blocks.iter().map(|b| b.cols).sum();
+        let mut out = Tensor::zeros(rows, cols);
+        let mut c0 = 0;
+        for b in blocks {
+            assert_eq!(b.rows, rows);
+            out.set_col_block(c0, b);
+            c0 += b.cols;
+        }
+        out
+    }
+
+    /// Apply `f` elementwise in place.
+    pub fn map_inplace(&mut self, mut f: impl FnMut(T) -> T) {
+        for v in self.data.iter_mut() {
+            *v = f(*v);
+        }
+    }
+
+    /// New tensor with `f` applied elementwise.
+    pub fn map<U: Copy + Default>(&self, mut f: impl FnMut(T) -> U) -> Tensor<U> {
+        Tensor { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&v| f(v)).collect() }
+    }
+
+    /// Zip two same-shape tensors elementwise.
+    pub fn zip_with(&self, other: &Tensor<T>, mut f: impl FnMut(T, T) -> T) -> Tensor<T> {
+        assert_eq!(self.shape(), other.shape(), "zip_with shape mismatch");
+        Tensor {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+}
+
+impl FloatTensor {
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &FloatTensor) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Plaintext f32 matmul: `self (m×k) @ other (k×n)`.
+    pub fn matmul(&self, other: &FloatTensor) -> FloatTensor {
+        assert_eq!(self.cols, other.rows, "matmul inner dim");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let bt = other.transpose();
+        let mut out = FloatTensor::zeros(m, n);
+        for r in 0..m {
+            let arow = self.row(r);
+            for c in 0..n {
+                let brow = bt.row(c);
+                let mut acc = 0.0f32;
+                for i in 0..k {
+                    acc += arow[i] * brow[i];
+                }
+                out.data[r * n + c] = acc;
+            }
+        }
+        out
+    }
+
+    /// `self (m×k) @ other^T (n×k)` — weights stored (out, in).
+    pub fn matmul_nt(&self, other: &FloatTensor) -> FloatTensor {
+        assert_eq!(self.cols, other.cols, "matmul_nt inner dim");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = FloatTensor::zeros(m, n);
+        for r in 0..m {
+            let arow = self.row(r);
+            for c in 0..n {
+                let brow = other.row(c);
+                let mut acc = 0.0f32;
+                for i in 0..k {
+                    acc += arow[i] * brow[i];
+                }
+                out.data[r * n + c] = acc;
+            }
+        }
+        out
+    }
+
+    /// Add a broadcast row vector.
+    pub fn add_row(&self, bias: &[f32]) -> FloatTensor {
+        assert_eq!(bias.len(), self.cols);
+        let mut out = self.clone();
+        for r in 0..out.rows {
+            for (v, b) in out.row_mut(r).iter_mut().zip(bias) {
+                *v += *b;
+            }
+        }
+        out
+    }
+}
+
+impl<T: fmt::Debug + Copy + Default> fmt::Debug for Tensor<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Tensor {}x{} [", self.rows, self.cols)?;
+        let show_rows = self.rows.min(4);
+        for r in 0..show_rows {
+            let row = self.row(r);
+            let shown: Vec<_> = row.iter().take(6).collect();
+            writeln!(f, "  {:?}{}", shown, if self.cols > 6 { " ..." } else { "" })?;
+        }
+        if self.rows > show_rows {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_index() {
+        let t = RingTensor::from_fn(3, 4, |r, c| (r * 10 + c) as i64);
+        assert_eq!(t.shape(), (3, 4));
+        assert_eq!(t.get(2, 3), 23);
+        assert_eq!(t.row(1), &[10, 11, 12, 13]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let t = RingTensor::from_fn(5, 7, |r, c| (r * 100 + c) as i64);
+        assert_eq!(t.transpose().transpose(), t);
+        assert_eq!(t.transpose().get(3, 4), t.get(4, 3));
+    }
+
+    #[test]
+    fn col_blocks_roundtrip() {
+        let t = RingTensor::from_fn(4, 6, |r, c| (r * 6 + c) as i64);
+        let b0 = t.col_block(0, 3);
+        let b1 = t.col_block(3, 6);
+        assert_eq!(RingTensor::concat_cols(&[b0, b1]), t);
+    }
+
+    #[test]
+    fn float_matmul_matches_manual() {
+        let a = FloatTensor::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = FloatTensor::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+        // matmul_nt with transposed rhs gives the same result
+        let c2 = a.matmul_nt(&b.transpose());
+        assert_eq!(c.data(), c2.data());
+    }
+
+    #[test]
+    fn add_row_broadcasts() {
+        let a = FloatTensor::zeros(2, 3).add_row(&[1., 2., 3.]);
+        assert_eq!(a.row(0), &[1., 2., 3.]);
+        assert_eq!(a.row(1), &[1., 2., 3.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_dim_mismatch_panics() {
+        let a = FloatTensor::zeros(2, 3);
+        let b = FloatTensor::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

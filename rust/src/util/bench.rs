@@ -1,0 +1,120 @@
+//! Micro-benchmark harness (offline mirror has no `criterion`).
+//!
+//! Used by the `benches/*.rs` targets (built with `harness = false`).
+//! Each benchmark runs a warmup phase, then timed iterations until a
+//! minimum wall budget is reached, and reports min/median/p95/mean.
+
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub mean: Duration,
+}
+
+impl BenchStats {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} iters={:<6} min={:>12} med={:>12} p95={:>12} mean={:>12}",
+            self.name,
+            self.iters,
+            crate::util::human_secs(self.min.as_secs_f64()),
+            crate::util::human_secs(self.median.as_secs_f64()),
+            crate::util::human_secs(self.p95.as_secs_f64()),
+            crate::util::human_secs(self.mean.as_secs_f64()),
+        )
+    }
+}
+
+/// Benchmark runner with a fixed time budget per benchmark.
+pub struct Bencher {
+    /// Minimum total measured time before stopping.
+    pub budget: Duration,
+    /// Maximum number of iterations regardless of budget.
+    pub max_iters: usize,
+    /// Warmup iterations.
+    pub warmup: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        let quick = std::env::var("CENTAUR_BENCH_QUICK").is_ok();
+        Bencher {
+            budget: if quick { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            max_iters: if quick { 20 } else { 1000 },
+            warmup: if quick { 1 } else { 3 },
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, which should perform one full iteration of the workload.
+    /// Use `std::hint::black_box` inside `f` to defeat DCE.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.budget && samples.len() < self.max_iters)
+            || samples.len() < 3
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let iters = samples.len();
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters,
+            min: samples[0],
+            median: samples[iters / 2],
+            p95: samples[(iters * 95 / 100).min(iters - 1)],
+            mean: samples.iter().sum::<Duration>() / iters as u32,
+        };
+        println!("{}", stats.line());
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// All results gathered so far.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Print a section header.
+    pub fn section(&self, title: &str) {
+        println!("\n== {title} ==");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut b = Bencher { budget: Duration::from_millis(5), max_iters: 50, warmup: 1, results: vec![] };
+        let s = b.bench("noop-spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(s.iters >= 3);
+        assert!(s.min <= s.median && s.median <= s.p95);
+    }
+}

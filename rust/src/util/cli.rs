@@ -1,0 +1,117 @@
+//! Tiny command-line parser (offline mirror has no `clap`).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// `--flag` booleans (a `--key` with no value).
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare flag.
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.options.insert(name.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse the process command line.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("report table1 --model bert-base --net wan1 --verbose");
+        assert_eq!(a.command.as_deref(), Some("report"));
+        assert_eq!(a.positional, vec!["table1"]);
+        assert_eq!(a.opt("model"), Some("bert-base"));
+        assert_eq!(a.opt("net"), Some("wan1"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("serve --port=8080 --batch=16");
+        assert_eq!(a.opt_usize("port", 0), 8080);
+        assert_eq!(a.opt_usize("batch", 0), 16);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.opt_or("missing", "dflt"), "dflt");
+        assert_eq!(a.opt_f64("nope", 1.5), 1.5);
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        let a = parse("run --fast --model tiny");
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("model"), Some("tiny"));
+    }
+}

@@ -1,0 +1,61 @@
+//! Small self-contained utilities replacing crates unavailable in the
+//! offline mirror (see DESIGN.md §Offline-dependency substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+
+/// Format a byte count as a human-readable string (e.g. `94.0 GB`).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KB", "MB", "GB", "TB", "PB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1000.0 && u + 1 < UNITS.len() {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", bytes, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration in seconds with adaptive units.
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2} s", s)
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(0), "0 B");
+        assert_eq!(human_bytes(999), "999 B");
+        assert_eq!(human_bytes(1500), "1.50 KB");
+        assert_eq!(human_bytes(94_000_000_000), "94.00 GB");
+    }
+
+    #[test]
+    fn human_secs_units() {
+        assert_eq!(human_secs(0.5e-9 * 100.0), "50.0 ns");
+        assert_eq!(human_secs(2e-3), "2.0 ms");
+        assert_eq!(human_secs(3.0), "3.00 s");
+        assert_eq!(human_secs(600.0), "10.0 min");
+    }
+}

@@ -1,0 +1,117 @@
+//! Scoped data-parallel helpers over `std::thread` (no `rayon` offline).
+//!
+//! The ring matmul and Beaver generation use [`par_chunks_mut`] to split an
+//! output buffer across OS threads. Thread count defaults to the host
+//! parallelism and can be capped with the `CENTAUR_THREADS` env var.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use for data-parallel loops.
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("CENTAUR_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Run `f(chunk_index, chunk)` over disjoint mutable chunks of `data`,
+/// one task per chunk, across up to [`num_threads`] threads. `chunk_rows`
+/// is expressed in *elements*; the final chunk may be shorter.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let chunk_len = chunk_len.max(1);
+    let n_chunks = n.div_ceil(chunk_len);
+    let threads = num_threads().min(n_chunks);
+    if threads <= 1 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    // Pre-split into chunk pointers so each worker can claim chunks by index.
+    let chunks: Vec<&mut [T]> = data.chunks_mut(chunk_len).collect();
+    // SAFETY-free approach: wrap in Mutex-free claim-by-index using raw parts
+    // is unnecessary — std::thread::scope + a Vec of Mutex<Option<&mut [T]>>
+    // would serialize. Instead hand each worker an interleaved set.
+    let chunks: Vec<std::sync::Mutex<Option<&mut [T]>>> =
+        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= chunks.len() {
+                    break;
+                }
+                let chunk = chunks[i].lock().unwrap().take();
+                if let Some(chunk) = chunk {
+                    f(i, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over indices `0..n` collecting results in order.
+pub fn par_map<T: Send, F>(n: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+    T: Default + Clone,
+{
+    let mut out = vec![T::default(); n];
+    par_chunks_mut(&mut out, 1usize.max(n.div_ceil(num_threads() * 4)), |ci, chunk| {
+        let base = ci * 1usize.max(n.div_ceil(num_threads() * 4));
+        for (j, slot) in chunk.iter_mut().enumerate() {
+            *slot = f(base + j);
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything() {
+        let mut v = vec![0u64; 10_007];
+        par_chunks_mut(&mut v, 128, |ci, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = (ci * 128 + j) as u64 + 1;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn empty_ok() {
+        let mut v: Vec<u8> = vec![];
+        par_chunks_mut(&mut v, 8, |_, _| panic!("should not be called"));
+    }
+
+    #[test]
+    fn par_map_order() {
+        let out = par_map(1000, |i| i * 3);
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x, i * 3);
+        }
+    }
+}

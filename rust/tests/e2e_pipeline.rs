@@ -1,0 +1,104 @@
+//! End-to-end pipeline tests over the build artifacts (gated: they skip
+//! with a notice when `make artifacts` has not run).
+
+use centaur::coordinator::{Coordinator, ServerConfig};
+use centaur::data::{artifacts_dir, AttackCorpora, LmData, TaskData, Vocab};
+use centaur::model::{ModelWeights, Variant};
+use centaur::report::metrics;
+
+fn ready() -> bool {
+    let ok = std::path::Path::new("artifacts/data/vocab.json").exists()
+        && std::path::Path::new("artifacts/weights/bert-tiny-qnli/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping e2e test: run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn trained_checkpoint_beats_chance_via_rust_forward() {
+    if !ready() {
+        return;
+    }
+    let dir = artifacts_dir();
+    for task in ["qnli", "mrpc", "cola"] {
+        let td = TaskData::load(&dir, task).unwrap();
+        let (cfg, w) = ModelWeights::load_tag(&dir, &format!("bert-tiny-{task}")).unwrap();
+        let preds = metrics::predict(&cfg, &w, &td.test, Variant::Exact);
+        let acc = metrics::accuracy(&preds, &td.test.labels);
+        assert!(acc > 62.0, "{task}: rust-forward accuracy {acc:.1}% too close to chance");
+    }
+}
+
+#[test]
+fn trained_lm_perplexity_reasonable() {
+    if !ready() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let lm = LmData::load(&dir, "wikitext2").unwrap();
+    let (cfg, w) = ModelWeights::load_tag(&dir, "gpt2-tiny-wikitext2").unwrap();
+    let test: Vec<Vec<u32>> = lm.test.iter().take(40).cloned().collect();
+    let ppl = metrics::perplexity(&cfg, &w, &test, Variant::Exact);
+    // untrained would be near vocab size (≈460); trained should be far lower
+    assert!(ppl < 60.0, "perplexity {ppl:.1} suggests the checkpoint didn't load correctly");
+}
+
+#[test]
+fn served_accuracy_matches_offline_forward() {
+    if !ready() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let td = TaskData::load(&dir, "qnli").unwrap();
+    let (cfg, w) = ModelWeights::load_tag(&dir, "bert-tiny-qnli").unwrap();
+    let n = 10usize;
+    // offline plaintext predictions
+    let sub = centaur::data::Split {
+        ids: td.test.ids.iter().take(n).cloned().collect(),
+        labels: td.test.labels.iter().take(n).copied().collect(),
+    };
+    let offline = metrics::predict(&cfg, &w, &sub, Variant::Exact);
+    // served through the coordinator (full Centaur protocol)
+    let sc = ServerConfig::new(cfg.clone(), w);
+    let coord = Coordinator::start(sc).unwrap();
+    let rxs: Vec<_> = sub.ids.iter().map(|ids| coord.submit(ids.clone())).collect();
+    for (rx, off) in rxs.into_iter().zip(&offline) {
+        let resp = rx.recv().unwrap().unwrap();
+        let am = |v: &[f32]| {
+            v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap()
+        };
+        assert_eq!(am(&resp.logits), am(off), "served argmax differs from plaintext");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn attack_corpora_and_vocab_consistent() {
+    if !ready() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let vocab = Vocab::load(&dir).unwrap();
+    let corp = AttackCorpora::load(&dir).unwrap();
+    assert!(corp.private.len() >= 50);
+    assert!(corp.aux.len() >= 500);
+    for s in corp.private.iter().take(10) {
+        assert_eq!(s.len(), corp.seq_len);
+        assert!(s.iter().all(|&t| (t as usize) < vocab.len()));
+        let text = vocab.decode(s);
+        assert!(text.split(' ').count() >= 5, "private sentence too short: {text}");
+    }
+}
+
+#[test]
+fn variant_checkpoints_differ_from_exact() {
+    if !ready() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let (_c1, w_exact) = ModelWeights::load_tag(&dir, "bert-tiny-qnli").unwrap();
+    let (_c2, w_mpcf) = ModelWeights::load_tag(&dir, "bert-tiny-qnli-mpcformer").unwrap();
+    // fine-tuning moved the weights
+    assert!(w_exact.emb_word.max_abs_diff(&w_mpcf.emb_word) > 1e-5);
+}

@@ -1,0 +1,161 @@
+//! Cross-module integration tests: Centaur engine vs plaintext oracle,
+//! framework cost relationships, and the XLA/PJRT backend (artifact-gated).
+
+use centaur::baselines::{smpc::SmpcEngine, FrameworkKind, PptiFramework};
+use centaur::engine::{CentaurEngine, EngineOptions};
+use centaur::model::{forward, ModelConfig, ModelWeights, Variant};
+use centaur::net::{NetworkProfile, OpClass};
+use centaur::runtime::{Backend, NativeBackend, XlaBackend};
+use centaur::tensor::FloatTensor;
+use centaur::util::rng::Rng;
+
+fn tokens_for(cfg: &ModelConfig, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..cfg.n_ctx).map(|_| (rng.below(cfg.vocab - 4) + 4) as u32).collect()
+}
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn centaur_equals_plaintext_bert_and_gpt() {
+    for (cfg, seed) in [(ModelConfig::bert_tiny(), 1u64), (ModelConfig::gpt2_tiny(), 2u64)] {
+        let w = ModelWeights::random(&cfg, seed);
+        let toks = tokens_for(&cfg, seed + 10);
+        let mut eng = CentaurEngine::new(&cfg, &w, NetworkProfile::lan(), seed).unwrap();
+        let got = eng.infer(&toks).unwrap().logits;
+        let want = forward(&cfg, &w, &toks, Variant::Exact);
+        // compare the decision-relevant rows
+        let r = got.rows() - 1;
+        for c in 0..got.cols().min(16) {
+            assert!(
+                (got.get(r, c) - want.get(r, c)).abs() < 0.08,
+                "{}: logit[{r},{c}] {} vs {}",
+                cfg.name,
+                got.get(r, c),
+                want.get(r, c)
+            );
+        }
+        assert!(eng.leaks().is_empty(), "{}: leaks {:?}", cfg.name, eng.leaks());
+    }
+}
+
+#[test]
+fn permutations_change_shares_not_results() {
+    // Two engines with different permutation seeds produce the same logits.
+    let cfg = ModelConfig::bert_tiny();
+    let w = ModelWeights::random(&cfg, 3);
+    let toks = tokens_for(&cfg, 4);
+    let mut e1 = CentaurEngine::new(&cfg, &w, NetworkProfile::lan(), 100).unwrap();
+    let mut e2 = CentaurEngine::new(&cfg, &w, NetworkProfile::lan(), 200).unwrap();
+    let a = e1.infer(&toks).unwrap().logits;
+    let b = e2.infer(&toks).unwrap().logits;
+    assert!(a.max_abs_diff(&b) < 0.05, "diff {}", a.max_abs_diff(&b));
+}
+
+#[test]
+fn linear_layer_communication_halved_vs_baselines() {
+    // Paper §7.3.1: Centaur's linear-layer traffic is about half the
+    // baselines' (Π_ScalMul is free; only attention products remain).
+    let cfg = ModelConfig::bert_tiny();
+    let w = ModelWeights::random(&cfg, 5);
+    let toks = tokens_for(&cfg, 6);
+    let mut cent = CentaurEngine::new(&cfg, &w, NetworkProfile::lan(), 7).unwrap();
+    let c = cent.infer(&toks).unwrap().stats;
+    let mut puma = SmpcEngine::new(FrameworkKind::Puma, &cfg, &w, NetworkProfile::lan(), 7).unwrap();
+    let p = puma.infer(&toks).unwrap().stats;
+    let c_lin = c.class(OpClass::Linear).bytes as f64;
+    let p_lin = p.class(OpClass::Linear).bytes as f64;
+    assert!(
+        p_lin / c_lin > 1.3,
+        "linear traffic: puma {} vs centaur {} (ratio {:.2})",
+        p_lin,
+        c_lin,
+        p_lin / c_lin
+    );
+}
+
+#[test]
+fn nonlinear_speedup_vs_puma_is_order_of_magnitude() {
+    let cfg = ModelConfig::bert_tiny();
+    let w = ModelWeights::random(&cfg, 8);
+    let toks = tokens_for(&cfg, 9);
+    let mut cent = CentaurEngine::new(&cfg, &w, NetworkProfile::lan(), 10).unwrap();
+    let c = cent.infer(&toks).unwrap().stats;
+    let mut puma = SmpcEngine::new(FrameworkKind::Puma, &cfg, &w, NetworkProfile::lan(), 10).unwrap();
+    let p = puma.infer(&toks).unwrap().stats;
+    let nl = |l: &centaur::net::CostLedger| {
+        (l.class(OpClass::Softmax).bytes + l.class(OpClass::Gelu).bytes + l.class(OpClass::LayerNorm).bytes) as f64
+    };
+    let ratio = nl(&p) / nl(&c);
+    assert!(ratio > 5.0, "non-linear comm ratio only {ratio:.1}");
+}
+
+#[test]
+fn xla_backend_matches_native_ops() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let cfg = ModelConfig::bert_tiny();
+    let mut xla = XlaBackend::new("artifacts", &cfg.name).expect("xla backend");
+    let mut native = NativeBackend::new();
+    // softmax at the artifact shape (h·n, n)
+    let x = FloatTensor::from_fn(cfg.h * cfg.n_ctx, cfg.n_ctx, |r, c| ((r * 7 + c) % 19) as f32 * 0.3 - 2.0);
+    let a = xla.softmax(&x).unwrap();
+    let b = native.softmax(&x).unwrap();
+    assert!(a.max_abs_diff(&b) < 1e-4, "softmax diff {}", a.max_abs_diff(&b));
+    // gelu at (n, k)
+    let g = FloatTensor::from_fn(cfg.n_ctx, cfg.k, |r, c| ((r + c) % 13) as f32 * 0.4 - 2.5);
+    let a = xla.gelu(&g).unwrap();
+    let b = native.gelu(&g).unwrap();
+    assert!(a.max_abs_diff(&b) < 1e-4, "gelu diff {}", a.max_abs_diff(&b));
+    // layernorm at (n, d)
+    let l = FloatTensor::from_fn(cfg.n_ctx, cfg.d, |r, c| ((r * 3 + c) % 11) as f32 * 0.5 - 2.0);
+    let gamma: Vec<f32> = (0..cfg.d).map(|i| 1.0 + i as f32 * 0.01).collect();
+    let beta: Vec<f32> = (0..cfg.d).map(|i| i as f32 * -0.01).collect();
+    let a = xla.layernorm(&l, &gamma, &beta).unwrap();
+    let b = native.layernorm(&l, &gamma, &beta).unwrap();
+    assert!(a.max_abs_diff(&b) < 1e-3, "ln diff {}", a.max_abs_diff(&b));
+    assert_eq!(xla.fallbacks(), 0, "all ops must come from artifacts");
+    assert!(xla.compiled_count() >= 3);
+}
+
+#[test]
+fn xla_ring_matmul_matches_native() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut xla = XlaBackend::new("artifacts", "bert-tiny").expect("xla backend");
+    let mut rng = Rng::new(55);
+    let a = centaur::tensor::RingTensor::from_vec(32, 64, rng.vec_i64(32 * 64));
+    let b = centaur::tensor::RingTensor::from_vec(64, 64, rng.vec_i64(64 * 64));
+    let got = xla.ring_matmul(&a, &b).unwrap().expect("artifact for 32x64x64");
+    let want = centaur::ring::matmul(&a, &b);
+    assert_eq!(got, want, "wrapping s64 matmul via PJRT must be exact");
+}
+
+#[test]
+fn centaur_engine_runs_on_xla_backend() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let cfg = ModelConfig::bert_tiny();
+    let w = ModelWeights::random(&cfg, 12);
+    let toks = tokens_for(&cfg, 13);
+    let want = forward(&cfg, &w, &toks, Variant::Exact);
+    let backend = Box::new(XlaBackend::new("artifacts", &cfg.name).unwrap());
+    let mut eng = CentaurEngine::with_backend(
+        &cfg,
+        &w,
+        backend,
+        EngineOptions { profile: NetworkProfile::lan(), seed: 14, record_views: false, fast_sim: false },
+    )
+    .unwrap();
+    let got = eng.infer(&toks).unwrap().logits;
+    assert!(got.max_abs_diff(&want) < 0.08, "xla-backend engine diff {}", got.max_abs_diff(&want));
+    assert_eq!(eng.backend_fallbacks(), 0, "engine must hit AOT artifacts only");
+}

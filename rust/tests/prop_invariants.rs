@@ -1,0 +1,163 @@
+//! Property-based invariants across module boundaries (the crate's
+//! substitute for proptest; see rust/src/util/prop.rs).
+
+use centaur::engine::views::Views;
+use centaur::fixed;
+use centaur::mpc::{nonlin as smpc, Mpc};
+use centaur::net::{NetSim, NetworkProfile, OpClass};
+use centaur::perm::Perm;
+use centaur::protocols::{nonlin, ppp};
+use centaur::ring;
+use centaur::runtime::NativeBackend;
+use centaur::tensor::{FloatTensor, RingTensor};
+use centaur::util::prop::check;
+
+fn mk() -> Mpc {
+    Mpc::new(NetSim::new(NetworkProfile::lan()), 0xBEEF)
+}
+
+#[test]
+fn prop_share_algebra_is_ring_homomorphic() {
+    check("share homomorphism", 60, |g| {
+        let mut mpc = mk();
+        let n = g.dim(24);
+        let x = RingTensor::from_vec(1, n, g.vec_i64(n));
+        let y = RingTensor::from_vec(1, n, g.vec_i64(n));
+        let sx = mpc.share_local(&x);
+        let sy = mpc.share_local(&y);
+        assert_eq!(mpc.add(&sx, &sy).reconstruct(), ring::add(&x, &y));
+        assert_eq!(mpc.sub(&sx, &sy).reconstruct(), ring::sub(&x, &y));
+        let p = RingTensor::from_vec(1, n, g.vec_i64(n));
+        assert_eq!(mpc.add_plain(&sx, &p).reconstruct(), ring::add(&x, &p));
+    });
+}
+
+#[test]
+fn prop_beaver_matmul_correct_for_any_shape() {
+    check("beaver matmul", 15, |g| {
+        let mut mpc = mk();
+        let (m, k, n) = (g.dim(6), g.dim(8), g.dim(6));
+        let a = FloatTensor::from_vec(m, k, g.vec_small_f64(m * k).iter().map(|&v| v as f32 * 0.1).collect());
+        let b = FloatTensor::from_vec(k, n, g.vec_small_f64(k * n).iter().map(|&v| v as f32 * 0.1).collect());
+        let sa = mpc.share_local(&fixed::encode_tensor(&a));
+        let sb = mpc.share_local(&fixed::encode_tensor(&b));
+        let got = fixed::decode_tensor(&mpc.matmul(&sa, &sb, OpClass::Linear).reconstruct());
+        let want = a.matmul(&b);
+        assert!(got.max_abs_diff(&want) < 0.02, "diff {}", got.max_abs_diff(&want));
+    });
+}
+
+#[test]
+fn prop_ppsm_equivariance_under_any_permutation() {
+    // Softmax(Xπ) == Softmax(X)π for every random π — the identity that
+    // makes Π_PPSM sound.
+    check("ppsm equivariance", 12, |g| {
+        let mut mpc = mk();
+        let mut be = NativeBackend::new();
+        let mut views = Views::new(false);
+        let n = 2 + g.below(14);
+        let rows = 1 + g.below(4);
+        let x = FloatTensor::from_vec(rows, n, g.vec_small_f64(rows * n).iter().map(|&v| v as f32 * 0.4).collect());
+        let p = Perm::random(n, g.rng());
+        let sh = mpc.share_local(&fixed::encode_tensor(&p.apply_cols(&x)));
+        let out = nonlin::pp_softmax(&mut mpc, &mut be, &mut views, &sh, "prop").unwrap();
+        let got = fixed::decode_tensor(&out.reconstruct());
+        let mut want = x.clone();
+        for r in 0..rows {
+            centaur::runtime::native::softmax_row(want.row_mut(r));
+        }
+        assert!(got.max_abs_diff(&p.apply_cols(&want)) < 2e-3);
+    });
+}
+
+#[test]
+fn prop_ppp_composes_with_inverse() {
+    check("ppp inverse composition", 10, |g| {
+        let mut mpc = mk();
+        let n = 2 + g.below(10);
+        let p = Perm::random(n, g.rng());
+        let x = RingTensor::from_vec(3, n, (0..3 * n).map(|i| fixed::encode(i as f64 * 0.01)).collect());
+        let sx = mpc.share_local(&x);
+        let pi = ppp::share_perm(&mut mpc, &p, OpClass::Linear);
+        let pinv = ppp::share_perm(&mut mpc, &p.inverse(), OpClass::Linear);
+        let fwd = ppp::ppp_cols(&mut mpc, &sx, &pi, OpClass::Linear);
+        let back = ppp::ppp_cols(&mut mpc, &fwd, &pinv, OpClass::Linear);
+        let got = fixed::decode_tensor(&back.reconstruct());
+        let want = fixed::decode_tensor(&x);
+        assert!(got.max_abs_diff(&want) < 0.01);
+    });
+}
+
+#[test]
+fn prop_smpc_exp_monotone_and_bounded() {
+    check("smpc exp sane", 20, |g| {
+        let mut mpc = mk();
+        let a = g.f64_in(-8.0, 0.0);
+        let b = g.f64_in(-8.0, 0.0);
+        let x = FloatTensor::from_vec(1, 2, vec![a.min(b) as f32, a.max(b) as f32]);
+        let sh = mpc.share_local(&fixed::encode_tensor(&x));
+        let e = fixed::decode_tensor(&smpc::exp(&mut mpc, &sh, OpClass::Softmax).reconstruct());
+        assert!(e.get(0, 0) <= e.get(0, 1) + 0.02, "exp monotonicity");
+        assert!(e.get(0, 1) <= 1.05, "exp(x<=0) <= 1");
+        assert!(e.get(0, 0) >= -0.02);
+    });
+}
+
+#[test]
+fn prop_trunc_error_bounded_through_scalmul_chain() {
+    // Chains of Π_ScalMul keep fixed-point error linear in depth.
+    check("scalmul chain error", 8, |g| {
+        let mut mpc = mk();
+        let n = 4 + g.below(8);
+        let x = FloatTensor::from_vec(1, n, g.vec_small_f64(n).iter().map(|&v| v as f32 * 0.1).collect());
+        let w = FloatTensor::from_vec(n, n, g.vec_small_f64(n * n).iter().map(|&v| v as f32 * 0.05).collect());
+        let w_fx = fixed::encode_tensor(&w);
+        let mut sh = mpc.share_local(&fixed::encode_tensor(&x));
+        let mut want = x.clone();
+        for _ in 0..4 {
+            sh = mpc.scalmul_nt(&sh, &w_fx, OpClass::Linear);
+            want = want.matmul_nt(&w);
+        }
+        let got = fixed::decode_tensor(&sh.reconstruct());
+        assert!(got.max_abs_diff(&want) < 0.01, "chain diff {}", got.max_abs_diff(&want));
+    });
+}
+
+#[test]
+fn prop_ledger_total_is_sum_of_classes() {
+    check("ledger consistency", 30, |g| {
+        let mut net = NetSim::new(NetworkProfile::wan2());
+        let mut expect_bytes = 0u64;
+        let mut expect_rounds = 0u64;
+        for _ in 0..g.below(20) {
+            let class = *g.rng().choose(&OpClass::ALL);
+            let bytes = g.below(10_000) as u64;
+            net.charge_bytes(class, bytes);
+            net.round(class, 1);
+            expect_bytes += bytes;
+            expect_rounds += 1;
+        }
+        assert_eq!(net.ledger.bytes_total(), expect_bytes);
+        assert_eq!(net.ledger.rounds_total(), expect_rounds);
+        let t: f64 = OpClass::ALL.iter().map(|&c| net.ledger.class_time(c, &net.profile)).sum();
+        assert!((t - net.ledger.total_time(&net.profile)).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_onehot_scalmul_is_lookup() {
+    check("onehot lookup", 15, |g| {
+        let mut mpc = mk();
+        let vocab = 8 + g.below(24);
+        let d = 4 + g.below(12);
+        let w = FloatTensor::from_vec(vocab, d, g.vec_small_f64(vocab * d).iter().map(|&v| v as f32 * 0.1).collect());
+        let tok = g.below(vocab) as u32;
+        let onehot = centaur::protocols::embedding::one_hot_fx(&[tok], vocab);
+        let sh = mpc.share_local(&onehot);
+        let out = mpc.scalmul_rhs(&sh, &fixed::encode_tensor(&w), OpClass::Embedding);
+        let got = fixed::decode_tensor(&out.reconstruct());
+        for c in 0..d {
+            assert!((got.get(0, c) - w.get(tok as usize, c)).abs() < 1e-3);
+        }
+    });
+}

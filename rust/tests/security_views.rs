@@ -1,0 +1,135 @@
+//! Security-model tests: the leak detector, failure injection, and the
+//! statistical properties of what each party observes (DESIGN.md §Security).
+
+use centaur::baselines::{permonly::PermOnlyEngine, PptiFramework};
+use centaur::engine::views::PermTag;
+use centaur::engine::{CentaurEngine, EngineOptions};
+use centaur::model::{forward_trace, ModelConfig, ModelWeights, PermSet, Variant};
+use centaur::net::NetworkProfile;
+use centaur::runtime::NativeBackend;
+use centaur::util::rng::Rng;
+
+fn toks(cfg: &ModelConfig, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..cfg.n_ctx).map(|_| (rng.below(cfg.vocab - 4) + 4) as u32).collect()
+}
+
+#[test]
+fn centaur_p1_sees_only_permuted_tensors() {
+    let cfg = ModelConfig::bert_tiny();
+    let w = ModelWeights::random(&cfg, 21);
+    let mut eng = CentaurEngine::with_backend(
+        &cfg,
+        &w,
+        Box::new(NativeBackend::new()),
+        EngineOptions { record_views: true, seed: 22, ..Default::default() },
+    )
+    .unwrap();
+    eng.infer(&toks(&cfg, 23)).unwrap();
+    assert!(eng.leaks().is_empty());
+    // every view carries a permutation tag
+    for v in &eng.views.p1 {
+        assert_ne!(v.tag, PermTag::None, "view {} untagged", v.label);
+    }
+    // expected observation count: embedding LN + per layer (softmax, 2 LN,
+    // gelu) + pooler tanh
+    assert_eq!(eng.views.p1.len(), 1 + 4 * cfg.layers + 1);
+}
+
+#[test]
+fn permuted_o1_differs_from_plaintext_o1_but_is_its_permutation() {
+    // Failure-injection-style consistency: the tensor P1 sees must be a
+    // column permutation of the true O1 — nothing more, nothing less.
+    let cfg = ModelConfig::bert_tiny();
+    let w = ModelWeights::random(&cfg, 31);
+    let t = toks(&cfg, 32);
+    let mut eng = CentaurEngine::with_backend(
+        &cfg,
+        &w,
+        Box::new(NativeBackend::new()),
+        EngineOptions { record_views: true, seed: 33, ..Default::default() },
+    )
+    .unwrap();
+    eng.infer(&t).unwrap();
+    let seen = eng.views.find("O1pi1 layer0").unwrap().tensor.clone().unwrap();
+    let truth = forward_trace(&cfg, &w, &t, Variant::Exact).layers[0].o1.clone();
+    // not equal as-is (the permutation is non-trivial with high prob.)
+    assert!(seen.max_abs_diff(&truth) > 0.01);
+    // but equal after undoing π₁ on columns
+    let unperm = eng.perms().pi1.inverse().apply_cols(&seen);
+    assert!(
+        unperm.max_abs_diff(&truth) < 0.05,
+        "P1's O1 view must be exactly O1·π₁ (diff {})",
+        unperm.max_abs_diff(&truth)
+    );
+}
+
+#[test]
+fn identity_permutation_injection_is_detected_as_leak_risk() {
+    // Ablation / failure injection: with identity permutations the "permuted"
+    // views equal the plaintext intermediates — the situation the paper's
+    // §3 warns about. We detect it by direct comparison.
+    let cfg = ModelConfig::bert_tiny();
+    let w = ModelWeights::random(&cfg, 41);
+    let t = toks(&cfg, 42);
+    let mut eng = CentaurEngine::with_perms(
+        &cfg,
+        &w,
+        Box::new(NativeBackend::new()),
+        EngineOptions { record_views: true, seed: 43, ..Default::default() },
+        PermSet::identity(&cfg),
+    )
+    .unwrap();
+    eng.infer(&t).unwrap();
+    let seen = eng.views.find("O1pi1 layer0").unwrap().tensor.clone().unwrap();
+    let truth = forward_trace(&cfg, &w, &t, Variant::Exact).layers[0].o1.clone();
+    assert!(
+        seen.max_abs_diff(&truth) < 0.05,
+        "identity perms must reproduce the plaintext (diff {}) — injection works",
+        seen.max_abs_diff(&truth)
+    );
+}
+
+#[test]
+fn permonly_leak_detector_fires() {
+    let cfg = ModelConfig::gpt2_tiny();
+    let w = ModelWeights::random(&cfg, 51);
+    let mut eng = PermOnlyEngine::new(&cfg, &w, NetworkProfile::lan(), true);
+    eng.infer(&toks(&cfg, 52)).unwrap();
+    let leaks = eng.views.leaks();
+    assert_eq!(leaks.len(), 4 * cfg.layers);
+    assert!(leaks.iter().any(|l| l.contains("O1")));
+}
+
+#[test]
+fn shares_sent_to_servers_look_uniform() {
+    // χ²-lite: the low 8 bits of P1's input share of a *constant* tensor
+    // should be close to uniform — the masking property of sharing.
+    let cfg = ModelConfig::bert_tiny();
+    let mut mpc = centaur::mpc::Mpc::new(
+        centaur::net::NetSim::new(NetworkProfile::lan()),
+        61,
+    );
+    let x = centaur::tensor::RingTensor::from_vec(64, 64, vec![centaur::fixed::encode(1.0); 64 * 64]);
+    let sh = mpc.share_local(&x);
+    let mut counts = [0usize; 256];
+    for &v in sh.s0.data() {
+        counts[(v as u8) as usize] += 1;
+    }
+    let expected = (64.0 * 64.0) / 256.0;
+    let chi2: f64 = counts.iter().map(|&c| {
+        let d = c as f64 - expected;
+        d * d / expected
+    }).sum();
+    // df=255; mean 255, sd ~22.6 — allow generous slack
+    assert!(chi2 < 400.0, "share bytes not uniform enough: chi2={chi2}");
+    let _ = cfg;
+}
+
+#[test]
+fn permutation_security_bits_scale() {
+    // §2.3: d=1280 → ~2^11372 permutations; even tiny d=64 gives ~2^296.
+    assert!(centaur::perm::Perm::security_bits(64) > 250.0);
+    assert!(centaur::perm::Perm::security_bits(768) > 6000.0);
+    assert!(centaur::perm::Perm::security_bits(1280) > 11000.0);
+}
