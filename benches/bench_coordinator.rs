@@ -1,11 +1,22 @@
 //! Serving-layer benchmark: coordinator throughput/latency across batch
-//! sizes (DESIGN ablation b: batching policy).
+//! sizes (DESIGN ablation b: batching policy) and the offline-phase
+//! amortization of a prefilled TriplePool (cold vs warm requests).
 
 use centaur::baselines::FrameworkKind;
-use centaur::coordinator::{Coordinator, ServerConfig};
+use centaur::coordinator::{Coordinator, MetricsSnapshot, ServerConfig};
 use centaur::model::{ModelConfig, ModelWeights};
 use centaur::util::bench::Bencher;
 use std::time::Duration;
+
+/// Serve `n_req` sequential requests; returns the final metrics snapshot
+/// (per-request latency lives in its p50/p95).
+fn serve_sequential(sc: ServerConfig, n_req: usize, n_ctx: usize) -> MetricsSnapshot {
+    let coord = Coordinator::start(sc).unwrap();
+    for i in 0..n_req {
+        coord.infer_blocking(vec![(4 + i % 100) as u32; n_ctx]).unwrap();
+    }
+    coord.shutdown()
+}
 
 fn main() {
     let mut b = Bencher::new();
@@ -30,4 +41,40 @@ fn main() {
         let snap = coord.shutdown();
         println!("    -> {}", snap.summary());
     }
+
+    // Offline-phase amortization: identical request streams through a cold
+    // dealer (triples generated on the request path) vs a coordinator that
+    // prefilled a shared TriplePool at start. Warm per-request latency must
+    // sit below cold — the offline cost moved to server start + background
+    // refill.
+    b.section(&format!("offline amortization: cold dealer vs prefilled pool, {n_req} requests"));
+    let mk_sc = |prefill: bool| {
+        let mut sc = ServerConfig::new(cfg.clone(), weights.clone());
+        sc.framework = FrameworkKind::Centaur;
+        sc.max_batch = 1;
+        sc.linger = Duration::from_millis(1);
+        sc.offline_prefill = prefill;
+        sc.pool_depth = 2;
+        sc
+    };
+    let cold = serve_sequential(mk_sc(false), n_req, cfg.n_ctx);
+    let warm = serve_sequential(mk_sc(true), n_req, cfg.n_ctx);
+    println!(
+        "cold  (per-request offline+online): p50={} p95={}",
+        centaur::util::human_secs(cold.p50.as_secs_f64()),
+        centaur::util::human_secs(cold.p95.as_secs_f64()),
+    );
+    println!(
+        "warm  (online only, pool hit-rate {:.1}%): p50={} p95={}",
+        warm.pool_hit_rate() * 100.0,
+        centaur::util::human_secs(warm.p50.as_secs_f64()),
+        centaur::util::human_secs(warm.p95.as_secs_f64()),
+    );
+    let speedup = cold.p50.as_secs_f64() / warm.p50.as_secs_f64().max(1e-12);
+    println!(
+        "    -> warm p50 is {:.2}x {} than cold p50",
+        if speedup >= 1.0 { speedup } else { 1.0 / speedup },
+        if speedup >= 1.0 { "faster" } else { "SLOWER" },
+    );
+    println!("    -> warm {}", warm.summary());
 }

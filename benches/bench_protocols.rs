@@ -1,9 +1,14 @@
 //! Protocol-level benchmarks (Table 1 companions): wall cost of each MPC
-//! primitive and each Π_PP* conversion at paper-relevant shapes.
+//! primitive and each Π_PP* conversion at paper-relevant shapes, plus the
+//! offline/online split of the Beaver path (EXPERIMENTS.md §Offline-phase
+//! reporting).
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use centaur::engine::views::Views;
 use centaur::fixed;
-use centaur::mpc::{nonlin as smpc_nonlin, Mpc};
+use centaur::mpc::{nonlin as smpc_nonlin, Mpc, TriplePool, TripleShape};
 use centaur::net::{NetSim, NetworkProfile, OpClass};
 use centaur::protocols::nonlin;
 use centaur::runtime::NativeBackend;
@@ -64,6 +69,46 @@ fn main() {
         let a = mpc.share_local(&big_fx);
         std::hint::black_box(nonlin::pp_gelu(&mut mpc, &mut be, &mut views, &a, "b").unwrap());
     });
+
+    b.section("offline/online split of Pi_MatMul 64x64 (Beaver)");
+    {
+        let y = FloatTensor::from_fn(64, 64, |r, c| ((r * 5 + c) % 13) as f32 * 0.2 - 1.1);
+        let y_fx = fixed::encode_tensor(&y);
+        // Bounded iterations so the online-only bench cannot outrun the
+        // prefilled stock (which would silently re-measure the cold path).
+        let mut bs = Bencher::with(Duration::from_millis(300), 48, 1);
+        bs.bench("offline only: matmul_triple 64x64x64", || {
+            let mut mpc = mk();
+            std::hint::black_box(mpc.dealer.matmul_triple(64, 64, 64));
+        });
+        let offline = bs.results().last().unwrap().median;
+        let pool = Arc::new(TriplePool::new(9, 64));
+        let _ = pool.take(TripleShape::matmul(64, 64, 64)); // register demand
+        pool.fill_to_target(); // stock 64 entries
+        bs.bench("online only: Pi_MatMul from prefilled pool", || {
+            let mut mpc = mk();
+            mpc.dealer.attach_pool(Arc::clone(&pool));
+            let sx = mpc.share_local(&y_fx);
+            let sy = mpc.share_local(&y_fx);
+            std::hint::black_box(mpc.matmul(&sx, &sy, OpClass::Linear));
+        });
+        let online = bs.results().last().unwrap().median;
+        bs.bench("offline+online: Pi_MatMul with cold dealer", || {
+            let mut mpc = mk();
+            let sx = mpc.share_local(&y_fx);
+            let sy = mpc.share_local(&y_fx);
+            std::hint::black_box(mpc.matmul(&sx, &sy, OpClass::Linear));
+        });
+        let cold = bs.results().last().unwrap().median;
+        println!(
+            "    -> split: offline {} + online {} vs cold {} (pool hits {}, misses {})",
+            centaur::util::human_secs(offline.as_secs_f64()),
+            centaur::util::human_secs(online.as_secs_f64()),
+            centaur::util::human_secs(cold.as_secs_f64()),
+            pool.hits(),
+            pool.misses(),
+        );
+    }
 
     b.section("SMPC baselines' non-linear ops (what PUMA pays)");
     b.bench("smpc softmax 128x128", || {

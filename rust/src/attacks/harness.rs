@@ -20,13 +20,18 @@ use super::{content_tokens, plaintext_intermediate, random_like, Condition, Targ
 /// Attack family.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum AttackKind {
+    /// Learning-based inversion (ridge regression).
     Sip,
+    /// Discrete-optimization inversion (greedy coordinate descent).
     Eia,
+    /// Continuous-space inversion (prototype matching).
     Bre,
 }
 
 impl AttackKind {
+    /// All attack families, in table order.
     pub const ALL: [AttackKind; 3] = [AttackKind::Sip, AttackKind::Eia, AttackKind::Bre];
+    /// Table label.
     pub fn name(self) -> &'static str {
         match self {
             AttackKind::Sip => "SIP",
@@ -38,18 +43,22 @@ impl AttackKind {
 
 /// Experiment configuration.
 pub struct AttackExperiment<'a> {
+    /// Model under attack.
     pub cfg: &'a ModelConfig,
+    /// Victim model parameters.
     pub weights: &'a ModelWeights,
     /// Auxiliary (attacker) corpus.
     pub aux: &'a [Vec<u32>],
     /// Private victim sentences.
     pub private: &'a [Vec<u32>],
+    /// Independent repetitions (mean ± std).
     pub seeds: u64,
     /// Victim sentences used per seed (per paper: 4×20 batches; reduced
     /// here — configurable from the CLI).
     pub sentences: usize,
     /// EIA uses fewer sentences (it is the expensive attack).
     pub eia_sentences: usize,
+    /// EIA search budget.
     pub eia: EiaConfig,
     /// Aux sentences used to train SIP/BRE.
     pub aux_train: usize,
@@ -60,7 +69,9 @@ pub struct AttackExperiment<'a> {
 /// One table cell: ROUGE-L F1 mean ± std over seeds.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Cell {
+    /// Mean ROUGE-L F1 over seeds.
     pub mean: f64,
+    /// Standard deviation over seeds.
     pub std: f64,
 }
 
@@ -79,7 +90,7 @@ fn permuted_observations(
         cfg,
         w,
         Box::new(NativeBackend::new()),
-        EngineOptions { profile: NetworkProfile::lan(), seed, record_views: true, fast_sim: true },
+        EngineOptions { profile: NetworkProfile::lan(), seed, record_views: true, fast_sim: true, triple_pool: None },
     )?;
     let mut out: BTreeMap<TargetOp, Vec<FloatTensor>> = BTreeMap::new();
     for sent in sentences {

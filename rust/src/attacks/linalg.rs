@@ -48,6 +48,7 @@ pub struct Ridge {
 }
 
 impl Ridge {
+    /// Solve the regularized normal equations (`None` if singular).
     pub fn fit(x: &FloatTensor, y: &FloatTensor, lambda: f64) -> Option<Ridge> {
         let (n, d) = x.shape();
         let (n2, k) = y.shape();

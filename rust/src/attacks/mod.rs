@@ -36,14 +36,20 @@ use crate::util::rng::Rng;
 /// Intermediate tensor under attack (paper's Table 2 columns).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum TargetOp {
+    /// `QKᵀ/√dh` attention scores, heads stacked `(h·n, n)`.
     O1,
+    /// Attention output after `W_O`: `(n, d)`.
     O4,
+    /// FFN up-projection (pre-GeLU): `(n, k)`.
     O5,
+    /// FFN down-projection: `(n, d)`.
     O6,
 }
 
 impl TargetOp {
+    /// All attack targets, in table order.
     pub const ALL: [TargetOp; 4] = [TargetOp::O1, TargetOp::O4, TargetOp::O5, TargetOp::O6];
+    /// Table label.
     pub fn name(self) -> &'static str {
         match self {
             TargetOp::O1 => "O1",
@@ -66,7 +72,9 @@ pub enum Condition {
 }
 
 impl Condition {
+    /// All observation conditions, in table order.
     pub const ALL: [Condition; 3] = [Condition::Plaintext, Condition::Permuted, Condition::Random];
+    /// Table label.
     pub fn name(self) -> &'static str {
         match self {
             Condition::Plaintext => "W/O",

@@ -19,6 +19,7 @@ use crate::Result;
 
 /// A PPTI framework under comparison.
 pub trait PptiFramework {
+    /// Framework display name.
     fn name(&self) -> &'static str;
     /// Run one private inference.
     fn infer(&mut self, tokens: &[u32]) -> Result<InferenceOutput>;
@@ -36,14 +37,20 @@ impl PptiFramework for crate::engine::CentaurEngine {
 /// Framework selector used by the CLI / reports.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FrameworkKind {
+    /// This paper's hybrid framework.
     Centaur,
+    /// PUMA (Dong et al. 2023): accurate all-SMPC.
     Puma,
+    /// MPCFormer (Li et al. 2023): Softmax→2Quad, GeLU→Quad.
     MpcFormer,
+    /// SecFormer (Luo et al. 2024): Softmax→2Quad only.
     SecFormer,
+    /// Permutation-only PPTI (Yuan et al. 2023).
     PermOnly,
 }
 
 impl FrameworkKind {
+    /// Look up a framework by CLI name.
     pub fn by_name(s: &str) -> Option<Self> {
         match s {
             "centaur" => Some(Self::Centaur),
@@ -54,6 +61,7 @@ impl FrameworkKind {
             _ => None,
         }
     }
+    /// Display name.
     pub fn name(self) -> &'static str {
         match self {
             Self::Centaur => "Centaur",
@@ -63,6 +71,7 @@ impl FrameworkKind {
             Self::PermOnly => "PermOnly",
         }
     }
+    /// Every framework, in comparison order.
     pub const ALL: [FrameworkKind; 5] =
         [Self::Centaur, Self::Puma, Self::MpcFormer, Self::SecFormer, Self::PermOnly];
     /// The SMPC baselines of Figs. 7/8 (excludes PermOnly).

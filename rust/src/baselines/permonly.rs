@@ -27,6 +27,7 @@ pub struct PermOnlyEngine {
 }
 
 impl PermOnlyEngine {
+    /// Build the engine (plaintext weights; permutation protection only).
     pub fn new(cfg: &ModelConfig, w: &ModelWeights, profile: NetworkProfile, record_views: bool) -> Self {
         PermOnlyEngine {
             cfg: cfg.clone(),

@@ -71,6 +71,7 @@ struct FxLayer {
 
 /// The all-SMPC engine.
 pub struct SmpcEngine {
+    /// Which SMPC baseline this engine emulates.
     pub kind: FrameworkKind,
     cfg: ModelConfig,
     softmax: SoftmaxKind,
@@ -98,6 +99,7 @@ fn enc_vec(v: &[f32]) -> Vec<i64> {
 }
 
 impl SmpcEngine {
+    /// Build the engine for `kind` (selects softmax/GeLU treatment).
     pub fn new(
         kind: FrameworkKind,
         cfg: &ModelConfig,

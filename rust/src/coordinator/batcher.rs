@@ -9,6 +9,7 @@ use std::time::{Duration, Instant};
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
+    /// Maximum requests per batch.
     pub max_batch: usize,
     /// How long to wait for more requests once one is pending.
     pub linger: Duration,
@@ -16,6 +17,7 @@ pub struct BatcherConfig {
 
 /// A formed batch.
 pub struct Batch<T> {
+    /// Requests in arrival order.
     pub items: Vec<T>,
     /// When the first item of the batch arrived.
     pub opened: Instant,
@@ -84,6 +86,72 @@ mod tests {
         assert_eq!(b.items, vec![1]);
         drop(in_tx);
         let _ = h.join();
+    }
+
+    #[test]
+    fn exact_max_batch_does_not_wait_for_linger() {
+        // With exactly max_batch items queued, the batch must close at the
+        // boundary immediately instead of sleeping out the linger window.
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::channel();
+        for i in 0..4 {
+            in_tx.send(i).unwrap();
+        }
+        let t0 = std::time::Instant::now();
+        let h = std::thread::spawn(move || {
+            run(in_rx, out_tx, BatcherConfig { max_batch: 4, linger: Duration::from_secs(30) })
+        });
+        let b = out_rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(b.items, vec![0, 1, 2, 3]);
+        assert!(t0.elapsed() < Duration::from_secs(5), "must not sleep out the linger");
+        drop(in_tx);
+        let _ = h.join();
+    }
+
+    #[test]
+    fn max_batch_one_never_groups() {
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::channel();
+        for i in 0..5 {
+            in_tx.send(i).unwrap();
+        }
+        drop(in_tx);
+        run(in_rx, out_tx, BatcherConfig { max_batch: 1, linger: Duration::from_millis(50) });
+        let sizes: Vec<usize> = out_rx.iter().map(|b: Batch<i32>| b.items.len()).collect();
+        assert_eq!(sizes, vec![1; 5]);
+    }
+
+    #[test]
+    fn zero_max_batch_is_clamped_to_one() {
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::channel();
+        in_tx.send(7).unwrap();
+        drop(in_tx);
+        run(in_rx, out_tx, BatcherConfig { max_batch: 0, linger: Duration::from_millis(1) });
+        let b: Batch<i32> = out_rx.recv().unwrap();
+        assert_eq!(b.items, vec![7]);
+    }
+
+    #[test]
+    fn disconnect_mid_batch_flushes_partial_and_exits() {
+        // Clients vanish while a batch is filling: the partial batch must
+        // still be dispatched and the loop must terminate.
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::channel();
+        let h = std::thread::spawn(move || {
+            run(in_rx, out_tx, BatcherConfig { max_batch: 100, linger: Duration::from_secs(30) })
+        });
+        for i in 0..3 {
+            in_tx.send(i).unwrap();
+        }
+        // Give the batcher a moment to pull the items into the open batch,
+        // then sever the channel mid-linger.
+        std::thread::sleep(Duration::from_millis(20));
+        drop(in_tx);
+        let b = out_rx.recv_timeout(Duration::from_secs(2)).expect("partial batch flushed");
+        assert_eq!(b.items, vec![0, 1, 2]);
+        assert!(out_rx.recv().is_err(), "batcher must exit after disconnect");
+        h.join().unwrap();
     }
 
     #[test]

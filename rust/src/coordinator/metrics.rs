@@ -7,13 +7,18 @@ pub struct Metrics {
     started: Instant,
     latencies: Vec<Duration>,
     service_times: Vec<Duration>,
+    /// Requests completed.
     pub completed: u64,
+    /// Batches dispatched.
     pub batches: u64,
+    /// Online communication across requests.
     pub bytes_total: u64,
+    /// Protocol rounds across requests.
     pub rounds_total: u64,
 }
 
 impl Metrics {
+    /// Empty metrics, clock started now.
     pub fn new() -> Self {
         Metrics {
             started: Instant::now(),
@@ -26,6 +31,7 @@ impl Metrics {
         }
     }
 
+    /// Record one completed request.
     pub fn record(&mut self, latency: Duration, service: Duration, bytes: u64, rounds: u64) {
         self.latencies.push(latency);
         self.service_times.push(service);
@@ -34,6 +40,7 @@ impl Metrics {
         self.rounds_total += rounds;
     }
 
+    /// Compute quantiles and totals so far.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut lats = self.latencies.clone();
         lats.sort_unstable();
@@ -48,6 +55,8 @@ impl Metrics {
         MetricsSnapshot {
             completed: self.completed,
             batches: self.batches,
+            pool_hits: 0,
+            pool_misses: 0,
             p50: q(0.50),
             p95: q(0.95),
             p99: q(0.99),
@@ -73,22 +82,54 @@ impl Default for Metrics {
 /// Point-in-time metrics view.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
+    /// Requests completed.
     pub completed: u64,
+    /// Batches dispatched to workers.
     pub batches: u64,
+    /// Offline-pool hits (triples served from pre-generated randomness).
+    pub pool_hits: u64,
+    /// Offline-pool misses (triples generated on the request path).
+    pub pool_misses: u64,
+    /// Median end-to-end request latency.
     pub p50: Duration,
+    /// 95th-percentile end-to-end request latency.
     pub p95: Duration,
+    /// 99th-percentile end-to-end request latency.
     pub p99: Duration,
+    /// Mean worker service time (excludes queueing).
     pub mean_service: Duration,
+    /// Completed requests per wall-clock second.
     pub throughput_rps: f64,
+    /// Online communication across all requests.
     pub bytes_total: u64,
+    /// Protocol rounds across all requests.
     pub rounds_total: u64,
+    /// Wall-clock time since the coordinator started.
     pub elapsed: Duration,
 }
 
 impl MetricsSnapshot {
+    /// Record offline-pool counters (called by the coordinator when a
+    /// [`crate::mpc::TriplePool`] is active).
+    pub fn set_pool(&mut self, hits: u64, misses: u64) {
+        self.pool_hits = hits;
+        self.pool_misses = misses;
+    }
+
+    /// Fraction of dealer triple requests served from the offline pool
+    /// (0.0 when no pool was active or nothing was requested).
+    pub fn pool_hit_rate(&self) -> f64 {
+        let total = self.pool_hits + self.pool_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.pool_hits as f64 / total as f64
+        }
+    }
+
     /// Human-readable summary block.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} batches={} p50={} p95={} p99={} mean_service={} \
              throughput={:.2} req/s comm={} rounds={} elapsed={}",
             self.completed,
@@ -101,7 +142,16 @@ impl MetricsSnapshot {
             crate::util::human_bytes(self.bytes_total),
             self.rounds_total,
             crate::util::human_secs(self.elapsed.as_secs_f64()),
-        )
+        );
+        if self.pool_hits + self.pool_misses > 0 {
+            s.push_str(&format!(
+                " pool_hits={} pool_misses={} pool_hit_rate={:.1}%",
+                self.pool_hits,
+                self.pool_misses,
+                self.pool_hit_rate() * 100.0
+            ));
+        }
+        s
     }
 }
 

@@ -18,6 +18,7 @@ mod metrics;
 pub use batcher::{Batch, BatcherConfig};
 pub use metrics::{Metrics, MetricsSnapshot};
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -26,6 +27,7 @@ use std::time::{Duration, Instant};
 use crate::baselines::{permonly::PermOnlyEngine, smpc::SmpcEngine, FrameworkKind, PptiFramework};
 use crate::engine::{CentaurEngine, EngineOptions};
 use crate::model::{ModelConfig, ModelWeights};
+use crate::mpc::TriplePool;
 use crate::net::NetworkProfile;
 use crate::runtime::{backend_by_name, NativeBackend};
 use crate::Result;
@@ -33,21 +35,40 @@ use crate::Result;
 /// Serving configuration.
 #[derive(Clone)]
 pub struct ServerConfig {
+    /// Model architecture served.
     pub cfg: ModelConfig,
+    /// Model weights served.
     pub weights: ModelWeights,
+    /// Which PPTI framework executes requests.
     pub framework: FrameworkKind,
     /// `"native"` or `"xla"` (Centaur only).
     pub backend: String,
+    /// Directory holding AOT artifacts / task data.
     pub artifacts_dir: String,
+    /// Simulated network conditions.
     pub profile: NetworkProfile,
+    /// Worker threads (one engine each).
     pub workers: usize,
+    /// Dynamic-batcher capacity bound.
     pub max_batch: usize,
+    /// Dynamic-batcher linger window.
     pub linger: Duration,
+    /// Charged-ideal share×share products (paper-scale efficiency runs).
     pub fast_sim: bool,
+    /// Base seed for the per-worker engines.
     pub seed: u64,
+    /// Run the dealer's offline phase at server start: a [`TriplePool`]
+    /// shared across workers is primed with the request's Beaver-triple
+    /// shape profile and kept topped up by a background thread, so warm
+    /// requests skip triple generation (Centaur framework only).
+    pub offline_prefill: bool,
+    /// Requests' worth of triples to keep pooled per shape.
+    pub pool_depth: usize,
 }
 
 impl ServerConfig {
+    /// Defaults: Centaur framework, native backend, 1 worker, batch ≤ 8,
+    /// no offline prefill.
     pub fn new(cfg: ModelConfig, weights: ModelWeights) -> Self {
         ServerConfig {
             cfg,
@@ -61,6 +82,8 @@ impl ServerConfig {
             linger: Duration::from_millis(2),
             fast_sim: false,
             seed: 11,
+            offline_prefill: false,
+            pool_depth: 2,
         }
     }
 }
@@ -70,13 +93,17 @@ impl ServerConfig {
 pub struct Response {
     /// Flattened logits with shape.
     pub logits: Vec<f32>,
+    /// Logit row count.
     pub rows: usize,
+    /// Logit column count.
     pub cols: usize,
     /// End-to-end latency (queue + protocol), wall clock.
     pub latency: Duration,
     /// Simulated-network portion of the protocol time.
     pub simulated_net: f64,
+    /// Online communication of this inference.
     pub bytes: u64,
+    /// Protocol rounds of this inference.
     pub rounds: u64,
 }
 
@@ -87,7 +114,7 @@ struct Request {
 }
 
 /// Build the framework engine inside a worker thread.
-fn build_engine(cfg: &ServerConfig) -> Result<Box<dyn PptiFramework>> {
+fn build_engine(cfg: &ServerConfig, pool: Option<Arc<TriplePool>>) -> Result<Box<dyn PptiFramework>> {
     match cfg.framework {
         FrameworkKind::Centaur => {
             let backend = if cfg.backend == "native" {
@@ -104,6 +131,7 @@ fn build_engine(cfg: &ServerConfig) -> Result<Box<dyn PptiFramework>> {
                     seed: cfg.seed,
                     record_views: false,
                     fast_sim: cfg.fast_sim,
+                    triple_pool: pool,
                 },
             )?;
             Ok(Box::new(eng))
@@ -121,13 +149,58 @@ pub struct Coordinator {
     metrics: Arc<Mutex<Metrics>>,
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    /// Shared offline-phase pool (Some when `offline_prefill` was set).
+    pool: Option<Arc<TriplePool>>,
+    refill: Option<JoinHandle<()>>,
+    refill_stop: Arc<AtomicBool>,
 }
 
 impl Coordinator {
     /// Start the batcher and worker threads.
+    ///
+    /// With [`ServerConfig::offline_prefill`] set (Centaur framework), the
+    /// offline phase runs first: one profiling inference teaches a shared
+    /// [`TriplePool`] the request's triple-shape demand, the pool is filled
+    /// to target synchronously, and a background thread keeps it topped up
+    /// while the server runs — so requests pay online cost only.
     pub fn start(config: ServerConfig) -> Result<Self> {
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let (submit_tx, submit_rx) = mpsc::channel::<Request>();
+
+        // Offline phase (optional): learn the shape profile, then prefill.
+        let pool = if config.offline_prefill && config.framework == FrameworkKind::Centaur {
+            let pool = Arc::new(TriplePool::new(config.seed ^ 0x0FF1, config.pool_depth));
+            let mut probe = build_engine(&config, Some(Arc::clone(&pool)))?;
+            let dummy = vec![4u32; config.cfg.n_ctx];
+            probe
+                .infer(&dummy)
+                .map_err(|e| anyhow::anyhow!("offline-prefill probe inference failed: {e}"))?;
+            pool.fill_to_target();
+            Some(pool)
+        } else {
+            None
+        };
+
+        // Background refill: regenerate consumed triples off the request
+        // path. Parked with a short sleep when the pool is at target. Holds
+        // only a Weak reference so the thread also exits when the
+        // coordinator (and its workers) are dropped without `shutdown()` —
+        // the stop flag covers the graceful path.
+        let refill_stop = Arc::new(AtomicBool::new(false));
+        let refill = pool.as_ref().map(|p| {
+            let weak = Arc::downgrade(p);
+            let stop = Arc::clone(&refill_stop);
+            std::thread::spawn(move || loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Some(p) = weak.upgrade() else { break };
+                if !p.refill_once() {
+                    drop(p);
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            })
+        });
 
         // Workers: one engine each, fed by a shared work queue guarded by a
         // mutex-wrapped receiver (simple m:n fan-out).
@@ -136,10 +209,11 @@ impl Coordinator {
         let mut workers = Vec::new();
         for wid in 0..config.workers.max(1) {
             let cfg = config.clone();
+            let worker_pool = pool.clone();
             let rx = Arc::clone(&work_rx);
             let m = Arc::clone(&metrics);
             workers.push(std::thread::spawn(move || {
-                let mut engine = match build_engine(&cfg) {
+                let mut engine = match build_engine(&cfg, worker_pool) {
                     Ok(e) => e,
                     Err(e) => {
                         eprintln!("worker {wid}: engine init failed: {e}");
@@ -184,7 +258,15 @@ impl Coordinator {
             batcher::run(submit_rx, work_tx, bconf);
         });
 
-        Ok(Coordinator { submit_tx, metrics, batcher: Some(batcher), workers })
+        Ok(Coordinator {
+            submit_tx,
+            metrics,
+            batcher: Some(batcher),
+            workers,
+            pool,
+            refill,
+            refill_stop,
+        })
     }
 
     /// Submit a request; returns a receiver for the response.
@@ -203,9 +285,19 @@ impl Coordinator {
             .map_err(|_| anyhow::anyhow!("coordinator shut down"))?
     }
 
-    /// Snapshot of metrics so far.
+    /// Snapshot of metrics so far (includes offline-pool hit/miss counters
+    /// when an offline prefill pool is active).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.lock().unwrap().snapshot()
+        let mut snap = self.metrics.lock().unwrap().snapshot();
+        if let Some(p) = &self.pool {
+            snap.set_pool(p.hits(), p.misses());
+        }
+        snap
+    }
+
+    /// The shared offline pool, when `offline_prefill` was configured.
+    pub fn triple_pool(&self) -> Option<&Arc<TriplePool>> {
+        self.pool.as_ref()
     }
 
     /// Graceful shutdown: stop accepting, drain workers, return metrics.
@@ -217,7 +309,14 @@ impl Coordinator {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        let snap = self.metrics.lock().unwrap().snapshot();
+        self.refill_stop.store(true, Ordering::Relaxed);
+        if let Some(r) = self.refill.take() {
+            let _ = r.join();
+        }
+        let mut snap = self.metrics.lock().unwrap().snapshot();
+        if let Some(p) = &self.pool {
+            snap.set_pool(p.hits(), p.misses());
+        }
         snap
     }
 }
@@ -265,6 +364,45 @@ mod tests {
         assert_eq!(snap.completed, 6);
         // 6 requests within one linger window → far fewer batches
         assert!(snap.batches <= 3, "batches={}", snap.batches);
+    }
+
+    #[test]
+    fn offline_prefill_pool_serves_warm_requests() {
+        let mut sc = tiny_config(FrameworkKind::Centaur);
+        sc.offline_prefill = true;
+        sc.pool_depth = 2;
+        let n_ctx = sc.cfg.n_ctx;
+        let coord = Coordinator::start(sc).unwrap();
+        let pool = Arc::clone(coord.triple_pool().expect("offline_prefill must create a pool"));
+        assert!(pool.pooled_total() > 0, "prefill must stock the pool");
+        assert!(pool.shapes_known() > 0);
+        for _ in 0..2 {
+            coord.infer_blocking(vec![5; n_ctx]).unwrap();
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, 2);
+        assert!(snap.pool_hits > 0, "warm requests must be served from the pool");
+        // The only misses should be the shape-learning probe at startup.
+        assert!(
+            snap.pool_hit_rate() > 0.5,
+            "hit rate {:.2} (hits={} misses={})",
+            snap.pool_hit_rate(),
+            snap.pool_hits,
+            snap.pool_misses
+        );
+        assert!(snap.summary().contains("pool_hit_rate"));
+    }
+
+    #[test]
+    fn no_pool_without_prefill_flag() {
+        let sc = tiny_config(FrameworkKind::Centaur);
+        let n_ctx = sc.cfg.n_ctx;
+        let coord = Coordinator::start(sc).unwrap();
+        assert!(coord.triple_pool().is_none());
+        coord.infer_blocking(vec![5; n_ctx]).unwrap();
+        let snap = coord.shutdown();
+        assert_eq!(snap.pool_hits + snap.pool_misses, 0);
+        assert!(!snap.summary().contains("pool_hit_rate"));
     }
 
     #[test]

@@ -10,17 +10,22 @@ use crate::Result;
 
 /// Special token ids (fixed by data_gen.py).
 pub const PAD: u32 = 0;
+/// `[CLS]` sentence-start marker.
 pub const CLS: u32 = 1;
+/// `[SEP]` sentence-end marker.
 pub const SEP: u32 = 2;
+/// `[UNK]` out-of-vocabulary token.
 pub const UNK: u32 = 3;
 
 /// The shared word-level vocabulary.
 #[derive(Clone, Debug)]
 pub struct Vocab {
+    /// Words by token id.
     pub words: Vec<String>,
 }
 
 impl Vocab {
+    /// Load `data/vocab.json` from the artifact directory.
     pub fn load(artifacts_dir: &str) -> Result<Self> {
         let path = Path::new(artifacts_dir).join("data").join("vocab.json");
         let text = std::fs::read_to_string(&path)
@@ -35,9 +40,11 @@ impl Vocab {
         Ok(Vocab { words })
     }
 
+    /// Vocabulary size.
     pub fn len(&self) -> usize {
         self.words.len()
     }
+    /// Whether the vocabulary is empty.
     pub fn is_empty(&self) -> bool {
         self.words.is_empty()
     }
@@ -71,25 +78,35 @@ impl Vocab {
 /// Task type (classification / regression).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TaskType {
+    /// Classification (argmax over logits).
     Cls,
+    /// Regression (scalar output).
     Reg,
 }
 
 /// One split of a GLUE-like task.
 #[derive(Clone, Debug, Default)]
 pub struct Split {
+    /// Token sequences.
     pub ids: Vec<Vec<u32>>,
+    /// Gold labels (class index or regression value).
     pub labels: Vec<f32>,
 }
 
 /// A GLUE-like synthetic task.
 #[derive(Clone, Debug)]
 pub struct TaskData {
+    /// Task name (`qnli`, `cola`, …).
     pub task: String,
+    /// Classification or regression.
     pub ttype: TaskType,
+    /// Number of classes (classification).
     pub n_classes: usize,
+    /// Fixed sequence length of the examples.
     pub seq_len: usize,
+    /// Training split.
     pub train: Split,
+    /// Test split.
     pub test: Split,
 }
 
@@ -112,6 +129,7 @@ fn parse_split(doc: &Json) -> Split {
 }
 
 impl TaskData {
+    /// Load `data/task_<task>.json` from the artifact directory.
     pub fn load(artifacts_dir: &str, task: &str) -> Result<Self> {
         let path = Path::new(artifacts_dir).join("data").join(format!("task_{task}.json"));
         let text = std::fs::read_to_string(&path)
@@ -127,19 +145,25 @@ impl TaskData {
         })
     }
 
+    /// Every synthetic GLUE-like task shipped by data_gen.py.
     pub const ALL_TASKS: [&'static str; 5] = ["qnli", "cola", "stsb", "mrpc", "rte"];
 }
 
 /// A Wikitext-like LM corpus.
 #[derive(Clone, Debug)]
 pub struct LmData {
+    /// Corpus name (`wikitext2`, `wikitext103`).
     pub name: String,
+    /// Fixed sequence length of the examples.
     pub seq_len: usize,
+    /// Training sequences.
     pub train: Vec<Vec<u32>>,
+    /// Held-out sequences.
     pub test: Vec<Vec<u32>>,
 }
 
 impl LmData {
+    /// Load `data/lm_<name>.json` from the artifact directory.
     pub fn load(artifacts_dir: &str, name: &str) -> Result<Self> {
         let path = Path::new(artifacts_dir).join("data").join(format!("lm_{name}.json"));
         let text = std::fs::read_to_string(&path)
@@ -161,21 +185,25 @@ impl LmData {
         })
     }
 
+    /// Every LM corpus shipped by data_gen.py.
     pub const ALL_CORPORA: [&'static str; 2] = ["wikitext2", "wikitext103"];
 }
 
 /// Attack corpora: in-distribution private targets + OOD auxiliary data.
 #[derive(Clone, Debug)]
 pub struct AttackCorpora {
+    /// Victim sentences the attacks try to reconstruct.
     pub private: Vec<Vec<u32>>,
     /// Out-of-distribution auxiliary corpus (news templates).
     pub aux: Vec<Vec<u32>>,
     /// In-distribution auxiliary corpus (same template family as private).
     pub aux_indist: Vec<Vec<u32>>,
+    /// Fixed sequence length of the sentences.
     pub seq_len: usize,
 }
 
 impl AttackCorpora {
+    /// Load `data/attack_corpora.json` from the artifact directory.
     pub fn load(artifacts_dir: &str) -> Result<Self> {
         let path = Path::new(artifacts_dir).join("data").join("attack_corpora.json");
         let text = std::fs::read_to_string(&path)

@@ -26,17 +26,29 @@ use views::Views;
 
 /// Engine construction options.
 pub struct EngineOptions {
+    /// Simulated network conditions for the cost model.
     pub profile: NetworkProfile,
+    /// Seed for permutations, share masks, and the dealer PRG.
     pub seed: u64,
     /// Keep P1's observed tensors (attack experiments).
     pub record_views: bool,
     /// Charged-ideal share×share products (paper-scale efficiency runs).
     pub fast_sim: bool,
+    /// Shared offline-phase pool: when set, the dealer pops pre-generated
+    /// Beaver triples instead of generating them on the request path
+    /// (serving amortization — see [`crate::mpc::TriplePool`]).
+    pub triple_pool: Option<std::sync::Arc<crate::mpc::TriplePool>>,
 }
 
 impl Default for EngineOptions {
     fn default() -> Self {
-        EngineOptions { profile: NetworkProfile::lan(), seed: 7, record_views: false, fast_sim: false }
+        EngineOptions {
+            profile: NetworkProfile::lan(),
+            seed: 7,
+            record_views: false,
+            fast_sim: false,
+            triple_pool: None,
+        }
     }
 }
 
@@ -50,10 +62,12 @@ pub struct InferenceOutput {
 
 /// The three-party Centaur engine.
 pub struct CentaurEngine {
+    /// Model shape being served.
     pub cfg: ModelConfig,
     pm: PermutedModel,
     mpc: Mpc,
     backend: Box<dyn Backend>,
+    /// P1's observation ledger (security bookkeeping).
     pub views: Views,
     pi1_sh: Share,
     pi1_t_sh: Share,
@@ -91,6 +105,9 @@ impl CentaurEngine {
     ) -> Result<Self> {
         let pm = PermutedModel::build(cfg, w, perms);
         let mut mpc = Mpc::new(NetSim::new(opts.profile), opts.seed ^ 0xEE);
+        if let Some(pool) = &opts.triple_pool {
+            mpc.dealer.attach_pool(std::sync::Arc::clone(pool));
+        }
         // Deal the shared π₁ matrices once (Algorithm 6 setup).
         let pi1_sh = ppp::share_perm(&mut mpc, &pm.perms.pi1, OpClass::Linear);
         let pi1_t_sh = ppp::share_perm_t(&mut mpc, &pm.perms.pi1, OpClass::Linear);
@@ -212,6 +229,7 @@ impl CentaurEngine {
         self.backend.fallbacks()
     }
 
+    /// Label of the active P1 backend.
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }

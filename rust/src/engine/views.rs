@@ -25,17 +25,22 @@ pub enum PermTag {
 /// One observation by P1.
 #[derive(Clone, Debug)]
 pub struct ViewRecord {
+    /// Where in the protocol the observation happened.
     pub label: String,
+    /// Permutation under which the tensor was observed.
     pub tag: PermTag,
     /// Tensor payload (kept only when `record_tensors` is on).
     pub tensor: Option<FloatTensor>,
+    /// Observed row count.
     pub rows: usize,
+    /// Observed column count.
     pub cols: usize,
 }
 
 /// The cloud party's accumulated view.
 #[derive(Debug, Default)]
 pub struct Views {
+    /// Everything P1 reconstructed, in order.
     pub p1: Vec<ViewRecord>,
     /// Keep tensor payloads (attack experiments); off by default to save
     /// memory during benches.
@@ -43,6 +48,7 @@ pub struct Views {
 }
 
 impl Views {
+    /// Fresh ledger; `record_tensors` keeps payloads.
     pub fn new(record_tensors: bool) -> Self {
         Views { p1: Vec::new(), record_tensors }
     }
@@ -68,6 +74,7 @@ impl Views {
         self.p1.iter().find(|r| r.label.contains(pat))
     }
 
+    /// Drop all records (new inference).
     pub fn clear(&mut self) {
         self.p1.clear();
     }

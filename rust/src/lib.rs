@@ -40,6 +40,8 @@
 //! println!("comm: {} bytes in {} rounds", out.stats.bytes_total(), out.stats.rounds_total());
 //! ```
 
+#![warn(missing_docs)]
+
 pub mod attacks;
 pub mod baselines;
 pub mod coordinator;

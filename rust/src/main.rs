@@ -4,6 +4,7 @@
 //! centaur report <table1|table2|table3|table4|fig3|fig4|fig7|fig8|fig10|all> [--fast]
 //! centaur infer  --weights bert-tiny-qnli --text "..." [--net lan]
 //! centaur serve  --weights bert-tiny-qnli --requests 32 --batch 8 [--framework centaur]
+//!                [--offline-prefill] [--pool-depth 2]
 //! centaur compare --model bert-tiny [--full]
 //! centaur artifacts-check
 //! ```
@@ -133,6 +134,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     sc.profile = profile_arg(args);
     sc.workers = args.opt_usize("workers", 1);
     sc.max_batch = args.opt_usize("batch", 8);
+    // Amortized offline phase: prefill a shared TriplePool at server start
+    // and keep it topped up in the background (Centaur framework only).
+    sc.offline_prefill = args.flag("offline-prefill");
+    sc.pool_depth = args.opt_usize("pool-depth", sc.pool_depth);
     let n_req = args.opt_usize("requests", 16);
 
     // requests from the matching task's test set when available
@@ -150,6 +155,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sc.profile.name
     );
     let coord = Coordinator::start(sc)?;
+    if let Some(pool) = coord.triple_pool() {
+        println!(
+            "offline phase done: {} triples pooled across {} shapes ({} correlated randomness)",
+            pool.pooled_total(),
+            pool.shapes_known(),
+            centaur::util::human_bytes(pool.offline_bytes())
+        );
+    }
     let rxs: Vec<_> = inputs.into_iter().map(|t| coord.submit(t)).collect();
     for rx in rxs {
         rx.recv().map_err(|_| anyhow::anyhow!("coordinator died"))??;

@@ -13,8 +13,11 @@ pub enum ModelKind {
 /// Static shape description of a model.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelConfig {
+    /// Canonical model tag (e.g. `bert-tiny`).
     pub name: String,
+    /// Encoder or decoder family.
     pub kind: ModelKind,
+    /// Vocabulary size.
     pub vocab: usize,
     /// Sequence length used for experiments/AOT shapes.
     pub n_ctx: usize,
@@ -22,6 +25,7 @@ pub struct ModelConfig {
     pub d: usize,
     /// Attention heads `h`.
     pub h: usize,
+    /// Transformer layer count `L`.
     pub layers: usize,
     /// FFN intermediate dimension `k` (4d in all configs).
     pub k: usize,
@@ -38,6 +42,7 @@ impl ModelConfig {
     pub fn bert_tiny() -> Self {
         Self::new("bert-tiny", ModelKind::Bert, 512, 32, 64, 2, 2, 256)
     }
+    /// Tiny trained decoder variant (synthetic LM tasks).
     pub fn gpt2_tiny() -> Self {
         Self::new("gpt2-tiny", ModelKind::Gpt2, 512, 32, 64, 2, 2, 256)
     }
@@ -45,16 +50,20 @@ impl ModelConfig {
     pub fn bert_base() -> Self {
         Self::new("bert-base", ModelKind::Bert, 30522, 128, 768, 12, 12, 3072)
     }
+    /// BERT-large shape.
     pub fn bert_large() -> Self {
         Self::new("bert-large", ModelKind::Bert, 30522, 128, 1024, 16, 24, 4096)
     }
+    /// GPT-2 base (117M-class) shape.
     pub fn gpt2_base() -> Self {
         Self::new("gpt2-base", ModelKind::Gpt2, 50257, 128, 768, 12, 12, 3072)
     }
+    /// GPT-2 large (774M-class) shape.
     pub fn gpt2_large() -> Self {
         Self::new("gpt2-large", ModelKind::Gpt2, 50257, 128, 1280, 20, 36, 5120)
     }
 
+    /// Look up a config by canonical tag.
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
             "bert-tiny" => Some(Self::bert_tiny()),
@@ -67,6 +76,7 @@ impl ModelConfig {
         }
     }
 
+    /// Every canonical model tag.
     pub const ALL_NAMES: [&'static str; 6] =
         ["bert-tiny", "gpt2-tiny", "bert-base", "bert-large", "gpt2-base", "gpt2-large"];
 

@@ -40,6 +40,7 @@ pub struct PermSet {
 }
 
 impl PermSet {
+    /// Draw all three permutations uniformly at random.
     pub fn random(cfg: &ModelConfig, rng: &mut Rng) -> Self {
         PermSet {
             pi: Perm::random(cfg.d, rng),
@@ -61,41 +62,70 @@ impl PermSet {
 /// One layer of Θ′ (fixed-point for Π_ScalMul; f32 affine for Π_PPLN at P1).
 #[derive(Clone)]
 pub struct PermLayer {
+    /// Query projection `(d,d)` = enc(Wq π).
     pub wq: RingTensor, // (d,d) = enc(Wq π)
+    /// Key projection (same layout as `wq`).
     pub wk: RingTensor,
+    /// Value projection (same layout as `wq`).
     pub wv: RingTensor,
+    /// Query bias enc(bq) — unpermuted stream (held by P0).
     pub bq: Vec<i64>, // enc(bq) — unpermuted stream (held by P0)
+    /// Key bias.
     pub bk: Vec<i64>,
+    /// Value bias.
     pub bv: Vec<i64>,
+    /// Output projection `(d,d)` = enc(πᵀ Wo).
     pub wo: RingTensor, // (d,d) = enc(πᵀ Wo)
+    /// Output bias enc(bo π).
     pub bo: Vec<i64>,   // enc(bo π)
+    /// First LayerNorm gain γ₁π (P1 plaintext).
     pub ln1_g: Vec<f32>, // γ₁π (P1 plaintext)
+    /// First LayerNorm bias β₁π.
     pub ln1_b: Vec<f32>,
+    /// FFN up-projection `(k,d)` = enc(π₂ᵀ W₁ π).
     pub w1: RingTensor, // (k,d) = enc(π₂ᵀ W₁ π)
+    /// FFN up bias enc(b₁ π₂).
     pub b1: Vec<i64>,   // enc(b₁ π₂)
+    /// FFN down-projection `(d,k)` = enc(πᵀ W₂ π₂).
     pub w2: RingTensor, // (d,k) = enc(πᵀ W₂ π₂)
+    /// FFN down bias enc(b₂ π).
     pub b2: Vec<i64>,   // enc(b₂ π)
+    /// Second LayerNorm gain γ₂π.
     pub ln2_g: Vec<f32>,
+    /// Second LayerNorm bias β₂π.
     pub ln2_b: Vec<f32>,
 }
 
 /// Θ′ — everything the compute servers hold.
 #[derive(Clone)]
 pub struct PermutedModel {
+    /// Model shape.
     pub cfg: ModelConfig,
+    /// The drawn permutations (developer-side secret).
     pub perms: PermSet,
+    /// Word embeddings `(vocab,d)` = enc(W_E π).
     pub emb_word: RingTensor, // (vocab,d) = enc(W_E π)
+    /// Position embeddings `(n,d)` = enc(P π), added by P0.
     pub emb_pos: RingTensor,  // (n,d) = enc(P π), added by P0
+    /// Embedding LayerNorm gain γπ.
     pub emb_ln_g: Vec<f32>,
+    /// Embedding LayerNorm bias βπ.
     pub emb_ln_b: Vec<f32>,
+    /// Per-layer permuted parameters.
     pub layers: Vec<PermLayer>,
     // BERT adaptation
+    /// BERT pooler weight enc(πᵀ W_P π).
     pub pooler_w: Option<RingTensor>, // enc(πᵀ W_P π)
+    /// BERT pooler bias enc(b_P π).
     pub pooler_b: Option<Vec<i64>>,   // enc(b_P π)
+    /// BERT classifier weight enc(W_C π).
     pub cls_w: Option<RingTensor>,    // enc(W_C π)
+    /// BERT classifier bias enc(b_C).
     pub cls_b: Option<Vec<i64>>,      // enc(b_C)
     // GPT-2 final LN (γπ, βπ)
+    /// GPT-2 final LayerNorm gain γπ.
     pub final_ln_g: Option<Vec<f32>>,
+    /// GPT-2 final LayerNorm bias βπ.
     pub final_ln_b: Option<Vec<f32>>,
 }
 
@@ -166,6 +196,7 @@ impl PermutedModel {
         (n as u64) * 8
     }
 
+    /// Whether this is an encoder (BERT) model.
     pub fn is_bert(&self) -> bool {
         self.cfg.kind == ModelKind::Bert
     }

@@ -24,6 +24,7 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// Parse a CLI variant name.
     pub fn by_name(s: &str) -> Option<Variant> {
         match s {
             "exact" => Some(Variant::Exact),
@@ -101,7 +102,9 @@ pub struct LayerTrace {
 
 /// Full forward trace.
 pub struct Trace {
+    /// Embedded input `(n, d)` (after embedding LayerNorm).
     pub embedded: FloatTensor,
+    /// Per-layer intermediates.
     pub layers: Vec<LayerTrace>,
     /// Final hidden states `(n, d)` (after GPT-2 final LN when applicable).
     pub hidden: FloatTensor,

@@ -15,39 +15,64 @@ use crate::Result;
 /// `python/compile/model.py::init_params`).
 #[derive(Clone, Debug)]
 pub struct LayerWeights {
+    /// Query projection `(d, d)`.
     pub wq: FloatTensor,
+    /// Query bias.
     pub bq: Vec<f32>,
+    /// Key projection `(d, d)`.
     pub wk: FloatTensor,
+    /// Key bias.
     pub bk: Vec<f32>,
+    /// Value projection `(d, d)`.
     pub wv: FloatTensor,
+    /// Value bias.
     pub bv: Vec<f32>,
+    /// Attention output projection `(d, d)`.
     pub wo: FloatTensor,
+    /// Output bias.
     pub bo: Vec<f32>,
+    /// First LayerNorm gain.
     pub ln1_g: Vec<f32>,
+    /// First LayerNorm bias.
     pub ln1_b: Vec<f32>,
+    /// FFN up-projection `(k, d)`.
     pub w1: FloatTensor,
+    /// FFN up bias.
     pub b1: Vec<f32>,
+    /// FFN down-projection `(d, k)`.
     pub w2: FloatTensor,
+    /// FFN down bias.
     pub b2: Vec<f32>,
+    /// Second LayerNorm gain.
     pub ln2_g: Vec<f32>,
+    /// Second LayerNorm bias.
     pub ln2_b: Vec<f32>,
 }
 
 /// Full parameter set of a model.
 #[derive(Clone, Debug)]
 pub struct ModelWeights {
+    /// Word embedding table `(vocab, d)`.
     pub emb_word: FloatTensor, // (vocab, d)
+    /// Position embedding table `(n_ctx, d)`.
     pub emb_pos: FloatTensor,  // (n_ctx, d)
+    /// Embedding LayerNorm gain.
     pub emb_ln_g: Vec<f32>,
+    /// Embedding LayerNorm bias.
     pub emb_ln_b: Vec<f32>,
+    /// Transformer layers.
     pub layers: Vec<LayerWeights>,
     /// BERT adaptation (None for GPT-2).
     pub pooler_w: Option<FloatTensor>,
+    /// BERT pooler bias.
     pub pooler_b: Option<Vec<f32>>,
+    /// BERT classifier weight `(n_classes, d)`.
     pub cls_w: Option<FloatTensor>,
+    /// BERT classifier bias.
     pub cls_b: Option<Vec<f32>>,
     /// GPT-2 final LayerNorm (None for BERT).
     pub final_ln_g: Option<Vec<f32>>,
+    /// GPT-2 final LayerNorm bias.
     pub final_ln_b: Option<Vec<f32>>,
 }
 

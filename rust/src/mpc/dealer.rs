@@ -1,11 +1,26 @@
-//! Trusted dealer for correlated randomness (Beaver triples).
+//! Trusted dealer for correlated randomness (Beaver triples), with an
+//! explicit offline/online split.
 //!
 //! CrypTen's TTP ("trusted first party") provider model: during an offline
 //! phase, a dealer generates multiplication triples and distributes shares.
 //! Like the paper (and CrypTen's cost reporting), dealer↔party traffic is
 //! **not** charged against the online communication ledger; it is tracked
 //! separately in [`Dealer::offline_bytes`] so the offline/online split can
-//! be reported (EXPERIMENTS.md notes it).
+//! be reported (EXPERIMENTS.md §Offline-phase reporting).
+//!
+//! Serving deployments amortize the offline phase across requests through a
+//! [`TriplePool`]: a shape-keyed store of pre-generated triples owned by the
+//! serving coordinator and shared (via [`Arc`]) across its worker engines.
+//! A dealer with an attached pool pops pre-generated triples in O(1) on the
+//! request path (a *pool hit*) and only falls back to on-demand generation —
+//! a plaintext [`ring::matmul`] per triple, the dominant offline cost —
+//! when the pool is dry (a *pool miss*). The pool learns its shape profile
+//! from misses, so one cold inference teaches it exactly what a request
+//! consumes; a background thread then keeps every shape topped up.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::ring;
 use crate::tensor::RingTensor;
@@ -15,20 +30,288 @@ use super::Share;
 
 /// A matrix Beaver triple `C = A·B` in shares.
 pub struct MatTriple {
+    /// Sharing of the random left factor `A`.
     pub a: Share,
+    /// Sharing of the random right factor `B`.
     pub b: Share,
+    /// Sharing of the product `C = A·B`.
     pub c: Share,
 }
 
 /// A square pair `C = A∘A` in shares (for the cheap square protocol).
 pub struct SquarePair {
+    /// Sharing of the random mask `A`.
     pub a: Share,
+    /// Sharing of the elementwise square `C = A∘A`.
     pub c: Share,
 }
 
-/// The dealer: a PRG plus offline-traffic accounting.
+/// Which correlated-randomness primitive a pooled entry feeds.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum TripleKind {
+    /// Matrix Beaver triple for `Π_MatMul`.
+    Matmul,
+    /// Elementwise Beaver triple for `Π_Mul`.
+    Elem,
+    /// Square pair for the cheap `Π_Square`.
+    Square,
+}
+
+/// Shape key for pooled correlated randomness: the op kind plus the
+/// `(m, k, n)` operand shape (`Elem`/`Square` use `(rows, cols, 0)`).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct TripleShape {
+    /// Primitive this entry feeds.
+    pub kind: TripleKind,
+    /// Rows of the left operand.
+    pub m: usize,
+    /// Inner dimension (columns for `Elem`/`Square`).
+    pub k: usize,
+    /// Columns of the right operand (0 for `Elem`/`Square`).
+    pub n: usize,
+}
+
+impl TripleShape {
+    /// Key for a `Π_MatMul` triple `X (m×k) @ Y (k×n)`.
+    pub fn matmul(m: usize, k: usize, n: usize) -> Self {
+        TripleShape { kind: TripleKind::Matmul, m, k, n }
+    }
+    /// Key for an elementwise triple of shape `rows×cols`.
+    pub fn elem(rows: usize, cols: usize) -> Self {
+        TripleShape { kind: TripleKind::Elem, m: rows, k: cols, n: 0 }
+    }
+    /// Key for a square pair of shape `rows×cols`.
+    pub fn square(rows: usize, cols: usize) -> Self {
+        TripleShape { kind: TripleKind::Square, m: rows, k: cols, n: 0 }
+    }
+
+    /// Bytes of correlated randomness the dealer distributes for one entry
+    /// of this shape (both parties' shares of every tensor).
+    pub fn offline_bytes(&self) -> u64 {
+        match self.kind {
+            TripleKind::Matmul => 8 * 2 * (self.m * self.k + self.k * self.n + self.m * self.n) as u64,
+            TripleKind::Elem => 8 * 2 * 3 * (self.m * self.k) as u64,
+            TripleKind::Square => 8 * 2 * 2 * (self.m * self.k) as u64,
+        }
+    }
+}
+
+/// One pooled entry (kind matches the [`TripleShape`] it is stored under).
+pub enum PoolItem {
+    /// A matrix or elementwise Beaver triple.
+    Mat(MatTriple),
+    /// A square pair.
+    Square(SquarePair),
+}
+
+// ---------------------------------------------------------------------
+// Generation (shared by the on-demand dealer path and the pool)
+// ---------------------------------------------------------------------
+
+fn rand_tensor(rng: &mut Rng, rows: usize, cols: usize) -> RingTensor {
+    RingTensor::from_vec(rows, cols, rng.vec_i64(rows * cols))
+}
+
+fn share_with(rng: &mut Rng, x: RingTensor) -> Share {
+    let s0 = RingTensor::from_vec(x.rows(), x.cols(), rng.vec_i64(x.len()));
+    let s1 = ring::sub(&x, &s0);
+    Share { s0, s1 }
+}
+
+fn generate_item(rng: &mut Rng, shape: TripleShape) -> PoolItem {
+    match shape.kind {
+        TripleKind::Matmul => {
+            let a = rand_tensor(rng, shape.m, shape.k);
+            let b = rand_tensor(rng, shape.k, shape.n);
+            let c = ring::matmul(&a, &b);
+            PoolItem::Mat(MatTriple {
+                a: share_with(rng, a),
+                b: share_with(rng, b),
+                c: share_with(rng, c),
+            })
+        }
+        TripleKind::Elem => {
+            let a = rand_tensor(rng, shape.m, shape.k);
+            let b = rand_tensor(rng, shape.m, shape.k);
+            let c = ring::mul_elem(&a, &b);
+            PoolItem::Mat(MatTriple {
+                a: share_with(rng, a),
+                b: share_with(rng, b),
+                c: share_with(rng, c),
+            })
+        }
+        TripleKind::Square => {
+            let a = rand_tensor(rng, shape.m, shape.k);
+            let c = ring::mul_elem(&a, &a);
+            PoolItem::Square(SquarePair { a: share_with(rng, a), c: share_with(rng, c) })
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// TriplePool
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct ShapeQueue {
+    q: VecDeque<PoolItem>,
+    /// Misses recorded *before this shape was ever stocked* — after one
+    /// cold inference this is exactly the per-request demand, which sizes
+    /// the refill target. Steady-state misses (pool drained under load) do
+    /// NOT grow it: they fall back to on-demand generation instead of
+    /// ratcheting the target toward the per-shape cap and ballooning
+    /// memory.
+    demand: u64,
+    /// Entries ever pushed for this shape (gates demand learning).
+    stocked: u64,
+}
+
+struct PoolInner {
+    shapes: HashMap<TripleShape, ShapeQueue>,
+    rng: Rng,
+    offline_bytes: u64,
+    generated: u64,
+}
+
+/// Shape-keyed store of pre-generated correlated randomness, shared across
+/// a coordinator's worker engines (offline-phase amortization).
+///
+/// Thread-safe: `take` is a short critical section (pop + counters), and
+/// refill generates triples *outside* the lock so workers are never blocked
+/// behind a plaintext matmul.
+pub struct TriplePool {
+    inner: Mutex<PoolInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Refill target per shape, in units of observed per-request demand.
+    depth: usize,
+    /// Hard cap on pooled entries per shape (memory guard).
+    max_per_shape: usize,
+}
+
+impl TriplePool {
+    /// Pool keeping `depth` requests' worth of triples per shape.
+    pub fn new(seed: u64, depth: usize) -> Self {
+        TriplePool {
+            inner: Mutex::new(PoolInner {
+                shapes: HashMap::new(),
+                rng: Rng::new(seed ^ 0xB34B3A), // domain-separate from per-engine dealers
+                offline_bytes: 0,
+                generated: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            depth: depth.max(1),
+            max_per_shape: 256,
+        }
+    }
+
+    fn target(&self, demand: u64) -> usize {
+        ((demand as usize) * self.depth).min(self.max_per_shape)
+    }
+
+    /// Pop a pre-generated entry for `shape`, recording a hit or a miss.
+    /// A miss before the shape was ever stocked also registers demand, so
+    /// one cold inference teaches refill the per-request profile; later
+    /// misses (pool drained under load) leave the target untouched.
+    pub fn take(&self, shape: TripleShape) -> Option<PoolItem> {
+        let mut inner = self.inner.lock().unwrap();
+        let sq = inner.shapes.entry(shape).or_default();
+        match sq.q.pop_front() {
+            Some(item) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(item)
+            }
+            None => {
+                if sq.stocked == 0 {
+                    sq.demand += 1;
+                }
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Generate one entry for the most depleted known shape (outside the
+    /// lock). Returns `false` when every shape is at target — the refill
+    /// thread sleeps on that.
+    pub fn refill_once(&self) -> bool {
+        let (shape, mut rng) = {
+            let mut inner = self.inner.lock().unwrap();
+            let pick = inner
+                .shapes
+                .iter()
+                .filter(|(_, sq)| sq.demand > 0 && sq.q.len() < self.target(sq.demand))
+                .min_by_key(|(_, sq)| sq.q.len())
+                .map(|(s, _)| *s);
+            let Some(shape) = pick else { return false };
+            let tag = inner.generated;
+            inner.generated += 1;
+            let rng = inner.rng.fork(0xF111 ^ tag);
+            (shape, rng)
+        };
+        let item = generate_item(&mut rng, shape);
+        let mut inner = self.inner.lock().unwrap();
+        inner.offline_bytes += shape.offline_bytes();
+        let sq = inner.shapes.entry(shape).or_default();
+        sq.stocked += 1;
+        sq.q.push_back(item);
+        true
+    }
+
+    /// Synchronously top up every known shape to target (server-start
+    /// prefill). Returns the number of entries generated.
+    pub fn fill_to_target(&self) -> u64 {
+        let mut n = 0;
+        while self.refill_once() {
+            n += 1;
+        }
+        n
+    }
+
+    /// Pool hits so far (requests served from pre-generated randomness).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Pool misses so far (on-demand generation on the request path).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of takes served from the pool (0 when nothing was taken).
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits() as f64;
+        let m = self.misses() as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+
+    /// Total entries currently pooled across all shapes.
+    pub fn pooled_total(&self) -> usize {
+        self.inner.lock().unwrap().shapes.values().map(|sq| sq.q.len()).sum()
+    }
+
+    /// Number of distinct shapes the pool has learned.
+    pub fn shapes_known(&self) -> usize {
+        self.inner.lock().unwrap().shapes.len()
+    }
+
+    /// Bytes of correlated randomness generated into the pool (offline
+    /// traffic, reported separately from the online ledger).
+    pub fn offline_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().offline_bytes
+    }
+}
+
+/// The dealer: a PRG plus offline-traffic accounting, optionally backed by
+/// a shared [`TriplePool`].
 pub struct Dealer {
     rng: Rng,
+    pool: Option<Arc<TriplePool>>,
     /// Bytes of correlated randomness distributed (offline phase).
     pub offline_bytes: u64,
     /// Number of triples served (diagnostics).
@@ -36,46 +319,76 @@ pub struct Dealer {
 }
 
 impl Dealer {
+    /// Dealer with no pool: every triple is generated on demand.
     pub fn new(rng: Rng) -> Self {
-        Dealer { rng, offline_bytes: 0, triples_served: 0 }
+        Dealer { rng, pool: None, offline_bytes: 0, triples_served: 0 }
+    }
+
+    /// Attach a shared pool; subsequent triple requests try it first.
+    pub fn attach_pool(&mut self, pool: Arc<TriplePool>) {
+        self.pool = Some(pool);
+    }
+
+    /// The attached pool, if any.
+    pub fn pool(&self) -> Option<&Arc<TriplePool>> {
+        self.pool.as_ref()
     }
 
     fn share_of(&mut self, x: RingTensor) -> Share {
-        let s0 = RingTensor::from_vec(x.rows(), x.cols(), self.rng.vec_i64(x.len()));
-        let s1 = ring::sub(&x, &s0);
-        Share { s0, s1 }
+        share_with(&mut self.rng, x)
     }
 
     fn rand_tensor(&mut self, rows: usize, cols: usize) -> RingTensor {
-        RingTensor::from_vec(rows, cols, self.rng.vec_i64(rows * cols))
+        rand_tensor(&mut self.rng, rows, cols)
     }
 
-    /// Serve a matrix triple for `X (m×k) @ Y (k×n)`.
+    fn account(&mut self, shape: TripleShape) {
+        self.offline_bytes += shape.offline_bytes();
+        self.triples_served += 1;
+    }
+
+    /// Serve a matrix triple for `X (m×k) @ Y (k×n)` — from the pool when
+    /// one is available, generated on demand otherwise.
     pub fn matmul_triple(&mut self, m: usize, k: usize, n: usize) -> MatTriple {
+        let shape = TripleShape::matmul(m, k, n);
+        self.account(shape);
+        if let Some(pool) = &self.pool {
+            if let Some(PoolItem::Mat(t)) = pool.take(shape) {
+                return t;
+            }
+        }
         let a = self.rand_tensor(m, k);
         let b = self.rand_tensor(k, n);
         let c = ring::matmul(&a, &b);
-        self.offline_bytes += 8 * 2 * (m * k + k * n + m * n) as u64;
-        self.triples_served += 1;
         MatTriple { a: self.share_of(a), b: self.share_of(b), c: self.share_of(c) }
     }
 
     /// Serve an elementwise triple of shape `rows×cols`.
     pub fn elem_triple(&mut self, rows: usize, cols: usize) -> MatTriple {
+        let shape = TripleShape::elem(rows, cols);
+        self.account(shape);
+        if let Some(pool) = &self.pool {
+            if let Some(PoolItem::Mat(t)) = pool.take(shape) {
+                return t;
+            }
+        }
         let a = self.rand_tensor(rows, cols);
         let b = self.rand_tensor(rows, cols);
         let c = ring::mul_elem(&a, &b);
-        self.offline_bytes += 8 * 2 * 3 * (rows * cols) as u64;
-        self.triples_served += 1;
         MatTriple { a: self.share_of(a), b: self.share_of(b), c: self.share_of(c) }
     }
 
     /// Serve a square pair of shape `rows×cols`.
     pub fn square_pair(&mut self, rows: usize, cols: usize) -> SquarePair {
+        let shape = TripleShape::square(rows, cols);
+        self.account(shape);
+        if let Some(pool) = &self.pool {
+            if let Some(PoolItem::Square(p)) = pool.take(shape) {
+                return p;
+            }
+        }
         let a = self.rand_tensor(rows, cols);
         let c = ring::mul_elem(&a, &a);
-        self.offline_bytes += 8 * 2 * 2 * (rows * cols) as u64;
-        self.triples_served += 1;
         SquarePair { a: self.share_of(a), c: self.share_of(c) }
     }
 
@@ -121,5 +434,117 @@ mod tests {
         d.matmul_triple(8, 8, 8);
         assert!(d.offline_bytes > before);
         assert_eq!(d.triples_served, 1);
+    }
+
+    #[test]
+    fn pool_miss_learns_then_hit_after_refill() {
+        let pool = TriplePool::new(21, 2);
+        let shape = TripleShape::matmul(4, 6, 5);
+        assert!(pool.take(shape).is_none());
+        assert_eq!((pool.hits(), pool.misses()), (0, 1));
+        // demand=1, depth=2 → two entries at target
+        assert_eq!(pool.fill_to_target(), 2);
+        assert_eq!(pool.pooled_total(), 2);
+        let item = pool.take(shape).expect("prefilled");
+        assert_eq!(pool.hits(), 1);
+        match item {
+            PoolItem::Mat(t) => {
+                assert_eq!(t.a.shape(), (4, 6));
+                assert_eq!(t.b.shape(), (6, 5));
+                assert_eq!(
+                    ring::matmul(&t.a.reconstruct(), &t.b.reconstruct()),
+                    t.c.reconstruct()
+                );
+            }
+            PoolItem::Square(_) => panic!("matmul key must hold a matrix triple"),
+        }
+    }
+
+    #[test]
+    fn pool_keys_by_shape_and_kind() {
+        let pool = TriplePool::new(22, 1);
+        let mm = TripleShape::matmul(4, 4, 4);
+        let el = TripleShape::elem(4, 4);
+        let sq = TripleShape::square(4, 4);
+        for s in [mm, el, sq] {
+            assert!(pool.take(s).is_none());
+        }
+        assert_eq!(pool.shapes_known(), 3);
+        pool.fill_to_target();
+        assert_eq!(pool.pooled_total(), 3);
+        // Each kind gets its own queue: draining one leaves the others.
+        assert!(matches!(pool.take(sq), Some(PoolItem::Square(_))));
+        assert!(matches!(pool.take(el), Some(PoolItem::Mat(_))));
+        assert!(matches!(pool.take(mm), Some(PoolItem::Mat(_))));
+        assert!(pool.take(mm).is_none(), "queue drained");
+        // A different matmul shape is a different key.
+        assert!(pool.take(TripleShape::matmul(4, 4, 8)).is_none());
+    }
+
+    #[test]
+    fn refill_stops_at_target_and_counts_offline_bytes() {
+        let pool = TriplePool::new(23, 3);
+        let shape = TripleShape::elem(2, 8);
+        let _ = pool.take(shape); // demand = 1
+        assert!(pool.refill_once());
+        assert!(pool.refill_once());
+        assert!(pool.refill_once());
+        assert!(!pool.refill_once(), "at target: nothing left to do");
+        assert_eq!(pool.pooled_total(), 3);
+        assert_eq!(pool.offline_bytes(), 3 * shape.offline_bytes());
+    }
+
+    #[test]
+    fn steady_state_misses_do_not_inflate_target() {
+        let pool = TriplePool::new(27, 2);
+        let shape = TripleShape::elem(3, 3);
+        let _ = pool.take(shape); // learning miss: demand = 1
+        assert_eq!(pool.fill_to_target(), 2);
+        // Drain past empty: these misses must not ratchet the target up.
+        for _ in 0..10 {
+            let _ = pool.take(shape);
+        }
+        assert_eq!(pool.fill_to_target(), 2, "target stays at demand x depth");
+    }
+
+    #[test]
+    fn dealer_serves_from_attached_pool() {
+        let pool = Arc::new(TriplePool::new(24, 2));
+        let mut d = Dealer::new(Rng::new(25));
+        d.attach_pool(Arc::clone(&pool));
+        // Cold call: miss, generated on demand, demand recorded.
+        let t0 = d.matmul_triple(3, 5, 4);
+        assert_eq!(ring::matmul(&t0.a.reconstruct(), &t0.b.reconstruct()), t0.c.reconstruct());
+        assert_eq!(pool.misses(), 1);
+        pool.fill_to_target();
+        // Warm call: served from the pool; accounting still advances.
+        let before = d.offline_bytes;
+        let t1 = d.matmul_triple(3, 5, 4);
+        assert_eq!(ring::matmul(&t1.a.reconstruct(), &t1.b.reconstruct()), t1.c.reconstruct());
+        assert_eq!(pool.hits(), 1);
+        assert!(d.offline_bytes > before);
+        assert_eq!(d.triples_served, 2);
+        assert!(pool.hit_rate() > 0.49 && pool.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn pool_is_shareable_across_threads() {
+        let pool = Arc::new(TriplePool::new(26, 2));
+        let shape = TripleShape::square(4, 4);
+        let _ = pool.take(shape);
+        pool.fill_to_target();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let p = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    let _ = p.take(TripleShape::square(4, 4));
+                    p.refill_once();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.hits() + pool.misses(), 5);
     }
 }

@@ -16,20 +16,27 @@ use crate::tensor::RingTensor;
 use crate::util::rng::Rng;
 use dealer::Dealer;
 
+pub use dealer::{TriplePool, TripleShape};
+
 /// A 2-party additive sharing of a ring tensor: `x = s0 + s1 (mod 2^64)`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Share {
+    /// Party 0's additive share.
     pub s0: RingTensor,
+    /// Party 1's additive share.
     pub s1: RingTensor,
 }
 
 impl Share {
+    /// Row count of the shared tensor.
     pub fn rows(&self) -> usize {
         self.s0.rows()
     }
+    /// Column count of the shared tensor.
     pub fn cols(&self) -> usize {
         self.s0.cols()
     }
+    /// `(rows, cols)` of the shared tensor.
     pub fn shape(&self) -> (usize, usize) {
         self.s0.shape()
     }
@@ -82,12 +89,15 @@ impl Share {
 
 /// MPC execution context: network simulator + dealer + share randomness.
 pub struct Mpc {
+    /// Network simulator charging every transfer.
     pub net: NetSim,
+    /// Trusted dealer for correlated randomness.
     pub dealer: Dealer,
     rng: Rng,
 }
 
 impl Mpc {
+    /// Fresh context over `net`; the dealer PRG forks from `seed`.
     pub fn new(net: NetSim, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let dealer = Dealer::new(rng.fork(0xDEA1));

@@ -32,6 +32,7 @@ pub const EXP_ITERS: usize = 8;
 
 /// Charged cost of one secure comparison, per element (DESIGN.md §CostModel).
 pub const LTZ_ROUNDS: u64 = 7;
+/// Charged traffic of one secure comparison, per element (384 bits).
 pub const LTZ_BYTES_PER_ELEM: u64 = 48; // 384 bits
 
 // ---------------------------------------------------------------------

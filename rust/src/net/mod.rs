@@ -31,6 +31,7 @@ pub enum PartyId {
 }
 
 impl PartyId {
+    /// Dense index (ledger slot).
     pub fn index(self) -> usize {
         match self {
             PartyId::P0 => 0,
@@ -39,6 +40,7 @@ impl PartyId {
             PartyId::Dealer => 3,
         }
     }
+    /// Display label.
     pub fn name(self) -> &'static str {
         match self {
             PartyId::P0 => "P0(developer)",
@@ -52,16 +54,24 @@ impl PartyId {
 /// Operation classes used by the paper's per-layer breakdowns (Figs. 3/7/8/10).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum OpClass {
+    /// Projections and attention share×share products.
     Linear,
+    /// Softmax (scores → probabilities).
     Softmax,
+    /// GeLU activation.
     Gelu,
+    /// LayerNorm.
     LayerNorm,
+    /// Input embedding lookup.
     Embedding,
+    /// Task head (pooler/classifier or LM head).
     Adaptation,
+    /// Everything else (setup, opens, PPP dealing).
     Other,
 }
 
 impl OpClass {
+    /// Every class, in ledger order.
     pub const ALL: [OpClass; 7] = [
         OpClass::Linear,
         OpClass::Softmax,
@@ -71,6 +81,7 @@ impl OpClass {
         OpClass::Adaptation,
         OpClass::Other,
     ];
+    /// Dense index (ledger slot).
     pub fn index(self) -> usize {
         match self {
             OpClass::Linear => 0,
@@ -82,6 +93,7 @@ impl OpClass {
             OpClass::Other => 6,
         }
     }
+    /// Display label.
     pub fn name(self) -> &'static str {
         match self {
             OpClass::Linear => "Linear",
@@ -98,6 +110,7 @@ impl OpClass {
 /// A bandwidth/latency profile (paper §7.1 experimental setup).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct NetworkProfile {
+    /// Display label (includes bandwidth/RTT).
     pub name: &'static str,
     /// Link bandwidth in bits/second.
     pub bandwidth_bps: f64,
@@ -118,6 +131,7 @@ impl NetworkProfile {
     pub fn wan2() -> Self {
         NetworkProfile { name: "WAN(100Mbps,80ms)", bandwidth_bps: 100e6, rtt: 80e-3 }
     }
+    /// Look up a profile by CLI name.
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
             "lan" => Some(Self::lan()),
@@ -126,6 +140,7 @@ impl NetworkProfile {
             _ => None,
         }
     }
+    /// CLI names of the available profiles.
     pub const ALL_NAMES: [&'static str; 3] = ["lan", "wan1", "wan2"];
 
     /// Time to complete `rounds` rounds moving `bytes` in total.
@@ -137,7 +152,9 @@ impl NetworkProfile {
 /// Per-op-class accumulated cost.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ClassCost {
+    /// Bytes transferred.
     pub bytes: u64,
+    /// Communication rounds.
     pub rounds: u64,
     /// Measured local compute per party (seconds).
     pub compute: [f64; 4],
@@ -157,34 +174,42 @@ pub struct CostLedger {
 }
 
 impl CostLedger {
+    /// Empty ledger.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Accumulated cost of one class.
     pub fn class(&self, c: OpClass) -> &ClassCost {
         &self.per_class[c.index()]
     }
 
+    /// Charge bytes to a class.
     pub fn add_bytes(&mut self, c: OpClass, bytes: u64) {
         self.per_class[c.index()].bytes += bytes;
     }
 
+    /// Charge rounds to a class.
     pub fn add_rounds(&mut self, c: OpClass, rounds: u64) {
         self.per_class[c.index()].rounds += rounds;
     }
 
+    /// Record measured local compute for one party.
     pub fn add_compute(&mut self, c: OpClass, party: PartyId, secs: f64) {
         self.per_class[c.index()].compute[party.index()] += secs;
     }
 
+    /// Total bytes across classes.
     pub fn bytes_total(&self) -> u64 {
         self.per_class.iter().map(|c| c.bytes).sum()
     }
 
+    /// Total rounds across classes.
     pub fn rounds_total(&self) -> u64 {
         self.per_class.iter().map(|c| c.rounds).sum()
     }
 
+    /// Total per-class critical-path compute.
     pub fn compute_total(&self) -> f64 {
         self.per_class.iter().map(|c| c.compute_critical_path()).sum()
     }
@@ -275,7 +300,9 @@ impl CostLedger {
 /// The in-process network simulator handed to every protocol.
 #[derive(Debug)]
 pub struct NetSim {
+    /// Simulated link parameters.
     pub profile: NetworkProfile,
+    /// Accumulated costs of the current inference.
     pub ledger: CostLedger,
     /// When true, optionally sleep to emulate latency in live demos.
     pub realtime: bool,
@@ -284,6 +311,7 @@ pub struct NetSim {
 }
 
 impl NetSim {
+    /// Simulator with an empty ledger.
     pub fn new(profile: NetworkProfile) -> Self {
         NetSim { profile, ledger: CostLedger::new(), realtime: false, messages: 0 }
     }

@@ -34,8 +34,11 @@ pub const MASK_NEG: f64 = -1e5;
 
 /// Protocol execution context threaded through the per-layer protocols.
 pub struct ProtoCtx<'a> {
+    /// MPC context (network + dealer).
     pub mpc: &'a mut Mpc,
+    /// P1's plaintext op executor.
     pub backend: &'a mut dyn Backend,
+    /// P1 observation ledger.
     pub views: &'a mut Views,
     /// Fast-sim: share×share products via charged-ideal (exact wire costs,
     /// single local product) — used for paper-scale models on this testbed.
@@ -43,6 +46,7 @@ pub struct ProtoCtx<'a> {
 }
 
 impl<'a> ProtoCtx<'a> {
+    /// Batched share×share products (one round), honoring fast-sim.
     pub fn matmul_batch(&mut self, pairs: &[(&Share, &Share)], class: OpClass) -> Vec<Share> {
         if self.fast_sim {
             self.mpc.matmul_charged_ideal_batch(pairs, class)
@@ -51,6 +55,7 @@ impl<'a> ProtoCtx<'a> {
         }
     }
 
+    /// Share×share product, honoring fast-sim.
     pub fn matmul(&mut self, x: &Share, y: &Share, class: OpClass) -> Share {
         if self.fast_sim {
             self.mpc.matmul_charged_ideal(x, y, class)
@@ -59,6 +64,7 @@ impl<'a> ProtoCtx<'a> {
         }
     }
 
+    /// `[X]·Wᵀ` against public weights, honoring fast-sim.
     pub fn scalmul_nt(&mut self, x: &Share, w_fx: &RingTensor, class: OpClass) -> Share {
         if self.fast_sim {
             self.mpc.scalmul_nt_ideal(x, w_fx, class)
@@ -67,6 +73,7 @@ impl<'a> ProtoCtx<'a> {
         }
     }
 
+    /// `[X]·W` against public weights, honoring fast-sim.
     pub fn scalmul_rhs(&mut self, x: &Share, w_fx: &RingTensor, class: OpClass) -> Share {
         if self.fast_sim {
             self.mpc.scalmul_rhs_ideal(x, w_fx, class)

@@ -10,6 +10,7 @@ pub fn predict(cfg: &ModelConfig, w: &ModelWeights, split: &Split, variant: Vari
     split.ids.iter().map(|ids| forward(cfg, w, ids, variant).row(0).to_vec()).collect()
 }
 
+/// Percent accuracy (argmax vs integer label).
 pub fn accuracy(preds: &[Vec<f32>], labels: &[f32]) -> f64 {
     let hits = preds
         .iter()
@@ -19,6 +20,7 @@ pub fn accuracy(preds: &[Vec<f32>], labels: &[f32]) -> f64 {
     100.0 * hits as f64 / preds.len().max(1) as f64
 }
 
+/// Binary F1 (positive class 1), in percent.
 pub fn f1(preds: &[Vec<f32>], labels: &[f32]) -> f64 {
     let (mut tp, mut fp, mut fnn) = (0.0f64, 0.0f64, 0.0f64);
     for (p, &y) in preds.iter().zip(labels) {
@@ -39,6 +41,7 @@ pub fn f1(preds: &[Vec<f32>], labels: &[f32]) -> f64 {
     }
 }
 
+/// Matthews correlation coefficient ×100 (CoLA).
 pub fn matthews(preds: &[Vec<f32>], labels: &[f32]) -> f64 {
     let (mut tp, mut fp, mut fnn, mut tn) = (0.0f64, 0.0, 0.0, 0.0);
     for (p, &y) in preds.iter().zip(labels) {
@@ -57,6 +60,7 @@ pub fn matthews(preds: &[Vec<f32>], labels: &[f32]) -> f64 {
     }
 }
 
+/// Mean of Pearson and Spearman correlation ×100 (STS-B).
 pub fn pearson_spearman(preds: &[Vec<f32>], labels: &[f32]) -> f64 {
     let xs: Vec<f64> = preds.iter().map(|p| p[0] as f64).collect();
     let ys: Vec<f64> = labels.iter().map(|&y| y as f64).collect();

@@ -44,7 +44,7 @@ pub fn measure_framework(
                 &c,
                 &w,
                 Box::new(NativeBackend::new()),
-                EngineOptions { profile: NetworkProfile::lan(), seed, record_views: false, fast_sim: true },
+                EngineOptions { profile: NetworkProfile::lan(), seed, record_views: false, fast_sim: true, triple_pool: None },
             )?),
             FrameworkKind::PermOnly => Box::new(PermOnlyEngine::new(&c, &w, NetworkProfile::lan(), false)),
             smpc => Box::new(SmpcEngine::new(smpc, &c, &w, NetworkProfile::lan(), seed)?),
@@ -59,7 +59,7 @@ pub fn measure_framework(
                 &c,
                 &w,
                 Box::new(NativeBackend::new()),
-                EngineOptions { profile: NetworkProfile::lan(), seed, record_views: false, fast_sim: true },
+                EngineOptions { profile: NetworkProfile::lan(), seed, record_views: false, fast_sim: true, triple_pool: None },
             )?),
             FrameworkKind::PermOnly => Box::new(PermOnlyEngine::new(&c, &w, NetworkProfile::lan(), false)),
             smpc => Box::new(SmpcEngine::new(smpc, &c, &w, NetworkProfile::lan(), seed)?),
@@ -194,10 +194,15 @@ pub fn table1(n: usize) -> Result<String> {
 
 /// Options for the attack tables.
 pub struct AttackTableOpts {
+    /// Independent attack repetitions.
     pub seeds: u64,
+    /// Victim sentences per seed.
     pub sentences: usize,
+    /// Victim sentences given to the (expensive) EIA attack.
     pub eia_sentences: usize,
+    /// EIA candidate tokens sampled per position.
     pub eia_candidates: usize,
+    /// Auxiliary sentences used to train SIP/BRE.
     pub aux_train: usize,
 }
 
@@ -383,6 +388,7 @@ pub fn table3(artifacts_dir: &str, engine_check: usize) -> Result<String> {
 // Fig 3 — runtime breakdown of PUMA / MPCFormer on BERT_BASE
 // ---------------------------------------------------------------------
 
+/// Fig. 3 — runtime breakdown of PUMA/MPCFormer on BERT_BASE (WAN).
 pub fn fig3(extrapolate: bool) -> Result<String> {
     let cfg = ModelConfig::bert_base();
     let wan = NetworkProfile::wan1();
@@ -412,6 +418,7 @@ pub fn fig3(extrapolate: bool) -> Result<String> {
 // Fig 4 / 9 — text recovery examples
 // ---------------------------------------------------------------------
 
+/// Fig. 4/9 — qualitative text-recovery examples from O1.
 pub fn fig4(artifacts_dir: &str, examples: usize) -> Result<String> {
     let vocab = Vocab::load(artifacts_dir)?;
     let corpora = AttackCorpora::load(artifacts_dir)?;

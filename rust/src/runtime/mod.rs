@@ -17,11 +17,17 @@
 
 pub mod native;
 mod registry;
+#[cfg(feature = "xla")]
 mod xla_backend;
+#[cfg(not(feature = "xla"))]
+mod xla_stub;
 
 pub use native::NativeBackend;
 pub use registry::{ArtifactRegistry, OpKey};
+#[cfg(feature = "xla")]
 pub use xla_backend::XlaBackend;
+#[cfg(not(feature = "xla"))]
+pub use xla_stub::XlaBackend;
 
 use crate::tensor::FloatTensor;
 use crate::Result;

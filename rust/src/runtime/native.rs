@@ -44,6 +44,7 @@ pub fn softmax_row(row: &mut [f32]) {
 pub struct NativeBackend;
 
 impl NativeBackend {
+    /// Construct the (stateless) native backend.
     pub fn new() -> Self {
         NativeBackend
     }

@@ -10,8 +10,11 @@ use crate::Result;
 /// Key identifying one lowered op artifact.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct OpKey {
+    /// Op name (`softmax`, `gelu`, `layernorm`, …).
     pub op: String,
+    /// Operand row count the artifact was lowered for.
     pub rows: usize,
+    /// Operand column count the artifact was lowered for.
     pub cols: usize,
 }
 

@@ -24,6 +24,7 @@ pub struct XlaBackend {
 }
 
 impl XlaBackend {
+    /// Load the model's artifact registry and start a PJRT CPU client.
     pub fn new(artifacts_dir: &str, model: &str) -> Result<Self> {
         let registry = ArtifactRegistry::load(artifacts_dir, model)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;

@@ -48,10 +48,12 @@ impl<T: Copy + Default> Tensor<T> {
         Tensor { rows, cols, data }
     }
 
+    /// Row count.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
+    /// Column count.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
@@ -61,6 +63,7 @@ impl<T: Copy + Default> Tensor<T> {
     pub fn len(&self) -> usize {
         self.data.len()
     }
+    /// Whether the tensor has zero elements.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
@@ -71,11 +74,13 @@ impl<T: Copy + Default> Tensor<T> {
         (self.rows, self.cols)
     }
 
+    /// Element at `(r, c)`.
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> T {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c]
     }
+    /// Write element at `(r, c)`.
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: T) {
         debug_assert!(r < self.rows && c < self.cols);
@@ -87,6 +92,7 @@ impl<T: Copy + Default> Tensor<T> {
     pub fn row(&self, r: usize) -> &[T] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
+    /// Mutable row slice.
     #[inline]
     pub fn row_mut(&mut self, r: usize) -> &mut [T] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
@@ -97,6 +103,7 @@ impl<T: Copy + Default> Tensor<T> {
     pub fn data(&self) -> &[T] {
         &self.data
     }
+    /// Mutable raw row-major data.
     #[inline]
     pub fn data_mut(&mut self) -> &mut [T] {
         &mut self.data

@@ -9,15 +9,22 @@ use std::time::{Duration, Instant};
 /// Result statistics for one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Benchmark label.
     pub name: String,
+    /// Timed iterations taken.
     pub iters: usize,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Median iteration.
     pub median: Duration,
+    /// 95th-percentile iteration.
     pub p95: Duration,
+    /// Mean iteration.
     pub mean: Duration,
 }
 
 impl BenchStats {
+    /// One formatted result row.
     pub fn line(&self) -> String {
         format!(
             "{:<44} iters={:<6} min={:>12} med={:>12} p95={:>12} mean={:>12}",
@@ -55,8 +62,15 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Bencher with the default (env-sensitive) budget.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Bencher with explicit limits — for workloads where the iteration
+    /// count matters (e.g. draining a prefilled triple pool).
+    pub fn with(budget: Duration, max_iters: usize, warmup: usize) -> Self {
+        Bencher { budget, max_iters, warmup, results: Vec::new() }
     }
 
     /// Time `f`, which should perform one full iteration of the workload.

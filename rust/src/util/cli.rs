@@ -50,26 +50,32 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether `--name` was passed as a bare flag.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name value`, if present.
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name`, or `default`.
     pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.opt(name).unwrap_or(default)
     }
 
+    /// `--name` parsed as `usize`, or `default`.
     pub fn opt_usize(&self, name: &str, default: usize) -> usize {
         self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// `--name` parsed as `u64`, or `default`.
     pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
         self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// `--name` parsed as `f64`, or `default`.
     pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
         self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }

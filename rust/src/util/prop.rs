@@ -22,9 +22,11 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// Uniform ring element.
     pub fn i64(&mut self) -> i64 {
         self.rng.next_i64()
     }
+    /// Uniform 64-bit value.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()
     }
@@ -32,6 +34,7 @@ impl Gen {
     pub fn small_f64(&mut self) -> f64 {
         (self.rng.next_f64() - 0.5) * 16.0
     }
+    /// Uniform in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         lo + self.rng.next_f64() * (hi - lo)
     }
@@ -44,15 +47,19 @@ impl Gen {
             _ => 1 + self.rng.below(max),
         }
     }
+    /// Uniform index in `[0, n)`.
     pub fn below(&mut self, n: usize) -> usize {
         self.rng.below(n)
     }
+    /// Fair coin.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }
+    /// `n` uniform ring elements.
     pub fn vec_i64(&mut self, n: usize) -> Vec<i64> {
         self.rng.vec_i64(n)
     }
+    /// `n` small-magnitude values (see [`Gen::small_f64`]).
     pub fn vec_small_f64(&mut self, n: usize) -> Vec<f64> {
         (0..n).map(|_| self.small_f64()).collect()
     }

@@ -152,7 +152,7 @@ fn centaur_engine_runs_on_xla_backend() {
         &cfg,
         &w,
         backend,
-        EngineOptions { profile: NetworkProfile::lan(), seed: 14, record_views: false, fast_sim: false },
+        EngineOptions { profile: NetworkProfile::lan(), seed: 14, record_views: false, fast_sim: false, triple_pool: None },
     )
     .unwrap();
     let got = eng.infer(&toks).unwrap().logits;

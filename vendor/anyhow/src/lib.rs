@@ -1,0 +1,188 @@
+//! Minimal offline shim of the [`anyhow`](https://docs.rs/anyhow) API.
+//!
+//! The offline crate mirror used to build this repository has no crates.io
+//! access (DESIGN.md §Offline-dependency substitutions), so this vendored
+//! path dependency implements the subset of `anyhow` the codebase uses:
+//!
+//! * [`Error`] — an opaque, `Send + Sync` error value with a message and an
+//!   optional source chain,
+//! * [`Result`] — `Result<T, Error>` with the same defaulted type parameter
+//!   as the real crate,
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket
+//! `impl From<E: std::error::Error> for Error` coherent and lets `?`
+//! convert any standard error type.
+
+#![warn(missing_docs)]
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An opaque error value: a rendered message plus an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap a standard error, keeping it as the source.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Self {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Prepend context to the message (a tiny subset of `anyhow::Context`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The root-cause message chain, outermost first.
+    pub fn chain_messages(&self) -> Vec<String> {
+        let mut out = vec![self.msg.clone()];
+        let mut cur: Option<&(dyn std::error::Error + 'static)> =
+            self.source.as_deref().map(|e| e as _);
+        while let Some(e) = cur {
+            out.push(e.to_string());
+            cur = e.source();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        // `{:#}` renders the full cause chain inline, like the real crate.
+        if f.alternate() {
+            let mut cur: Option<&(dyn std::error::Error + 'static)> =
+                self.source.as_deref().map(|e| e as _);
+            while let Some(e) = cur {
+                write!(f, ": {e}")?;
+                cur = e.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cur: Option<&(dyn std::error::Error + 'static)> =
+            self.source.as_deref().map(|e| e as _);
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {e}")?;
+            cur = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted, so both
+/// `anyhow::Result<T>` and `anyhow::Result<T, E>` spellings work.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from the arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+        assert_eq!(e.chain_messages().len(), 2);
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 41;
+        let e = anyhow!("answer {} off by {x}", 42);
+        assert_eq!(e.to_string(), "answer 42 off by 41");
+
+        fn bails() -> Result<()> {
+            bail!("nope: {}", 7);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope: 7");
+
+        fn ensures(v: usize) -> Result<usize> {
+            ensure!(v < 10, "v too big: {v}");
+            ensure!(v != 3);
+            Ok(v)
+        }
+        assert_eq!(ensures(2).unwrap(), 2);
+        assert!(ensures(12).unwrap_err().to_string().contains("too big"));
+        assert!(ensures(3).unwrap_err().to_string().contains("condition failed"));
+    }
+
+    #[test]
+    fn alternate_display_shows_chain() {
+        let e = Error::new(io_err()).context("loading weights");
+        let plain = format!("{e}");
+        let alt = format!("{e:#}");
+        assert!(plain.starts_with("loading weights"));
+        assert!(alt.contains("gone"));
+    }
+}
