@@ -1,19 +1,76 @@
 //! End-to-end benchmark (Figs. 7/8 companion): one inference per
 //! (framework × model), printing comm volume and simulated wall times —
-//! the series the report targets regenerate in table form.
+//! the series the report targets regenerate in table form — plus the
+//! per-token decode comparison (full recompute vs incremental KV cache).
 
 use centaur::baselines::FrameworkKind;
-use centaur::model::ModelConfig;
+use centaur::engine::decoder::DecoderSession;
+use centaur::engine::CentaurEngine;
+use centaur::model::{ModelConfig, ModelWeights};
 use centaur::net::NetworkProfile;
 use centaur::report::measure_framework;
 use centaur::util::bench::Bencher;
 use centaur::util::{human_bytes, human_secs};
+
+/// Per-token decode cost: the pre-KV-cache full-recompute path vs warm
+/// incremental decode (ISSUE acceptance: ≥3× less comm per token for an
+/// 8-step generation at `n_ctx = 64`).
+fn bench_decode(b: &mut Bencher) {
+    let cfg = ModelConfig::gpt2_tiny().with_n_ctx(64);
+    let w = ModelWeights::random(&cfg, 7);
+    let prompt: Vec<u32> = vec![7, 11, 13, 17];
+    let steps = 8usize;
+
+    b.section("gpt2-tiny @ n_ctx=64 — per-token decode: full recompute vs KV cache");
+    let mut full_cost = None;
+    b.bench("full recompute x8 tokens", || {
+        let mut e = CentaurEngine::new(&cfg, &w, NetworkProfile::lan(), 8).unwrap();
+        let (_, cost) = e.generate_full_recompute(&prompt, steps).unwrap();
+        full_cost = Some(cost);
+    });
+    let mut split = None;
+    b.bench("incremental decode x8 tokens", || {
+        let mut e = CentaurEngine::new(&cfg, &w, NetworkProfile::lan(), 8).unwrap();
+        let mut sess = DecoderSession::new(&mut e, &prompt).unwrap();
+        for _ in 0..steps {
+            sess.step_greedy().unwrap();
+        }
+        split = Some((sess.prefill_cost().clone(), sess.decode_cost().clone()));
+    });
+    let full = full_cost.unwrap();
+    let (prefill, decode) = split.unwrap();
+    let full_tok = full.bytes_total() / steps as u64;
+    let warm_tok = decode.bytes_total() / steps as u64;
+    println!(
+        "    -> full recompute : {}/token | LAN {} WAN1 {} WAN2 {}",
+        human_bytes(full_tok),
+        human_secs(full.total_time(&NetworkProfile::lan()) / steps as f64),
+        human_secs(full.total_time(&NetworkProfile::wan1()) / steps as f64),
+        human_secs(full.total_time(&NetworkProfile::wan2()) / steps as f64),
+    );
+    println!(
+        "    -> warm KV decode : {}/token | LAN {} WAN1 {} WAN2 {} | cold prefill {} ({} tokens)",
+        human_bytes(warm_tok),
+        human_secs(decode.total_time(&NetworkProfile::lan()) / steps as f64),
+        human_secs(decode.total_time(&NetworkProfile::wan1()) / steps as f64),
+        human_secs(decode.total_time(&NetworkProfile::wan2()) / steps as f64),
+        human_bytes(prefill.bytes_total()),
+        prompt.len(),
+    );
+    println!(
+        "    -> per-token comm ratio: {:.2}x (acceptance floor: 3x)",
+        full_tok as f64 / warm_tok as f64
+    );
+    assert!(full_tok >= 3 * warm_tok, "KV-cache decode must be >=3x cheaper per token");
+}
 
 fn main() {
     let mut b = Bencher::new();
     let quick = std::env::var("CENTAUR_BENCH_QUICK").is_ok();
     let models: Vec<&str> =
         if quick { vec!["bert-tiny"] } else { vec!["bert-tiny", "bert-base", "gpt2-base"] };
+
+    bench_decode(&mut b);
 
     for model in models {
         let cfg = ModelConfig::by_name(model).unwrap();

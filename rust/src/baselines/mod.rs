@@ -14,7 +14,9 @@
 pub mod permonly;
 pub mod smpc;
 
+use crate::engine::decoder::GenOutcome;
 use crate::engine::InferenceOutput;
+use crate::net::CostLedger;
 use crate::Result;
 
 /// A PPTI framework under comparison.
@@ -23,6 +25,19 @@ pub trait PptiFramework {
     fn name(&self) -> &'static str;
     /// Run one private inference.
     fn infer(&mut self, tokens: &[u32]) -> Result<InferenceOutput>;
+    /// Incremental streaming generation: `on_token(index, token,
+    /// step_cost)` fires per generated token and returns whether to
+    /// continue (`false` aborts the remaining steps — e.g. the client
+    /// dropped its stream). Only decoder frameworks with a KV-cache path
+    /// support this; the default refuses.
+    fn generate_stream(
+        &mut self,
+        _prompt: &[u32],
+        _steps: usize,
+        _on_token: &mut dyn FnMut(usize, u32, &CostLedger) -> bool,
+    ) -> Result<GenOutcome> {
+        anyhow::bail!("{} does not support incremental generation", self.name())
+    }
 }
 
 impl PptiFramework for crate::engine::CentaurEngine {
@@ -31,6 +46,14 @@ impl PptiFramework for crate::engine::CentaurEngine {
     }
     fn infer(&mut self, tokens: &[u32]) -> Result<InferenceOutput> {
         crate::engine::CentaurEngine::infer(self, tokens)
+    }
+    fn generate_stream(
+        &mut self,
+        prompt: &[u32],
+        steps: usize,
+        on_token: &mut dyn FnMut(usize, u32, &CostLedger) -> bool,
+    ) -> Result<GenOutcome> {
+        self.generate_streaming(prompt, steps, on_token)
     }
 }
 

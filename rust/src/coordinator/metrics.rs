@@ -15,6 +15,14 @@ pub struct Metrics {
     pub bytes_total: u64,
     /// Protocol rounds across requests.
     pub rounds_total: u64,
+    /// Generation requests completed.
+    pub generations: u64,
+    /// Tokens produced by generation requests.
+    pub tokens_generated: u64,
+    /// Online bytes of the cold-prefill phases (prompt absorption).
+    pub prefill_bytes: u64,
+    /// Online bytes of the warm-decode phases (generated tokens).
+    pub decode_bytes: u64,
 }
 
 impl Metrics {
@@ -28,6 +36,10 @@ impl Metrics {
             batches: 0,
             bytes_total: 0,
             rounds_total: 0,
+            generations: 0,
+            tokens_generated: 0,
+            prefill_bytes: 0,
+            decode_bytes: 0,
         }
     }
 
@@ -38,6 +50,25 @@ impl Metrics {
         self.completed += 1;
         self.bytes_total += bytes;
         self.rounds_total += rounds;
+    }
+
+    /// Record one completed generation request with its cold-prefill /
+    /// warm-decode communication split.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_generate(
+        &mut self,
+        latency: Duration,
+        service: Duration,
+        tokens: u64,
+        prefill_bytes: u64,
+        decode_bytes: u64,
+        rounds: u64,
+    ) {
+        self.record(latency, service, prefill_bytes + decode_bytes, rounds);
+        self.generations += 1;
+        self.tokens_generated += tokens;
+        self.prefill_bytes += prefill_bytes;
+        self.decode_bytes += decode_bytes;
     }
 
     /// Compute quantiles and totals so far.
@@ -68,6 +99,10 @@ impl Metrics {
             throughput_rps: self.completed as f64 / elapsed.as_secs_f64().max(1e-9),
             bytes_total: self.bytes_total,
             rounds_total: self.rounds_total,
+            generations: self.generations,
+            tokens_generated: self.tokens_generated,
+            prefill_bytes: self.prefill_bytes,
+            decode_bytes: self.decode_bytes,
             elapsed,
         }
     }
@@ -104,6 +139,14 @@ pub struct MetricsSnapshot {
     pub bytes_total: u64,
     /// Protocol rounds across all requests.
     pub rounds_total: u64,
+    /// Generation requests completed.
+    pub generations: u64,
+    /// Tokens produced by generation requests.
+    pub tokens_generated: u64,
+    /// Cold-prefill communication across generation requests.
+    pub prefill_bytes: u64,
+    /// Warm-decode communication across generation requests.
+    pub decode_bytes: u64,
     /// Wall-clock time since the coordinator started.
     pub elapsed: Duration,
 }
@@ -124,6 +167,16 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.pool_hits as f64 / total as f64
+        }
+    }
+
+    /// Warm-decode communication per generated token (0 when no tokens
+    /// were generated) — the serving-side view of the KV-cache win.
+    pub fn decode_bytes_per_token(&self) -> u64 {
+        if self.tokens_generated == 0 {
+            0
+        } else {
+            self.decode_bytes / self.tokens_generated
         }
     }
 
@@ -149,6 +202,16 @@ impl MetricsSnapshot {
                 self.pool_hits,
                 self.pool_misses,
                 self.pool_hit_rate() * 100.0
+            ));
+        }
+        if self.tokens_generated > 0 {
+            s.push_str(&format!(
+                " generations={} tokens={} prefill_comm={} decode_comm={} decode_per_token={}",
+                self.generations,
+                self.tokens_generated,
+                crate::util::human_bytes(self.prefill_bytes),
+                crate::util::human_bytes(self.decode_bytes),
+                crate::util::human_bytes(self.decode_bytes_per_token()),
             ));
         }
         s
@@ -177,5 +240,22 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.completed, 0);
         assert_eq!(s.p99, Duration::ZERO);
+        assert_eq!(s.tokens_generated, 0);
+        assert_eq!(s.decode_bytes_per_token(), 0);
+        assert!(!s.summary().contains("decode_per_token"));
+    }
+
+    #[test]
+    fn generation_split_is_tracked() {
+        let mut m = Metrics::new();
+        m.record_generate(Duration::from_millis(10), Duration::from_millis(8), 4, 1000, 2000, 40);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.generations, 1);
+        assert_eq!(s.tokens_generated, 4);
+        assert_eq!(s.bytes_total, 3000);
+        assert_eq!((s.prefill_bytes, s.decode_bytes), (1000, 2000));
+        assert_eq!(s.decode_bytes_per_token(), 500);
+        assert!(s.summary().contains("decode_per_token"));
     }
 }

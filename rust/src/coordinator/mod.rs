@@ -64,6 +64,11 @@ pub struct ServerConfig {
     pub offline_prefill: bool,
     /// Requests' worth of triples to keep pooled per shape.
     pub pool_depth: usize,
+    /// With `offline_prefill` on a decoder model: also provision this many
+    /// single-token absorbs' worth of incremental-decode triple shapes per
+    /// request (prompt + generated tokens), so the streaming generate path
+    /// is warm from the first request. 0 disables decode provisioning.
+    pub decode_prefill_steps: usize,
 }
 
 impl ServerConfig {
@@ -84,6 +89,7 @@ impl ServerConfig {
             seed: 11,
             offline_prefill: false,
             pool_depth: 2,
+            decode_prefill_steps: 0,
         }
     }
 }
@@ -107,10 +113,51 @@ pub struct Response {
     pub rounds: u64,
 }
 
-struct Request {
-    tokens: Vec<u32>,
-    enqueued: Instant,
-    respond: mpsc::Sender<Result<Response>>,
+/// One event on a streaming generation response channel.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// One generated token, with that step's online cost.
+    Token {
+        /// 0-based index within the generated continuation.
+        index: usize,
+        /// The generated token id.
+        token: u32,
+        /// Online bytes of this decode step.
+        step_bytes: u64,
+        /// Protocol rounds of this decode step.
+        step_rounds: u64,
+    },
+    /// Generation finished.
+    Done(GenSummary),
+}
+
+/// Final summary of one streamed generation request.
+#[derive(Clone, Debug)]
+pub struct GenSummary {
+    /// Generated continuation (prompt excluded).
+    pub tokens: Vec<u32>,
+    /// Cold-prefill online bytes (prompt absorption).
+    pub prefill_bytes: u64,
+    /// Warm-decode online bytes (generated tokens).
+    pub decode_bytes: u64,
+    /// Total protocol rounds (prefill + decode).
+    pub rounds: u64,
+    /// End-to-end latency (queue + protocol), wall clock.
+    pub latency: Duration,
+}
+
+enum Request {
+    Infer {
+        tokens: Vec<u32>,
+        enqueued: Instant,
+        respond: mpsc::Sender<Result<Response>>,
+    },
+    Generate {
+        prompt: Vec<u32>,
+        steps: usize,
+        enqueued: Instant,
+        stream: mpsc::Sender<Result<StreamEvent>>,
+    },
 }
 
 /// Build the framework engine inside a worker thread.
@@ -175,6 +222,14 @@ impl Coordinator {
             probe
                 .infer(&dummy)
                 .map_err(|e| anyhow::anyhow!("offline-prefill probe inference failed: {e}"))?;
+            // Decoder models: a full-inference probe never touches the
+            // incremental-decode triple shapes, so register them directly —
+            // one decode-step profile per expected absorb.
+            if config.decode_prefill_steps > 0 && config.cfg.kind == crate::model::ModelKind::Gpt2 {
+                for (shape, count) in crate::protocols::layer::decode_step_shapes(&config.cfg) {
+                    pool.register_demand(shape, count * config.decode_prefill_steps as u64);
+                }
+            }
             pool.fill_to_target();
             Some(pool)
         } else {
@@ -228,25 +283,71 @@ impl Coordinator {
                     let Ok(batch) = batch else { break };
                     m.lock().unwrap().batches += 1;
                     for req in batch.items {
-                        let t0 = Instant::now();
-                        let outcome = engine.infer(&req.tokens);
-                        let latency = req.enqueued.elapsed();
-                        let resp = outcome.map(|out| {
-                            let sim = out.stats.total_time(&cfg.profile) - out.stats.compute_total();
-                            Response {
-                                rows: out.logits.rows(),
-                                cols: out.logits.cols(),
-                                logits: out.logits.data().to_vec(),
-                                latency,
-                                simulated_net: sim,
-                                bytes: out.stats.bytes_total(),
-                                rounds: out.stats.rounds_total(),
+                        match req {
+                            Request::Infer { tokens, enqueued, respond } => {
+                                let t0 = Instant::now();
+                                let outcome = engine.infer(&tokens);
+                                let latency = enqueued.elapsed();
+                                let resp = outcome.map(|out| {
+                                    let sim =
+                                        out.stats.total_time(&cfg.profile) - out.stats.compute_total();
+                                    Response {
+                                        rows: out.logits.rows(),
+                                        cols: out.logits.cols(),
+                                        logits: out.logits.data().to_vec(),
+                                        latency,
+                                        simulated_net: sim,
+                                        bytes: out.stats.bytes_total(),
+                                        rounds: out.stats.rounds_total(),
+                                    }
+                                });
+                                if let Ok(r) = &resp {
+                                    m.lock().unwrap().record(latency, t0.elapsed(), r.bytes, r.rounds);
+                                }
+                                let _ = respond.send(resp);
                             }
-                        });
-                        if let Ok(r) = &resp {
-                            m.lock().unwrap().record(latency, t0.elapsed(), r.bytes, r.rounds);
+                            Request::Generate { prompt, steps, enqueued, stream } => {
+                                let t0 = Instant::now();
+                                // A failed send means the client dropped its
+                                // receiver — abort the remaining steps rather
+                                // than burning protocol work nobody reads.
+                                let outcome =
+                                    engine.generate_stream(&prompt, steps, &mut |i, tok, step| {
+                                        stream
+                                            .send(Ok(StreamEvent::Token {
+                                                index: i,
+                                                token: tok,
+                                                step_bytes: step.bytes_total(),
+                                                step_rounds: step.rounds_total(),
+                                            }))
+                                            .is_ok()
+                                    });
+                                let latency = enqueued.elapsed();
+                                match outcome {
+                                    Ok(out) => {
+                                        let total = out.total();
+                                        m.lock().unwrap().record_generate(
+                                            latency,
+                                            t0.elapsed(),
+                                            out.tokens.len() as u64,
+                                            out.prefill.bytes_total(),
+                                            out.decode.bytes_total(),
+                                            total.rounds_total(),
+                                        );
+                                        let _ = stream.send(Ok(StreamEvent::Done(GenSummary {
+                                            tokens: out.tokens,
+                                            prefill_bytes: out.prefill.bytes_total(),
+                                            decode_bytes: out.decode.bytes_total(),
+                                            rounds: total.rounds_total(),
+                                            latency,
+                                        })));
+                                    }
+                                    Err(e) => {
+                                        let _ = stream.send(Err(e));
+                                    }
+                                }
+                            }
                         }
-                        let _ = req.respond.send(resp);
                     }
                 }
             }));
@@ -272,10 +373,35 @@ impl Coordinator {
     /// Submit a request; returns a receiver for the response.
     pub fn submit(&self, tokens: Vec<u32>) -> mpsc::Receiver<Result<Response>> {
         let (tx, rx) = mpsc::channel();
-        let req = Request { tokens, enqueued: Instant::now(), respond: tx };
+        let req = Request::Infer { tokens, enqueued: Instant::now(), respond: tx };
         // If the batcher is gone the receiver will simply report disconnect.
         let _ = self.submit_tx.send(req);
         rx
+    }
+
+    /// Submit a streaming generation request (decoder frameworks): the
+    /// receiver yields one [`StreamEvent::Token`] per generated token as
+    /// the protocol produces it, then [`StreamEvent::Done`] with the
+    /// cold-prefill / warm-decode split.
+    pub fn submit_generate(&self, prompt: Vec<u32>, steps: usize) -> mpsc::Receiver<Result<StreamEvent>> {
+        let (tx, rx) = mpsc::channel();
+        let req = Request::Generate { prompt, steps, enqueued: Instant::now(), stream: tx };
+        let _ = self.submit_tx.send(req);
+        rx
+    }
+
+    /// Convenience: submit a generation request and wait for completion,
+    /// discarding the intermediate token events.
+    pub fn generate_blocking(&self, prompt: Vec<u32>, steps: usize) -> Result<GenSummary> {
+        let rx = self.submit_generate(prompt, steps);
+        loop {
+            match rx.recv() {
+                Ok(Ok(StreamEvent::Done(summary))) => return Ok(summary),
+                Ok(Ok(StreamEvent::Token { .. })) => continue,
+                Ok(Err(e)) => return Err(e),
+                Err(_) => anyhow::bail!("coordinator shut down"),
+            }
+        }
     }
 
     /// Convenience: submit and wait.
@@ -403,6 +529,74 @@ mod tests {
         let snap = coord.shutdown();
         assert_eq!(snap.pool_hits + snap.pool_misses, 0);
         assert!(!snap.summary().contains("pool_hit_rate"));
+    }
+
+    fn tiny_gpt_config() -> ServerConfig {
+        let cfg = ModelConfig::gpt2_tiny();
+        let weights = ModelWeights::random(&cfg, 103);
+        let mut sc = ServerConfig::new(cfg, weights);
+        sc.max_batch = 2;
+        sc.linger = Duration::from_millis(1);
+        sc
+    }
+
+    #[test]
+    fn streaming_generate_over_the_coordinator() {
+        let sc = tiny_gpt_config();
+        let coord = Coordinator::start(sc).unwrap();
+        let rx = coord.submit_generate(vec![7, 11, 13], 3);
+        let mut tokens = Vec::new();
+        let mut done = None;
+        for ev in rx.iter() {
+            match ev.unwrap() {
+                StreamEvent::Token { index, token, step_bytes, step_rounds } => {
+                    assert_eq!(index, tokens.len(), "tokens must stream in order");
+                    assert!(step_bytes > 0 && step_rounds > 0);
+                    tokens.push(token);
+                }
+                StreamEvent::Done(s) => {
+                    done = Some(s);
+                    break;
+                }
+            }
+        }
+        let s = done.expect("stream must end with Done");
+        assert_eq!(s.tokens, tokens);
+        assert_eq!(tokens.len(), 3);
+        assert!(s.prefill_bytes > 0 && s.decode_bytes > 0);
+        let snap = coord.shutdown();
+        assert_eq!(snap.generations, 1);
+        assert_eq!(snap.tokens_generated, 3);
+        assert!(snap.decode_bytes_per_token() > 0);
+        assert!(snap.summary().contains("decode_per_token"));
+    }
+
+    #[test]
+    fn decode_prefill_stocks_decode_shapes() {
+        let mut sc = tiny_gpt_config();
+        sc.offline_prefill = true;
+        sc.pool_depth = 1;
+        // prompt 3 + steps 3 = 6 absorbs per request
+        sc.decode_prefill_steps = 6;
+        let coord = Coordinator::start(sc).unwrap();
+        let pool = Arc::clone(coord.triple_pool().expect("offline_prefill must create a pool"));
+        assert!(pool.pooled_total() > 0);
+        let hits_before = pool.hits();
+        let summary = coord.generate_blocking(vec![7, 11, 13], 3).unwrap();
+        assert_eq!(summary.tokens.len(), 3);
+        assert!(pool.hits() > hits_before, "decode-shape triples must come from the pool");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn generate_on_non_decoder_framework_reports_error() {
+        let sc = tiny_config(FrameworkKind::PermOnly);
+        let coord = Coordinator::start(sc).unwrap();
+        assert!(coord.generate_blocking(vec![5, 6], 2).is_err());
+        // server still alive for plain inference
+        let ok = coord.infer_blocking(vec![5; 32]);
+        assert!(ok.is_ok());
+        coord.shutdown();
     }
 
     #[test]

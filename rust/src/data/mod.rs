@@ -16,6 +16,23 @@ pub const CLS: u32 = 1;
 pub const SEP: u32 = 2;
 /// `[UNK]` out-of-vocabulary token.
 pub const UNK: u32 = 3;
+/// Number of reserved special-token ids ([`PAD`], [`CLS`], [`SEP`],
+/// [`UNK`]) at the bottom of the vocabulary. Generation must never emit a
+/// special, so greedy selection skips exactly this many leading ids.
+pub const NUM_SPECIAL_TOKENS: usize = 4;
+
+/// Greedy next-token selection over one logits row, never emitting a
+/// special token: argmax over ids `>= NUM_SPECIAL_TOKENS`. Ties resolve to
+/// the highest id (iterator `max_by` semantics), matching the plaintext
+/// greedy reference used by the decode parity tests.
+pub fn greedy_regular_token(row: &[f32]) -> u32 {
+    row.iter()
+        .enumerate()
+        .skip(NUM_SPECIAL_TOKENS)
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i as u32)
+        .expect("logits row must cover at least one regular token")
+}
 
 /// The shared word-level vocabulary.
 #[derive(Clone, Debug)]
@@ -277,5 +294,29 @@ mod tests {
     fn missing_artifacts_error_is_actionable() {
         let err = Vocab::load("/definitely/missing").unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn specials_are_never_emitted_by_greedy_selection() {
+        // Even when every special id dominates the logits, greedy selection
+        // must pick a regular token.
+        let mut row = vec![0.0f32; 16];
+        row[PAD as usize] = 100.0;
+        row[CLS as usize] = 99.0;
+        row[SEP as usize] = 98.0;
+        row[UNK as usize] = 97.0;
+        row[9] = 1.0;
+        assert_eq!(greedy_regular_token(&row), 9);
+        // The constant covers exactly the reserved ids.
+        assert_eq!(NUM_SPECIAL_TOKENS, UNK as usize + 1);
+        assert!(greedy_regular_token(&row) as usize >= NUM_SPECIAL_TOKENS);
+    }
+
+    #[test]
+    fn greedy_ties_resolve_to_highest_id() {
+        // Matches `Iterator::max_by`: the last maximal element wins — the
+        // exact semantics generate() has always used.
+        let row = vec![0.0f32; 8];
+        assert_eq!(greedy_regular_token(&row), 7);
     }
 }

@@ -5,14 +5,16 @@
 //! centaur infer  --weights bert-tiny-qnli --text "..." [--net lan]
 //! centaur serve  --weights bert-tiny-qnli --requests 32 --batch 8 [--framework centaur]
 //!                [--offline-prefill] [--pool-depth 2]
+//! centaur serve  --weights gpt2-tiny-wikitext103 --gen-steps 8 --requests 4
+//!                [--offline-prefill]   # streaming incremental decode
 //! centaur compare --model bert-tiny [--full]
 //! centaur artifacts-check
 //! ```
 
 use centaur::baselines::FrameworkKind;
-use centaur::coordinator::{Coordinator, ServerConfig};
+use centaur::coordinator::{Coordinator, ServerConfig, StreamEvent};
 use centaur::data::{artifacts_dir, TaskData, Vocab};
-use centaur::model::{ModelConfig, ModelWeights};
+use centaur::model::{ModelConfig, ModelKind, ModelWeights};
 use centaur::net::NetworkProfile;
 use centaur::report;
 use centaur::util::cli::Args;
@@ -139,6 +141,78 @@ fn cmd_serve(args: &Args) -> Result<()> {
     sc.offline_prefill = args.flag("offline-prefill");
     sc.pool_depth = args.opt_usize("pool-depth", sc.pool_depth);
     let n_req = args.opt_usize("requests", 16);
+
+    // Streaming generation mode: each request decodes `--gen-steps` tokens
+    // incrementally over the secret-shared KV cache, tokens streamed back
+    // as the protocol produces them.
+    let gen_steps = args.opt_usize("gen-steps", 0);
+    if gen_steps > 0 {
+        anyhow::ensure!(
+            sc.cfg.kind == ModelKind::Gpt2,
+            "--gen-steps requires a decoder (gpt2-*) model"
+        );
+        anyhow::ensure!(
+            sc.framework == FrameworkKind::Centaur,
+            "--gen-steps requires the centaur framework (incremental KV-cache decode)"
+        );
+        let prompt_len = 4usize.min(sc.cfg.n_ctx.saturating_sub(gen_steps)).max(1);
+        anyhow::ensure!(prompt_len + gen_steps <= sc.cfg.n_ctx, "--gen-steps exceeds n_ctx");
+        // Provision decode-shape triples for every absorb of a request.
+        sc.decode_prefill_steps = prompt_len + gen_steps;
+        println!(
+            "serving {} generation requests ({} steps each) through {} ({} workers, {})",
+            n_req,
+            gen_steps,
+            sc.framework.name(),
+            sc.workers,
+            sc.profile.name
+        );
+        let coord = Coordinator::start(sc)?;
+        if let Some(pool) = coord.triple_pool() {
+            println!(
+                "offline phase done: {} triples pooled across {} shapes ({} correlated randomness)",
+                pool.pooled_total(),
+                pool.shapes_known(),
+                centaur::util::human_bytes(pool.offline_bytes())
+            );
+        }
+        let rxs: Vec<_> = (0..n_req)
+            .map(|i| {
+                let mut prompt = vec![centaur::data::CLS];
+                prompt.extend((1..prompt_len).map(|j| (4 + (i * 7 + j * 3) % 100) as u32));
+                coord.submit_generate(prompt, gen_steps)
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            loop {
+                match rx.recv().map_err(|_| anyhow::anyhow!("coordinator died"))?? {
+                    StreamEvent::Token { index, token, step_bytes, .. } => {
+                        if i == 0 {
+                            println!(
+                                "  req0 token[{index}] = {token}  ({} online this step)",
+                                centaur::util::human_bytes(step_bytes)
+                            );
+                        }
+                    }
+                    StreamEvent::Done(s) => {
+                        if i == 0 {
+                            let per_tok = s.decode_bytes / (s.tokens.len().max(1) as u64);
+                            println!(
+                                "  req0 done: prefill {} | decode {} ({} per token)",
+                                centaur::util::human_bytes(s.prefill_bytes),
+                                centaur::util::human_bytes(s.decode_bytes),
+                                centaur::util::human_bytes(per_tok)
+                            );
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        let snap = coord.shutdown();
+        println!("{}", snap.summary());
+        return Ok(());
+    }
 
     // requests from the matching task's test set when available
     let task = tag.split('-').next_back().unwrap_or("qnli").to_string();

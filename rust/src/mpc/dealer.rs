@@ -232,6 +232,18 @@ impl TriplePool {
         }
     }
 
+    /// Pre-register per-request demand for `shape` without a cold miss:
+    /// the refill machinery treats the accumulated count as one request's
+    /// consumption, exactly as if a probe run had missed `count` times.
+    /// Serving uses this to stock incremental-decode triple shapes (which a
+    /// full-inference probe never touches) before the first generation
+    /// request arrives — see `protocols::layer::decode_step_shapes`.
+    pub fn register_demand(&self, shape: TripleShape, count: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let sq = inner.shapes.entry(shape).or_default();
+        sq.demand += count;
+    }
+
     /// Generate one entry for the most depleted known shape (outside the
     /// lock). Returns `false` when every shape is at target — the refill
     /// thread sleeps on that.
@@ -505,6 +517,19 @@ mod tests {
             let _ = pool.take(shape);
         }
         assert_eq!(pool.fill_to_target(), 2, "target stays at demand x depth");
+    }
+
+    #[test]
+    fn registered_demand_prefills_without_a_probe_miss() {
+        // Decode-shape provisioning: register demand up front, fill, and
+        // the first take is already a hit — no cold miss on the serve path.
+        let pool = TriplePool::new(31, 1);
+        pool.register_demand(TripleShape::matmul(32, 1, 64), 2);
+        pool.register_demand(TripleShape::matmul(1, 32, 16), 4);
+        assert_eq!(pool.shapes_known(), 2);
+        assert_eq!(pool.fill_to_target(), 6);
+        assert!(matches!(pool.take(TripleShape::matmul(32, 1, 64)), Some(PoolItem::Mat(_))));
+        assert_eq!((pool.hits(), pool.misses()), (1, 0));
     }
 
     #[test]

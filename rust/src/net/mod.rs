@@ -225,6 +225,14 @@ impl CostLedger {
         OpClass::ALL.iter().map(|&c| self.class_time(c, p)).sum()
     }
 
+    /// `self` and `other` merged into a fresh ledger (phase-split
+    /// reporting: prefill + decode totals without mutating either phase).
+    pub fn merged(&self, other: &CostLedger) -> CostLedger {
+        let mut t = self.clone();
+        t.merge(other);
+        t
+    }
+
     /// Merge another ledger into this one.
     pub fn merge(&mut self, other: &CostLedger) {
         for i in 0..self.per_class.len() {

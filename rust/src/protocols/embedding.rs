@@ -56,6 +56,34 @@ pub fn pp_embedding(ctx: &mut ProtoCtx, pm: &PermutedModel, tokens: &[u32]) -> R
     )
 }
 
+/// Single-token embedding for incremental decoding: the same protocol as
+/// [`pp_embedding`] on one row, with the positional embedding taken at the
+/// token's sequence position `pos`. Charged to the Embedding class like the
+/// full lookup (input share `2·8·vocab` bytes + a `(1, d)` `Π_PPLN`).
+pub fn pp_embedding_at(ctx: &mut ProtoCtx, pm: &PermutedModel, token: u32, pos: usize) -> Result<Share> {
+    assert!(pos < pm.cfg.n_ctx, "position {pos} outside n_ctx {}", pm.cfg.n_ctx);
+    let onehot = one_hot_fx(&[token], pm.cfg.vocab);
+    let x_sh = ctx.mpc.input_share(&onehot, OpClass::Embedding);
+    let mut x_m = ctx.scalmul_rhs(&x_sh, &pm.emb_word, OpClass::Embedding);
+    // P0 adds the permuted positional row for this position to its share.
+    let pos_row = {
+        let mut p = RingTensor::zeros(1, pm.cfg.d);
+        p.row_mut(0).copy_from_slice(pm.emb_pos.row(pos));
+        p
+    };
+    x_m = ctx.mpc.add_plain(&x_m, &pos_row);
+    pp_layernorm(
+        ctx.mpc,
+        ctx.backend,
+        ctx.views,
+        &x_m,
+        &pm.emb_ln_g,
+        &pm.emb_ln_b,
+        OpClass::Embedding,
+        &format!("X_M pi (embedding) pos{pos}"),
+    )
+}
+
 /// Plaintext reference of the embedding output (unpermuted), for tests.
 pub fn embedding_reference(
     pm: &PermutedModel,
@@ -135,5 +163,36 @@ mod tests {
     #[test]
     fn input_share_cost_formula() {
         assert_eq!(input_share_bytes(128, 30522), 2 * 8 * 128 * 30522);
+    }
+
+    #[test]
+    fn single_token_embedding_matches_full_row() {
+        // pp_embedding_at(token, pos) must equal row `pos` of the full
+        // pp_embedding over a sequence whose `pos`-th token is `token`.
+        let cfg = ModelConfig::gpt2_tiny();
+        let w = ModelWeights::random(&cfg, 45);
+        let mut rng = Rng::new(46);
+        let perms = PermSet::random(&cfg, &mut rng);
+        let pm = PermutedModel::build(&cfg, &w, perms.clone());
+        let tokens: Vec<u32> = (0..cfg.n_ctx as u32).map(|i| (i * 7 + 5) % cfg.vocab as u32).collect();
+
+        let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 47);
+        let mut backend = NativeBackend::new();
+        let mut views = Views::new(false);
+        let full = {
+            let mut ctx =
+                ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+            let out = pp_embedding(&mut ctx, &pm, &tokens).unwrap();
+            fixed::decode_tensor(&out.reconstruct())
+        };
+        for pos in [0usize, 1, cfg.n_ctx - 1] {
+            let mut ctx =
+                ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+            let out = pp_embedding_at(&mut ctx, &pm, tokens[pos], pos).unwrap();
+            let got = fixed::decode_tensor(&out.reconstruct());
+            let want = crate::tensor::FloatTensor::from_vec(1, cfg.d, full.row(pos).to_vec());
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 0.02, "embedding row {pos} diff {diff}");
+        }
     }
 }

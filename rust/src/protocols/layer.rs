@@ -20,7 +20,7 @@
 use crate::engine::views::Views;
 use crate::fixed;
 use crate::model::{ModelConfig, PermLayer};
-use crate::mpc::{Mpc, Share};
+use crate::mpc::{Mpc, Share, TripleShape};
 use crate::net::OpClass;
 use crate::runtime::Backend;
 use crate::tensor::RingTensor;
@@ -106,6 +106,213 @@ pub fn stack_rows(blocks: &[Share]) -> Share {
 pub fn causal_mask_fx(h: usize, n: usize) -> RingTensor {
     let neg = fixed::encode(MASK_NEG);
     RingTensor::from_fn(h * n, n, |r, c| if c > (r % n) { neg } else { 0 })
+}
+
+/// Single-query causal mask for the incremental decode step at position
+/// `pos`, stacked per head: `(h, n)` with every column `> pos` masked.
+/// Columns `> pos` cover both future positions and the not-yet-written
+/// (zero-share) tail of the KV cache, so masked columns end up with
+/// softmax weight exactly 0 — the same as the padded full-recompute path.
+pub fn causal_mask_row_fx(h: usize, n: usize, pos: usize) -> RingTensor {
+    let neg = fixed::encode(MASK_NEG);
+    RingTensor::from_fn(h, n, |_, c| if c > pos { neg } else { 0 })
+}
+
+/// Secret-shared per-layer KV cache for incremental private decoding.
+///
+/// Two fixed-shape `(n_ctx, d)` sharings are kept **as shares for the whole
+/// session** — neither is ever reconstructed, so P1 still only observes
+/// π-permuted plaintext (the same `Π_PPSM`/`Π_PPLN`/`Π_PPGeLU` openings as
+/// the full forward pass, now on single-token rows):
+///
+/// * `[K]` — key rows in natural sequence order; row `t` is written locally
+///   by each party when token `t` arrives (a share append costs nothing).
+/// * `[Ṽ] = [π₁ᵀ V]` — the value stream pre-permuted by the session's fixed
+///   sequence permutation, so the `π₁` riding on the softmax output cancels
+///   against it in `Π_MatMul([O2π₁], [Ṽ])` exactly as in the full layer.
+///   Appending `v_t` updates it with one outer-product Beaver matmul
+///   `[π₁ᵀ e_t] (n×1) @ [v_t] (1×d)` — `π₁ᵀ e_t` is just a column slice of
+///   the already-dealt shared permutation matrix, so the mapping `t → π₁(t)`
+///   stays secret from both servers.
+///
+/// Unwritten rows hold zero shares; the decode-step mask gives those
+/// columns softmax weight exactly 0, which keeps incremental outputs
+/// token-for-token aligned with the padded full-recompute path.
+pub struct LayerKvCache {
+    k: Share,
+    v_tilde: Share,
+    len: usize,
+}
+
+impl LayerKvCache {
+    /// Empty cache for a layer of width `d` and capacity `n_ctx` tokens.
+    pub fn new(n_ctx: usize, d: usize) -> Self {
+        LayerKvCache {
+            k: Share { s0: RingTensor::zeros(n_ctx, d), s1: RingTensor::zeros(n_ctx, d) },
+            v_tilde: Share { s0: RingTensor::zeros(n_ctx, d), s1: RingTensor::zeros(n_ctx, d) },
+            len: 0,
+        }
+    }
+
+    /// Tokens cached so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether no token has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum number of cacheable tokens (`n_ctx`).
+    pub fn capacity(&self) -> usize {
+        self.k.rows()
+    }
+
+    /// Append the `(1, d)` sharings `[k_t]`, `[v_t]` at position `pos`:
+    /// local row write into `[K]`, one outer-product `Π_MatMul` into `[Ṽ]`.
+    pub fn append(&mut self, ctx: &mut ProtoCtx, pi1_t_sh: &Share, k_new: &Share, v_new: &Share, pos: usize) {
+        assert_eq!(pos, self.len, "KV cache appends must be sequential");
+        assert!(pos < self.capacity(), "KV cache full");
+        self.k.s0.row_mut(pos).copy_from_slice(k_new.s0.row(0));
+        self.k.s1.row_mut(pos).copy_from_slice(k_new.s1.row(0));
+        // [Ṽ] += [π₁ᵀ e_pos] @ [v_t] — the column slice keeps π₁ secret.
+        let col = pi1_t_sh.col_block(pos, pos + 1);
+        let upd = ctx.matmul(&col, v_new, OpClass::Linear);
+        self.v_tilde = ctx.mpc.add(&self.v_tilde, &upd);
+        self.len = pos + 1;
+    }
+}
+
+/// The Beaver-triple shape profile one incremental decode step consumes
+/// (per model, all layers), with per-step multiplicities — the keys a
+/// serving [`crate::mpc::TriplePool`] pre-registers so decode-shape
+/// triples are stocked before the first generation request arrives.
+///
+/// Per layer and step: one `(n,1,d)` Ṽ outer-product update, `h` score
+/// products `(1,dh,n)`, one `Π_PPP` re-permutation `(h,n,n)`, and `h`
+/// value products `(1,n,dh)`.
+pub fn decode_step_shapes(cfg: &ModelConfig) -> Vec<(TripleShape, u64)> {
+    let n = cfg.n_ctx;
+    let (d, h, dh) = (cfg.d, cfg.h, cfg.dh());
+    let l = cfg.layers as u64;
+    vec![
+        (TripleShape::matmul(n, 1, d), l),
+        (TripleShape::matmul(1, dh, n), l * h as u64),
+        (TripleShape::matmul(h, n, n), l),
+        (TripleShape::matmul(1, n, dh), l * h as u64),
+    ]
+}
+
+/// Single-token variant of [`transformer_layer`] for incremental decoding:
+/// `[x_pi]` is the current token's `(1, d)` activation row at position
+/// `pos`; attention attends over the cached prefix held in `kv` (extended
+/// with this token's k/v first). Protocol sequence and openings match the
+/// full layer — every P1 observation is a `(h, n)`, `(1, d)` or `(1, k)`
+/// permuted row, never a cache tensor. Returns the token's `(1, d)` output.
+#[allow(clippy::too_many_arguments)]
+pub fn transformer_layer_step(
+    ctx: &mut ProtoCtx,
+    cfg: &ModelConfig,
+    pl: &PermLayer,
+    pi1_sh: &Share,
+    pi1_t_sh: &Share,
+    x_pi: &Share,
+    kv: &mut LayerKvCache,
+    pos: usize,
+    layer_idx: usize,
+) -> Result<Share> {
+    let n = kv.capacity();
+    let dh = cfg.dh();
+    let scale = fixed::encode(1.0 / (dh as f64).sqrt());
+
+    // 1. q/k/v rows for this token (Π_ScalMul + bias, 0 comm).
+    let q = {
+        let s = ctx.scalmul_nt(x_pi, &pl.wq, OpClass::Linear);
+        ctx.mpc.add_plain_row(&s, &pl.bq)
+    };
+    let k = {
+        let s = ctx.scalmul_nt(x_pi, &pl.wk, OpClass::Linear);
+        ctx.mpc.add_plain_row(&s, &pl.bk)
+    };
+    let v = {
+        let s = ctx.scalmul_nt(x_pi, &pl.wv, OpClass::Linear);
+        ctx.mpc.add_plain_row(&s, &pl.bv)
+    };
+
+    // 2. Extend the secret-shared cache ([K] row write + [Ṽ] PPP update).
+    kv.append(ctx, pi1_t_sh, &k, &v, pos);
+
+    // 3. Scores against the whole cached prefix, one batched round:
+    //    q_h (1×dh) @ K_hᵀ (dh×n) → (1×n) per head.
+    let kt: Vec<Share> = (0..cfg.h).map(|h| kv.k.col_block(h * dh, (h + 1) * dh).transpose()).collect();
+    let qh: Vec<Share> = (0..cfg.h).map(|h| q.col_block(h * dh, (h + 1) * dh)).collect();
+    let pairs: Vec<(&Share, &Share)> = qh.iter().zip(kt.iter()).collect();
+    let o1_heads = ctx.matmul_batch(&pairs, OpClass::Linear);
+    let mut o1 = stack_rows(&o1_heads); // (h, n)
+    o1 = ctx.mpc.scale_fx(&o1, scale);
+    o1 = ctx.mpc.add_plain(&o1, &causal_mask_row_fx(cfg.h, n, pos));
+
+    // 4. Π_PPP then Π_PPSM: P1 opens one π₁-permuted score row per head.
+    let o1_p1 = ctx.matmul(&o1, pi1_sh, OpClass::Linear);
+    let o2_p1 = pp_softmax(
+        ctx.mpc,
+        ctx.backend,
+        ctx.views,
+        &o1_p1,
+        &format!("decode O1pi1 layer{layer_idx} pos{pos}"),
+    )?;
+
+    // 5. Attend over the cached [Ṽ]: the π₁ in O2π₁ cancels against π₁ᵀV.
+    let o2h: Vec<Share> = (0..cfg.h).map(|h| o2_p1.row_block(h, h + 1)).collect();
+    let vth: Vec<Share> = (0..cfg.h).map(|h| kv.v_tilde.col_block(h * dh, (h + 1) * dh)).collect();
+    let pairs3: Vec<(&Share, &Share)> = o2h.iter().zip(vth.iter()).collect();
+    let o3_heads = ctx.matmul_batch(&pairs3, OpClass::Linear);
+    let o3 = Share::concat_cols(&o3_heads); // (1, d)
+
+    // 6-12. Output projection, residuals, LayerNorms, FFN on (1, d) rows —
+    // identical protocols to the full layer.
+    let o4_pi = {
+        let s = ctx.scalmul_nt(&o3, &pl.wo, OpClass::Linear);
+        ctx.mpc.add_plain_row(&s, &pl.bo)
+    };
+    let res1 = ctx.mpc.add(&o4_pi, x_pi);
+    let l1_pi = pp_layernorm(
+        ctx.mpc,
+        ctx.backend,
+        ctx.views,
+        &res1,
+        &pl.ln1_g,
+        &pl.ln1_b,
+        OpClass::LayerNorm,
+        &format!("decode O4+X pi layer{layer_idx} pos{pos}"),
+    )?;
+    let o5_pi2 = {
+        let s = ctx.scalmul_nt(&l1_pi, &pl.w1, OpClass::Linear);
+        ctx.mpc.add_plain_row(&s, &pl.b1)
+    };
+    let g_pi2 = pp_gelu(
+        ctx.mpc,
+        ctx.backend,
+        ctx.views,
+        &o5_pi2,
+        &format!("decode O5pi2 layer{layer_idx} pos{pos}"),
+    )?;
+    let o6_pi = {
+        let s = ctx.scalmul_nt(&g_pi2, &pl.w2, OpClass::Linear);
+        ctx.mpc.add_plain_row(&s, &pl.b2)
+    };
+    let res2 = ctx.mpc.add(&o6_pi, &l1_pi);
+    pp_layernorm(
+        ctx.mpc,
+        ctx.backend,
+        ctx.views,
+        &res2,
+        &pl.ln2_g,
+        &pl.ln2_b,
+        OpClass::LayerNorm,
+        &format!("decode O6+L1 pi layer{layer_idx} pos{pos}"),
+    )
 }
 
 /// Multi-head attention + FFN for one layer: `[Xπ] → [L2π]`.
@@ -314,6 +521,114 @@ mod tests {
         assert_eq!(m.get(0, 3), fixed::encode(MASK_NEG));
         assert_eq!(m.get(3, 3), 0); // row 3 of head 0 sees everything
         assert_eq!(m.get(4, 1), fixed::encode(MASK_NEG)); // head 1, row 0
+    }
+
+    #[test]
+    fn single_token_step_matches_full_layer_row() {
+        // Drive the same activations through the full causal layer and the
+        // incremental KV-cache path; the step output at each position must
+        // match the corresponding row of the full layer output.
+        let mut cfg = ModelConfig::gpt2_tiny();
+        cfg.layers = 1;
+        let w = ModelWeights::random(&cfg, 131);
+        let mut rng = Rng::new(132);
+        let perms = PermSet::random(&cfg, &mut rng);
+        let pm = PermutedModel::build(&cfg, &w, perms.clone());
+        let n = cfg.n_ctx;
+
+        let x = FloatTensor::from_fn(n, cfg.d, |r, c| ((r * 17 + c * 5) % 23) as f32 * 0.07 - 0.7);
+        let x_pi = perms.pi.apply_cols(&x);
+
+        let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 133);
+        let mut backend = NativeBackend::new();
+        let mut views = Views::new(false);
+        let pi1_sh = ppp::share_perm(&mut mpc, &perms.pi1, OpClass::Linear);
+        let pi1_t_sh = ppp::share_perm_t(&mut mpc, &perms.pi1, OpClass::Linear);
+
+        // Full causal layer over all n positions.
+        let full_out = {
+            let x_sh = mpc.share_local(&fixed::encode_tensor(&x_pi));
+            let mask = causal_mask_fx(cfg.h, n);
+            let mut ctx =
+                ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+            let out = transformer_layer(
+                &mut ctx, &cfg, &pm.layers[0], &pi1_sh, &pi1_t_sh, &x_sh, Some(&mask), 0,
+            )
+            .unwrap();
+            fixed::decode_tensor(&out.reconstruct())
+        };
+
+        // Incremental: one token at a time through the shared KV cache.
+        let mut kv = LayerKvCache::new(n, cfg.d);
+        for t in 0..n {
+            let row = FloatTensor::from_vec(1, cfg.d, x_pi.row(t).to_vec());
+            let row_sh = mpc.share_local(&fixed::encode_tensor(&row));
+            let mut ctx =
+                ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+            let out = transformer_layer_step(
+                &mut ctx, &cfg, &pm.layers[0], &pi1_sh, &pi1_t_sh, &row_sh, &mut kv, t, 0,
+            )
+            .unwrap();
+            let got = fixed::decode_tensor(&out.reconstruct());
+            let want = FloatTensor::from_vec(1, cfg.d, full_out.row(t).to_vec());
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 0.05, "incremental row {t} diverges from full layer: diff {diff}");
+        }
+        assert_eq!(kv.len(), n);
+    }
+
+    #[test]
+    fn kv_append_is_cheap_and_stays_shared() {
+        let cfg = ModelConfig::gpt2_tiny();
+        let mut rng = Rng::new(141);
+        let perms = PermSet::random(&cfg, &mut rng);
+        let n = cfg.n_ctx;
+        let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 142);
+        let mut backend = NativeBackend::new();
+        let mut views = Views::new(true);
+        let pi1_t_sh = ppp::share_perm_t(&mut mpc, &perms.pi1, OpClass::Linear);
+        let before = mpc.net.ledger.bytes_total();
+        let k_new = mpc.share_local(&RingTensor::from_fn(1, cfg.d, |_, c| c as i64));
+        let v_new = mpc.share_local(&RingTensor::from_fn(1, cfg.d, |_, c| 3 * c as i64));
+        let mut kv = LayerKvCache::new(n, cfg.d);
+        {
+            let mut ctx =
+                ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+            kv.append(&mut ctx, &pi1_t_sh, &k_new, &v_new, 0);
+        }
+        // One outer-product Beaver matmul: 2·8·(n·1 + 1·d) bytes, 1 round.
+        let appended = mpc.net.ledger.bytes_total() - before;
+        assert_eq!(appended, 2 * 8 * (n as u64 + cfg.d as u64));
+        // The cache never opens anything at P1: no new views recorded.
+        assert!(views.p1.is_empty(), "KV append must not reveal plaintext to P1");
+        assert_eq!(kv.len(), 1);
+        assert!(!kv.is_empty());
+        assert_eq!(kv.capacity(), n);
+    }
+
+    #[test]
+    fn decode_shape_profile_covers_all_step_products() {
+        let cfg = ModelConfig::gpt2_tiny();
+        let shapes = decode_step_shapes(&cfg);
+        assert_eq!(shapes.len(), 4);
+        let total: u64 = shapes.iter().map(|(_, c)| c).sum();
+        // per layer: 1 Ṽ update + h score products + 1 PPP + h value products
+        assert_eq!(total, (cfg.layers * (2 + 2 * cfg.h)) as u64);
+        assert!(shapes.iter().any(|(s, c)| *s == TripleShape::matmul(cfg.n_ctx, 1, cfg.d)
+            && *c == cfg.layers as u64));
+        assert!(shapes.iter().any(|(s, _)| *s == TripleShape::matmul(cfg.h, cfg.n_ctx, cfg.n_ctx)));
+    }
+
+    #[test]
+    fn causal_mask_row_masks_strict_future() {
+        let m = causal_mask_row_fx(2, 8, 3);
+        assert_eq!(m.shape(), (2, 8));
+        for h in 0..2 {
+            for c in 0..8 {
+                let want = if c > 3 { fixed::encode(MASK_NEG) } else { 0 };
+                assert_eq!(m.get(h, c), want, "head {h} col {c}");
+            }
+        }
     }
 
     #[test]

@@ -1,9 +1,10 @@
-//! End-to-end pipeline tests over the build artifacts (gated: they skip
-//! with a notice when `make artifacts` has not run).
+//! End-to-end pipeline tests. The artifact-driven checks are gated (they
+//! skip with a notice when `make artifacts` has not run); the incremental
+//! decode parity suite below runs everywhere on random weights.
 
 use centaur::coordinator::{Coordinator, ServerConfig};
 use centaur::data::{artifacts_dir, AttackCorpora, LmData, TaskData, Vocab};
-use centaur::model::{ModelWeights, Variant};
+use centaur::model::{plaintext, ModelConfig, ModelWeights, Variant};
 use centaur::report::metrics;
 
 fn ready() -> bool {
@@ -89,6 +90,90 @@ fn attack_corpora_and_vocab_consistent() {
         let text = vocab.decode(s);
         assert!(text.split(' ').count() >= 5, "private sentence too short: {text}");
     }
+}
+
+/// Decode parity (no artifacts needed): the incremental KV-cache path, the
+/// full-recompute path, and the plaintext greedy reference must emit the
+/// same token at every step, across every network profile and several
+/// seeds. The comparison is teacher-forced on the plaintext rollout so a
+/// single step can be judged in isolation, and a step is only asserted
+/// when its plaintext top-2 margin exceeds the fixed-point noise bound
+/// (non-decisive argmaxes are numerically meaningless to compare; margins
+/// are almost always far above the bound).
+#[test]
+fn incremental_decode_parity_across_profiles_and_seeds() {
+    use centaur::data::{greedy_regular_token, NUM_SPECIAL_TOKENS};
+    use centaur::engine::decoder::DecoderSession;
+    use centaur::engine::CentaurEngine;
+    use centaur::net::NetworkProfile;
+    use centaur::util::prop::check;
+
+    const STEPS: usize = 3;
+    // Fixed-point noise on tiny-model logits is ~1e-3; 0.03 is 30x that.
+    const MARGIN: f32 = 0.03;
+
+    check("incremental == full recompute == plaintext greedy", 3, |g| {
+        let cfg = ModelConfig::gpt2_tiny();
+        let seed = 0xD3C0DE ^ (g.case as u64).wrapping_mul(7919);
+        let w = ModelWeights::random(&cfg, seed);
+        let prompt: Vec<u32> =
+            (0..3).map(|_| (g.below(cfg.vocab - NUM_SPECIAL_TOKENS) + NUM_SPECIAL_TOKENS) as u32).collect();
+
+        // Plaintext greedy rollout + per-step decisiveness.
+        let mut seq = prompt.clone();
+        let mut expected: Vec<(u32, bool)> = Vec::new();
+        for _ in 0..STEPS {
+            let mut padded = seq.clone();
+            padded.resize(cfg.n_ctx, 0);
+            let logits = plaintext::forward(&cfg, &w, &padded, Variant::Exact);
+            let row = logits.row(seq.len() - 1);
+            let tok = greedy_regular_token(row);
+            let (mut best, mut second) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+            for &v in row.iter().skip(NUM_SPECIAL_TOKENS) {
+                if v > best {
+                    second = best;
+                    best = v;
+                } else if v > second {
+                    second = v;
+                }
+            }
+            expected.push((tok, best - second >= MARGIN));
+            seq.push(tok);
+        }
+        assert_eq!(seq.len(), prompt.len() + STEPS);
+
+        for name in NetworkProfile::ALL_NAMES {
+            let profile = NetworkProfile::by_name(name).unwrap();
+            let mut e_inc = CentaurEngine::new(&cfg, &w, profile, seed ^ 0xA).unwrap();
+            let mut e_full = CentaurEngine::new(&cfg, &w, profile, seed ^ 0xB).unwrap();
+            let inc_bytes;
+            let mut full_bytes = 0u64;
+            {
+                let mut sess = DecoderSession::new(&mut e_inc, &prompt).unwrap();
+                for (s, &(want, decisive)) in expected.iter().enumerate() {
+                    let inc_tok = greedy_regular_token(sess.logits().row(0));
+                    let prefix_len = prompt.len() + s;
+                    let mut padded = seq[..prefix_len].to_vec();
+                    padded.resize(cfg.n_ctx, 0);
+                    let full_out = e_full.infer(&padded).unwrap();
+                    let full_tok = greedy_regular_token(full_out.logits.row(prefix_len - 1));
+                    full_bytes += full_out.stats.bytes_total();
+                    if decisive {
+                        assert_eq!(inc_tok, want, "incremental != plaintext at step {s} ({name})");
+                        assert_eq!(full_tok, want, "full recompute != plaintext at step {s} ({name})");
+                    }
+                    // Teacher-force the plaintext token into the session.
+                    sess.absorb(want).unwrap();
+                }
+                inc_bytes = sess.total_cost().bytes_total();
+            }
+            assert!(e_inc.leaks().is_empty(), "decode session leaked ({name})");
+            assert!(
+                full_bytes > inc_bytes,
+                "incremental must move fewer bytes ({name}): {full_bytes} vs {inc_bytes}"
+            );
+        }
+    });
 }
 
 #[test]

@@ -91,6 +91,62 @@ fn identity_permutation_injection_is_detected_as_leak_risk() {
 }
 
 #[test]
+fn kv_cache_decode_is_leak_free_and_never_opens_the_cache() {
+    // A cached multi-step generate must satisfy the same view discipline as
+    // a one-shot inference: P1 only ever reconstructs permuted single-token
+    // rows, and the secret-shared `[K]`/`[Ṽ]` cache tensors never appear in
+    // its view in any form.
+    let cfg = ModelConfig::gpt2_tiny();
+    let w = ModelWeights::random(&cfg, 61);
+    let mut eng = CentaurEngine::with_backend(
+        &cfg,
+        &w,
+        Box::new(NativeBackend::new()),
+        EngineOptions { record_views: true, seed: 62, ..Default::default() },
+    )
+    .unwrap();
+    let prompt = [7u32, 11, 13];
+    let steps = 4usize;
+    let (gen, cost) = eng.generate(&prompt, steps).unwrap();
+    assert_eq!(gen.len(), steps);
+    assert!(cost.bytes_total() > 0);
+
+    // 1. No unpermuted plaintext anywhere across the whole cached session.
+    assert!(eng.leaks().is_empty(), "leaks: {:?}", eng.leaks());
+    for v in &eng.views.p1 {
+        assert_ne!(v.tag, PermTag::None, "view {} untagged", v.label);
+    }
+
+    // 2. Exactly the expected openings, per absorbed token: embedding LN +
+    //    per layer (softmax, LN, GeLU, LN) + final LN — nothing extra that
+    //    could carry cache state.
+    let absorbs = prompt.len() + steps;
+    assert_eq!(eng.views.p1.len(), absorbs * (2 + 4 * cfg.layers));
+
+    // 3. No observation ever has the `(n_ctx, d)` KV-cache shape, and every
+    //    decode view is a single-token row: `(h, n_ctx)` scores or `(1, ·)`
+    //    activation rows.
+    for v in &eng.views.p1 {
+        assert!(
+            (v.rows, v.cols) != (cfg.n_ctx, cfg.d),
+            "view '{}' has the KV-cache shape {}x{}",
+            v.label,
+            v.rows,
+            v.cols
+        );
+        assert!(v.rows == 1 || v.rows == cfg.h, "view '{}' is not a single-token row", v.label);
+    }
+
+    // 4. Decode softmax openings carry the π₁ tag on (h, n_ctx) score rows.
+    let sm = eng.views.find("decode O1pi1 layer0 pos0").expect("decode softmax view");
+    assert_eq!(sm.tag, PermTag::Pi1);
+    assert_eq!((sm.rows, sm.cols), (cfg.h, cfg.n_ctx));
+    // and the last step's opening is present too (cache grew to the end)
+    let last = format!("decode O1pi1 layer{} pos{}", cfg.layers - 1, absorbs - 1);
+    assert!(eng.views.find(&last).is_some(), "missing view {last}");
+}
+
+#[test]
 fn permonly_leak_detector_fires() {
     let cfg = ModelConfig::gpt2_tiny();
     let w = ModelWeights::random(&cfg, 51);
