@@ -5,72 +5,117 @@
 
 use centaur::baselines::FrameworkKind;
 use centaur::engine::decoder::DecoderSession;
-use centaur::engine::CentaurEngine;
+use centaur::engine::{CentaurEngine, EngineOptions};
 use centaur::model::{ModelConfig, ModelWeights};
 use centaur::net::NetworkProfile;
 use centaur::report::measure_framework;
+use centaur::runtime::NativeBackend;
 use centaur::util::bench::Bencher;
 use centaur::util::{human_bytes, human_secs};
 
-/// Per-token decode cost: the pre-KV-cache full-recompute path vs warm
-/// incremental decode (ISSUE acceptance: ≥3× less comm per token for an
-/// 8-step generation at `n_ctx = 64`).
+/// Per-token decode cost, three ways: the pre-KV-cache full-recompute
+/// path, the PR 2 plain per-step KV path, and warm correlated decode.
+/// Acceptance gates (byte charges are deterministic, so both are exact):
+/// full ≥ 3× plain per-step, and plain per-step ≥ 1.8× correlated — the
+/// fixed-operand warm-step comm reduction threshold CI smokes on.
 fn bench_decode(b: &mut Bencher) {
     let cfg = ModelConfig::gpt2_tiny().with_n_ctx(64);
     let w = ModelWeights::random(&cfg, 7);
     let prompt: Vec<u32> = vec![7, 11, 13, 17];
     let steps = 8usize;
 
-    b.section("gpt2-tiny @ n_ctx=64 — per-token decode: full recompute vs KV cache");
+    b.section("gpt2-tiny @ n_ctx=64 — per-token decode: full recompute vs KV cache vs correlations");
     let mut full_cost = None;
     b.bench("full recompute x8 tokens", || {
         let mut e = CentaurEngine::new(&cfg, &w, NetworkProfile::lan(), 8).unwrap();
         let (_, cost) = e.generate_full_recompute(&prompt, steps).unwrap();
         full_cost = Some(cost);
     });
-    let mut split = None;
-    b.bench("incremental decode x8 tokens", || {
-        let mut e = CentaurEngine::new(&cfg, &w, NetworkProfile::lan(), 8).unwrap();
-        let mut sess = DecoderSession::new(&mut e, &prompt).unwrap();
-        for _ in 0..steps {
-            sess.step_greedy().unwrap();
-        }
-        split = Some((sess.prefill_cost().clone(), sess.decode_cost().clone()));
-    });
+    let run_session = |label: &str, decode_correlations: bool, b: &mut Bencher| {
+        let mut out = None;
+        b.bench(label, || {
+            let mut e = CentaurEngine::with_backend(
+                &cfg,
+                &w,
+                Box::new(NativeBackend::new()),
+                EngineOptions {
+                    profile: NetworkProfile::lan(),
+                    seed: 8,
+                    decode_correlations,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let mut sess = DecoderSession::new(&mut e, &prompt).unwrap();
+            for _ in 0..steps {
+                sess.step_greedy().unwrap();
+            }
+            out = Some((
+                sess.setup_cost().clone(),
+                sess.prefill_cost().clone(),
+                sess.decode_cost().clone(),
+            ));
+        });
+        out.unwrap()
+    };
+    let (_, plain_prefill, plain_decode) = run_session("plain KV decode x8 tokens (PR 2)", false, b);
+    let (corr_setup, corr_prefill, corr_decode) =
+        run_session("correlated KV decode x8 tokens", true, b);
+
     let full = full_cost.unwrap();
-    let (prefill, decode) = split.unwrap();
     let full_tok = full.bytes_total() / steps as u64;
-    let warm_tok = decode.bytes_total() / steps as u64;
+    let plain_tok = plain_decode.bytes_total() / steps as u64;
+    let corr_tok = corr_decode.bytes_total() / steps as u64;
     println!(
-        "    -> full recompute : {}/token | LAN {} WAN1 {} WAN2 {}",
+        "    -> full recompute  : {}/token | LAN {} WAN1 {} WAN2 {}",
         human_bytes(full_tok),
         human_secs(full.total_time(&NetworkProfile::lan()) / steps as f64),
         human_secs(full.total_time(&NetworkProfile::wan1()) / steps as f64),
         human_secs(full.total_time(&NetworkProfile::wan2()) / steps as f64),
     );
     println!(
-        "    -> warm KV decode : {}/token | LAN {} WAN1 {} WAN2 {} | cold prefill {} ({} tokens)",
-        human_bytes(warm_tok),
-        human_secs(decode.total_time(&NetworkProfile::lan()) / steps as f64),
-        human_secs(decode.total_time(&NetworkProfile::wan1()) / steps as f64),
-        human_secs(decode.total_time(&NetworkProfile::wan2()) / steps as f64),
-        human_bytes(prefill.bytes_total()),
+        "    -> plain KV decode : {}/token | LAN {} WAN1 {} WAN2 {} | cold prefill {} ({} tokens)",
+        human_bytes(plain_tok),
+        human_secs(plain_decode.total_time(&NetworkProfile::lan()) / steps as f64),
+        human_secs(plain_decode.total_time(&NetworkProfile::wan1()) / steps as f64),
+        human_secs(plain_decode.total_time(&NetworkProfile::wan2()) / steps as f64),
+        human_bytes(plain_prefill.bytes_total()),
         prompt.len(),
     );
     println!(
-        "    -> per-token comm ratio: {:.2}x (acceptance floor: 3x)",
-        full_tok as f64 / warm_tok as f64
+        "    -> corr KV decode  : {}/token | LAN {} WAN1 {} WAN2 {} | cold prefill {} | corr setup {} (once/session)",
+        human_bytes(corr_tok),
+        human_secs(corr_decode.total_time(&NetworkProfile::lan()) / steps as f64),
+        human_secs(corr_decode.total_time(&NetworkProfile::wan1()) / steps as f64),
+        human_secs(corr_decode.total_time(&NetworkProfile::wan2()) / steps as f64),
+        human_bytes(corr_prefill.bytes_total()),
+        human_bytes(corr_setup.bytes_total()),
     );
-    assert!(full_tok >= 3 * warm_tok, "KV-cache decode must be >=3x cheaper per token");
+    println!(
+        "    -> per-token comm ratios: full/plain {:.2}x (floor 3x) | plain/corr {:.2}x (floor 1.8x) | full/corr {:.2}x",
+        full_tok as f64 / plain_tok as f64,
+        plain_tok as f64 / corr_tok as f64,
+        full_tok as f64 / corr_tok as f64,
+    );
+    assert!(full_tok >= 3 * plain_tok, "KV-cache decode must be >=3x cheaper per token");
+    assert!(
+        plain_tok * 10 >= corr_tok * 18,
+        "fixed-operand correlations must cut warm-step comm >=1.8x: plain {plain_tok} B vs corr {corr_tok} B"
+    );
 }
 
 fn main() {
     let mut b = Bencher::new();
+    bench_decode(&mut b);
+    // CI smoke mode: assert the decode comm-reduction gates and stop —
+    // the framework sweep below is the long part of this bench.
+    if std::env::var("CENTAUR_BENCH_DECODE_ONLY").is_ok() {
+        println!("CENTAUR_BENCH_DECODE_ONLY set: decode gates passed, skipping framework sweep");
+        return;
+    }
     let quick = std::env::var("CENTAUR_BENCH_QUICK").is_ok();
     let models: Vec<&str> =
         if quick { vec!["bert-tiny"] } else { vec!["bert-tiny", "bert-base", "gpt2-base"] };
-
-    bench_decode(&mut b);
 
     for model in models {
         let cfg = ModelConfig::by_name(model).unwrap();

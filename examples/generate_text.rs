@@ -72,7 +72,8 @@ fn main() -> centaur::Result<()> {
 
     let per_tok = out.decode.bytes_total() / steps.max(1) as u64;
     println!(
-        "\ncold prefill ({} tokens): {} | warm decode ({} tokens): {} ({} per token)",
+        "\ncorr setup: {} | cold prefill ({} tokens): {} | warm decode ({} tokens): {} ({} per token)",
+        human_bytes(out.setup.bytes_total()),
         prompt.len(),
         human_bytes(out.prefill.bytes_total()),
         steps,

@@ -90,7 +90,7 @@ fn permuted_observations(
         cfg,
         w,
         Box::new(NativeBackend::new()),
-        EngineOptions { profile: NetworkProfile::lan(), seed, record_views: true, fast_sim: true, triple_pool: None },
+        EngineOptions { profile: NetworkProfile::lan(), seed, record_views: true, fast_sim: true, ..Default::default() },
     )?;
     let mut out: BTreeMap<TargetOp, Vec<FloatTensor>> = BTreeMap::new();
     for sent in sentences {

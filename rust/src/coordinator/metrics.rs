@@ -19,6 +19,8 @@ pub struct Metrics {
     pub generations: u64,
     /// Tokens produced by generation requests.
     pub tokens_generated: u64,
+    /// One-time correlation-setup bytes across generation requests.
+    pub corr_setup_bytes: u64,
     /// Online bytes of the cold-prefill phases (prompt absorption).
     pub prefill_bytes: u64,
     /// Online bytes of the warm-decode phases (generated tokens).
@@ -38,6 +40,7 @@ impl Metrics {
             rounds_total: 0,
             generations: 0,
             tokens_generated: 0,
+            corr_setup_bytes: 0,
             prefill_bytes: 0,
             decode_bytes: 0,
         }
@@ -52,21 +55,23 @@ impl Metrics {
         self.rounds_total += rounds;
     }
 
-    /// Record one completed generation request with its cold-prefill /
-    /// warm-decode communication split.
+    /// Record one completed generation request with its correlation-setup /
+    /// cold-prefill / warm-decode communication split.
     #[allow(clippy::too_many_arguments)]
     pub fn record_generate(
         &mut self,
         latency: Duration,
         service: Duration,
         tokens: u64,
+        setup_bytes: u64,
         prefill_bytes: u64,
         decode_bytes: u64,
         rounds: u64,
     ) {
-        self.record(latency, service, prefill_bytes + decode_bytes, rounds);
+        self.record(latency, service, setup_bytes + prefill_bytes + decode_bytes, rounds);
         self.generations += 1;
         self.tokens_generated += tokens;
+        self.corr_setup_bytes += setup_bytes;
         self.prefill_bytes += prefill_bytes;
         self.decode_bytes += decode_bytes;
     }
@@ -101,6 +106,7 @@ impl Metrics {
             rounds_total: self.rounds_total,
             generations: self.generations,
             tokens_generated: self.tokens_generated,
+            corr_setup_bytes: self.corr_setup_bytes,
             prefill_bytes: self.prefill_bytes,
             decode_bytes: self.decode_bytes,
             elapsed,
@@ -143,6 +149,9 @@ pub struct MetricsSnapshot {
     pub generations: u64,
     /// Tokens produced by generation requests.
     pub tokens_generated: u64,
+    /// One-time correlation-setup communication across generation requests
+    /// (fixed-operand mask openings; 0 with correlations disabled).
+    pub corr_setup_bytes: u64,
     /// Cold-prefill communication across generation requests.
     pub prefill_bytes: u64,
     /// Warm-decode communication across generation requests.
@@ -204,11 +213,15 @@ impl MetricsSnapshot {
                 self.pool_hit_rate() * 100.0
             ));
         }
-        if self.tokens_generated > 0 {
+        // Gate on generations (not tokens): a zero-token generation still
+        // records setup/prefill bytes that must reconcile with the totals.
+        if self.generations > 0 {
             s.push_str(&format!(
-                " generations={} tokens={} prefill_comm={} decode_comm={} decode_per_token={}",
+                " generations={} tokens={} corr_setup={} prefill_comm={} decode_comm={} \
+                 decode_per_token={}",
                 self.generations,
                 self.tokens_generated,
+                crate::util::human_bytes(self.corr_setup_bytes),
                 crate::util::human_bytes(self.prefill_bytes),
                 crate::util::human_bytes(self.decode_bytes),
                 crate::util::human_bytes(self.decode_bytes_per_token()),
@@ -248,14 +261,23 @@ mod tests {
     #[test]
     fn generation_split_is_tracked() {
         let mut m = Metrics::new();
-        m.record_generate(Duration::from_millis(10), Duration::from_millis(8), 4, 1000, 2000, 40);
+        m.record_generate(
+            Duration::from_millis(10),
+            Duration::from_millis(8),
+            4,
+            500,
+            1000,
+            2000,
+            40,
+        );
         let s = m.snapshot();
         assert_eq!(s.completed, 1);
         assert_eq!(s.generations, 1);
         assert_eq!(s.tokens_generated, 4);
-        assert_eq!(s.bytes_total, 3000);
-        assert_eq!((s.prefill_bytes, s.decode_bytes), (1000, 2000));
+        assert_eq!(s.bytes_total, 3500);
+        assert_eq!((s.corr_setup_bytes, s.prefill_bytes, s.decode_bytes), (500, 1000, 2000));
         assert_eq!(s.decode_bytes_per_token(), 500);
         assert!(s.summary().contains("decode_per_token"));
+        assert!(s.summary().contains("corr_setup"));
     }
 }

@@ -10,12 +10,17 @@
 //! `(1, ·)` rows through the same `Π_PP*` protocols, cutting per-token
 //! online communication ~8× at `n_ctx = 64` (DESIGN.md §KV-cache).
 //!
-//! Cost attribution: the session splits its [`CostLedger`] into a
-//! **cold-prefill** phase (absorbing the prompt) and a **warm-decode**
-//! phase (generated tokens), so benches and serving metrics can report the
-//! split per token. Per-step cost is position-independent — the cache has a
-//! fixed `(n_ctx, d)` shape and unwritten rows are masked — so one warm
-//! step is representative of all of them.
+//! Cost attribution: the session splits its [`CostLedger`] into a one-time
+//! **setup** phase (fixed-operand correlation openings,
+//! `OpClass::Correlation`), a **cold-prefill** phase (absorbing the
+//! prompt) and a **warm-decode** phase (generated tokens), so benches and
+//! serving metrics can report the split per token. Per-step cost is
+//! position-independent — the cache has a fixed `(n_ctx, d)` shape and
+//! unwritten rows are masked — so one warm step is representative of all
+//! of them. With fixed-operand correlations (DESIGN.md §Fixed-operand
+//! correlations, on by default) the session-fixed π₁/π₁ᵀ operands and the
+//! write-once K cache ride session masks opened once, cutting warm-step
+//! communication a further ~2.5× beyond the KV cache itself.
 
 use crate::data::greedy_regular_token;
 use crate::model::ModelKind;
@@ -31,16 +36,25 @@ use super::CentaurEngine;
 pub struct GenOutcome {
     /// Generated continuation (prompt excluded).
     pub tokens: Vec<u32>,
+    /// One-time session-correlation setup cost (the fixed-operand masked
+    /// openings, `OpClass::Correlation`); empty when correlations are off.
+    pub setup: CostLedger,
     /// Online cost of absorbing the prompt (cold prefill).
     pub prefill: CostLedger,
     /// Online cost of the generated steps (warm decode).
     pub decode: CostLedger,
 }
 
+/// Merge the three session phases into one ledger (single definition
+/// shared by [`GenOutcome::total`] and [`DecoderSession::total_cost`]).
+fn merged_phases(setup: &CostLedger, prefill: &CostLedger, decode: &CostLedger) -> CostLedger {
+    setup.merged(prefill).merged(decode)
+}
+
 impl GenOutcome {
-    /// Prefill + decode merged into one ledger.
+    /// Setup + prefill + decode merged into one ledger.
     pub fn total(&self) -> CostLedger {
-        self.prefill.merged(&self.decode)
+        merged_phases(&self.setup, &self.prefill, &self.decode)
     }
 }
 
@@ -56,6 +70,7 @@ pub struct DecoderSession<'e> {
     eng: &'e mut CentaurEngine,
     kv: Vec<LayerKvCache>,
     pos: usize,
+    setup: CostLedger,
     prefill: CostLedger,
     decode: CostLedger,
     last_step: CostLedger,
@@ -65,16 +80,35 @@ pub struct DecoderSession<'e> {
 impl<'e> DecoderSession<'e> {
     /// Start a session and absorb `prompt` (cold prefill). The prompt must
     /// be non-empty and fit the context window.
+    ///
+    /// With fixed-operand correlations enabled (the default,
+    /// [`super::EngineOptions::decode_correlations`]), session start deals
+    /// one correlation bundle per family per layer — pool-first, generated
+    /// on demand on a cold start — and performs the one-time masked
+    /// openings of π₁/π₁ᵀ, charged to the separate `setup` ledger
+    /// (`OpClass::Correlation`) so warm-step ledgers stay clean.
     pub fn new(eng: &'e mut CentaurEngine, prompt: &[u32]) -> Result<Self> {
         anyhow::ensure!(eng.cfg.kind == ModelKind::Gpt2, "incremental decode needs a decoder model");
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         anyhow::ensure!(prompt.len() <= eng.cfg.n_ctx, "prompt longer than n_ctx");
-        let kv = (0..eng.cfg.layers).map(|_| LayerKvCache::new(eng.cfg.n_ctx, eng.cfg.d)).collect();
+        eng.mpc.net.reset();
+        let mut kv = Vec::with_capacity(eng.cfg.layers);
+        for _ in 0..eng.cfg.layers {
+            if eng.decode_correlations {
+                let corr =
+                    layer::deal_kv_correlations(&mut eng.mpc, &eng.cfg, &eng.pi1_sh, &eng.pi1_t_sh)?;
+                kv.push(LayerKvCache::with_correlations(eng.cfg.n_ctx, eng.cfg.d, corr));
+            } else {
+                kv.push(LayerKvCache::new(eng.cfg.n_ctx, eng.cfg.d));
+            }
+        }
+        let setup = eng.mpc.net.ledger.clone();
         eng.views.clear();
         let mut sess = DecoderSession {
             eng,
             kv,
             pos: 0,
+            setup,
             prefill: CostLedger::new(),
             decode: CostLedger::new(),
             last_step: CostLedger::new(),
@@ -164,6 +198,39 @@ impl<'e> DecoderSession<'e> {
         Ok(())
     }
 
+    /// One-time session setup cost (fixed-operand correlation openings;
+    /// empty when correlations are disabled).
+    pub fn setup_cost(&self) -> &CostLedger {
+        &self.setup
+    }
+
+    /// Per-layer fixed-operand opening counters
+    /// `(π₁ openings, π₁ᵀ openings, K rows opened)` — the security census
+    /// asserts exactly one π₁-side opening per session per layer. Empty
+    /// when correlations are disabled.
+    pub fn correlation_openings(&self) -> Vec<(u64, u64, u64)> {
+        self.kv
+            .iter()
+            .filter_map(|kv| {
+                kv.correlations()
+                    .map(|c| (c.ppp.openings(), c.append.openings(), c.scores.openings()))
+            })
+            .collect()
+    }
+
+    /// Per-layer unused correlation bundles left
+    /// `(ppp, append, scores)` — exhausting any of them makes further
+    /// absorbs error instead of reusing a mask.
+    pub fn correlation_uses_left(&self) -> Vec<(usize, usize, usize)> {
+        self.kv
+            .iter()
+            .filter_map(|kv| {
+                kv.correlations()
+                    .map(|c| (c.ppp.uses_left(), c.append.uses_left(), c.scores.uses_left()))
+            })
+            .collect()
+    }
+
     /// Online cost of the cold-prefill phase (prompt absorption).
     pub fn prefill_cost(&self) -> &CostLedger {
         &self.prefill
@@ -179,8 +246,8 @@ impl<'e> DecoderSession<'e> {
         &self.last_step
     }
 
-    /// Prefill + decode merged.
+    /// Setup + prefill + decode merged.
     pub fn total_cost(&self) -> CostLedger {
-        self.prefill.merged(&self.decode)
+        merged_phases(&self.setup, &self.prefill, &self.decode)
     }
 }

@@ -6,7 +6,7 @@
 //! centaur serve  --weights bert-tiny-qnli --requests 32 --batch 8 [--framework centaur]
 //!                [--offline-prefill] [--pool-depth 2]
 //! centaur serve  --weights gpt2-tiny-wikitext103 --gen-steps 8 --requests 4
-//!                [--offline-prefill]   # streaming incremental decode
+//!                [--offline-prefill] [--no-decode-corr]  # streaming incremental decode
 //! centaur compare --model bert-tiny [--full]
 //! centaur artifacts-check
 //! ```
@@ -140,6 +140,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // and keep it topped up in the background (Centaur framework only).
     sc.offline_prefill = args.flag("offline-prefill");
     sc.pool_depth = args.opt_usize("pool-depth", sc.pool_depth);
+    // Fixed-operand correlated triples are on by default for decode
+    // sessions; `--no-decode-corr` runs the plain per-step baseline.
+    sc.decode_correlations = !args.flag("no-decode-corr");
     let n_req = args.opt_usize("requests", 16);
 
     // Streaming generation mode: each request decodes `--gen-steps` tokens
@@ -198,7 +201,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         if i == 0 {
                             let per_tok = s.decode_bytes / (s.tokens.len().max(1) as u64);
                             println!(
-                                "  req0 done: prefill {} | decode {} ({} per token)",
+                                "  req0 done: corr setup {} | prefill {} | decode {} ({} per token)",
+                                centaur::util::human_bytes(s.setup_bytes),
                                 centaur::util::human_bytes(s.prefill_bytes),
                                 centaur::util::human_bytes(s.decode_bytes),
                                 centaur::util::human_bytes(per_tok)

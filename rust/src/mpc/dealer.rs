@@ -55,44 +55,172 @@ pub enum TripleKind {
     Elem,
     /// Square pair for the cheap `Π_Square`.
     Square,
+    /// Fixed-operand correlation: session-fixed RIGHT operand (the `Π_PPP`
+    /// π₁ matrix). `(m, k, n)` = per-use left rows × fixed rows × fixed
+    /// cols; `uses` per-use bundles are dealt up front.
+    FixedPppRight,
+    /// Fixed-operand correlation: session-fixed LEFT operand used one
+    /// *column per use* (the KV outer-product π₁ᵀ slices). `(m, k, n)` =
+    /// fixed rows × fixed cols × per-use right cols.
+    FixedAppendLeft,
+    /// Fixed-operand correlation for a *write-once row-grown* RIGHT
+    /// operand (the secret-shared K cache): `(m, k, n)` = attention heads
+    /// × cache rows × cache cols; use `i` multiplies each head's
+    /// `(1, n/m)` query block against the transposed written block
+    /// `rows 0..=i`.
+    FixedScoresGrown,
 }
 
 /// Shape key for pooled correlated randomness: the op kind plus the
-/// `(m, k, n)` operand shape (`Elem`/`Square` use `(rows, cols, 0)`).
+/// `(m, k, n)` operand shape (`Elem`/`Square` use `(rows, cols, 0)`) and,
+/// for the session-scoped fixed-operand families, the dealt use count.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub struct TripleShape {
     /// Primitive this entry feeds.
     pub kind: TripleKind,
-    /// Rows of the left operand.
+    /// Rows of the left operand (kind-specific, see [`TripleKind`]).
     pub m: usize,
     /// Inner dimension (columns for `Elem`/`Square`).
     pub k: usize,
     /// Columns of the right operand (0 for `Elem`/`Square`).
     pub n: usize,
+    /// Per-use bundles dealt for a fixed-operand correlation (0 for the
+    /// per-use triple kinds).
+    pub uses: usize,
 }
 
 impl TripleShape {
     /// Key for a `Π_MatMul` triple `X (m×k) @ Y (k×n)`.
     pub fn matmul(m: usize, k: usize, n: usize) -> Self {
-        TripleShape { kind: TripleKind::Matmul, m, k, n }
+        TripleShape { kind: TripleKind::Matmul, m, k, n, uses: 0 }
     }
     /// Key for an elementwise triple of shape `rows×cols`.
     pub fn elem(rows: usize, cols: usize) -> Self {
-        TripleShape { kind: TripleKind::Elem, m: rows, k: cols, n: 0 }
+        TripleShape { kind: TripleKind::Elem, m: rows, k: cols, n: 0, uses: 0 }
     }
     /// Key for a square pair of shape `rows×cols`.
     pub fn square(rows: usize, cols: usize) -> Self {
-        TripleShape { kind: TripleKind::Square, m: rows, k: cols, n: 0 }
+        TripleShape { kind: TripleKind::Square, m: rows, k: cols, n: 0, uses: 0 }
+    }
+    /// Key for a right-fixed `Π_PPP` correlation: per-use `X (m×n)` against
+    /// the session-fixed `π₁ (n×n)`, with `uses` dealt uses.
+    pub fn fixed_ppp(m: usize, n: usize, uses: usize) -> Self {
+        TripleShape { kind: TripleKind::FixedPppRight, m, k: n, n, uses }
+    }
+    /// Key for a left-fixed column-per-use correlation: session-fixed
+    /// `π₁ᵀ (n×n)`, use `i` multiplies column `i` by a fresh `(1, d)` row.
+    pub fn fixed_append(n: usize, d: usize, uses: usize) -> Self {
+        TripleShape { kind: TripleKind::FixedAppendLeft, m: n, k: n, n: d, uses }
+    }
+    /// Key for a row-grown score correlation over a `(n, d)` write-once
+    /// cache with `h` attention heads.
+    pub fn fixed_scores(h: usize, n: usize, d: usize, uses: usize) -> Self {
+        TripleShape { kind: TripleKind::FixedScoresGrown, m: h, k: n, n: d, uses }
+    }
+
+    /// Whether this key names a session-scoped fixed-operand correlation.
+    pub fn is_fixed(&self) -> bool {
+        matches!(
+            self.kind,
+            TripleKind::FixedPppRight | TripleKind::FixedAppendLeft | TripleKind::FixedScoresGrown
+        )
     }
 
     /// Bytes of correlated randomness the dealer distributes for one entry
-    /// of this shape (both parties' shares of every tensor).
+    /// of this shape (both parties' shares of every tensor). For the
+    /// fixed-operand families this covers the whole session bundle — one
+    /// mask plus `uses` per-use correlations — and is charged **once** per
+    /// session, never once per use (the session-amortized mask must not be
+    /// double-counted per take).
     pub fn offline_bytes(&self) -> u64 {
         match self.kind {
             TripleKind::Matmul => 8 * 2 * (self.m * self.k + self.k * self.n + self.m * self.n) as u64,
             TripleKind::Elem => 8 * 2 * 3 * (self.m * self.k) as u64,
             TripleKind::Square => 8 * 2 * 2 * (self.m * self.k) as u64,
+            // mask (k×n) + uses × (A (m×k) + C (m×n))
+            TripleKind::FixedPppRight => {
+                8 * 2 * (self.k * self.n + self.uses * (self.m * self.k + self.m * self.n)) as u64
+            }
+            // mask (m×k) + uses × (A (1×n) + C (m×n))
+            TripleKind::FixedAppendLeft => {
+                8 * 2 * (self.m * self.k + self.uses * (self.n + self.m * self.n)) as u64
+            }
+            // mask (k×n) + Σ_{i<uses} m × (A (1×n/m) + C (1×(i+1)))
+            TripleKind::FixedScoresGrown => {
+                8 * 2
+                    * (self.k * self.n
+                        + self.uses * self.n
+                        + self.m * self.uses * (self.uses + 1) / 2) as u64
+            }
         }
+    }
+}
+
+/// One dealt use of a fixed-operand correlation: for each varying-operand
+/// block (one per attention head for [`TripleKind::FixedScoresGrown`],
+/// exactly one otherwise), a fresh mask sharing `[A]` and the correlation
+/// `[C]` against the session mask `B` (`C = A·B`, `B_col·A`, or
+/// `A·B_blockᵀ` depending on the family).
+pub struct FixedUse {
+    /// `([A], [C])` per varying-operand block.
+    pub blocks: Vec<(Share, Share)>,
+}
+
+/// Session-scoped correlated randomness for `Π_MatMul` against an operand
+/// that is fixed (or write-once) for a whole decode session — the paper's
+/// structure-aware specialization applied to the offline phase: instead of
+/// a fresh [`MatTriple`] (and a fresh masked opening of the fixed operand)
+/// per matmul, the dealer emits **one mask `[B]`** whose masked opening
+/// happens once per session, plus a cheap per-use correlation. Per use the
+/// parties then open only the *varying* operand's mask difference.
+pub struct FixedOperandCorrelation {
+    /// The shape key this correlation was dealt for.
+    pub shape: TripleShape,
+    /// Sharing of the session mask `B` over the fixed operand.
+    pub mask: Share,
+    /// Pre-dealt per-use bundles, consumed strictly in order.
+    uses: VecDeque<FixedUse>,
+    /// Bundles dealt in total (for exhaustion diagnostics).
+    dealt: usize,
+    /// Uses consumed so far (use index of the next [`FixedUse`]).
+    used: usize,
+    /// Masked openings of the fixed operand so far: 1 after the one-time
+    /// opening for the fixed families; rows opened so far for the
+    /// row-grown family.
+    pub(crate) opened: u64,
+}
+
+impl FixedOperandCorrelation {
+    /// Consume the next per-use bundle, returning its 0-based use index.
+    /// Errors — rather than silently reusing a mask — once the dealt use
+    /// count is exhausted.
+    pub fn take_use(&mut self) -> crate::Result<(usize, FixedUse)> {
+        let Some(u) = self.uses.pop_front() else {
+            anyhow::bail!(
+                "fixed-operand correlation exhausted after {} dealt uses — refusing to reuse a mask",
+                self.dealt
+            );
+        };
+        let idx = self.used;
+        self.used += 1;
+        Ok((idx, u))
+    }
+
+    /// Per-use bundles still available.
+    pub fn uses_left(&self) -> usize {
+        self.uses.len()
+    }
+
+    /// Per-use bundles dealt in total.
+    pub fn dealt(&self) -> usize {
+        self.dealt
+    }
+
+    /// Masked openings of the fixed operand so far (security census: the
+    /// fixed families must report exactly 1 per session; the row-grown
+    /// family reports the number of written rows).
+    pub fn openings(&self) -> u64 {
+        self.opened
     }
 }
 
@@ -102,6 +230,8 @@ pub enum PoolItem {
     Mat(MatTriple),
     /// A square pair.
     Square(SquarePair),
+    /// A session-scoped fixed-operand correlation bundle.
+    Fixed(FixedOperandCorrelation),
 }
 
 // ---------------------------------------------------------------------
@@ -110,6 +240,15 @@ pub enum PoolItem {
 
 fn rand_tensor(rng: &mut Rng, rows: usize, cols: usize) -> RingTensor {
     RingTensor::from_vec(rows, cols, rng.vec_i64(rows * cols))
+}
+
+/// Transposed per-head block of a `(rows, heads·dh)` tensor: columns
+/// `head·dh..(head+1)·dh` of rows `0..written`, transposed to
+/// `(dh, written)`. The dealer's `C = A·B_blockᵀ` layout and the online
+/// score protocol must agree element-for-element, so both sides build
+/// their blocks through this one helper.
+pub(crate) fn head_block_t(t: &RingTensor, head: usize, dh: usize, written: usize) -> RingTensor {
+    RingTensor::from_fn(dh, written, |r, c| t.get(c, head * dh + r))
 }
 
 fn share_with(rng: &mut Rng, x: RingTensor) -> Share {
@@ -145,7 +284,67 @@ fn generate_item(rng: &mut Rng, shape: TripleShape) -> PoolItem {
             let c = ring::mul_elem(&a, &a);
             PoolItem::Square(SquarePair { a: share_with(rng, a), c: share_with(rng, c) })
         }
+        TripleKind::FixedPppRight | TripleKind::FixedAppendLeft | TripleKind::FixedScoresGrown => {
+            PoolItem::Fixed(generate_fixed(rng, shape))
+        }
     }
+}
+
+/// Generate a whole fixed-operand session bundle: the session mask `B`
+/// plus `shape.uses` per-use `([A], [C])` correlations (the dealer knows
+/// `B` in plaintext while dealing, exactly as it knows `A·B` for a plain
+/// Beaver triple).
+fn generate_fixed(rng: &mut Rng, shape: TripleShape) -> FixedOperandCorrelation {
+    let mut uses = VecDeque::with_capacity(shape.uses);
+    let mask = match shape.kind {
+        TripleKind::FixedPppRight => {
+            // fixed right operand (k×n); per-use left X (m×k), C = A·B.
+            let b = rand_tensor(rng, shape.k, shape.n);
+            for _ in 0..shape.uses {
+                let a = rand_tensor(rng, shape.m, shape.k);
+                let c = ring::matmul(&a, &b);
+                uses.push_back(FixedUse {
+                    blocks: vec![(share_with(rng, a), share_with(rng, c))],
+                });
+            }
+            share_with(rng, b)
+        }
+        TripleKind::FixedAppendLeft => {
+            // fixed left operand (m×k), one column per use; per-use right
+            // Y (1×n), C = B[:,i]·A.
+            let b = rand_tensor(rng, shape.m, shape.k);
+            for i in 0..shape.uses {
+                let a = rand_tensor(rng, 1, shape.n);
+                let c = ring::matmul(&b.col_block(i, i + 1), &a);
+                uses.push_back(FixedUse {
+                    blocks: vec![(share_with(rng, a), share_with(rng, c))],
+                });
+            }
+            share_with(rng, b)
+        }
+        TripleKind::FixedScoresGrown => {
+            // write-once right operand (k×n) with m head blocks of width
+            // n/m; use i deals, per head, A (1×dh) and C = A·B_blockᵀ over
+            // the written rows 0..=i.
+            let (heads, rows, cols) = (shape.m, shape.k, shape.n);
+            let dh = cols / heads;
+            let b = rand_tensor(rng, rows, cols);
+            for i in 0..shape.uses {
+                let written = i + 1;
+                let mut blocks = Vec::with_capacity(heads);
+                for h in 0..heads {
+                    let a = rand_tensor(rng, 1, dh);
+                    let bt = head_block_t(&b, h, dh, written);
+                    let c = ring::matmul(&a, &bt);
+                    blocks.push((share_with(rng, a), share_with(rng, c)));
+                }
+                uses.push_back(FixedUse { blocks });
+            }
+            share_with(rng, b)
+        }
+        _ => unreachable!("generate_fixed called for a per-use triple kind"),
+    };
+    FixedOperandCorrelation { shape, mask, uses, dealt: shape.uses, used: 0, opened: 0 }
 }
 
 // ---------------------------------------------------------------------
@@ -390,6 +589,23 @@ impl Dealer {
         MatTriple { a: self.share_of(a), b: self.share_of(b), c: self.share_of(c) }
     }
 
+    /// Serve a session-scoped fixed-operand correlation (mask + `uses`
+    /// per-use bundles) — from the pool when one is stocked, generated on
+    /// demand otherwise (the cold-start fallback). The whole bundle is
+    /// charged to `offline_bytes` exactly once here; per-use consumption
+    /// charges nothing offline (the mask is session-amortized, not
+    /// re-distributed per take).
+    pub fn fixed_correlation(&mut self, shape: TripleShape) -> FixedOperandCorrelation {
+        debug_assert!(shape.is_fixed(), "fixed_correlation needs a fixed-operand shape");
+        self.account(shape);
+        if let Some(pool) = &self.pool {
+            if let Some(PoolItem::Fixed(c)) = pool.take(shape) {
+                return c;
+            }
+        }
+        generate_fixed(&mut self.rng, shape)
+    }
+
     /// Serve a square pair of shape `rows×cols`.
     pub fn square_pair(&mut self, rows: usize, cols: usize) -> SquarePair {
         let shape = TripleShape::square(rows, cols);
@@ -468,7 +684,7 @@ mod tests {
                     t.c.reconstruct()
                 );
             }
-            PoolItem::Square(_) => panic!("matmul key must hold a matrix triple"),
+            _ => panic!("matmul key must hold a matrix triple"),
         }
     }
 
@@ -550,6 +766,120 @@ mod tests {
         assert!(d.offline_bytes > before);
         assert_eq!(d.triples_served, 2);
         assert!(pool.hit_rate() > 0.49 && pool.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn fixed_correlation_identities_hold() {
+        // The dealt bundles satisfy the algebra every family relies on:
+        // C = A·B (PppRight), C = B[:,i]·A (AppendLeft), C = A·B_blockᵀ
+        // over the written rows (ScoresGrown).
+        let mut d = Dealer::new(Rng::new(91));
+        let mut ppp = d.fixed_correlation(TripleShape::fixed_ppp(3, 5, 4));
+        let b = ppp.mask.reconstruct();
+        for i in 0..4 {
+            let (idx, u) = ppp.take_use().unwrap();
+            assert_eq!(idx, i);
+            let (a, c) = &u.blocks[0];
+            assert_eq!(a.shape(), (3, 5));
+            assert_eq!(ring::matmul(&a.reconstruct(), &b), c.reconstruct());
+        }
+        assert!(ppp.take_use().is_err(), "exhausted uses must error, not reuse");
+
+        let mut app = d.fixed_correlation(TripleShape::fixed_append(6, 4, 3));
+        let b = app.mask.reconstruct();
+        for i in 0..3 {
+            let (_, u) = app.take_use().unwrap();
+            let (a, c) = &u.blocks[0];
+            assert_eq!(a.shape(), (1, 4));
+            assert_eq!(ring::matmul(&b.col_block(i, i + 1), &a.reconstruct()), c.reconstruct());
+        }
+
+        let mut sc = d.fixed_correlation(TripleShape::fixed_scores(2, 5, 8, 5));
+        let b = sc.mask.reconstruct();
+        for i in 0..5 {
+            let (_, u) = sc.take_use().unwrap();
+            assert_eq!(u.blocks.len(), 2, "one block per head");
+            for (h, (a, c)) in u.blocks.iter().enumerate() {
+                assert_eq!(a.shape(), (1, 4));
+                assert_eq!(c.shape(), (1, i + 1));
+                let bt = RingTensor::from_fn(4, i + 1, |r, cc| b.get(cc, h * 4 + r));
+                assert_eq!(ring::matmul(&a.reconstruct(), &bt), c.reconstruct());
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_shapes_pool_hit_miss_refill_and_register_demand() {
+        // The new shape class goes through the same pool lifecycle as the
+        // per-use triples: a registered demand prefills it, the first take
+        // is a hit, a drained queue misses.
+        let pool = TriplePool::new(92, 1);
+        let shape = TripleShape::fixed_ppp(2, 8, 8);
+        pool.register_demand(shape, 1);
+        pool.register_demand(TripleShape::fixed_append(8, 4, 8), 1);
+        pool.register_demand(TripleShape::fixed_scores(2, 8, 4, 8), 1);
+        assert_eq!(pool.shapes_known(), 3);
+        assert_eq!(pool.fill_to_target(), 3);
+        match pool.take(shape) {
+            Some(PoolItem::Fixed(c)) => {
+                assert_eq!(c.shape, shape);
+                assert_eq!(c.dealt(), 8);
+                assert_eq!(c.uses_left(), 8);
+                assert_eq!(c.openings(), 0);
+                assert_eq!(c.mask.shape(), (8, 8));
+            }
+            _ => panic!("fixed shape key must hold a correlation bundle"),
+        }
+        assert_eq!((pool.hits(), pool.misses()), (1, 0));
+        assert!(pool.take(shape).is_none(), "queue drained");
+        // A different use count is a different key.
+        assert!(pool.take(TripleShape::fixed_ppp(2, 8, 4)).is_none());
+    }
+
+    #[test]
+    fn fixed_offline_bytes_charge_session_bundle_exactly_once() {
+        // The session-amortized mask is part of one per-session charge —
+        // never re-counted per use or per pool hit beyond the dealer's
+        // distribution accounting.
+        let shape = TripleShape::fixed_ppp(2, 4, 3);
+        // mask 4×4 + 3 uses × (A 2×4 + C 2×4) = 16 + 48 elements, ×16 B.
+        assert_eq!(shape.offline_bytes(), 16 * (16 + 48));
+        let app = TripleShape::fixed_append(4, 2, 3);
+        // mask 16 + 3 × (A 2 + C 8) = 46 elements
+        assert_eq!(app.offline_bytes(), 16 * 46);
+        let sc = TripleShape::fixed_scores(2, 4, 2, 3);
+        // mask 8 + uses·n 6 + h·u(u+1)/2 = 12 → 26 elements
+        assert_eq!(sc.offline_bytes(), 16 * 26);
+
+        let mut d = Dealer::new(Rng::new(93));
+        let mut corr = d.fixed_correlation(shape);
+        assert_eq!(d.offline_bytes, shape.offline_bytes());
+        // Consuming uses moves no additional offline bytes.
+        let _ = corr.take_use().unwrap();
+        let _ = corr.take_use().unwrap();
+        assert_eq!(d.offline_bytes, shape.offline_bytes());
+        // A second session pays the bundle again (fresh mask), exactly once.
+        let _ = d.fixed_correlation(shape);
+        assert_eq!(d.offline_bytes, 2 * shape.offline_bytes());
+        assert_eq!(d.triples_served, 2);
+    }
+
+    #[test]
+    fn dealer_serves_fixed_correlation_from_pool_with_cold_fallback() {
+        let pool = Arc::new(TriplePool::new(94, 1));
+        let mut d = Dealer::new(Rng::new(95));
+        d.attach_pool(Arc::clone(&pool));
+        let shape = TripleShape::fixed_append(6, 3, 6);
+        // Cold: pool miss, generated on demand — the session still works.
+        let c0 = d.fixed_correlation(shape);
+        assert_eq!(c0.uses_left(), 6);
+        assert_eq!(pool.misses(), 1);
+        pool.fill_to_target();
+        // Warm: served from the pool.
+        let c1 = d.fixed_correlation(shape);
+        assert_eq!(c1.uses_left(), 6);
+        assert_eq!(pool.hits(), 1);
+        assert_eq!(pool.offline_bytes(), shape.offline_bytes());
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::tensor::RingTensor;
 use crate::util::rng::Rng;
 use dealer::Dealer;
 
-pub use dealer::{TriplePool, TripleShape};
+pub use dealer::{FixedOperandCorrelation, FixedUse, TripleKind, TriplePool, TripleShape};
 
 /// A 2-party additive sharing of a ring tensor: `x = s0 + s1 (mod 2^64)`.
 #[derive(Clone, Debug, PartialEq)]
@@ -249,11 +249,7 @@ impl Mpc {
         let prod = self.net.timed(class, PartyId::P1, || {
             ring::matmul(&x.reconstruct(), &y.reconstruct())
         });
-        let truncated = prod.map(|v| v >> crate::fixed::FRAC_BITS);
-        let mut rng = self.dealer.fork_rng(0x1DEA ^ (m * n) as u64);
-        let s0 = RingTensor::from_vec(m, n, rng.vec_i64(m * n));
-        let s1 = ring::sub(&truncated, &s0);
-        Share { s0, s1 }
+        self.reshare_ideal(prod, 0x1DEA)
     }
 
     /// Batched charged-ideal matmul (single round, like [`Mpc::matmul_batch`]).
@@ -268,23 +264,13 @@ impl Mpc {
     /// protocol.
     pub fn scalmul_nt_ideal(&mut self, x: &Share, w_fx: &RingTensor, class: OpClass) -> Share {
         let prod = self.net.timed(class, PartyId::P1, || ring::matmul_nt(&x.reconstruct(), w_fx));
-        let truncated = prod.map(|v| v >> crate::fixed::FRAC_BITS);
-        let (m, n) = truncated.shape();
-        let mut rng = self.dealer.fork_rng(0x5CA1 ^ (m * n) as u64);
-        let s0 = RingTensor::from_vec(m, n, rng.vec_i64(m * n));
-        let s1 = ring::sub(&truncated, &s0);
-        Share { s0, s1 }
+        self.reshare_ideal(prod, 0x5CA1)
     }
 
     /// Right-plaintext variant of [`Mpc::scalmul_nt_ideal`].
     pub fn scalmul_rhs_ideal(&mut self, x: &Share, w_fx: &RingTensor, class: OpClass) -> Share {
         let prod = self.net.timed(class, PartyId::P1, || ring::matmul(&x.reconstruct(), w_fx));
-        let truncated = prod.map(|v| v >> crate::fixed::FRAC_BITS);
-        let (m, n) = truncated.shape();
-        let mut rng = self.dealer.fork_rng(0x5CA2 ^ (m * n) as u64);
-        let s0 = RingTensor::from_vec(m, n, rng.vec_i64(m * n));
-        let s1 = ring::sub(&truncated, &s0);
-        Share { s0, s1 }
+        self.reshare_ideal(prod, 0x5CA2)
     }
 
     /// `Π_MatMul`: `[X] (m×k) @ [Y] (k×n)` via a Beaver matrix triple.
@@ -385,6 +371,373 @@ impl Mpc {
         fixed::trunc_share_tensor(&mut s0, 0);
         fixed::trunc_share_tensor(&mut s1, 1);
         Share { s0, s1 }
+    }
+
+    // ------------------------------------------------------------------
+    // Fixed-operand correlated triples (DESIGN.md §Fixed-operand
+    // correlations): Π_MatMul specializations for operands that are fixed
+    // (or write-once) for a whole decode session. The fixed operand's mask
+    // difference is opened ONCE per session; each use then opens only the
+    // varying operand's mask difference.
+    // ------------------------------------------------------------------
+
+    /// One-time masked opening of a session-fixed operand: both parties
+    /// exchange halves of `[fixed] − [B]` (1 round, `2·8·|B|` bytes). The
+    /// result `F = fixed − B` is uniform (one-time pad) and is the only
+    /// opening the fixed operand ever gets — a second call errors, and the
+    /// `openings()` counter lets the security census assert exactly one.
+    pub fn open_fixed_operand(
+        &mut self,
+        fixed: &Share,
+        corr: &mut dealer::FixedOperandCorrelation,
+        class: OpClass,
+    ) -> crate::Result<RingTensor> {
+        anyhow::ensure!(
+            matches!(
+                corr.shape.kind,
+                dealer::TripleKind::FixedPppRight | dealer::TripleKind::FixedAppendLeft
+            ),
+            "one-time opening needs a whole-operand correlation family, got {:?}",
+            corr.shape.kind
+        );
+        anyhow::ensure!(
+            corr.openings() == 0,
+            "fixed-operand mask already opened — the session opening must happen exactly once"
+        );
+        anyhow::ensure!(fixed.shape() == corr.mask.shape(), "fixed operand / mask shape mismatch");
+        let diff = self.sub(fixed, &corr.mask);
+        let d0 = self.net.transfer(PartyId::P0, PartyId::P1, &diff.s0, class);
+        let d1 = self.net.transfer(PartyId::P1, PartyId::P0, &diff.s1, class);
+        self.net.round(class, 1);
+        corr.opened = 1;
+        Ok(ring::add(&d0, &d1))
+    }
+
+    /// Extend the masked opening of a *write-once row-grown* operand (the
+    /// K cache) by its newly written row `pos`: parties exchange halves of
+    /// `[row] − [B[pos]]` (`2·8·cols` bytes; the round is charged by the
+    /// caller so it can group this with the append's other opening). Rows
+    /// must be opened sequentially, each exactly once.
+    pub fn open_fixed_grown_row(
+        &mut self,
+        row: &Share,
+        corr: &mut dealer::FixedOperandCorrelation,
+        pos: usize,
+        class: OpClass,
+    ) -> crate::Result<RingTensor> {
+        anyhow::ensure!(
+            corr.shape.kind == dealer::TripleKind::FixedScoresGrown,
+            "row-grown opening needs a FixedScoresGrown correlation, got {:?}",
+            corr.shape.kind
+        );
+        anyhow::ensure!(
+            corr.openings() == pos as u64,
+            "grown-operand rows must be opened sequentially, once each (row {pos}, opened {})",
+            corr.openings()
+        );
+        anyhow::ensure!(pos < corr.mask.rows(), "row {pos} outside the dealt mask");
+        let b_row = corr.mask.row_block(pos, pos + 1);
+        let diff = self.sub(row, &b_row);
+        let d0 = self.net.transfer(PartyId::P0, PartyId::P1, &diff.s0, class);
+        let d1 = self.net.transfer(PartyId::P1, PartyId::P0, &diff.s1, class);
+        corr.opened = pos as u64 + 1;
+        Ok(ring::add(&d0, &d1))
+    }
+
+    /// `Π_MatMul` with a session-fixed RIGHT operand whose masked opening
+    /// `f_pub = Y − B` already happened: per use only `E = X − A` is opened
+    /// (1 round, `2·8·m·k` bytes instead of `2·8·(mk + kn)`), then
+    /// `[Z] = E·F (public) + E·[B] + [A]·F + [C]` with `C = A·B` dealt.
+    /// Includes fixed-point truncation, like [`Mpc::matmul`].
+    pub fn matmul_fixed_rhs(
+        &mut self,
+        x: &Share,
+        f_pub: &RingTensor,
+        corr: &mut dealer::FixedOperandCorrelation,
+        class: OpClass,
+    ) -> crate::Result<Share> {
+        anyhow::ensure!(
+            corr.shape.kind == dealer::TripleKind::FixedPppRight,
+            "matmul_fixed_rhs needs a FixedPppRight correlation, got {:?}",
+            corr.shape.kind
+        );
+        anyhow::ensure!(corr.openings() >= 1, "fixed operand must be opened before use");
+        anyhow::ensure!(x.cols() == f_pub.rows(), "Π_MatMul inner dim");
+        let (_, fu) = corr.take_use()?;
+        anyhow::ensure!(fu.blocks.len() == 1, "right-fixed correlation has one block per use");
+        let (a, c) = &fu.blocks[0];
+        anyhow::ensure!(a.shape() == x.shape(), "per-use mask shape mismatch");
+        let e_sh = self.sub(x, a);
+        let e0 = self.net.transfer(PartyId::P0, PartyId::P1, &e_sh.s0, class);
+        let e1 = self.net.transfer(PartyId::P1, PartyId::P0, &e_sh.s1, class);
+        self.net.round(class, 1);
+        let e = ring::add(&e0, &e1);
+        let b = &corr.mask;
+        let mut s0 = self.net.timed(class, PartyId::P0, || {
+            let mut z = ring::matmul(&e, &b.s0);
+            ring::add_assign(&mut z, &ring::matmul(&a.s0, f_pub));
+            ring::add_assign(&mut z, &c.s0);
+            ring::add_assign(&mut z, &ring::matmul(&e, f_pub));
+            z
+        });
+        let mut s1 = self.net.timed(class, PartyId::P1, || {
+            let mut z = ring::matmul(&e, &b.s1);
+            ring::add_assign(&mut z, &ring::matmul(&a.s1, f_pub));
+            ring::add_assign(&mut z, &c.s1);
+            z
+        });
+        fixed::trunc_share_tensor(&mut s0, 0);
+        fixed::trunc_share_tensor(&mut s1, 1);
+        Ok(Share { s0, s1 })
+    }
+
+    /// `Π_MatMul` with a session-fixed LEFT operand used one *column per
+    /// use* (the KV outer product `[π₁ᵀ e_pos] @ [v]`): use `pos` meets
+    /// column `pos` of the opened `f_pub = X − B`. Opens only `E = y − A`
+    /// (`2·8·|y|` bytes; the round is charged by the caller so the append
+    /// can group it with the K-row opening). `C = B[:,pos]·A` is dealt.
+    pub fn matmul_fixed_lhs_col(
+        &mut self,
+        f_pub: &RingTensor,
+        y: &Share,
+        corr: &mut dealer::FixedOperandCorrelation,
+        pos: usize,
+        class: OpClass,
+    ) -> crate::Result<Share> {
+        anyhow::ensure!(
+            corr.shape.kind == dealer::TripleKind::FixedAppendLeft,
+            "matmul_fixed_lhs_col needs a FixedAppendLeft correlation, got {:?}",
+            corr.shape.kind
+        );
+        anyhow::ensure!(corr.openings() >= 1, "fixed operand must be opened before use");
+        let (idx, fu) = corr.take_use()?;
+        anyhow::ensure!(
+            idx == pos,
+            "column-per-use correlation consumed out of order (use {idx}, position {pos})"
+        );
+        let (a, c) = &fu.blocks[0];
+        anyhow::ensure!(a.shape() == y.shape(), "per-use mask shape mismatch");
+        let e_sh = self.sub(y, a);
+        let e0 = self.net.transfer(PartyId::P0, PartyId::P1, &e_sh.s0, class);
+        let e1 = self.net.transfer(PartyId::P1, PartyId::P0, &e_sh.s1, class);
+        let e = ring::add(&e0, &e1);
+        let f_col = f_pub.col_block(pos, pos + 1);
+        let b_col = corr.mask.col_block(pos, pos + 1);
+        let mut s0 = self.net.timed(class, PartyId::P0, || {
+            let mut z = ring::matmul(&b_col.s0, &e);
+            ring::add_assign(&mut z, &ring::matmul(&f_col, &a.s0));
+            ring::add_assign(&mut z, &c.s0);
+            ring::add_assign(&mut z, &ring::matmul(&f_col, &e));
+            z
+        });
+        let mut s1 = self.net.timed(class, PartyId::P1, || {
+            let mut z = ring::matmul(&b_col.s1, &e);
+            ring::add_assign(&mut z, &ring::matmul(&f_col, &a.s1));
+            ring::add_assign(&mut z, &c.s1);
+            z
+        });
+        fixed::trunc_share_tensor(&mut s0, 0);
+        fixed::trunc_share_tensor(&mut s1, 1);
+        Ok(Share { s0, s1 })
+    }
+
+    /// Per-head score products against a row-grown fixed operand (the K
+    /// cache, masked rows opened via [`Mpc::open_fixed_grown_row`]): use
+    /// `pos` multiplies each head's `[q_h] (1, dh)` against the transposed
+    /// written block `rows 0..=pos`, and pads the unwritten columns with
+    /// zero shares (those cache rows are publicly zero — the causal mask
+    /// zeroes them after softmax either way). One round for all head
+    /// openings, `2·8·|q|` bytes total.
+    pub fn matmul_fixed_grown_scores(
+        &mut self,
+        q: &Share,
+        f_rows: &RingTensor,
+        corr: &mut dealer::FixedOperandCorrelation,
+        pos: usize,
+        n_out: usize,
+        class: OpClass,
+    ) -> crate::Result<Vec<Share>> {
+        anyhow::ensure!(
+            corr.shape.kind == dealer::TripleKind::FixedScoresGrown,
+            "matmul_fixed_grown_scores needs a FixedScoresGrown correlation, got {:?}",
+            corr.shape.kind
+        );
+        anyhow::ensure!(
+            corr.openings() as usize > pos,
+            "K row {pos} must be opened before the score product"
+        );
+        let (idx, fu) = corr.take_use()?;
+        anyhow::ensure!(
+            idx == pos,
+            "row-grown correlation consumed out of order (use {idx}, position {pos})"
+        );
+        let heads = fu.blocks.len();
+        let dh = q.cols() / heads;
+        let written = pos + 1;
+        // E_h = q_h − A_h for every head, all exchanged in one round.
+        let mut es = Vec::with_capacity(heads);
+        for (h, (a, _)) in fu.blocks.iter().enumerate() {
+            let qh = q.col_block(h * dh, (h + 1) * dh);
+            anyhow::ensure!(a.shape() == (1, dh), "per-use head mask shape mismatch");
+            let e_sh = self.sub(&qh, a);
+            let e0 = self.net.transfer(PartyId::P0, PartyId::P1, &e_sh.s0, class);
+            let e1 = self.net.transfer(PartyId::P1, PartyId::P0, &e_sh.s1, class);
+            es.push(ring::add(&e0, &e1));
+        }
+        self.net.round(class, 1);
+        let mut outs = Vec::with_capacity(heads);
+        for (h, (a, c)) in fu.blocks.iter().enumerate() {
+            let e = &es[h];
+            // Public and masked K blocks, transposed: (dh, written) — the
+            // same layout the dealer used for `C = A·B_blockᵀ`.
+            let f_bt = dealer::head_block_t(f_rows, h, dh, written);
+            let b0t = dealer::head_block_t(&corr.mask.s0, h, dh, written);
+            let b1t = dealer::head_block_t(&corr.mask.s1, h, dh, written);
+            let mut z0 = self.net.timed(class, PartyId::P0, || {
+                let mut z = ring::matmul(e, &b0t);
+                ring::add_assign(&mut z, &ring::matmul(&a.s0, &f_bt));
+                ring::add_assign(&mut z, &c.s0);
+                ring::add_assign(&mut z, &ring::matmul(e, &f_bt));
+                z
+            });
+            let mut z1 = self.net.timed(class, PartyId::P1, || {
+                let mut z = ring::matmul(e, &b1t);
+                ring::add_assign(&mut z, &ring::matmul(&a.s1, &f_bt));
+                ring::add_assign(&mut z, &c.s1);
+                z
+            });
+            fixed::trunc_share_tensor(&mut z0, 0);
+            fixed::trunc_share_tensor(&mut z1, 1);
+            let pad = |z: RingTensor| {
+                let mut out = RingTensor::zeros(1, n_out);
+                out.row_mut(0)[..written].copy_from_slice(z.row(0));
+                out
+            };
+            outs.push(Share { s0: pad(z0), s1: pad(z1) });
+        }
+        Ok(outs)
+    }
+
+    /// Truncate an ideal (fast-sim) product and split it into a fresh
+    /// dealer-seeded sharing — the single resharing convention behind
+    /// every charged-ideal op (`matmul_charged_ideal*`, `scalmul_*_ideal`,
+    /// and the fixed-operand `*_ideal` twins).
+    fn reshare_ideal(&mut self, prod: RingTensor, tag: u64) -> Share {
+        let truncated = prod.map(|v| v >> crate::fixed::FRAC_BITS);
+        let (m, n) = truncated.shape();
+        let mut rng = self.dealer.fork_rng(tag ^ (m * n) as u64);
+        let s0 = RingTensor::from_vec(m, n, rng.vec_i64(m * n));
+        let s1 = ring::sub(&truncated, &s0);
+        Share { s0, s1 }
+    }
+
+    /// Charged-ideal variant of [`Mpc::matmul_fixed_rhs`] (fast-sim): the
+    /// same wire charges, use consumption, and opening discipline, with
+    /// the product computed directly (the fixed operand is recovered as
+    /// `F + B`). DESIGN.md §CostModel — ledgers agree across modes.
+    pub fn matmul_fixed_rhs_ideal(
+        &mut self,
+        x: &Share,
+        f_pub: &RingTensor,
+        corr: &mut dealer::FixedOperandCorrelation,
+        class: OpClass,
+    ) -> crate::Result<Share> {
+        anyhow::ensure!(
+            corr.shape.kind == dealer::TripleKind::FixedPppRight,
+            "matmul_fixed_rhs needs a FixedPppRight correlation, got {:?}",
+            corr.shape.kind
+        );
+        anyhow::ensure!(corr.openings() >= 1, "fixed operand must be opened before use");
+        anyhow::ensure!(x.cols() == f_pub.rows(), "Π_MatMul inner dim");
+        let (_, fu) = corr.take_use()?;
+        anyhow::ensure!(fu.blocks[0].0.shape() == x.shape(), "per-use mask shape mismatch");
+        let (m, k) = x.shape();
+        self.net.charge_bytes(class, (2 * 8 * m * k) as u64);
+        self.net.round(class, 1);
+        let y = ring::add(f_pub, &corr.mask.reconstruct());
+        let prod = self.net.timed(class, PartyId::P1, || ring::matmul(&x.reconstruct(), &y));
+        Ok(self.reshare_ideal(prod, 0xF1D0))
+    }
+
+    /// Charged-ideal variant of [`Mpc::matmul_fixed_lhs_col`] (fast-sim):
+    /// same charges and column-order use accounting; round charged by the
+    /// caller, like the real protocol.
+    pub fn matmul_fixed_lhs_col_ideal(
+        &mut self,
+        f_pub: &RingTensor,
+        y: &Share,
+        corr: &mut dealer::FixedOperandCorrelation,
+        pos: usize,
+        class: OpClass,
+    ) -> crate::Result<Share> {
+        anyhow::ensure!(
+            corr.shape.kind == dealer::TripleKind::FixedAppendLeft,
+            "matmul_fixed_lhs_col needs a FixedAppendLeft correlation, got {:?}",
+            corr.shape.kind
+        );
+        anyhow::ensure!(corr.openings() >= 1, "fixed operand must be opened before use");
+        let (idx, fu) = corr.take_use()?;
+        anyhow::ensure!(
+            idx == pos,
+            "column-per-use correlation consumed out of order (use {idx}, position {pos})"
+        );
+        anyhow::ensure!(fu.blocks[0].0.shape() == y.shape(), "per-use mask shape mismatch");
+        self.net.charge_bytes(class, (2 * 8 * y.cols()) as u64);
+        let b_col = corr.mask.col_block(pos, pos + 1).reconstruct();
+        let x_col = ring::add(&f_pub.col_block(pos, pos + 1), &b_col);
+        let prod = self.net.timed(class, PartyId::P1, || ring::matmul(&x_col, &y.reconstruct()));
+        Ok(self.reshare_ideal(prod, 0xF1D1))
+    }
+
+    /// Charged-ideal variant of [`Mpc::matmul_fixed_grown_scores`]
+    /// (fast-sim): same charges, row-opening discipline, and zero-padded
+    /// output layout; the written K block is recovered as `F + B`.
+    pub fn matmul_fixed_grown_scores_ideal(
+        &mut self,
+        q: &Share,
+        f_rows: &RingTensor,
+        corr: &mut dealer::FixedOperandCorrelation,
+        pos: usize,
+        n_out: usize,
+        class: OpClass,
+    ) -> crate::Result<Vec<Share>> {
+        anyhow::ensure!(
+            corr.shape.kind == dealer::TripleKind::FixedScoresGrown,
+            "matmul_fixed_grown_scores needs a FixedScoresGrown correlation, got {:?}",
+            corr.shape.kind
+        );
+        anyhow::ensure!(
+            corr.openings() as usize > pos,
+            "K row {pos} must be opened before the score product"
+        );
+        let (idx, fu) = corr.take_use()?;
+        anyhow::ensure!(
+            idx == pos,
+            "row-grown correlation consumed out of order (use {idx}, position {pos})"
+        );
+        let heads = fu.blocks.len();
+        let dh = q.cols() / heads;
+        let written = pos + 1;
+        self.net.charge_bytes(class, (2 * 8 * heads * dh) as u64);
+        self.net.round(class, 1);
+        let mask_plain = corr.mask.reconstruct();
+        let q_plain = q.reconstruct();
+        let mut outs = Vec::with_capacity(heads);
+        for h in 0..heads {
+            let f_bt = dealer::head_block_t(f_rows, h, dh, written);
+            let b_bt = dealer::head_block_t(&mask_plain, h, dh, written);
+            let kt = ring::add(&f_bt, &b_bt);
+            let qh = q_plain.col_block(h * dh, (h + 1) * dh);
+            let prod = self.net.timed(class, PartyId::P1, || ring::matmul(&qh, &kt));
+            let z = self.reshare_ideal(prod, 0xF1D2 ^ h as u64);
+            let pad = |t: &RingTensor| {
+                let mut out = RingTensor::zeros(1, n_out);
+                out.row_mut(0)[..written].copy_from_slice(t.row(0));
+                out
+            };
+            outs.push(Share { s0: pad(&z.s0), s1: pad(&z.s1) });
+        }
+        Ok(outs)
     }
 
     /// Fresh re-sharing of a plaintext known to one party (that party
@@ -542,6 +895,104 @@ mod tests {
             let sh = mpc.reshare_from(&x, PartyId::P1, OpClass::Other);
             assert_eq!(sh.reconstruct(), x);
         });
+    }
+
+    #[test]
+    fn fixed_rhs_matmul_matches_plain_and_halves_traffic() {
+        let mut mpc = mk();
+        let n = 8usize;
+        let y = FloatTensor::from_fn(n, n, |r, c| ((r * 3 + c) % 5) as f32 * 0.25 - 0.5);
+        let sy = mpc.share_local(&enc(&y));
+        let mut corr = mpc.dealer.fixed_correlation(TripleShape::fixed_ppp(2, n, 3));
+        let before = mpc.net.ledger.bytes_total();
+        let f = mpc.open_fixed_operand(&sy, &mut corr, OpClass::Correlation).unwrap();
+        // one-time opening: 2·8·n² bytes, 1 round, Correlation class
+        assert_eq!(mpc.net.ledger.bytes_total() - before, 2 * 8 * (n * n) as u64);
+        assert_eq!(mpc.net.ledger.class(OpClass::Correlation).rounds, 1);
+        assert_eq!(corr.openings(), 1);
+        assert!(
+            mpc.open_fixed_operand(&sy, &mut corr, OpClass::Correlation).is_err(),
+            "the session mask must open exactly once"
+        );
+        for i in 0..3 {
+            let x = FloatTensor::from_fn(2, n, |r, c| ((r + c * 2 + i) % 7) as f32 * 0.2 - 0.6);
+            let sx = mpc.share_local(&enc(&x));
+            let before = mpc.net.ledger.class(OpClass::Linear).bytes;
+            let out = mpc.matmul_fixed_rhs(&sx, &f, &mut corr, OpClass::Linear).unwrap();
+            // per use: only E (2×n) opened — vs 2·8·(2n + n²) for Π_MatMul
+            assert_eq!(mpc.net.ledger.class(OpClass::Linear).bytes - before, 2 * 8 * (2 * n) as u64);
+            let got = dec(&out.reconstruct());
+            let want = x.matmul(&y);
+            assert!(got.max_abs_diff(&want) < 1e-2, "use {i} diff {}", got.max_abs_diff(&want));
+        }
+        let spare = mpc.share_local(&RingTensor::zeros(2, n));
+        assert!(
+            mpc.matmul_fixed_rhs(&spare, &f, &mut corr, OpClass::Linear).is_err(),
+            "reuse beyond the dealt use count must error"
+        );
+    }
+
+    #[test]
+    fn fixed_lhs_col_matches_sliced_plain_matmul() {
+        let mut mpc = mk();
+        let (n, d) = (6usize, 5usize);
+        let x = FloatTensor::from_fn(n, n, |r, c| ((r * 2 + c) % 4) as f32 * 0.3 - 0.4);
+        let sx = mpc.share_local(&enc(&x));
+        let mut corr = mpc.dealer.fixed_correlation(TripleShape::fixed_append(n, d, n));
+        let f = mpc.open_fixed_operand(&sx, &mut corr, OpClass::Correlation).unwrap();
+        for pos in 0..3 {
+            let y = FloatTensor::from_fn(1, d, |_, c| (c + pos) as f32 * 0.15 - 0.3);
+            let sy = mpc.share_local(&enc(&y));
+            let out = mpc.matmul_fixed_lhs_col(&f, &sy, &mut corr, pos, OpClass::Linear).unwrap();
+            let col = FloatTensor::from_fn(n, 1, |r, _| x.get(r, pos));
+            let want = col.matmul(&y);
+            let got = dec(&out.reconstruct());
+            assert!(got.max_abs_diff(&want) < 1e-2, "pos {pos} diff {}", got.max_abs_diff(&want));
+        }
+        // out-of-order consumption is rejected
+        let sy = mpc.share_local(&enc(&FloatTensor::zeros(1, d)));
+        assert!(mpc.matmul_fixed_lhs_col(&f, &sy, &mut corr, 5, OpClass::Linear).is_err());
+    }
+
+    #[test]
+    fn fixed_grown_scores_match_plain_per_head_products() {
+        let mut mpc = mk();
+        let (heads, n, d) = (2usize, 6usize, 8usize);
+        let dh = d / heads;
+        let mut corr = mpc.dealer.fixed_correlation(TripleShape::fixed_scores(heads, n, d, n));
+        // simulate the write-once cache: rows written and opened one by one
+        let mut k_cache = Share { s0: RingTensor::zeros(n, d), s1: RingTensor::zeros(n, d) };
+        let mut f_rows = RingTensor::zeros(n, d);
+        for pos in 0..4 {
+            let row = FloatTensor::from_fn(1, d, |_, c| ((c * 3 + pos) % 5) as f32 * 0.2 - 0.4);
+            let row_sh = mpc.share_local(&enc(&row));
+            k_cache.s0.row_mut(pos).copy_from_slice(row_sh.s0.row(0));
+            k_cache.s1.row_mut(pos).copy_from_slice(row_sh.s1.row(0));
+            let opened = mpc.open_fixed_grown_row(&row_sh, &mut corr, pos, OpClass::Linear).unwrap();
+            f_rows.row_mut(pos).copy_from_slice(opened.row(0));
+            assert_eq!(corr.openings(), pos as u64 + 1);
+
+            let q = FloatTensor::from_fn(1, d, |_, c| ((c + 2 * pos) % 7) as f32 * 0.1 - 0.3);
+            let sq = mpc.share_local(&enc(&q));
+            let outs = mpc
+                .matmul_fixed_grown_scores(&sq, &f_rows, &mut corr, pos, n, OpClass::Linear)
+                .unwrap();
+            assert_eq!(outs.len(), heads);
+            // reference: q_h against the FULL zero-padded cache, per head
+            let k_plain = dec(&k_cache.reconstruct());
+            for (h, out) in outs.iter().enumerate() {
+                assert_eq!(out.shape(), (1, n));
+                let qh = FloatTensor::from_fn(1, dh, |_, c| q.get(0, h * dh + c));
+                let kht = FloatTensor::from_fn(dh, n, |r, c| k_plain.get(c, h * dh + r));
+                let want = qh.matmul(&kht);
+                let got = dec(&out.reconstruct());
+                let diff = got.max_abs_diff(&want);
+                assert!(diff < 1e-2, "pos {pos} head {h} diff {diff}");
+            }
+        }
+        // a score product for an unopened row is rejected
+        let sq = mpc.share_local(&RingTensor::zeros(1, d));
+        assert!(mpc.matmul_fixed_grown_scores(&sq, &f_rows, &mut corr, 5, OpClass::Linear).is_err());
     }
 
     #[test]

@@ -66,19 +66,25 @@ pub enum OpClass {
     Embedding,
     /// Task head (pooler/classifier or LM head).
     Adaptation,
+    /// Session-scoped correlation setup: the once-per-session masked
+    /// openings of fixed-operand correlated triples (DESIGN.md
+    /// §Fixed-operand correlations). Split out so warm-step ledgers stay
+    /// clean and the amortized cost is visible in breakdowns.
+    Correlation,
     /// Everything else (setup, opens, PPP dealing).
     Other,
 }
 
 impl OpClass {
     /// Every class, in ledger order.
-    pub const ALL: [OpClass; 7] = [
+    pub const ALL: [OpClass; 8] = [
         OpClass::Linear,
         OpClass::Softmax,
         OpClass::Gelu,
         OpClass::LayerNorm,
         OpClass::Embedding,
         OpClass::Adaptation,
+        OpClass::Correlation,
         OpClass::Other,
     ];
     /// Dense index (ledger slot).
@@ -90,7 +96,8 @@ impl OpClass {
             OpClass::LayerNorm => 3,
             OpClass::Embedding => 4,
             OpClass::Adaptation => 5,
-            OpClass::Other => 6,
+            OpClass::Correlation => 6,
+            OpClass::Other => 7,
         }
     }
     /// Display label.
@@ -102,6 +109,7 @@ impl OpClass {
             OpClass::LayerNorm => "LayerNorm",
             OpClass::Embedding => "Embedding",
             OpClass::Adaptation => "Adaptation",
+            OpClass::Correlation => "Correlation",
             OpClass::Other => "Other",
         }
     }
@@ -170,7 +178,7 @@ impl ClassCost {
 /// Ledger of all communication + compute per op class.
 #[derive(Clone, Debug, Default)]
 pub struct CostLedger {
-    per_class: [ClassCost; 7],
+    per_class: [ClassCost; 8],
 }
 
 impl CostLedger {

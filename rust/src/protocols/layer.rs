@@ -20,13 +20,14 @@
 use crate::engine::views::Views;
 use crate::fixed;
 use crate::model::{ModelConfig, PermLayer};
-use crate::mpc::{Mpc, Share, TripleShape};
+use crate::mpc::{FixedOperandCorrelation, Mpc, Share, TripleShape};
 use crate::net::OpClass;
 use crate::runtime::Backend;
 use crate::tensor::RingTensor;
 use crate::Result;
 
 use super::nonlin::{pp_gelu, pp_layernorm, pp_softmax};
+use super::ppp;
 
 /// Mask value standing in for −∞ in causal attention (exp(−1e5) == 0 in
 /// f32 while staying comfortably inside the fixed-point range).
@@ -79,6 +80,56 @@ impl<'a> ProtoCtx<'a> {
             self.mpc.scalmul_rhs_ideal(x, w_fx, class)
         } else {
             self.mpc.scalmul_rhs(x, w_fx, class)
+        }
+    }
+
+    /// `Π_PPP` against the session-fixed π₁ correlation, honoring fast-sim
+    /// (identical wire charges and use accounting in both modes).
+    pub fn ppp_cols_fixed(
+        &mut self,
+        x: &Share,
+        f_pi: &RingTensor,
+        corr: &mut FixedOperandCorrelation,
+        class: OpClass,
+    ) -> Result<Share> {
+        if self.fast_sim {
+            self.mpc.matmul_fixed_rhs_ideal(x, f_pi, corr, class)
+        } else {
+            ppp::ppp_cols_fixed(self.mpc, x, f_pi, corr, class)
+        }
+    }
+
+    /// Column-per-use fixed-left matmul (the KV outer product), honoring
+    /// fast-sim; the round is charged by the caller in both modes.
+    pub fn matmul_fixed_lhs_col(
+        &mut self,
+        f_pub: &RingTensor,
+        y: &Share,
+        corr: &mut FixedOperandCorrelation,
+        pos: usize,
+        class: OpClass,
+    ) -> Result<Share> {
+        if self.fast_sim {
+            self.mpc.matmul_fixed_lhs_col_ideal(f_pub, y, corr, pos, class)
+        } else {
+            self.mpc.matmul_fixed_lhs_col(f_pub, y, corr, pos, class)
+        }
+    }
+
+    /// Row-grown per-head score products, honoring fast-sim.
+    pub fn matmul_fixed_grown_scores(
+        &mut self,
+        q: &Share,
+        f_rows: &RingTensor,
+        corr: &mut FixedOperandCorrelation,
+        pos: usize,
+        n_out: usize,
+        class: OpClass,
+    ) -> Result<Vec<Share>> {
+        if self.fast_sim {
+            self.mpc.matmul_fixed_grown_scores_ideal(q, f_rows, corr, pos, n_out, class)
+        } else {
+            self.mpc.matmul_fixed_grown_scores(q, f_rows, corr, pos, n_out, class)
         }
     }
 }
@@ -139,19 +190,102 @@ pub fn causal_mask_row_fx(h: usize, n: usize, pos: usize) -> RingTensor {
 /// columns softmax weight exactly 0, which keeps incremental outputs
 /// token-for-token aligned with the padded full-recompute path.
 pub struct LayerKvCache {
+    /// Context capacity (`n_ctx`).
+    cap: usize,
+    /// Plain-path `[K]` share cache. In correlated mode this stays empty
+    /// (`0 × d`): the K stream then lives as the session mask plus the
+    /// public masked rows inside `corr` — keeping a share copy too would
+    /// be dead per-session state (2·n_ctx·d·8 bytes per layer).
     k: Share,
     v_tilde: Share,
     len: usize,
+    /// Session-scoped fixed-operand correlations (`None` = the plain
+    /// per-step Beaver path, kept as the pre-correlation baseline).
+    corr: Option<KvCorrelations>,
+}
+
+/// Session-scoped fixed-operand correlation state for one layer's
+/// incremental decode (DESIGN.md §Fixed-operand correlations): the three
+/// operands of a decode step that are fixed — or write-once — for the whole
+/// session each get one dealer mask, one masked opening, and per-use
+/// correlations instead of a fresh Beaver triple per step.
+pub struct KvCorrelations {
+    /// Right-fixed π₁ correlation for the per-step `Π_PPP`.
+    pub ppp: FixedOperandCorrelation,
+    /// Public masked opening `π₁ − B` (uniformly random), opened once at
+    /// session setup.
+    pub f_pi1: RingTensor,
+    /// Left-fixed π₁ᵀ correlation for the KV outer-product append
+    /// (column `pos` per use keeps the mapping `t → π₁(t)` secret).
+    pub append: FixedOperandCorrelation,
+    /// Public masked opening `π₁ᵀ − B'`, opened once at session setup.
+    pub f_pi1_t: RingTensor,
+    /// Row-grown correlation over the write-once `[K]` cache for the
+    /// per-step score products.
+    pub scores: FixedOperandCorrelation,
+    /// Public masked K rows `K[t] − B_K[t]`, opened as rows are written
+    /// (each cache entry is masked by its own one-time-pad entry, opened
+    /// exactly once — entries never change after their write).
+    pub f_k: RingTensor,
+}
+
+/// Deal and open the session-scoped fixed-operand correlations for one
+/// layer's decode: three dealer bundles (pool-first, generated on demand
+/// on a cold start) plus the one-time masked openings of π₁ and π₁ᵀ —
+/// `2·8·n²` bytes and 1 round each, charged to [`OpClass::Correlation`] so
+/// the amortized setup stays visible and separate from warm-step ledgers.
+pub fn deal_kv_correlations(
+    mpc: &mut Mpc,
+    cfg: &ModelConfig,
+    pi1_sh: &Share,
+    pi1_t_sh: &Share,
+) -> Result<KvCorrelations> {
+    let n = cfg.n_ctx;
+    let (d, h) = (cfg.d, cfg.h);
+    let mut ppp_corr = mpc.dealer.fixed_correlation(TripleShape::fixed_ppp(h, n, n));
+    let f_pi1 = mpc.open_fixed_operand(pi1_sh, &mut ppp_corr, OpClass::Correlation)?;
+    let mut append = mpc.dealer.fixed_correlation(TripleShape::fixed_append(n, d, n));
+    let f_pi1_t = mpc.open_fixed_operand(pi1_t_sh, &mut append, OpClass::Correlation)?;
+    let scores = mpc.dealer.fixed_correlation(TripleShape::fixed_scores(h, n, d, n));
+    Ok(KvCorrelations {
+        ppp: ppp_corr,
+        f_pi1,
+        append,
+        f_pi1_t,
+        scores,
+        f_k: RingTensor::zeros(n, d),
+    })
 }
 
 impl LayerKvCache {
     /// Empty cache for a layer of width `d` and capacity `n_ctx` tokens.
     pub fn new(n_ctx: usize, d: usize) -> Self {
         LayerKvCache {
+            cap: n_ctx,
             k: Share { s0: RingTensor::zeros(n_ctx, d), s1: RingTensor::zeros(n_ctx, d) },
             v_tilde: Share { s0: RingTensor::zeros(n_ctx, d), s1: RingTensor::zeros(n_ctx, d) },
             len: 0,
+            corr: None,
         }
+    }
+
+    /// Empty cache wired to session-scoped fixed-operand correlations:
+    /// appends and score/`Π_PPP` products run the amortized protocols.
+    /// The `[K]` share cache is not allocated — in this mode the key
+    /// stream lives entirely inside the correlation state.
+    pub fn with_correlations(n_ctx: usize, d: usize, corr: KvCorrelations) -> Self {
+        LayerKvCache {
+            cap: n_ctx,
+            k: Share { s0: RingTensor::zeros(0, d), s1: RingTensor::zeros(0, d) },
+            v_tilde: Share { s0: RingTensor::zeros(n_ctx, d), s1: RingTensor::zeros(n_ctx, d) },
+            len: 0,
+            corr: Some(corr),
+        }
+    }
+
+    /// The layer's correlation state, when the amortized path is active.
+    pub fn correlations(&self) -> Option<&KvCorrelations> {
+        self.corr.as_ref()
     }
 
     /// Tokens cached so far.
@@ -166,21 +300,46 @@ impl LayerKvCache {
 
     /// Maximum number of cacheable tokens (`n_ctx`).
     pub fn capacity(&self) -> usize {
-        self.k.rows()
+        self.cap
     }
 
-    /// Append the `(1, d)` sharings `[k_t]`, `[v_t]` at position `pos`:
-    /// local row write into `[K]`, one outer-product `Π_MatMul` into `[Ṽ]`.
-    pub fn append(&mut self, ctx: &mut ProtoCtx, pi1_t_sh: &Share, k_new: &Share, v_new: &Share, pos: usize) {
+    /// Append the `(1, d)` sharings `[k_t]`, `[v_t]` at position `pos`.
+    ///
+    /// Plain path: local row write into `[K]` plus one outer-product
+    /// `Π_MatMul` into `[Ṽ]`. With correlations, the outer product runs
+    /// against the session-fixed π₁ᵀ column correlation (only `[v_t]`'s
+    /// mask difference is opened) and the new K row is absorbed as a
+    /// masked opening extending the grown score correlation (no share
+    /// copy kept) — `2·8·2d` bytes, 1 round, exactly like the plain
+    /// path's `2·8·(n + d)` at `n = d` but enabling the per-step score
+    /// and `Π_PPP` savings.
+    pub fn append(
+        &mut self,
+        ctx: &mut ProtoCtx,
+        pi1_t_sh: &Share,
+        k_new: &Share,
+        v_new: &Share,
+        pos: usize,
+    ) -> Result<()> {
         assert_eq!(pos, self.len, "KV cache appends must be sequential");
         assert!(pos < self.capacity(), "KV cache full");
-        self.k.s0.row_mut(pos).copy_from_slice(k_new.s0.row(0));
-        self.k.s1.row_mut(pos).copy_from_slice(k_new.s1.row(0));
-        // [Ṽ] += [π₁ᵀ e_pos] @ [v_t] — the column slice keeps π₁ secret.
-        let col = pi1_t_sh.col_block(pos, pos + 1);
-        let upd = ctx.matmul(&col, v_new, OpClass::Linear);
-        self.v_tilde = ctx.mpc.add(&self.v_tilde, &upd);
+        if let Some(c) = self.corr.as_mut() {
+            // masked K-row opening + v-side E opening, one parallel round
+            let f_row = ctx.mpc.open_fixed_grown_row(k_new, &mut c.scores, pos, OpClass::Linear)?;
+            c.f_k.row_mut(pos).copy_from_slice(f_row.row(0));
+            let upd = ctx.matmul_fixed_lhs_col(&c.f_pi1_t, v_new, &mut c.append, pos, OpClass::Linear)?;
+            ctx.mpc.net.round(OpClass::Linear, 1);
+            self.v_tilde = ctx.mpc.add(&self.v_tilde, &upd);
+        } else {
+            self.k.s0.row_mut(pos).copy_from_slice(k_new.s0.row(0));
+            self.k.s1.row_mut(pos).copy_from_slice(k_new.s1.row(0));
+            // [Ṽ] += [π₁ᵀ e_pos] @ [v_t] — the column slice keeps π₁ secret.
+            let col = pi1_t_sh.col_block(pos, pos + 1);
+            let upd = ctx.matmul(&col, v_new, OpClass::Linear);
+            self.v_tilde = ctx.mpc.add(&self.v_tilde, &upd);
+        }
         self.len = pos + 1;
+        Ok(())
     }
 }
 
@@ -201,6 +360,28 @@ pub fn decode_step_shapes(cfg: &ModelConfig) -> Vec<(TripleShape, u64)> {
         (TripleShape::matmul(1, dh, n), l * h as u64),
         (TripleShape::matmul(h, n, n), l),
         (TripleShape::matmul(1, n, dh), l * h as u64),
+    ]
+}
+
+/// Pool demand of one decode session (`steps` absorbs). With fixed-operand
+/// correlations the session consumes one correlation bundle of each family
+/// per layer (dealt for the full `n_ctx` capacity) plus the per-step value
+/// products — the only decode matmuls still fed by plain Beaver triples
+/// (their `[Ṽ]` operand genuinely changes every step; see DESIGN.md
+/// §Fixed-operand correlations). Without correlations it is `steps` times
+/// the plain per-step profile of [`decode_step_shapes`].
+pub fn decode_pool_shapes(cfg: &ModelConfig, correlations: bool, steps: u64) -> Vec<(TripleShape, u64)> {
+    if !correlations {
+        return decode_step_shapes(cfg).into_iter().map(|(s, c)| (s, c * steps)).collect();
+    }
+    let n = cfg.n_ctx;
+    let (d, h, dh) = (cfg.d, cfg.h, cfg.dh());
+    let l = cfg.layers as u64;
+    vec![
+        (TripleShape::fixed_ppp(h, n, n), l),
+        (TripleShape::fixed_append(n, d, n), l),
+        (TripleShape::fixed_scores(h, n, d, n), l),
+        (TripleShape::matmul(1, n, dh), l * h as u64 * steps),
     ]
 }
 
@@ -241,20 +422,33 @@ pub fn transformer_layer_step(
     };
 
     // 2. Extend the secret-shared cache ([K] row write + [Ṽ] PPP update).
-    kv.append(ctx, pi1_t_sh, &k, &v, pos);
+    kv.append(ctx, pi1_t_sh, &k, &v, pos)?;
 
     // 3. Scores against the whole cached prefix, one batched round:
-    //    q_h (1×dh) @ K_hᵀ (dh×n) → (1×n) per head.
-    let kt: Vec<Share> = (0..cfg.h).map(|h| kv.k.col_block(h * dh, (h + 1) * dh).transpose()).collect();
-    let qh: Vec<Share> = (0..cfg.h).map(|h| q.col_block(h * dh, (h + 1) * dh)).collect();
-    let pairs: Vec<(&Share, &Share)> = qh.iter().zip(kt.iter()).collect();
-    let o1_heads = ctx.matmul_batch(&pairs, OpClass::Linear);
+    //    q_h (1×dh) @ K_hᵀ (dh×n) → (1×n) per head. With correlations the
+    //    K side rides its session mask (rows opened at append time), so
+    //    only q's mask difference moves per step.
+    let o1_heads = if let Some(c) = kv.corr.as_mut() {
+        ctx.matmul_fixed_grown_scores(&q, &c.f_k, &mut c.scores, pos, n, OpClass::Linear)?
+    } else {
+        let kt: Vec<Share> =
+            (0..cfg.h).map(|h| kv.k.col_block(h * dh, (h + 1) * dh).transpose()).collect();
+        let qh: Vec<Share> = (0..cfg.h).map(|h| q.col_block(h * dh, (h + 1) * dh)).collect();
+        let pairs: Vec<(&Share, &Share)> = qh.iter().zip(kt.iter()).collect();
+        ctx.matmul_batch(&pairs, OpClass::Linear)
+    };
     let mut o1 = stack_rows(&o1_heads); // (h, n)
     o1 = ctx.mpc.scale_fx(&o1, scale);
     o1 = ctx.mpc.add_plain(&o1, &causal_mask_row_fx(cfg.h, n, pos));
 
     // 4. Π_PPP then Π_PPSM: P1 opens one π₁-permuted score row per head.
-    let o1_p1 = ctx.matmul(&o1, pi1_sh, OpClass::Linear);
+    //    With correlations, the π₁-side mask was opened once at session
+    //    setup — per step only [O1]'s mask difference is opened.
+    let o1_p1 = if let Some(c) = kv.corr.as_mut() {
+        ctx.ppp_cols_fixed(&o1, &c.f_pi1, &mut c.ppp, OpClass::Linear)?
+    } else {
+        ctx.matmul(&o1, pi1_sh, OpClass::Linear)
+    };
     let o2_p1 = pp_softmax(
         ctx.mpc,
         ctx.backend,
@@ -594,7 +788,7 @@ mod tests {
         {
             let mut ctx =
                 ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
-            kv.append(&mut ctx, &pi1_t_sh, &k_new, &v_new, 0);
+            kv.append(&mut ctx, &pi1_t_sh, &k_new, &v_new, 0).unwrap();
         }
         // One outer-product Beaver matmul: 2·8·(n·1 + 1·d) bytes, 1 round.
         let appended = mpc.net.ledger.bytes_total() - before;
@@ -604,6 +798,108 @@ mod tests {
         assert_eq!(kv.len(), 1);
         assert!(!kv.is_empty());
         assert_eq!(kv.capacity(), n);
+    }
+
+    /// Correlated single-token steps must match the plain per-step path
+    /// byte-for-byte in *results* while moving strictly fewer bytes: the
+    /// structure-aware specialization may not change the computed layer
+    /// output (within fixed-point noise) or the round count.
+    #[test]
+    fn correlated_step_matches_plain_step_with_fewer_bytes_same_rounds() {
+        let mut cfg = ModelConfig::gpt2_tiny();
+        cfg.layers = 1;
+        let w = ModelWeights::random(&cfg, 151);
+        let mut rng = Rng::new(152);
+        let perms = PermSet::random(&cfg, &mut rng);
+        let pm = PermutedModel::build(&cfg, &w, perms.clone());
+        let n = cfg.n_ctx;
+
+        let x = FloatTensor::from_fn(n, cfg.d, |r, c| ((r * 13 + c * 3) % 17) as f32 * 0.08 - 0.6);
+        let x_pi = perms.pi.apply_cols(&x);
+
+        let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 153);
+        let mut backend = NativeBackend::new();
+        let mut views = Views::new(false);
+        let pi1_sh = ppp::share_perm(&mut mpc, &perms.pi1, OpClass::Linear);
+        let pi1_t_sh = ppp::share_perm_t(&mut mpc, &perms.pi1, OpClass::Linear);
+
+        let corr = deal_kv_correlations(&mut mpc, &cfg, &pi1_sh, &pi1_t_sh).unwrap();
+        let mut kv_corr = LayerKvCache::with_correlations(n, cfg.d, corr);
+        let mut kv_plain = LayerKvCache::new(n, cfg.d);
+
+        let steps = 4usize;
+        let mut corr_bytes = 0u64;
+        let mut plain_bytes = 0u64;
+        for t in 0..steps {
+            let row = FloatTensor::from_vec(1, cfg.d, x_pi.row(t).to_vec());
+            let row_sh = mpc.share_local(&fixed::encode_tensor(&row));
+            let (got_corr, got_plain, cb, pb, cr, pr) = {
+                let mut run = |kv: &mut LayerKvCache| {
+                    let before_b = mpc.net.ledger.bytes_total();
+                    let before_r = mpc.net.ledger.rounds_total();
+                    let mut ctx = ProtoCtx {
+                        mpc: &mut mpc,
+                        backend: &mut backend,
+                        views: &mut views,
+                        fast_sim: false,
+                    };
+                    let out = transformer_layer_step(
+                        &mut ctx, &cfg, &pm.layers[0], &pi1_sh, &pi1_t_sh, &row_sh, kv, t, 0,
+                    )
+                    .unwrap();
+                    (
+                        fixed::decode_tensor(&out.reconstruct()),
+                        mpc.net.ledger.bytes_total() - before_b,
+                        mpc.net.ledger.rounds_total() - before_r,
+                    )
+                };
+                let (gc, cb, cr) = run(&mut kv_corr);
+                let (gp, pb, pr) = run(&mut kv_plain);
+                (gc, gp, cb, pb, cr, pr)
+            };
+            let diff = got_corr.max_abs_diff(&got_plain);
+            assert!(diff < 0.05, "step {t}: correlated vs plain diff {diff}");
+            assert_eq!(cr, pr, "step {t}: correlated path must not change the round count");
+            assert!(cb < pb, "step {t}: correlated path must move fewer bytes ({cb} vs {pb})");
+            corr_bytes += cb;
+            plain_bytes += pb;
+        }
+        // π₁-side masks opened exactly once, K rows once per append.
+        let c = kv_corr.correlations().unwrap();
+        assert_eq!(c.ppp.openings(), 1);
+        assert_eq!(c.append.openings(), 1);
+        assert_eq!(c.scores.openings(), steps as u64);
+        assert!(plain_bytes > corr_bytes * 2, "per-layer warm saving should exceed 2x");
+    }
+
+    #[test]
+    fn decode_pool_shapes_cover_both_modes() {
+        let cfg = ModelConfig::gpt2_tiny();
+        let l = cfg.layers as u64;
+        // correlations on: three session bundles per layer + value triples
+        let with = decode_pool_shapes(&cfg, true, 6);
+        assert_eq!(with.len(), 4);
+        assert!(with
+            .iter()
+            .any(|(s, c)| *s == TripleShape::fixed_ppp(cfg.h, cfg.n_ctx, cfg.n_ctx) && *c == l));
+        assert!(with
+            .iter()
+            .any(|(s, c)| *s == TripleShape::fixed_append(cfg.n_ctx, cfg.d, cfg.n_ctx) && *c == l));
+        assert!(with
+            .iter()
+            .any(|(s, c)| *s == TripleShape::fixed_scores(cfg.h, cfg.n_ctx, cfg.d, cfg.n_ctx) && *c == l));
+        assert!(with
+            .iter()
+            .any(|(s, c)| *s == TripleShape::matmul(1, cfg.n_ctx, cfg.dh())
+                && *c == l * cfg.h as u64 * 6));
+        // correlations off: the plain per-step profile times steps
+        let without = decode_pool_shapes(&cfg, false, 6);
+        let plain = decode_step_shapes(&cfg);
+        assert_eq!(without.len(), plain.len());
+        for ((s, c), (ps, pc)) in without.iter().zip(plain.iter()) {
+            assert_eq!(s, ps);
+            assert_eq!(*c, pc * 6);
+        }
     }
 
     #[test]

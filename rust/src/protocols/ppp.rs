@@ -55,6 +55,21 @@ pub fn ppp_cols(mpc: &mut Mpc, x: &Share, pi_sh: &Share, class: OpClass) -> Shar
     mpc.matmul(x, pi_sh, class)
 }
 
+/// `Π_PPP` against a *session-fixed* `π₁` through its fixed-operand
+/// correlation (DESIGN.md §Fixed-operand correlations): the masked opening
+/// `f_pi = π₁ − B` happened once at session setup, so each restoration
+/// opens only `[X]`'s mask difference — `2·8·|X|` bytes instead of
+/// `2·8·(|X| + |π₁|)`, the dominant warm-decode saving.
+pub fn ppp_cols_fixed(
+    mpc: &mut Mpc,
+    x: &Share,
+    f_pi: &RingTensor,
+    corr: &mut crate::mpc::FixedOperandCorrelation,
+    class: OpClass,
+) -> crate::Result<Share> {
+    mpc.matmul_fixed_rhs(x, f_pi, corr, class)
+}
+
 /// Row variant: `[X] → [πᵀX]` via `Π_MatMul([πᵀ], [X])`.
 pub fn ppp_rows_t(mpc: &mut Mpc, pi_t_sh: &Share, x: &Share, class: OpClass) -> Share {
     mpc.matmul(pi_t_sh, x, class)
@@ -129,6 +144,29 @@ mod tests {
         let back = ppp_cols(&mut mpc, &permuted, &inv_sh, OpClass::Linear);
         let got = fixed::decode_tensor(&back.reconstruct());
         assert!(got.max_abs_diff(&x) < 1e-2);
+    }
+
+    #[test]
+    fn ppp_fixed_matches_plain_ppp_with_one_session_opening() {
+        use crate::mpc::TripleShape;
+        let mut mpc = mk();
+        let mut rng = Rng::new(14);
+        let n = 8;
+        let p = Perm::random(n, &mut rng);
+        let pi_sh = share_perm(&mut mpc, &p, OpClass::Linear);
+        let mut corr = mpc.dealer.fixed_correlation(TripleShape::fixed_ppp(3, n, 4));
+        let f_pi = mpc.open_fixed_operand(&pi_sh, &mut corr, OpClass::Correlation).unwrap();
+        for i in 0..4 {
+            let x = FloatTensor::from_fn(3, n, |r, c| ((r + c + i) % 5) as f32 * 0.3 - 0.6);
+            let x_sh = mpc.share_local(&fixed::encode_tensor(&x));
+            let out = ppp_cols_fixed(&mut mpc, &x_sh, &f_pi, &mut corr, OpClass::Linear).unwrap();
+            let got = fixed::decode_tensor(&out.reconstruct());
+            let want = p.apply_cols(&x);
+            assert!(got.max_abs_diff(&want) < 1e-2, "use {i} diff {}", got.max_abs_diff(&want));
+        }
+        // π₁-side mask opened exactly once for the whole session
+        assert_eq!(corr.openings(), 1);
+        assert_eq!(corr.uses_left(), 0);
     }
 
     #[test]

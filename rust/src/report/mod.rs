@@ -44,7 +44,7 @@ pub fn measure_framework(
                 &c,
                 &w,
                 Box::new(NativeBackend::new()),
-                EngineOptions { profile: NetworkProfile::lan(), seed, record_views: false, fast_sim: true, triple_pool: None },
+                EngineOptions { profile: NetworkProfile::lan(), seed, record_views: false, fast_sim: true, ..Default::default() },
             )?),
             FrameworkKind::PermOnly => Box::new(PermOnlyEngine::new(&c, &w, NetworkProfile::lan(), false)),
             smpc => Box::new(SmpcEngine::new(smpc, &c, &w, NetworkProfile::lan(), seed)?),
@@ -59,7 +59,7 @@ pub fn measure_framework(
                 &c,
                 &w,
                 Box::new(NativeBackend::new()),
-                EngineOptions { profile: NetworkProfile::lan(), seed, record_views: false, fast_sim: true, triple_pool: None },
+                EngineOptions { profile: NetworkProfile::lan(), seed, record_views: false, fast_sim: true, ..Default::default() },
             )?),
             FrameworkKind::PermOnly => Box::new(PermOnlyEngine::new(&c, &w, NetworkProfile::lan(), false)),
             smpc => Box::new(SmpcEngine::new(smpc, &c, &w, NetworkProfile::lan(), seed)?),

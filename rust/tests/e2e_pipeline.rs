@@ -92,27 +92,63 @@ fn attack_corpora_and_vocab_consistent() {
     }
 }
 
-/// Decode parity (no artifacts needed): the incremental KV-cache path, the
-/// full-recompute path, and the plaintext greedy reference must emit the
-/// same token at every step, across every network profile and several
-/// seeds. The comparison is teacher-forced on the plaintext rollout so a
-/// single step can be judged in isolation, and a step is only asserted
-/// when its plaintext top-2 margin exceeds the fixed-point noise bound
-/// (non-decisive argmaxes are numerically meaningless to compare; margins
-/// are almost always far above the bound).
+/// Fixed-point noise on tiny-model logits is ~1e-3; 0.03 is 30x that.
+const DECODE_MARGIN: f32 = 0.03;
+
+/// Margin-gated plaintext greedy rollout shared by the decode parity
+/// tests: `(token, decisive)` per generated step, where a step is
+/// *decisive* when its top-2 regular-token margin exceeds the fixed-point
+/// noise bound — only decisive argmaxes are numerically meaningful to
+/// compare against the protocol paths.
+fn margin_gated_rollout(
+    cfg: &ModelConfig,
+    w: &ModelWeights,
+    prompt: &[u32],
+    steps: usize,
+) -> Vec<(u32, bool)> {
+    use centaur::data::{greedy_regular_token, NUM_SPECIAL_TOKENS};
+    let mut seq = prompt.to_vec();
+    let mut expected = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let mut padded = seq.clone();
+        padded.resize(cfg.n_ctx, 0);
+        let logits = plaintext::forward(cfg, w, &padded, Variant::Exact);
+        let row = logits.row(seq.len() - 1);
+        let tok = greedy_regular_token(row);
+        let (mut best, mut second) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+        for &v in row.iter().skip(NUM_SPECIAL_TOKENS) {
+            if v > best {
+                second = best;
+                best = v;
+            } else if v > second {
+                second = v;
+            }
+        }
+        expected.push((tok, best - second >= DECODE_MARGIN));
+        seq.push(tok);
+    }
+    expected
+}
+
+/// Decode parity (no artifacts needed): the *correlated* incremental
+/// KV-cache path, the PR 2 plain per-step path, the full-recompute path,
+/// and the plaintext greedy reference must emit the same token at every
+/// step, across every network profile and several seeds. The comparison is
+/// teacher-forced on the plaintext rollout so a single step can be judged
+/// in isolation, and a step is only asserted when its plaintext top-2
+/// margin exceeds the fixed-point noise bound (see [`margin_gated_rollout`]).
 #[test]
 fn incremental_decode_parity_across_profiles_and_seeds() {
     use centaur::data::{greedy_regular_token, NUM_SPECIAL_TOKENS};
     use centaur::engine::decoder::DecoderSession;
-    use centaur::engine::CentaurEngine;
+    use centaur::engine::{CentaurEngine, EngineOptions};
     use centaur::net::NetworkProfile;
+    use centaur::runtime::NativeBackend;
     use centaur::util::prop::check;
 
     const STEPS: usize = 3;
-    // Fixed-point noise on tiny-model logits is ~1e-3; 0.03 is 30x that.
-    const MARGIN: f32 = 0.03;
 
-    check("incremental == full recompute == plaintext greedy", 3, |g| {
+    check("correlated == plain steps == full recompute == plaintext greedy", 3, |g| {
         let cfg = ModelConfig::gpt2_tiny();
         let seed = 0xD3C0DE ^ (g.case as u64).wrapping_mul(7919);
         let w = ModelWeights::random(&cfg, seed);
@@ -120,38 +156,34 @@ fn incremental_decode_parity_across_profiles_and_seeds() {
             (0..3).map(|_| (g.below(cfg.vocab - NUM_SPECIAL_TOKENS) + NUM_SPECIAL_TOKENS) as u32).collect();
 
         // Plaintext greedy rollout + per-step decisiveness.
+        let expected = margin_gated_rollout(&cfg, &w, &prompt, STEPS);
         let mut seq = prompt.clone();
-        let mut expected: Vec<(u32, bool)> = Vec::new();
-        for _ in 0..STEPS {
-            let mut padded = seq.clone();
-            padded.resize(cfg.n_ctx, 0);
-            let logits = plaintext::forward(&cfg, &w, &padded, Variant::Exact);
-            let row = logits.row(seq.len() - 1);
-            let tok = greedy_regular_token(row);
-            let (mut best, mut second) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
-            for &v in row.iter().skip(NUM_SPECIAL_TOKENS) {
-                if v > best {
-                    second = best;
-                    best = v;
-                } else if v > second {
-                    second = v;
-                }
-            }
-            expected.push((tok, best - second >= MARGIN));
-            seq.push(tok);
-        }
+        seq.extend(expected.iter().map(|&(tok, _)| tok));
         assert_eq!(seq.len(), prompt.len() + STEPS);
 
         for name in NetworkProfile::ALL_NAMES {
             let profile = NetworkProfile::by_name(name).unwrap();
-            let mut e_inc = CentaurEngine::new(&cfg, &w, profile, seed ^ 0xA).unwrap();
+            let mk = |decode_correlations: bool, seed: u64| {
+                CentaurEngine::with_backend(
+                    &cfg,
+                    &w,
+                    Box::new(NativeBackend::new()),
+                    EngineOptions { profile, seed, decode_correlations, ..Default::default() },
+                )
+                .unwrap()
+            };
+            let mut e_corr = mk(true, seed ^ 0xA);
+            let mut e_plain = mk(false, seed ^ 0xC);
             let mut e_full = CentaurEngine::new(&cfg, &w, profile, seed ^ 0xB).unwrap();
-            let inc_bytes;
+            let corr_bytes;
+            let plain_bytes;
             let mut full_bytes = 0u64;
             {
-                let mut sess = DecoderSession::new(&mut e_inc, &prompt).unwrap();
+                let mut sess_corr = DecoderSession::new(&mut e_corr, &prompt).unwrap();
+                let mut sess_plain = DecoderSession::new(&mut e_plain, &prompt).unwrap();
                 for (s, &(want, decisive)) in expected.iter().enumerate() {
-                    let inc_tok = greedy_regular_token(sess.logits().row(0));
+                    let corr_tok = greedy_regular_token(sess_corr.logits().row(0));
+                    let plain_tok = greedy_regular_token(sess_plain.logits().row(0));
                     let prefix_len = prompt.len() + s;
                     let mut padded = seq[..prefix_len].to_vec();
                     padded.resize(cfg.n_ctx, 0);
@@ -159,21 +191,87 @@ fn incremental_decode_parity_across_profiles_and_seeds() {
                     let full_tok = greedy_regular_token(full_out.logits.row(prefix_len - 1));
                     full_bytes += full_out.stats.bytes_total();
                     if decisive {
-                        assert_eq!(inc_tok, want, "incremental != plaintext at step {s} ({name})");
+                        assert_eq!(corr_tok, want, "correlated != plaintext at step {s} ({name})");
+                        assert_eq!(plain_tok, want, "plain steps != plaintext at step {s} ({name})");
                         assert_eq!(full_tok, want, "full recompute != plaintext at step {s} ({name})");
                     }
-                    // Teacher-force the plaintext token into the session.
-                    sess.absorb(want).unwrap();
+                    // Teacher-force the plaintext token into both sessions.
+                    sess_corr.absorb(want).unwrap();
+                    sess_plain.absorb(want).unwrap();
                 }
-                inc_bytes = sess.total_cost().bytes_total();
+                corr_bytes = sess_corr.total_cost().bytes_total();
+                plain_bytes = sess_plain.total_cost().bytes_total();
             }
-            assert!(e_inc.leaks().is_empty(), "decode session leaked ({name})");
+            assert!(e_corr.leaks().is_empty(), "correlated session leaked ({name})");
+            assert!(e_plain.leaks().is_empty(), "plain session leaked ({name})");
             assert!(
-                full_bytes > inc_bytes,
-                "incremental must move fewer bytes ({name}): {full_bytes} vs {inc_bytes}"
+                plain_bytes > corr_bytes,
+                "correlations must move fewer total bytes even including setup ({name}): \
+                 {plain_bytes} vs {corr_bytes}"
+            );
+            assert!(
+                full_bytes > plain_bytes,
+                "incremental must move fewer bytes than recompute ({name}): {full_bytes} vs {plain_bytes}"
             );
         }
     });
+}
+
+/// Cold start: a serving pool with **no correlations stocked** must not
+/// break decode — the dealer falls back to generating the bundles on
+/// demand (pool misses recorded, session still token-exact), and a
+/// correlations-off engine falls back to plain per-step triples.
+#[test]
+fn cold_start_pool_without_correlations_falls_back() {
+    use centaur::data::greedy_regular_token;
+    use centaur::engine::decoder::DecoderSession;
+    use centaur::engine::{CentaurEngine, EngineOptions};
+    use centaur::mpc::TriplePool;
+    use centaur::net::NetworkProfile;
+    use centaur::runtime::NativeBackend;
+    use std::sync::Arc;
+
+    let cfg = ModelConfig::gpt2_tiny();
+    let w = ModelWeights::random(&cfg, 0xC01D);
+    let prompt: Vec<u32> = vec![7, 11, 13];
+    let steps = 2usize;
+
+    let expected = margin_gated_rollout(&cfg, &w, &prompt, steps);
+
+    let run = |decode_correlations: bool, pool: Option<Arc<TriplePool>>, seed: u64| {
+        let mut eng = CentaurEngine::with_backend(
+            &cfg,
+            &w,
+            Box::new(NativeBackend::new()),
+            EngineOptions {
+                profile: NetworkProfile::lan(),
+                seed,
+                triple_pool: pool,
+                decode_correlations,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut sess = DecoderSession::new(&mut eng, &prompt).unwrap();
+        for (s, &(want, decisive)) in expected.iter().enumerate() {
+            let tok = greedy_regular_token(sess.logits().row(0));
+            if decisive {
+                assert_eq!(tok, want, "step {s} (correlations={decode_correlations})");
+            }
+            sess.absorb(want).unwrap();
+        }
+    };
+
+    // 1. Correlations on, attached pool empty: every bundle is a miss,
+    //    generated on demand — the session still works, token-exact.
+    let pool = Arc::new(TriplePool::new(0xC01D ^ 1, 1));
+    run(true, Some(Arc::clone(&pool)), 0xC01D ^ 2);
+    assert!(pool.misses() > 0, "empty pool must record the correlation misses");
+    assert_eq!(pool.hits(), 0);
+
+    // 2. Correlations disabled entirely: the dealer serves plain per-step
+    //    triples (the PR 2 path) and the tokens still match.
+    run(false, None, 0xC01D ^ 3);
 }
 
 #[test]

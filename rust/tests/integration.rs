@@ -152,7 +152,13 @@ fn centaur_engine_runs_on_xla_backend() {
         &cfg,
         &w,
         backend,
-        EngineOptions { profile: NetworkProfile::lan(), seed: 14, record_views: false, fast_sim: false, triple_pool: None },
+        EngineOptions {
+            profile: NetworkProfile::lan(),
+            seed: 14,
+            record_views: false,
+            fast_sim: false,
+            ..Default::default()
+        },
     )
     .unwrap();
     let got = eng.infer(&toks).unwrap().logits;

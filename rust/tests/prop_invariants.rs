@@ -89,6 +89,135 @@ fn prop_ppp_composes_with_inverse() {
 }
 
 #[test]
+fn prop_fixed_rhs_correlated_matmul_equals_plain_beaver() {
+    // Fixed-operand triple algebra (ISSUE 4): for random shapes, seeds and
+    // use counts, the correlated-open matmul against a session-fixed right
+    // operand reconstructs to the same product as the plain Beaver matmul
+    // (share-for-share: both are valid sharings of X·Y, equal up to the
+    // per-share fixed-point truncation LSB), with only the varying
+    // operand's mask difference opened per use.
+    use centaur::mpc::TripleShape;
+    check("fixed-rhs correlated == plain beaver", 10, |g| {
+        let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 0xF1 ^ g.case as u64);
+        let (m, n) = (g.dim(5), 2 + g.below(8));
+        let uses = 1 + g.below(4);
+        let y = FloatTensor::from_vec(
+            n,
+            n,
+            g.vec_small_f64(n * n).iter().map(|&v| v as f32 * 0.1).collect(),
+        );
+        let sy = mpc.share_local(&fixed::encode_tensor(&y));
+        let mut corr = mpc.dealer.fixed_correlation(TripleShape::fixed_ppp(m, n, uses));
+        let f = mpc.open_fixed_operand(&sy, &mut corr, OpClass::Other).unwrap();
+        for _ in 0..uses {
+            let x = FloatTensor::from_vec(
+                m,
+                n,
+                g.vec_small_f64(m * n).iter().map(|&v| v as f32 * 0.1).collect(),
+            );
+            let sx = mpc.share_local(&fixed::encode_tensor(&x));
+            let bytes_before = mpc.net.ledger.class(OpClass::Linear).bytes;
+            let corr_out = mpc.matmul_fixed_rhs(&sx, &f, &mut corr, OpClass::Linear).unwrap();
+            let corr_bytes = mpc.net.ledger.class(OpClass::Linear).bytes - bytes_before;
+            let bytes_before = mpc.net.ledger.class(OpClass::Linear).bytes;
+            let plain_out = mpc.matmul(&sx, &sy, OpClass::Linear);
+            let plain_bytes = mpc.net.ledger.class(OpClass::Linear).bytes - bytes_before;
+            // exact byte contract: E only, vs E + F
+            assert_eq!(corr_bytes, 2 * 8 * (m * n) as u64);
+            assert_eq!(plain_bytes, 2 * 8 * (m * n + n * n) as u64);
+            let got = fixed::decode_tensor(&corr_out.reconstruct());
+            let want = fixed::decode_tensor(&plain_out.reconstruct());
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "correlated vs plain diff {}",
+                got.max_abs_diff(&want)
+            );
+        }
+        // reuse beyond the dealt use count errors, never reuses a mask
+        let sx = mpc.share_local(&RingTensor::zeros(m, n));
+        assert!(mpc.matmul_fixed_rhs(&sx, &f, &mut corr, OpClass::Linear).is_err());
+    });
+}
+
+#[test]
+fn prop_fixed_lhs_and_grown_families_match_plain_beaver() {
+    use centaur::mpc::{Share, TripleShape};
+    check("fixed-lhs/grown correlated == plain beaver", 8, |g| {
+        let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 0xF2 ^ g.case as u64);
+        let n = 2 + g.below(6);
+        let heads = 1 + g.below(2);
+        let d = heads * (1 + g.below(4));
+        let uses = 1 + g.below(n);
+
+        // left-fixed column-per-use (the KV outer product)
+        let x = FloatTensor::from_vec(
+            n,
+            n,
+            g.vec_small_f64(n * n).iter().map(|&v| v as f32 * 0.1).collect(),
+        );
+        let sx = mpc.share_local(&fixed::encode_tensor(&x));
+        let mut app = mpc.dealer.fixed_correlation(TripleShape::fixed_append(n, d, uses));
+        let f = mpc.open_fixed_operand(&sx, &mut app, OpClass::Other).unwrap();
+        for pos in 0..uses {
+            let yv = FloatTensor::from_vec(
+                1,
+                d,
+                g.vec_small_f64(d).iter().map(|&v| v as f32 * 0.1).collect(),
+            );
+            let sy = mpc.share_local(&fixed::encode_tensor(&yv));
+            let corr_out = mpc.matmul_fixed_lhs_col(&f, &sy, &mut app, pos, OpClass::Linear).unwrap();
+            let col = sx.col_block(pos, pos + 1);
+            let plain_out = mpc.matmul(&col, &sy, OpClass::Linear);
+            let got = fixed::decode_tensor(&corr_out.reconstruct());
+            let want = fixed::decode_tensor(&plain_out.reconstruct());
+            assert!(got.max_abs_diff(&want) < 1e-3, "lhs-col pos {pos}");
+        }
+        let sy = mpc.share_local(&RingTensor::zeros(1, d));
+        assert!(mpc.matmul_fixed_lhs_col(&f, &sy, &mut app, uses, OpClass::Linear).is_err());
+
+        // row-grown scores (the write-once K cache)
+        let mut grown = mpc.dealer.fixed_correlation(TripleShape::fixed_scores(heads, n, d, uses));
+        let mut k_cache = Share { s0: RingTensor::zeros(n, d), s1: RingTensor::zeros(n, d) };
+        let mut f_rows = RingTensor::zeros(n, d);
+        let dh = d / heads;
+        for pos in 0..uses {
+            let row = FloatTensor::from_vec(
+                1,
+                d,
+                g.vec_small_f64(d).iter().map(|&v| v as f32 * 0.1).collect(),
+            );
+            let row_sh = mpc.share_local(&fixed::encode_tensor(&row));
+            k_cache.s0.row_mut(pos).copy_from_slice(row_sh.s0.row(0));
+            k_cache.s1.row_mut(pos).copy_from_slice(row_sh.s1.row(0));
+            let opened =
+                mpc.open_fixed_grown_row(&row_sh, &mut grown, pos, OpClass::Linear).unwrap();
+            f_rows.row_mut(pos).copy_from_slice(opened.row(0));
+
+            let q = FloatTensor::from_vec(
+                1,
+                d,
+                g.vec_small_f64(d).iter().map(|&v| v as f32 * 0.1).collect(),
+            );
+            let sq = mpc.share_local(&fixed::encode_tensor(&q));
+            let outs = mpc
+                .matmul_fixed_grown_scores(&sq, &f_rows, &mut grown, pos, n, OpClass::Linear)
+                .unwrap();
+            for (h, out) in outs.iter().enumerate() {
+                let qh = sq.col_block(h * dh, (h + 1) * dh);
+                let kht = k_cache.col_block(h * dh, (h + 1) * dh).transpose();
+                let plain = mpc.matmul(&qh, &kht, OpClass::Linear);
+                let got = fixed::decode_tensor(&out.reconstruct());
+                let want = fixed::decode_tensor(&plain.reconstruct());
+                assert!(got.max_abs_diff(&want) < 1e-3, "grown pos {pos} head {h}");
+            }
+        }
+        // the session masks were each opened exactly once per element
+        assert_eq!(app.openings(), 1);
+        assert_eq!(grown.openings(), uses as u64);
+    });
+}
+
+#[test]
 fn prop_smpc_exp_monotone_and_bounded() {
     check("smpc exp sane", 20, |g| {
         let mut mpc = mk();

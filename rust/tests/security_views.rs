@@ -146,6 +146,84 @@ fn kv_cache_decode_is_leak_free_and_never_opens_the_cache() {
     assert!(eng.views.find(&last).is_some(), "missing view {last}");
 }
 
+/// ISSUE 4 census: multi-step decode with fixed-operand correlations must
+/// (1) open the π₁-side session mask exactly once per session per layer,
+/// (2) enumerate exactly the same P1 view census as the plain per-step
+/// path (zero additional openings — the correlated openings are masked
+/// exchanges, never plaintext reconstructions), and (3) never put a KV
+/// tensor in any party's view.
+#[test]
+fn correlated_decode_census_matches_plain_and_opens_pi1_once_per_layer() {
+    use centaur::engine::decoder::DecoderSession;
+
+    let cfg = ModelConfig::gpt2_tiny();
+    let w = ModelWeights::random(&cfg, 71);
+    let prompt = [7u32, 11, 13];
+    let forced = [21u32, 34, 55, 89]; // teacher-forced so both paths align
+    let absorbs = prompt.len() + forced.len();
+
+    let run = |decode_correlations: bool| {
+        let mut eng = CentaurEngine::with_backend(
+            &cfg,
+            &w,
+            Box::new(NativeBackend::new()),
+            EngineOptions { record_views: true, seed: 72, decode_correlations, ..Default::default() },
+        )
+        .unwrap();
+        let (openings, uses_left) = {
+            let mut sess = DecoderSession::new(&mut eng, &prompt).unwrap();
+            for &t in &forced {
+                sess.absorb(t).unwrap();
+            }
+            (sess.correlation_openings(), sess.correlation_uses_left())
+        };
+        (eng, openings, uses_left)
+    };
+    let (corr_eng, corr_openings, corr_uses_left) = run(true);
+    let (plain_eng, plain_openings, _) = run(false);
+
+    // (1) π₁-side masks (PPP and the π₁ᵀ append side) opened exactly once
+    // per session per layer; K rows opened once per absorb.
+    assert_eq!(corr_openings.len(), cfg.layers);
+    for (layer, &(ppp, append, k_rows)) in corr_openings.iter().enumerate() {
+        assert_eq!(ppp, 1, "layer {layer}: π₁ mask must open exactly once per session");
+        assert_eq!(append, 1, "layer {layer}: π₁ᵀ mask must open exactly once per session");
+        assert_eq!(k_rows, absorbs as u64, "layer {layer}: one K-row opening per absorb");
+    }
+    assert!(plain_openings.is_empty(), "the plain path deals no correlations");
+    // Per-use masks are consumed one per absorb and never reused: the
+    // remaining budget is exactly the undealt tail of the context window.
+    for (layer, &(ppp_left, append_left, scores_left)) in corr_uses_left.iter().enumerate() {
+        let want = cfg.n_ctx - absorbs;
+        assert_eq!((ppp_left, append_left, scores_left), (want, want, want), "layer {layer}");
+    }
+
+    // (2) identical view census, record for record: same labels, same
+    // permutation tags, same observed shapes — zero additional openings.
+    assert!(corr_eng.leaks().is_empty(), "leaks: {:?}", corr_eng.leaks());
+    assert_eq!(corr_eng.views.p1.len(), plain_eng.views.p1.len(), "census size must not grow");
+    assert_eq!(corr_eng.views.p1.len(), absorbs * (2 + 4 * cfg.layers));
+    for (c, p) in corr_eng.views.p1.iter().zip(plain_eng.views.p1.iter()) {
+        assert_eq!(c.label, p.label, "census labels must match the plain path");
+        assert_eq!(c.tag, p.tag);
+        assert_eq!((c.rows, c.cols), (p.rows, p.cols));
+        assert_ne!(c.tag, PermTag::None, "view {} untagged", c.label);
+    }
+
+    // (3) no observation carries a KV-cache tensor: every decode view is a
+    // single-token row or an (h, n_ctx) permuted score row.
+    for v in &corr_eng.views.p1 {
+        assert!(
+            (v.rows, v.cols) != (cfg.n_ctx, cfg.d),
+            "view '{}' has the KV-cache shape {}x{}",
+            v.label,
+            v.rows,
+            v.cols
+        );
+        assert!(v.rows == 1 || v.rows == cfg.h, "view '{}' is not a single-token row", v.label);
+    }
+}
+
 #[test]
 fn permonly_leak_detector_fires() {
     let cfg = ModelConfig::gpt2_tiny();
