@@ -18,6 +18,9 @@ use centaur::util::{human_bytes, human_secs};
 /// Acceptance gates (byte charges are deterministic, so both are exact):
 /// full ≥ 3× plain per-step, and plain per-step ≥ 1.8× correlated — the
 /// fixed-operand warm-step comm reduction threshold CI smokes on.
+/// Plus the ISSUE 5 round gate: the batched opening schedule must cut
+/// warm rounds/token ≥40% vs the sequential schedule with identical
+/// bytes, reported as WAN decode s/token (where `rounds·RTT` dominates).
 fn bench_decode(b: &mut Bencher) {
     let cfg = ModelConfig::gpt2_tiny().with_n_ctx(64);
     let w = ModelWeights::random(&cfg, 7);
@@ -31,7 +34,7 @@ fn bench_decode(b: &mut Bencher) {
         let (_, cost) = e.generate_full_recompute(&prompt, steps).unwrap();
         full_cost = Some(cost);
     });
-    let run_session = |label: &str, decode_correlations: bool, b: &mut Bencher| {
+    let run_session = |label: &str, decode_correlations: bool, round_batching: bool, b: &mut Bencher| {
         let mut out = None;
         b.bench(label, || {
             let mut e = CentaurEngine::with_backend(
@@ -42,6 +45,7 @@ fn bench_decode(b: &mut Bencher) {
                     profile: NetworkProfile::lan(),
                     seed: 8,
                     decode_correlations,
+                    round_batching,
                     ..Default::default()
                 },
             )
@@ -58,9 +62,10 @@ fn bench_decode(b: &mut Bencher) {
         });
         out.unwrap()
     };
-    let (_, plain_prefill, plain_decode) = run_session("plain KV decode x8 tokens (PR 2)", false, b);
+    let (_, plain_prefill, plain_decode) =
+        run_session("plain KV decode x8 tokens (PR 2)", false, true, b);
     let (corr_setup, corr_prefill, corr_decode) =
-        run_session("correlated KV decode x8 tokens", true, b);
+        run_session("correlated KV decode x8 tokens", true, true, b);
 
     let full = full_cost.unwrap();
     let full_tok = full.bytes_total() / steps as u64;
@@ -101,6 +106,40 @@ fn bench_decode(b: &mut Bencher) {
     assert!(
         plain_tok * 10 >= corr_tok * 18,
         "fixed-operand correlations must cut warm-step comm >=1.8x: plain {plain_tok} B vs corr {corr_tok} B"
+    );
+
+    // --- Round compression (ISSUE 5): batched vs sequential schedule ----
+    b.section("gpt2-tiny @ n_ctx=64 — WAN decode: batched vs sequential opening schedule");
+    let (_, _, seq_decode) =
+        run_session("sequential-schedule decode x8 tokens (PR 3 baseline)", true, false, b);
+    let bat_rounds_tok = corr_decode.rounds_total() / steps as u64;
+    let seq_rounds_tok = seq_decode.rounds_total() / steps as u64;
+    let seq_bytes_tok = seq_decode.bytes_total() / steps as u64;
+    println!(
+        "    -> rounds/token: sequential {seq_rounds_tok} -> batched {bat_rounds_tok} \
+         ({:.1}% fewer), bytes/token {} -> {} (identical)",
+        100.0 * (seq_rounds_tok as f64 - bat_rounds_tok as f64) / seq_rounds_tok as f64,
+        human_bytes(seq_bytes_tok),
+        human_bytes(corr_tok),
+    );
+    for name in ["wan1", "wan2", "wan3"] {
+        let p = NetworkProfile::by_name(name).unwrap();
+        println!(
+            "    -> {:<18} decode s/token: sequential {} -> batched {}",
+            p.name,
+            human_secs(seq_decode.total_time(&p) / steps as f64),
+            human_secs(corr_decode.total_time(&p) / steps as f64),
+        );
+    }
+    // CI gates: >=40% fewer warm rounds/token, bytes/token unchanged.
+    assert!(
+        bat_rounds_tok * 10 <= seq_rounds_tok * 6,
+        "batched openings must cut warm rounds/token >=40%: {bat_rounds_tok} vs {seq_rounds_tok}"
+    );
+    assert_eq!(
+        corr_decode.bytes_total(),
+        seq_decode.bytes_total(),
+        "round batching must not change decode bytes"
     );
 }
 

@@ -25,6 +25,9 @@ pub struct Metrics {
     pub prefill_bytes: u64,
     /// Online bytes of the warm-decode phases (generated tokens).
     pub decode_bytes: u64,
+    /// Protocol rounds of the warm-decode phases (generated tokens) — the
+    /// WAN latency driver (`rounds · RTT`).
+    pub decode_rounds: u64,
 }
 
 impl Metrics {
@@ -43,6 +46,7 @@ impl Metrics {
             corr_setup_bytes: 0,
             prefill_bytes: 0,
             decode_bytes: 0,
+            decode_rounds: 0,
         }
     }
 
@@ -67,6 +71,7 @@ impl Metrics {
         prefill_bytes: u64,
         decode_bytes: u64,
         rounds: u64,
+        decode_rounds: u64,
     ) {
         self.record(latency, service, setup_bytes + prefill_bytes + decode_bytes, rounds);
         self.generations += 1;
@@ -74,6 +79,7 @@ impl Metrics {
         self.corr_setup_bytes += setup_bytes;
         self.prefill_bytes += prefill_bytes;
         self.decode_bytes += decode_bytes;
+        self.decode_rounds += decode_rounds;
     }
 
     /// Compute quantiles and totals so far.
@@ -109,6 +115,7 @@ impl Metrics {
             corr_setup_bytes: self.corr_setup_bytes,
             prefill_bytes: self.prefill_bytes,
             decode_bytes: self.decode_bytes,
+            decode_rounds: self.decode_rounds,
             elapsed,
         }
     }
@@ -156,6 +163,8 @@ pub struct MetricsSnapshot {
     pub prefill_bytes: u64,
     /// Warm-decode communication across generation requests.
     pub decode_bytes: u64,
+    /// Warm-decode protocol rounds across generation requests.
+    pub decode_rounds: u64,
     /// Wall-clock time since the coordinator started.
     pub elapsed: Duration,
 }
@@ -189,6 +198,17 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Warm-decode protocol rounds per generated token (0 when no tokens
+    /// were generated) — the serving-side view of the round-compression
+    /// win: WAN decode latency is essentially this number times the RTT.
+    pub fn decode_rounds_per_token(&self) -> u64 {
+        if self.tokens_generated == 0 {
+            0
+        } else {
+            self.decode_rounds / self.tokens_generated
+        }
+    }
+
     /// Human-readable summary block.
     pub fn summary(&self) -> String {
         let mut s = format!(
@@ -218,13 +238,14 @@ impl MetricsSnapshot {
         if self.generations > 0 {
             s.push_str(&format!(
                 " generations={} tokens={} corr_setup={} prefill_comm={} decode_comm={} \
-                 decode_per_token={}",
+                 decode_per_token={} decode_rounds_per_token={}",
                 self.generations,
                 self.tokens_generated,
                 crate::util::human_bytes(self.corr_setup_bytes),
                 crate::util::human_bytes(self.prefill_bytes),
                 crate::util::human_bytes(self.decode_bytes),
                 crate::util::human_bytes(self.decode_bytes_per_token()),
+                self.decode_rounds_per_token(),
             ));
         }
         s
@@ -269,6 +290,7 @@ mod tests {
             1000,
             2000,
             40,
+            32,
         );
         let s = m.snapshot();
         assert_eq!(s.completed, 1);
@@ -277,7 +299,10 @@ mod tests {
         assert_eq!(s.bytes_total, 3500);
         assert_eq!((s.corr_setup_bytes, s.prefill_bytes, s.decode_bytes), (500, 1000, 2000));
         assert_eq!(s.decode_bytes_per_token(), 500);
+        assert_eq!(s.decode_rounds, 32);
+        assert_eq!(s.decode_rounds_per_token(), 8);
         assert!(s.summary().contains("decode_per_token"));
+        assert!(s.summary().contains("decode_rounds_per_token=8"));
         assert!(s.summary().contains("corr_setup"));
     }
 }

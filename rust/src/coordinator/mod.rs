@@ -74,6 +74,11 @@ pub struct ServerConfig {
     /// of a fresh Beaver triple per step, cutting warm-step decode
     /// communication ~2.5× (DESIGN.md §Fixed-operand correlations).
     pub decode_correlations: bool,
+    /// Batched-opening decode schedule (on by default): each decode
+    /// step's independent openings share flights, cutting warm-step
+    /// rounds/token ~47% with identical bytes (DESIGN.md §Batched
+    /// openings) — the WAN serving latency lever.
+    pub round_batching: bool,
 }
 
 impl ServerConfig {
@@ -96,6 +101,7 @@ impl ServerConfig {
             pool_depth: 2,
             decode_prefill_steps: 0,
             decode_correlations: true,
+            round_batching: true,
         }
     }
 }
@@ -151,6 +157,9 @@ pub struct GenSummary {
     pub decode_bytes: u64,
     /// Total protocol rounds (setup + prefill + decode).
     pub rounds: u64,
+    /// Warm-decode protocol rounds (generated tokens only) — divide by
+    /// `tokens.len()` for the rounds/token the WAN latency model charges.
+    pub decode_rounds: u64,
     /// End-to-end latency (queue + protocol), wall clock.
     pub latency: Duration,
 }
@@ -189,6 +198,8 @@ fn build_engine(cfg: &ServerConfig, pool: Option<Arc<TriplePool>>) -> Result<Box
                     fast_sim: cfg.fast_sim,
                     triple_pool: pool,
                     decode_correlations: cfg.decode_correlations,
+                    round_batching: cfg.round_batching,
+                    ..Default::default()
                 },
             )?;
             Ok(Box::new(eng))
@@ -350,6 +361,7 @@ impl Coordinator {
                                             out.prefill.bytes_total(),
                                             out.decode.bytes_total(),
                                             total.rounds_total(),
+                                            out.decode.rounds_total(),
                                         );
                                         let _ = stream.send(Ok(StreamEvent::Done(GenSummary {
                                             tokens: out.tokens,
@@ -357,6 +369,7 @@ impl Coordinator {
                                             prefill_bytes: out.prefill.bytes_total(),
                                             decode_bytes: out.decode.bytes_total(),
                                             rounds: total.rounds_total(),
+                                            decode_rounds: out.decode.rounds_total(),
                                             latency,
                                         })));
                                     }
@@ -590,7 +603,13 @@ mod tests {
         assert_eq!(snap.tokens_generated, 3);
         assert_eq!(snap.corr_setup_bytes, s.setup_bytes);
         assert!(snap.decode_bytes_per_token() > 0);
+        // rounds/token is a first-class serving metric (ISSUE 5): the
+        // summary reports it and it reconciles with the Done event.
+        assert!(s.decode_rounds > 0);
+        assert_eq!(snap.decode_rounds, s.decode_rounds);
+        assert_eq!(snap.decode_rounds_per_token(), s.decode_rounds / s.tokens.len() as u64);
         assert!(snap.summary().contains("decode_per_token"));
+        assert!(snap.summary().contains("decode_rounds_per_token"));
         assert!(snap.summary().contains("corr_setup"));
     }
 

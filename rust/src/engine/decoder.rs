@@ -73,6 +73,7 @@ pub struct DecoderSession<'e> {
     setup: CostLedger,
     prefill: CostLedger,
     decode: CostLedger,
+    decode_steps: u64,
     last_step: CostLedger,
     last_logits: FloatTensor,
 }
@@ -111,6 +112,7 @@ impl<'e> DecoderSession<'e> {
             setup,
             prefill: CostLedger::new(),
             decode: CostLedger::new(),
+            decode_steps: 0,
             last_step: CostLedger::new(),
             last_logits: FloatTensor::zeros(1, 1),
         };
@@ -168,27 +170,63 @@ impl<'e> DecoderSession<'e> {
                 backend: eng.backend.as_mut(),
                 views: &mut eng.views,
                 fast_sim: eng.fast_sim,
+                round_batching: eng.round_batching,
             };
             let mut x_pi = embedding::pp_embedding_at(&mut ctx, &eng.pm, token, pos)?;
-            for (i, pl) in eng.pm.layers.iter().enumerate() {
-                x_pi = layer::transformer_layer_step(
+            if ctx.round_batching {
+                // Batched schedule: the last layer fuses the final Π_PPLN
+                // into its reshare flight, so adaptation is just the
+                // communication-free LM head plus the logits return.
+                let last = eng.pm.layers.len() - 1;
+                for (i, pl) in eng.pm.layers[..last].iter().enumerate() {
+                    x_pi = layer::transformer_layer_step(
+                        &mut ctx,
+                        &eng.cfg,
+                        pl,
+                        &eng.pi1_sh,
+                        &eng.pi1_t_sh,
+                        &x_pi,
+                        &mut self.kv[i],
+                        pos,
+                        i,
+                    )?;
+                }
+                let (_, h_pi) = layer::transformer_layer_step_final(
                     &mut ctx,
                     &eng.cfg,
-                    pl,
+                    &eng.pm.layers[last],
                     &eng.pi1_sh,
                     &eng.pi1_t_sh,
                     &x_pi,
-                    &mut self.kv[i],
+                    &mut self.kv[last],
                     pos,
-                    i,
+                    last,
+                    eng.pm.final_ln_g.as_deref().expect("gpt weights"),
+                    eng.pm.final_ln_b.as_deref().expect("gpt weights"),
                 )?;
+                adaptation::pp_lm_head_gpt2(&mut ctx, &eng.pm, &h_pi)?
+            } else {
+                for (i, pl) in eng.pm.layers.iter().enumerate() {
+                    x_pi = layer::transformer_layer_step(
+                        &mut ctx,
+                        &eng.cfg,
+                        pl,
+                        &eng.pi1_sh,
+                        &eng.pi1_t_sh,
+                        &x_pi,
+                        &mut self.kv[i],
+                        pos,
+                        i,
+                    )?;
+                }
+                adaptation::pp_adaptation_gpt2(&mut ctx, &eng.pm, &x_pi)?
             }
-            adaptation::pp_adaptation_gpt2(&mut ctx, &eng.pm, &x_pi)?
         };
         let logits = adaptation::return_to_client(&mut eng.mpc, &logits_sh)?;
         let step = eng.mpc.net.ledger.clone();
         if decode_phase {
             self.decode.merge(&step);
+            self.decode_steps += 1;
         } else {
             self.prefill.merge(&step);
         }
@@ -239,6 +277,30 @@ impl<'e> DecoderSession<'e> {
     /// Online cost of the warm-decode phase (generated tokens).
     pub fn decode_cost(&self) -> &CostLedger {
         &self.decode
+    }
+
+    /// Warm-decode absorbs so far (generated tokens; excludes prefill).
+    pub fn decode_steps(&self) -> u64 {
+        self.decode_steps
+    }
+
+    /// Warm-decode protocol rounds per generated token — the WAN latency
+    /// lever (`rounds · RTT` dominates decode under the WAN profiles); 0
+    /// before the first warm step. Per-step rounds are
+    /// position-independent, so this is exact, not an average.
+    pub fn decode_rounds_per_token(&self) -> u64 {
+        if self.decode_steps == 0 {
+            0
+        } else {
+            self.decode.rounds_total() / self.decode_steps
+        }
+    }
+
+    /// Per-[`crate::net::OpClass`] round breakdown of the most recent
+    /// step — the table the round-budget harness pins golden values
+    /// against (`rust/tests/round_budget.rs`).
+    pub fn last_step_rounds_by_class(&self) -> [(crate::net::OpClass, u64); 8] {
+        self.last_step.rounds_by_class()
     }
 
     /// Online cost of the most recent step.

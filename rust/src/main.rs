@@ -6,7 +6,7 @@
 //! centaur serve  --weights bert-tiny-qnli --requests 32 --batch 8 [--framework centaur]
 //!                [--offline-prefill] [--pool-depth 2]
 //! centaur serve  --weights gpt2-tiny-wikitext103 --gen-steps 8 --requests 4
-//!                [--offline-prefill] [--no-decode-corr]  # streaming incremental decode
+//!                [--offline-prefill] [--no-decode-corr] [--no-round-batching]  # streaming incremental decode
 //! centaur compare --model bert-tiny [--full]
 //! centaur artifacts-check
 //! ```
@@ -143,6 +143,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Fixed-operand correlated triples are on by default for decode
     // sessions; `--no-decode-corr` runs the plain per-step baseline.
     sc.decode_correlations = !args.flag("no-decode-corr");
+    // Batched-opening decode schedule on by default; `--no-round-batching`
+    // runs the sequential per-opening schedule (round-budget baseline).
+    sc.round_batching = !args.flag("no-round-batching");
     let n_req = args.opt_usize("requests", 16);
 
     // Streaming generation mode: each request decodes `--gen-steps` tokens

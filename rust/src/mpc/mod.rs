@@ -105,6 +105,39 @@ impl Mpc {
     }
 
     // ------------------------------------------------------------------
+    // Deferred/batched openings (DESIGN.md §Batched openings)
+    // ------------------------------------------------------------------
+
+    /// Start an open batch: every opening protocol executed until
+    /// [`Mpc::flush_batch`] has its round charge deferred, and the flush
+    /// charges exactly **one** round for all of them — the concatenated
+    /// single-flight exchange of all queued mask differences. Bytes are
+    /// charged per transfer exactly as in the sequential schedule, so
+    /// batching merges rounds without moving a single extra byte.
+    ///
+    /// The caller is responsible for batching only *independent* openings
+    /// (no queued exchange may need another queued exchange's opened value
+    /// to form its own payload); `rust/tests/prop_invariants.rs` checks
+    /// that batched and sequential schedules are share-for-share
+    /// identical, and the security census in
+    /// `rust/tests/security_views.rs` checks the transferred-payload
+    /// multiset is unchanged.
+    ///
+    /// The mechanism lives in [`NetSim`], so fast-sim charged-ideal twins
+    /// (which charge rounds through the same `net.round`) batch
+    /// identically and ledgers stay mode-independent.
+    pub fn begin_batch(&mut self) {
+        self.net.begin_batch();
+    }
+
+    /// Flush the open batch begun with [`Mpc::begin_batch`]: one round is
+    /// charged to `class` when anything was queued (returns 1); flushing
+    /// an empty batch is a no-op (returns 0).
+    pub fn flush_batch(&mut self, class: OpClass) -> u64 {
+        self.net.flush_batch(class)
+    }
+
+    // ------------------------------------------------------------------
     // Sharing / opening
     // ------------------------------------------------------------------
 

@@ -80,6 +80,40 @@ pub fn exp(mpc: &mut Mpc, x: &Share, class: OpClass) -> Share {
     y
 }
 
+/// One Newton refinement shared by [`reciprocal`] (`y ← y(2 − x·y)`) and
+/// [`inv_sqrt`] (`y ← y(3 − x·y²)/2`): form `p = x·y` (or `x·y²`), the
+/// public-constant complement `c − p` (the caller builds the constant
+/// tensor once, outside its iteration loop), and the refined `y·(c − p)`
+/// (optionally halved). Every per-iteration opening of both routines —
+/// the `square`/`mul_elem` mask differences — flows through this single
+/// helper, so a deferred-opening batch (`Mpc::begin_batch`) around a
+/// Newton chain wraps them in one place instead of two copies of the
+/// loop body.
+fn newton_refine(
+    mpc: &mut Mpc,
+    x: &Share,
+    y: &Share,
+    c_fx: &RingTensor,
+    square_y: bool,
+    halve: bool,
+    class: OpClass,
+) -> Share {
+    let p = if square_y {
+        let y2 = mpc.square(y, class);
+        mpc.mul_elem(x, &y2, class)
+    } else {
+        mpc.mul_elem(x, y, class)
+    };
+    let neg_p = Share { s0: ring::neg(&p.s0), s1: ring::neg(&p.s1) };
+    let t = mpc.add_plain(&neg_p, c_fx);
+    let ty = mpc.mul_elem(y, &t, class);
+    if halve {
+        mpc.scale_fx(&ty, encode(0.5))
+    } else {
+        ty
+    }
+}
+
 /// SMPC reciprocal `1/x` for `x > 0` (softmax denominators, variances).
 pub fn reciprocal(mpc: &mut Mpc, x: &Share, class: OpClass) -> Share {
     // y0 = 3·exp(0.5 − x) + 0.003
@@ -93,10 +127,7 @@ pub fn reciprocal(mpc: &mut Mpc, x: &Share, class: OpClass) -> Share {
     // Newton: y ← y (2 − x y)
     let two = RingTensor::from_fn(x.rows(), x.cols(), |_, _| encode(2.0));
     for _ in 0..RECIP_ITERS {
-        let xy = mpc.mul_elem(x, &y, class);
-        let neg_xy = Share { s0: ring::neg(&xy.s0), s1: ring::neg(&xy.s1) };
-        let t = mpc.add_plain(&neg_xy, &two);
-        y = mpc.mul_elem(&y, &t, class);
+        y = newton_refine(mpc, x, &y, &two, false, false, class);
     }
     y
 }
@@ -115,12 +146,7 @@ pub fn inv_sqrt(mpc: &mut Mpc, x: &Share, class: OpClass) -> Share {
     // Newton: y ← y (3 − x y²) / 2
     let three = RingTensor::from_fn(x.rows(), x.cols(), |_, _| encode(3.0));
     for _ in 0..RSQRT_ITERS {
-        let y2 = mpc.square(&y, class);
-        let xy2 = mpc.mul_elem(x, &y2, class);
-        let neg = Share { s0: ring::neg(&xy2.s0), s1: ring::neg(&xy2.s1) };
-        let t = mpc.add_plain(&neg, &three);
-        let ty = mpc.mul_elem(&y, &t, class);
-        y = mpc.scale_fx(&ty, encode(0.5));
+        y = newton_refine(mpc, x, &y, &three, true, true, class);
     }
     y
 }

@@ -139,17 +139,26 @@ impl NetworkProfile {
     pub fn wan2() -> Self {
         NetworkProfile { name: "WAN(100Mbps,80ms)", bandwidth_bps: 100e6, rtt: 80e-3 }
     }
+    /// High-bandwidth WAN: 1 Gbps, 80 ms RTT — the decode-latency preset.
+    /// At these rates the byte term of the cost model is negligible for
+    /// single-token decode steps, so per-token latency is essentially
+    /// `rounds · 80 ms`: the profile that makes round compression (batched
+    /// openings, DESIGN.md §Batched openings) directly visible.
+    pub fn wan3() -> Self {
+        NetworkProfile { name: "WAN(1Gbps,80ms)", bandwidth_bps: 1e9, rtt: 80e-3 }
+    }
     /// Look up a profile by CLI name.
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
             "lan" => Some(Self::lan()),
             "wan1" => Some(Self::wan1()),
             "wan2" => Some(Self::wan2()),
+            "wan3" => Some(Self::wan3()),
             _ => None,
         }
     }
     /// CLI names of the available profiles.
-    pub const ALL_NAMES: [&'static str; 3] = ["lan", "wan1", "wan2"];
+    pub const ALL_NAMES: [&'static str; 4] = ["lan", "wan1", "wan2", "wan3"];
 
     /// Time to complete `rounds` rounds moving `bytes` in total.
     pub fn time_for(&self, rounds: u64, bytes: u64) -> f64 {
@@ -215,6 +224,26 @@ impl CostLedger {
     /// Total rounds across classes.
     pub fn rounds_total(&self) -> u64 {
         self.per_class.iter().map(|c| c.rounds).sum()
+    }
+
+    /// Per-class round counts in ledger order — the first-class
+    /// rounds/token breakdown the round-budget harness pins.
+    pub fn rounds_by_class(&self) -> [(OpClass, u64); 8] {
+        let mut out = [(OpClass::Other, 0u64); 8];
+        for (i, &c) in OpClass::ALL.iter().enumerate() {
+            out[i] = (c, self.class(c).rounds);
+        }
+        out
+    }
+
+    /// Per-class byte counts in ledger order (the byte-parity twin of
+    /// [`CostLedger::rounds_by_class`]).
+    pub fn bytes_by_class(&self) -> [(OpClass, u64); 8] {
+        let mut out = [(OpClass::Other, 0u64); 8];
+        for (i, &c) in OpClass::ALL.iter().enumerate() {
+            out[i] = (c, self.class(c).bytes);
+        }
+        out
     }
 
     /// Total per-class critical-path compute.
@@ -313,6 +342,37 @@ impl CostLedger {
     }
 }
 
+/// One message recorded by the transfer census (see
+/// [`NetSim::record_transfers`]): enough to compare the *multiset* of
+/// payloads two protocol schedules move — the security invariant of
+/// round batching (DESIGN.md §Batched openings) is that merging rounds
+/// never adds, drops, or alters a transferred payload.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TransferRecord {
+    /// Sender slot index ([`PartyId::index`]).
+    pub from: usize,
+    /// Receiver slot index.
+    pub to: usize,
+    /// Op class the bytes were charged to.
+    pub class_idx: usize,
+    /// Payload size in bytes.
+    pub bytes: u64,
+    /// FNV-1a digest of the payload words (order-sensitive within the
+    /// tensor, so equal digests mean equal payloads w.h.p.).
+    pub digest: u64,
+}
+
+fn fnv1a_tensor(t: &RingTensor) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &v in t.data() {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
 /// The in-process network simulator handed to every protocol.
 #[derive(Debug)]
 pub struct NetSim {
@@ -324,22 +384,49 @@ pub struct NetSim {
     pub realtime: bool,
     /// Count of individual messages (diagnostics).
     pub messages: u64,
+    /// Keep a [`TransferRecord`] per message (census tests); off by
+    /// default. The log survives [`NetSim::reset`] so a multi-step decode
+    /// session can be audited end to end — clear it explicitly with
+    /// [`NetSim::clear_transfer_log`].
+    pub record_transfers: bool,
+    /// Recorded transfers (empty unless `record_transfers`).
+    pub transfer_log: Vec<TransferRecord>,
+    /// Open-batch state: rounds suppressed since `begin_batch` (`None`
+    /// when no batch is active).
+    batched_rounds: Option<u64>,
 }
 
 impl NetSim {
     /// Simulator with an empty ledger.
     pub fn new(profile: NetworkProfile) -> Self {
-        NetSim { profile, ledger: CostLedger::new(), realtime: false, messages: 0 }
+        NetSim {
+            profile,
+            ledger: CostLedger::new(),
+            realtime: false,
+            messages: 0,
+            record_transfers: false,
+            transfer_log: Vec::new(),
+            batched_rounds: None,
+        }
     }
 
     /// Transfer a ring tensor between parties as part of the *current*
     /// round: clones the payload and charges its serialized size.
     /// Rounds are charged separately with [`NetSim::round`] so that
     /// messages sent in parallel count as one round.
-    pub fn transfer(&mut self, _from: PartyId, _to: PartyId, t: &RingTensor, class: OpClass) -> RingTensor {
+    pub fn transfer(&mut self, from: PartyId, to: PartyId, t: &RingTensor, class: OpClass) -> RingTensor {
         let bytes = (t.len() as u64) * crate::fixed::ELEM_BYTES;
         self.ledger.add_bytes(class, bytes);
         self.messages += 1;
+        if self.record_transfers {
+            self.transfer_log.push(TransferRecord {
+                from: from.index(),
+                to: to.index(),
+                class_idx: class.index(),
+                bytes,
+                digest: fnv1a_tensor(t),
+            });
+        }
         if self.realtime {
             std::thread::sleep(Duration::from_secs_f64(
                 (bytes as f64 * 8.0) / self.profile.bandwidth_bps,
@@ -355,11 +442,58 @@ impl NetSim {
     }
 
     /// Mark the completion of `n` communication rounds in `class`.
+    ///
+    /// Inside an open batch ([`NetSim::begin_batch`]) the charge is
+    /// deferred: the batched rounds coalesce into the single round charged
+    /// at [`NetSim::flush_batch`].
     pub fn round(&mut self, class: OpClass, n: u64) {
+        if let Some(deferred) = self.batched_rounds.as_mut() {
+            *deferred += n;
+            return;
+        }
         self.ledger.add_rounds(class, n);
         if self.realtime {
             std::thread::sleep(Duration::from_secs_f64(self.profile.rtt * n as f64));
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Deferred/batched opening rounds (DESIGN.md §Batched openings)
+    // ------------------------------------------------------------------
+
+    /// Start an open batch: subsequent [`NetSim::round`] charges are
+    /// deferred until [`NetSim::flush_batch`]. Callers must only batch
+    /// *independent* openings — exchanges whose payloads do not depend on
+    /// another batched exchange's opened value — so that all of them can
+    /// genuinely travel in one parallel round. Bytes are charged at
+    /// transfer time as usual; only round accounting is deferred.
+    ///
+    /// Nesting is a bug: a second `begin_batch` before the flush panics.
+    pub fn begin_batch(&mut self) {
+        assert!(self.batched_rounds.is_none(), "open batch already active (no nesting)");
+        self.batched_rounds = Some(0);
+    }
+
+    /// End the open batch: if any rounds were deferred, charge exactly one
+    /// round to `class` (the concatenated flush) and return 1; flushing an
+    /// empty batch charges nothing and returns 0.
+    pub fn flush_batch(&mut self, class: OpClass) -> u64 {
+        let deferred = self.batched_rounds.take().expect("flush_batch without begin_batch");
+        if deferred == 0 {
+            return 0;
+        }
+        self.round(class, 1);
+        1
+    }
+
+    /// Whether an open batch is currently active.
+    pub fn batching(&self) -> bool {
+        self.batched_rounds.is_some()
+    }
+
+    /// Drop the recorded transfer census.
+    pub fn clear_transfer_log(&mut self) {
+        self.transfer_log.clear();
     }
 
     /// Record measured local compute.
@@ -375,8 +509,13 @@ impl NetSim {
         out
     }
 
-    /// Reset the ledger (keep the profile).
+    /// Reset the ledger (keep the profile; the transfer census, if
+    /// recording, is kept so multi-step sessions can be audited — see
+    /// [`NetSim::clear_transfer_log`]). Any open batch is discarded: a
+    /// reset marks a new protocol run, and a batch can only still be open
+    /// here if the previous run errored out between begin and flush.
     pub fn reset(&mut self) {
+        self.batched_rounds = None;
         self.ledger = CostLedger::new();
         self.messages = 0;
     }
@@ -430,6 +569,71 @@ mod tests {
         let p = NetworkProfile::lan();
         let expect = 0.75 + p.time_for(1, 150);
         assert!((a.total_time(&p) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn open_batch_coalesces_rounds_and_keeps_bytes() {
+        let mut net = NetSim::new(NetworkProfile::lan());
+        net.begin_batch();
+        assert!(net.batching());
+        let t = RingTensor::zeros(2, 4);
+        net.transfer(PartyId::P0, PartyId::P1, &t, OpClass::Linear);
+        net.round(OpClass::Linear, 1);
+        net.transfer(PartyId::P1, PartyId::P0, &t, OpClass::Softmax);
+        net.round(OpClass::Softmax, 1);
+        // nothing charged yet
+        assert_eq!(net.ledger.rounds_total(), 0);
+        assert_eq!(net.flush_batch(OpClass::Linear), 1);
+        assert_eq!(net.ledger.rounds_total(), 1);
+        assert_eq!(net.ledger.class(OpClass::Linear).rounds, 1);
+        // bytes were charged at transfer time, per class
+        assert_eq!(net.ledger.class(OpClass::Linear).bytes, 64);
+        assert_eq!(net.ledger.class(OpClass::Softmax).bytes, 64);
+    }
+
+    #[test]
+    fn empty_batch_flush_is_noop() {
+        let mut net = NetSim::new(NetworkProfile::lan());
+        net.begin_batch();
+        assert_eq!(net.flush_batch(OpClass::Linear), 0);
+        assert_eq!(net.ledger.rounds_total(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no nesting")]
+    fn nested_batches_panic() {
+        let mut net = NetSim::new(NetworkProfile::lan());
+        net.begin_batch();
+        net.begin_batch();
+    }
+
+    #[test]
+    fn transfer_census_records_payload_digests() {
+        let mut net = NetSim::new(NetworkProfile::lan());
+        net.record_transfers = true;
+        let a = RingTensor::from_vec(1, 2, vec![1, 2]);
+        let b = RingTensor::from_vec(1, 2, vec![1, 3]);
+        net.transfer(PartyId::P0, PartyId::P1, &a, OpClass::Linear);
+        net.transfer(PartyId::P0, PartyId::P1, &b, OpClass::Linear);
+        net.transfer(PartyId::P1, PartyId::P0, &a, OpClass::Linear);
+        assert_eq!(net.transfer_log.len(), 3);
+        assert_ne!(net.transfer_log[0].digest, net.transfer_log[1].digest);
+        assert_eq!(net.transfer_log[0].digest, net.transfer_log[2].digest);
+        // the census survives a ledger reset (session-long audits)
+        net.reset();
+        assert_eq!(net.transfer_log.len(), 3);
+        net.clear_transfer_log();
+        assert!(net.transfer_log.is_empty());
+    }
+
+    #[test]
+    fn wan3_is_rtt_bound_for_small_payloads() {
+        let p = NetworkProfile::wan3();
+        // 16 rounds of 200 KB total: byte term ~1.6 ms vs 1.28 s of RTT.
+        let t = p.time_for(16, 200_000);
+        assert!((t - (16.0 * 0.08 + 200_000.0 * 8.0 / 1e9)).abs() < 1e-9);
+        assert!(NetworkProfile::by_name("wan3").is_some());
+        assert_eq!(NetworkProfile::ALL_NAMES.len(), 4);
     }
 
     #[test]

@@ -47,6 +47,14 @@ pub fn pp_adaptation_gpt2(ctx: &mut ProtoCtx, pm: &PermutedModel, l2_pi: &Share)
     Ok(ctx.scalmul_nt(&h_pi, &pm.emb_word, OpClass::Adaptation))
 }
 
+/// GPT-2 head from an **already-normalized** `[Hπ]` — the batched decode
+/// schedule fuses the final `Π_PPLN` into the last layer's reshare flight
+/// (see `transformer_layer_step_final`), leaving only the communication-free
+/// tied LM head here.
+pub fn pp_lm_head_gpt2(ctx: &mut ProtoCtx, pm: &PermutedModel, h_pi: &Share) -> Result<Share> {
+    Ok(ctx.scalmul_nt(h_pi, &pm.emb_word, OpClass::Adaptation))
+}
+
 /// Return the inference result to the client: both servers send their
 /// logit shares to P2 (1 round). Returns the reconstructed plaintext.
 pub fn return_to_client(mpc: &mut Mpc, logits: &Share) -> Result<crate::tensor::FloatTensor> {
@@ -81,7 +89,13 @@ mod tests {
         let mut backend = NativeBackend::new();
         let mut views = crate::engine::views::Views::new(false);
         let sh = mpc.share_local(&fixed::encode_tensor(&l2_pi));
-        let mut ctx = ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+        let mut ctx = ProtoCtx {
+            mpc: &mut mpc,
+            backend: &mut backend,
+            views: &mut views,
+            fast_sim: false,
+            round_batching: false,
+        };
         let logits_sh = pp_adaptation_bert(&mut ctx, &pm, &sh).unwrap();
         let got = return_to_client(&mut mpc, &logits_sh).unwrap();
 
@@ -110,7 +124,13 @@ mod tests {
         let mut backend = NativeBackend::new();
         let mut views = crate::engine::views::Views::new(false);
         let sh = mpc.share_local(&fixed::encode_tensor(&l2_pi));
-        let mut ctx = ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+        let mut ctx = ProtoCtx {
+            mpc: &mut mpc,
+            backend: &mut backend,
+            views: &mut views,
+            fast_sim: false,
+            round_batching: false,
+        };
         let logits_sh = pp_adaptation_gpt2(&mut ctx, &pm, &sh).unwrap();
         let got = return_to_client(&mut mpc, &logits_sh).unwrap();
 

@@ -146,7 +146,13 @@ mod tests {
         let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 43);
         let mut backend = NativeBackend::new();
         let mut views = Views::new(false);
-        let mut ctx = ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+        let mut ctx = ProtoCtx {
+            mpc: &mut mpc,
+            backend: &mut backend,
+            views: &mut views,
+            fast_sim: false,
+            round_batching: false,
+        };
         let out = pp_embedding(&mut ctx, &pm, &tokens).unwrap();
         let got = fixed::decode_tensor(&out.reconstruct());
 
@@ -181,13 +187,25 @@ mod tests {
         let mut views = Views::new(false);
         let full = {
             let mut ctx =
-                ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+                ProtoCtx {
+                    mpc: &mut mpc,
+                    backend: &mut backend,
+                    views: &mut views,
+                    fast_sim: false,
+                    round_batching: false,
+                };
             let out = pp_embedding(&mut ctx, &pm, &tokens).unwrap();
             fixed::decode_tensor(&out.reconstruct())
         };
         for pos in [0usize, 1, cfg.n_ctx - 1] {
             let mut ctx =
-                ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+                ProtoCtx {
+                    mpc: &mut mpc,
+                    backend: &mut backend,
+                    views: &mut views,
+                    fast_sim: false,
+                    round_batching: false,
+                };
             let out = pp_embedding_at(&mut ctx, &pm, tokens[pos], pos).unwrap();
             let got = fixed::decode_tensor(&out.reconstruct());
             let want = crate::tensor::FloatTensor::from_vec(1, cfg.d, full.row(pos).to_vec());

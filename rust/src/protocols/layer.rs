@@ -26,7 +26,9 @@ use crate::runtime::Backend;
 use crate::tensor::RingTensor;
 use crate::Result;
 
-use super::nonlin::{pp_gelu, pp_layernorm, pp_softmax};
+use super::nonlin::{
+    pp_gelu, pp_gelu_unrounded, pp_layernorm, pp_layernorm_unrounded, pp_softmax,
+};
 use super::ppp;
 
 /// Mask value standing in for −∞ in causal attention (exp(−1e5) == 0 in
@@ -44,6 +46,12 @@ pub struct ProtoCtx<'a> {
     /// Fast-sim: share×share products via charged-ideal (exact wire costs,
     /// single local product) — used for paper-scale models on this testbed.
     pub fast_sim: bool,
+    /// Batched-opening decode schedule (DESIGN.md §Batched openings): the
+    /// single-token step coalesces its independent openings into shared
+    /// flights — identical transfers and bytes, 6 rounds/layer instead of
+    /// 12. Only [`transformer_layer_step`] consults this; the full-sequence
+    /// [`transformer_layer`] keeps the sequential schedule.
+    pub round_batching: bool,
 }
 
 impl<'a> ProtoCtx<'a> {
@@ -391,6 +399,11 @@ pub fn decode_pool_shapes(cfg: &ModelConfig, correlations: bool, steps: u64) -> 
 /// with this token's k/v first). Protocol sequence and openings match the
 /// full layer — every P1 observation is a `(h, n)`, `(1, d)` or `(1, k)`
 /// permuted row, never a cache tensor. Returns the token's `(1, d)` output.
+///
+/// With [`ProtoCtx::round_batching`] the step runs the **batched-opening
+/// schedule** (DESIGN.md §Batched openings): identical transfers, bytes,
+/// and P1 views, but the independent openings share flights — 6 rounds
+/// per layer instead of 12.
 #[allow(clippy::too_many_arguments)]
 pub fn transformer_layer_step(
     ctx: &mut ProtoCtx,
@@ -403,6 +416,61 @@ pub fn transformer_layer_step(
     pos: usize,
     layer_idx: usize,
 ) -> Result<Share> {
+    step_impl(ctx, cfg, pl, pi1_sh, pi1_t_sh, x_pi, kv, pos, layer_idx, None).map(|(out, _)| out)
+}
+
+/// Last-layer variant for the batched schedule: the P1-plaintext FFN
+/// segment is extended through the **final LayerNorm**, whose output
+/// reshare coalesces into the same flight as the layer's other reshares
+/// (saving the adaptation conversion's two rounds). Returns the layer
+/// output `[L2π]` and the final-LN output `[Hπ]` ready for the tied LM
+/// head. Requires [`ProtoCtx::round_batching`].
+#[allow(clippy::too_many_arguments)]
+pub fn transformer_layer_step_final(
+    ctx: &mut ProtoCtx,
+    cfg: &ModelConfig,
+    pl: &PermLayer,
+    pi1_sh: &Share,
+    pi1_t_sh: &Share,
+    x_pi: &Share,
+    kv: &mut LayerKvCache,
+    pos: usize,
+    layer_idx: usize,
+    final_ln_g: &[f32],
+    final_ln_b: &[f32],
+) -> Result<(Share, Share)> {
+    anyhow::ensure!(ctx.round_batching, "final-LN fusion needs the batched decode schedule");
+    let (out, h) = step_impl(
+        ctx,
+        cfg,
+        pl,
+        pi1_sh,
+        pi1_t_sh,
+        x_pi,
+        kv,
+        pos,
+        layer_idx,
+        Some((final_ln_g, final_ln_b)),
+    )?;
+    Ok((out, h.expect("fused final tail returns the final-LN share")))
+}
+
+/// Shared body of the two step entry points; `final_ln` carries the
+/// final-LN parameters when the last layer should fuse the adaptation
+/// conversion into its reshare flight (batched schedule only).
+#[allow(clippy::too_many_arguments)]
+fn step_impl(
+    ctx: &mut ProtoCtx,
+    cfg: &ModelConfig,
+    pl: &PermLayer,
+    pi1_sh: &Share,
+    pi1_t_sh: &Share,
+    x_pi: &Share,
+    kv: &mut LayerKvCache,
+    pos: usize,
+    layer_idx: usize,
+    final_ln: Option<(&[f32], &[f32])>,
+) -> Result<(Share, Option<Share>)> {
     let n = kv.capacity();
     let dh = cfg.dh();
     let scale = fixed::encode(1.0 / (dh as f64).sqrt());
@@ -421,13 +489,20 @@ pub fn transformer_layer_step(
         ctx.mpc.add_plain_row(&s, &pl.bv)
     };
 
-    // 2. Extend the secret-shared cache ([K] row write + [Ṽ] PPP update).
+    // 2+3. Cache append ([K] row write + [Ṽ] PPP update) and the score
+    //    products against the whole cached prefix: q_h (1×dh) @ K_hᵀ
+    //    (dh×n) → (1×n) per head. With correlations the K side rides its
+    //    session mask (rows opened at append time), so only q's mask
+    //    difference moves per step.
+    //
+    //    Batched schedule: the append's K-row/v-side openings and the
+    //    per-head q openings are mutually independent mask differences
+    //    (each payload is formed from local state, never from another
+    //    batched exchange's opened value), so they share one flight.
+    if ctx.round_batching {
+        ctx.mpc.begin_batch();
+    }
     kv.append(ctx, pi1_t_sh, &k, &v, pos)?;
-
-    // 3. Scores against the whole cached prefix, one batched round:
-    //    q_h (1×dh) @ K_hᵀ (dh×n) → (1×n) per head. With correlations the
-    //    K side rides its session mask (rows opened at append time), so
-    //    only q's mask difference moves per step.
     let o1_heads = if let Some(c) = kv.corr.as_mut() {
         ctx.matmul_fixed_grown_scores(&q, &c.f_k, &mut c.scores, pos, n, OpClass::Linear)?
     } else {
@@ -437,13 +512,18 @@ pub fn transformer_layer_step(
         let pairs: Vec<(&Share, &Share)> = qh.iter().zip(kt.iter()).collect();
         ctx.matmul_batch(&pairs, OpClass::Linear)
     };
+    if ctx.round_batching {
+        ctx.mpc.flush_batch(OpClass::Linear);
+    }
     let mut o1 = stack_rows(&o1_heads); // (h, n)
     o1 = ctx.mpc.scale_fx(&o1, scale);
     o1 = ctx.mpc.add_plain(&o1, &causal_mask_row_fx(cfg.h, n, pos));
 
     // 4. Π_PPP then Π_PPSM: P1 opens one π₁-permuted score row per head.
     //    With correlations, the π₁-side mask was opened once at session
-    //    setup — per step only [O1]'s mask difference is opened.
+    //    setup — per step only [O1]'s mask difference is opened. The Π_PPP
+    //    opening depends on the score results, so it is its own flight in
+    //    both schedules.
     let o1_p1 = if let Some(c) = kv.corr.as_mut() {
         ctx.ppp_cols_fixed(&o1, &c.f_pi1, &mut c.ppp, OpClass::Linear)?
     } else {
@@ -456,6 +536,11 @@ pub fn transformer_layer_step(
         &o1_p1,
         &format!("decode O1pi1 layer{layer_idx} pos{pos}"),
     )?;
+
+    if ctx.round_batching {
+        return fused_value_ffn_tail(ctx, cfg, pl, &o2_p1, x_pi, kv, pos, layer_idx, final_ln);
+    }
+    anyhow::ensure!(final_ln.is_none(), "final-LN fusion needs the batched decode schedule");
 
     // 5. Attend over the cached [Ṽ]: the π₁ in O2π₁ cancels against π₁ᵀV.
     let o2h: Vec<Share> = (0..cfg.h).map(|h| o2_p1.row_block(h, h + 1)).collect();
@@ -497,7 +582,7 @@ pub fn transformer_layer_step(
         ctx.mpc.add_plain_row(&s, &pl.b2)
     };
     let res2 = ctx.mpc.add(&o6_pi, &l1_pi);
-    pp_layernorm(
+    let l2_pi = pp_layernorm(
         ctx.mpc,
         ctx.backend,
         ctx.views,
@@ -506,7 +591,108 @@ pub fn transformer_layer_step(
         &pl.ln2_b,
         OpClass::LayerNorm,
         &format!("decode O6+L1 pi layer{layer_idx} pos{pos}"),
-    )
+    )?;
+    Ok((l2_pi, None))
+}
+
+/// The batched-schedule tail of a decode step: per-head value products +
+/// the P1-plaintext FFN segment (DESIGN.md §Batched openings).
+///
+/// Flight structure after the softmax conversion's two rounds:
+/// * the value-product openings ride the softmax-reshare flight (P1's
+///   halves — P1 holds `O2π₁` in plaintext, so its mask differences need
+///   no further input) and one `Linear` flush (P0's halves travelling
+///   with the `res1` residual delivery);
+/// * P1 then computes LN1 → W₁/GeLU → W₂/LN2 (→ final LN) entirely on the
+///   plaintext it reconstructed — every intermediate it would have seen
+///   under the sequential schedule, and nothing else — and all of its
+///   output reshares coalesce into one `LayerNorm` round;
+/// * P0's dependent input halves (`O5π₂`, `O6+L1`, and the last layer's
+///   `L2π` for the final LN) are still transferred with identical bytes
+///   for share consistency, but ride the next charged flight (the next
+///   layer's append/score flush, or the logits-return round), so they
+///   cost no extra round.
+#[allow(clippy::too_many_arguments)]
+fn fused_value_ffn_tail(
+    ctx: &mut ProtoCtx,
+    cfg: &ModelConfig,
+    pl: &PermLayer,
+    o2_p1: &Share,
+    x_pi: &Share,
+    kv: &LayerKvCache,
+    pos: usize,
+    layer_idx: usize,
+    final_ln: Option<(&[f32], &[f32])>,
+) -> Result<(Share, Option<Share>)> {
+    let dh = cfg.dh();
+    // Value products + residual, one coalesced Linear flight.
+    ctx.mpc.begin_batch();
+    let o2h: Vec<Share> = (0..cfg.h).map(|h| o2_p1.row_block(h, h + 1)).collect();
+    let vth: Vec<Share> = (0..cfg.h).map(|h| kv.v_tilde.col_block(h * dh, (h + 1) * dh)).collect();
+    let pairs3: Vec<(&Share, &Share)> = o2h.iter().zip(vth.iter()).collect();
+    let o3_heads = ctx.matmul_batch(&pairs3, OpClass::Linear);
+    let o3 = Share::concat_cols(&o3_heads); // (1, d)
+    let o4_pi = {
+        let s = ctx.scalmul_nt(&o3, &pl.wo, OpClass::Linear);
+        ctx.mpc.add_plain_row(&s, &pl.bo)
+    };
+    let res1 = ctx.mpc.add(&o4_pi, x_pi);
+    ctx.mpc.flush_batch(OpClass::Linear);
+
+    // P1-plaintext FFN segment: same transfers, views, and share algebra
+    // as the sequential LN1/GeLU/LN2 conversions, rounds coalesced below.
+    let l1_pi = pp_layernorm_unrounded(
+        ctx.mpc,
+        ctx.backend,
+        ctx.views,
+        &res1,
+        &pl.ln1_g,
+        &pl.ln1_b,
+        OpClass::LayerNorm,
+        &format!("decode O4+X pi layer{layer_idx} pos{pos}"),
+    )?;
+    let o5_pi2 = {
+        let s = ctx.scalmul_nt(&l1_pi, &pl.w1, OpClass::Linear);
+        ctx.mpc.add_plain_row(&s, &pl.b1)
+    };
+    let g_pi2 = pp_gelu_unrounded(
+        ctx.mpc,
+        ctx.backend,
+        ctx.views,
+        &o5_pi2,
+        &format!("decode O5pi2 layer{layer_idx} pos{pos}"),
+    )?;
+    let o6_pi = {
+        let s = ctx.scalmul_nt(&g_pi2, &pl.w2, OpClass::Linear);
+        ctx.mpc.add_plain_row(&s, &pl.b2)
+    };
+    let res2 = ctx.mpc.add(&o6_pi, &l1_pi);
+    let l2_pi = pp_layernorm_unrounded(
+        ctx.mpc,
+        ctx.backend,
+        ctx.views,
+        &res2,
+        &pl.ln2_g,
+        &pl.ln2_b,
+        OpClass::LayerNorm,
+        &format!("decode O6+L1 pi layer{layer_idx} pos{pos}"),
+    )?;
+    let h_pi = match final_ln {
+        Some((g, b)) => Some(pp_layernorm_unrounded(
+            ctx.mpc,
+            ctx.backend,
+            ctx.views,
+            &l2_pi,
+            g,
+            b,
+            OpClass::Adaptation,
+            "final LN pi",
+        )?),
+        None => None,
+    };
+    // The coalesced reshare flight (L1π ∥ Gπ₂ ∥ L2π ∥ optionally Hπ).
+    ctx.mpc.net.round(OpClass::LayerNorm, 1);
+    Ok((l2_pi, h_pi))
 }
 
 /// Multi-head attention + FFN for one layer: `[Xπ] → [L2π]`.
@@ -651,7 +837,13 @@ mod tests {
         let x_sh = mpc.share_local(&fixed::encode_tensor(&x_pi));
         let pi1_sh = ppp::share_perm(&mut mpc, &perms.pi1, OpClass::Linear);
         let pi1_t_sh = ppp::share_perm_t(&mut mpc, &perms.pi1, OpClass::Linear);
-        let mut ctx = ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim };
+        let mut ctx = ProtoCtx {
+            mpc: &mut mpc,
+            backend: &mut backend,
+            views: &mut views,
+            fast_sim,
+            round_batching: false,
+        };
         let out = transformer_layer(&mut ctx, &cfg, &pm.layers[0], &pi1_sh, &pi1_t_sh, &x_sh, None, 0).unwrap();
 
         // plaintext reference: build a pseudo-model that starts from x
@@ -744,7 +936,13 @@ mod tests {
             let x_sh = mpc.share_local(&fixed::encode_tensor(&x_pi));
             let mask = causal_mask_fx(cfg.h, n);
             let mut ctx =
-                ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+                ProtoCtx {
+                    mpc: &mut mpc,
+                    backend: &mut backend,
+                    views: &mut views,
+                    fast_sim: false,
+                    round_batching: false,
+                };
             let out = transformer_layer(
                 &mut ctx, &cfg, &pm.layers[0], &pi1_sh, &pi1_t_sh, &x_sh, Some(&mask), 0,
             )
@@ -758,7 +956,13 @@ mod tests {
             let row = FloatTensor::from_vec(1, cfg.d, x_pi.row(t).to_vec());
             let row_sh = mpc.share_local(&fixed::encode_tensor(&row));
             let mut ctx =
-                ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+                ProtoCtx {
+                    mpc: &mut mpc,
+                    backend: &mut backend,
+                    views: &mut views,
+                    fast_sim: false,
+                    round_batching: false,
+                };
             let out = transformer_layer_step(
                 &mut ctx, &cfg, &pm.layers[0], &pi1_sh, &pi1_t_sh, &row_sh, &mut kv, t, 0,
             )
@@ -787,7 +991,13 @@ mod tests {
         let mut kv = LayerKvCache::new(n, cfg.d);
         {
             let mut ctx =
-                ProtoCtx { mpc: &mut mpc, backend: &mut backend, views: &mut views, fast_sim: false };
+                ProtoCtx {
+                    mpc: &mut mpc,
+                    backend: &mut backend,
+                    views: &mut views,
+                    fast_sim: false,
+                    round_batching: false,
+                };
             kv.append(&mut ctx, &pi1_t_sh, &k_new, &v_new, 0).unwrap();
         }
         // One outer-product Beaver matmul: 2·8·(n·1 + 1·d) bytes, 1 round.
@@ -842,6 +1052,7 @@ mod tests {
                         backend: &mut backend,
                         views: &mut views,
                         fast_sim: false,
+                        round_batching: false,
                     };
                     let out = transformer_layer_step(
                         &mut ctx, &cfg, &pm.layers[0], &pi1_sh, &pi1_t_sh, &row_sh, kv, t, 0,
@@ -870,6 +1081,68 @@ mod tests {
         assert_eq!(c.append.openings(), 1);
         assert_eq!(c.scores.openings(), steps as u64);
         assert!(plain_bytes > corr_bytes * 2, "per-layer warm saving should exceed 2x");
+    }
+
+    /// The batched schedule must be a pure re-scheduling: identically
+    /// seeded stacks produce **bit-identical** output shares (same PRG and
+    /// dealer consumption order), identical bytes, and 6 rounds per layer
+    /// step instead of 12 (DESIGN.md §Batched openings).
+    #[test]
+    fn batched_step_is_bit_identical_to_sequential_at_half_the_rounds() {
+        let mut cfg = ModelConfig::gpt2_tiny();
+        cfg.layers = 1;
+        let w = ModelWeights::random(&cfg, 171);
+        let mut rng = Rng::new(172);
+        let perms = PermSet::random(&cfg, &mut rng);
+        let pm = PermutedModel::build(&cfg, &w, perms.clone());
+        let n = cfg.n_ctx;
+        let x = FloatTensor::from_fn(n, cfg.d, |r, c| ((r * 11 + c * 7) % 19) as f32 * 0.07 - 0.6);
+        let x_pi = perms.pi.apply_cols(&x);
+        let steps = 3usize;
+
+        let run = |round_batching: bool| {
+            let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 173);
+            let mut backend = NativeBackend::new();
+            let mut views = Views::new(false);
+            let pi1_sh = ppp::share_perm(&mut mpc, &perms.pi1, OpClass::Linear);
+            let pi1_t_sh = ppp::share_perm_t(&mut mpc, &perms.pi1, OpClass::Linear);
+            let corr = deal_kv_correlations(&mut mpc, &cfg, &pi1_sh, &pi1_t_sh).unwrap();
+            let mut kv = LayerKvCache::with_correlations(n, cfg.d, corr);
+            let before_b = mpc.net.ledger.bytes_total();
+            let before_r = mpc.net.ledger.rounds_total();
+            let mut outs = Vec::new();
+            for t in 0..steps {
+                let row = FloatTensor::from_vec(1, cfg.d, x_pi.row(t).to_vec());
+                let row_sh = mpc.share_local(&fixed::encode_tensor(&row));
+                let mut ctx = ProtoCtx {
+                    mpc: &mut mpc,
+                    backend: &mut backend,
+                    views: &mut views,
+                    fast_sim: false,
+                    round_batching,
+                };
+                outs.push(
+                    transformer_layer_step(
+                        &mut ctx, &cfg, &pm.layers[0], &pi1_sh, &pi1_t_sh, &row_sh, &mut kv, t, 0,
+                    )
+                    .unwrap(),
+                );
+            }
+            (
+                outs,
+                mpc.net.ledger.bytes_total() - before_b,
+                mpc.net.ledger.rounds_total() - before_r,
+            )
+        };
+        let (bat, bat_bytes, bat_rounds) = run(true);
+        let (seq, seq_bytes, seq_rounds) = run(false);
+        for (t, (a, b)) in bat.iter().zip(seq.iter()).enumerate() {
+            assert_eq!(a.s0, b.s0, "step {t}: P0 output share differs under batching");
+            assert_eq!(a.s1, b.s1, "step {t}: P1 output share differs under batching");
+        }
+        assert_eq!(bat_bytes, seq_bytes, "round batching must not move a single byte");
+        assert_eq!(seq_rounds, steps as u64 * 12, "sequential layer step is 12 rounds");
+        assert_eq!(bat_rounds, steps as u64 * 6, "batched layer step is 6 rounds");
     }
 
     #[test]

@@ -16,6 +16,15 @@ use crate::tensor::FloatTensor;
 use crate::Result;
 
 /// Shared implementation of the state-conversion pattern.
+///
+/// `charge_rounds = false` is the *deferred* form used by the batched
+/// decode schedule (DESIGN.md §Batched openings): the two transfers are
+/// charged byte-for-byte as usual, but the caller places the round
+/// charges — P0's input half rides an already-charged neighbouring flight
+/// (its payload is a public-linear function of a value P1 itself
+/// reshared, so P1 never waits on it) and P1's output half coalesces with
+/// the other reshares of the fused segment into one flush.
+#[allow(clippy::too_many_arguments)]
 fn pp_apply(
     mpc: &mut Mpc,
     backend: &mut dyn Backend,
@@ -24,6 +33,7 @@ fn pp_apply(
     class: OpClass,
     label: &str,
     tag: PermTag,
+    charge_rounds: bool,
     f: impl FnOnce(&mut dyn Backend, &FloatTensor) -> Result<FloatTensor>,
 ) -> Result<Share> {
     // 1. P0 → P1: its input share; P1 reconstructs the permuted plaintext.
@@ -38,8 +48,10 @@ fn pp_apply(
     // 3. P1 re-shares the permuted output; P0 gets its fresh share.
     let y_ring = fixed::encode_tensor(&y);
     let sh = mpc.reshare_from(&y_ring, PartyId::P1, class);
-    // Two rounds in total (input half + output half).
-    mpc.net.round(class, 2);
+    if charge_rounds {
+        // Two rounds in total (input half + output half).
+        mpc.net.round(class, 2);
+    }
     Ok(sh)
 }
 
@@ -52,7 +64,9 @@ pub fn pp_softmax(
     x: &Share,
     label: &str,
 ) -> Result<Share> {
-    pp_apply(mpc, backend, views, x, OpClass::Softmax, label, PermTag::Pi1, |b, t| b.softmax(t))
+    pp_apply(mpc, backend, views, x, OpClass::Softmax, label, PermTag::Pi1, true, |b, t| {
+        b.softmax(t)
+    })
 }
 
 /// `Π_PPGeLU` (Algorithm 2): elementwise GeLU of `[Xπ₂]` → `[GeLU(X)π₂]`.
@@ -63,7 +77,20 @@ pub fn pp_gelu(
     x: &Share,
     label: &str,
 ) -> Result<Share> {
-    pp_apply(mpc, backend, views, x, OpClass::Gelu, label, PermTag::Pi2, |b, t| b.gelu(t))
+    pp_apply(mpc, backend, views, x, OpClass::Gelu, label, PermTag::Pi2, true, |b, t| b.gelu(t))
+}
+
+/// Deferred-round `Π_PPGeLU` for the batched decode schedule: identical
+/// transfers and P1 view, no round charge — the caller's fused segment
+/// places the rounds (DESIGN.md §Batched openings).
+pub fn pp_gelu_unrounded(
+    mpc: &mut Mpc,
+    backend: &mut dyn Backend,
+    views: &mut Views,
+    x: &Share,
+    label: &str,
+) -> Result<Share> {
+    pp_apply(mpc, backend, views, x, OpClass::Gelu, label, PermTag::Pi2, false, |b, t| b.gelu(t))
 }
 
 /// `Π_PPLN` (Algorithm 3): LayerNorm of `[Xπ]` with P1-held permuted affine
@@ -79,7 +106,24 @@ pub fn pp_layernorm(
     class: OpClass,
     label: &str,
 ) -> Result<Share> {
-    pp_apply(mpc, backend, views, x, class, label, PermTag::Pi, |b, t| {
+    pp_apply(mpc, backend, views, x, class, label, PermTag::Pi, true, |b, t| {
+        b.layernorm(t, gamma_p, beta_p)
+    })
+}
+
+/// Deferred-round `Π_PPLN` (same contract as [`pp_gelu_unrounded`]).
+#[allow(clippy::too_many_arguments)]
+pub fn pp_layernorm_unrounded(
+    mpc: &mut Mpc,
+    backend: &mut dyn Backend,
+    views: &mut Views,
+    x: &Share,
+    gamma_p: &[f32],
+    beta_p: &[f32],
+    class: OpClass,
+    label: &str,
+) -> Result<Share> {
+    pp_apply(mpc, backend, views, x, class, label, PermTag::Pi, false, |b, t| {
         b.layernorm(t, gamma_p, beta_p)
     })
 }
@@ -92,7 +136,7 @@ pub fn pp_tanh(
     x: &Share,
     label: &str,
 ) -> Result<Share> {
-    pp_apply(mpc, backend, views, x, OpClass::Adaptation, label, PermTag::Pi, |b, t| b.tanh(t))
+    pp_apply(mpc, backend, views, x, OpClass::Adaptation, label, PermTag::Pi, true, |b, t| b.tanh(t))
 }
 
 #[cfg(test)]

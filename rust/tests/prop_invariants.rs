@@ -218,6 +218,100 @@ fn prop_fixed_lhs_and_grown_families_match_plain_beaver() {
 }
 
 #[test]
+fn prop_batched_openings_equal_sequential_share_for_share() {
+    // The batched-opening engine (Mpc::begin_batch/flush_batch, DESIGN.md
+    // §Batched openings): for random shapes and seeds, running independent
+    // opening protocols inside one batch produces *share-for-share
+    // identical* results to the sequential schedule (two identically
+    // seeded contexts consume identical dealer/PRG streams), moves
+    // identical bytes, and collapses the rounds to exactly one.
+    check("batched == sequential openings", 12, |g| {
+        let seed = 0xBA7C4 ^ (g.case as u64).wrapping_mul(6151);
+        let mut seq = Mpc::new(NetSim::new(NetworkProfile::lan()), seed);
+        let mut bat = Mpc::new(NetSim::new(NetworkProfile::lan()), seed);
+        let ops = 1 + g.below(4);
+        // Identical inputs, shared in identical order in both contexts so
+        // every mask/triple draw lines up.
+        let mut inputs = Vec::new();
+        for _ in 0..ops {
+            let (m, k, n) = (g.dim(4), g.dim(5), g.dim(4));
+            let x = RingTensor::from_vec(m, k, g.vec_i64(m * k).iter().map(|v| v >> 20).collect());
+            let y = RingTensor::from_vec(k, n, g.vec_i64(k * n).iter().map(|v| v >> 20).collect());
+            inputs.push((x, y));
+        }
+        let seq_shares: Vec<_> =
+            inputs.iter().map(|(x, y)| (seq.share_local(x), seq.share_local(y))).collect();
+        let bat_shares: Vec<_> =
+            inputs.iter().map(|(x, y)| (bat.share_local(x), bat.share_local(y))).collect();
+
+        let seq_outs: Vec<_> =
+            seq_shares.iter().map(|(sx, sy)| seq.matmul(sx, sy, OpClass::Linear)).collect();
+        bat.begin_batch();
+        let bat_outs: Vec<_> =
+            bat_shares.iter().map(|(sx, sy)| bat.matmul(sx, sy, OpClass::Linear)).collect();
+        assert_eq!(bat.net.ledger.rounds_total(), 0, "rounds must defer until the flush");
+        assert_eq!(bat.flush_batch(OpClass::Linear), 1);
+
+        for (i, (s, b)) in seq_outs.iter().zip(bat_outs.iter()).enumerate() {
+            assert_eq!(s.s0, b.s0, "op {i}: P0 share differs under batching");
+            assert_eq!(s.s1, b.s1, "op {i}: P1 share differs under batching");
+        }
+        assert_eq!(
+            seq.net.ledger.bytes_total(),
+            bat.net.ledger.bytes_total(),
+            "batching must not move a single extra byte"
+        );
+        assert_eq!(seq.net.ledger.rounds_total(), ops as u64);
+        assert_eq!(bat.net.ledger.rounds_total(), 1);
+
+        // Flushing an empty batch is a no-op.
+        let before = bat.net.ledger.rounds_total();
+        bat.begin_batch();
+        assert_eq!(bat.flush_batch(OpClass::Linear), 0);
+        assert_eq!(bat.net.ledger.rounds_total(), before);
+    });
+}
+
+#[test]
+fn prop_deferred_pp_conversions_match_rounded_twins() {
+    // The unrounded Π_PPLN/Π_PPGeLU used by the fused decode tail must be
+    // transfer-for-transfer and share-for-share identical to their
+    // round-charging twins — only the round placement may differ.
+    check("unrounded pp == rounded pp", 10, |g| {
+        let seed = 0x9933 ^ (g.case as u64).wrapping_mul(7877);
+        let mut a = Mpc::new(NetSim::new(NetworkProfile::lan()), seed);
+        let mut b = Mpc::new(NetSim::new(NetworkProfile::lan()), seed);
+        let mut be_a = NativeBackend::new();
+        let mut be_b = NativeBackend::new();
+        let mut va = Views::new(false);
+        let mut vb = Views::new(false);
+        let d = 2 + g.below(12);
+        let x = FloatTensor::from_vec(
+            1,
+            d,
+            g.vec_small_f64(d).iter().map(|&v| v as f32 * 0.2).collect(),
+        );
+        let gamma: Vec<f32> = (0..d).map(|i| 1.0 + 0.01 * i as f32).collect();
+        let beta: Vec<f32> = (0..d).map(|i| -0.02 * i as f32).collect();
+        let sx_a = a.share_local(&fixed::encode_tensor(&x));
+        let sx_b = b.share_local(&fixed::encode_tensor(&x));
+        let out_a = nonlin::pp_layernorm(
+            &mut a, &mut be_a, &mut va, &sx_a, &gamma, &beta, OpClass::LayerNorm, "rounded",
+        )
+        .unwrap();
+        let out_b = nonlin::pp_layernorm_unrounded(
+            &mut b, &mut be_b, &mut vb, &sx_b, &gamma, &beta, OpClass::LayerNorm, "unrounded",
+        )
+        .unwrap();
+        assert_eq!(out_a.s0, out_b.s0);
+        assert_eq!(out_a.s1, out_b.s1);
+        assert_eq!(a.net.ledger.bytes_total(), b.net.ledger.bytes_total());
+        assert_eq!(a.net.ledger.rounds_total(), 2);
+        assert_eq!(b.net.ledger.rounds_total(), 0, "unrounded twin defers rounds to the caller");
+    });
+}
+
+#[test]
 fn prop_smpc_exp_monotone_and_bounded() {
     check("smpc exp sane", 20, |g| {
         let mut mpc = mk();

@@ -1,0 +1,161 @@
+//! Round-budget regression harness (DESIGN.md §Batched openings): pins the
+//! exact per-`OpClass` rounds/token of a warm decode step against a golden
+//! table, the way the byte floors are pinned in `engine` tests and
+//! `bench_e2e` — any silent round growth (a protocol edit that adds an
+//! opening flight, a batch that stops coalescing) fails here first.
+//!
+//! Round counts are deterministic and network-independent, so the golden
+//! table must hold bit-exactly under every [`NetworkProfile`], in both KV
+//! modes (plain per-step and fixed-operand correlated), and in fast-sim.
+
+use centaur::engine::decoder::DecoderSession;
+use centaur::engine::{CentaurEngine, EngineOptions};
+use centaur::model::{ModelConfig, ModelWeights};
+use centaur::net::{NetworkProfile, OpClass};
+use centaur::runtime::NativeBackend;
+
+/// Golden per-class rounds of one warm decode step on `gpt2-tiny`
+/// (2 layers) under the **batched** schedule, in `OpClass::ALL` order:
+///
+/// * Linear 3/layer — append+scores flush, Π_PPP, value+residual flush
+/// * Softmax 2/layer — Π_PPSM input flight + reshare flight
+/// * LayerNorm 1/layer — the coalesced LN1/GeLU/LN2(/final-LN) reshares
+/// * GeLU 0 — its conversions ride the LayerNorm flush / deferred sends
+/// * Embedding 3 — client input share + the embedding Π_PPLN
+/// * Adaptation 1 — logits return (final LN fused into the last layer)
+const GOLDEN_BATCHED: [(OpClass, u64); 8] = [
+    (OpClass::Linear, 6),
+    (OpClass::Softmax, 4),
+    (OpClass::Gelu, 0),
+    (OpClass::LayerNorm, 2),
+    (OpClass::Embedding, 3),
+    (OpClass::Adaptation, 1),
+    (OpClass::Correlation, 0),
+    (OpClass::Other, 0),
+];
+
+/// Golden per-class rounds of the same step under the **sequential**
+/// schedule (the PR 2/3 baseline): 12/layer + embedding 3 + adaptation 3.
+const GOLDEN_SEQUENTIAL: [(OpClass, u64); 8] = [
+    (OpClass::Linear, 8),
+    (OpClass::Softmax, 4),
+    (OpClass::Gelu, 4),
+    (OpClass::LayerNorm, 8),
+    (OpClass::Embedding, 3),
+    (OpClass::Adaptation, 3),
+    (OpClass::Correlation, 0),
+    (OpClass::Other, 0),
+];
+
+fn golden_total(table: &[(OpClass, u64); 8]) -> u64 {
+    table.iter().map(|&(_, r)| r).sum()
+}
+
+/// One warm decode step; returns `(rounds_by_class, bytes_by_class)` of
+/// that step's ledger.
+fn warm_step(
+    profile: NetworkProfile,
+    round_batching: bool,
+    decode_correlations: bool,
+    fast_sim: bool,
+) -> ([(OpClass, u64); 8], [(OpClass, u64); 8]) {
+    let cfg = ModelConfig::gpt2_tiny();
+    let w = ModelWeights::random(&cfg, 0x20B);
+    let mut eng = CentaurEngine::with_backend(
+        &cfg,
+        &w,
+        Box::new(NativeBackend::new()),
+        EngineOptions {
+            profile,
+            seed: 0x20C,
+            round_batching,
+            decode_correlations,
+            fast_sim,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut sess = DecoderSession::new(&mut eng, &[7, 11, 13]).unwrap();
+    sess.absorb(17).unwrap();
+    assert_eq!(sess.decode_steps(), 1);
+    let step = sess.last_step_cost().clone();
+    (step.rounds_by_class(), step.bytes_by_class())
+}
+
+/// The tentpole pin: exact rounds/token per `OpClass` under every network
+/// profile, in both KV modes — any deviation from the golden table is a
+/// regression (or an improvement that must update the table *and*
+/// EXPERIMENTS.md §Rounds).
+#[test]
+fn warm_step_rounds_pinned_per_profile_and_mode() {
+    for name in NetworkProfile::ALL_NAMES {
+        let profile = NetworkProfile::by_name(name).unwrap();
+        for correlations in [true, false] {
+            let (rounds, _) = warm_step(profile, true, correlations, false);
+            assert_eq!(
+                rounds, GOLDEN_BATCHED,
+                "batched rounds/token drifted ({name}, correlations={correlations})"
+            );
+        }
+        let (seq_rounds, _) = warm_step(profile, false, true, false);
+        assert_eq!(seq_rounds, GOLDEN_SEQUENTIAL, "sequential rounds/token drifted ({name})");
+    }
+    assert_eq!(golden_total(&GOLDEN_BATCHED), 16);
+    assert_eq!(golden_total(&GOLDEN_SEQUENTIAL), 30);
+}
+
+/// Fast-sim charges the same round schedule (charged-ideal twins batch
+/// through the same `NetSim` deferral), so the golden table is
+/// mode-independent.
+#[test]
+fn fast_sim_matches_the_golden_round_table() {
+    let (rounds, bytes) = warm_step(NetworkProfile::lan(), true, true, true);
+    let (_, full_bytes) = warm_step(NetworkProfile::lan(), true, true, false);
+    assert_eq!(rounds, GOLDEN_BATCHED, "fast-sim rounds/token drifted");
+    assert_eq!(bytes, full_bytes, "fast-sim bytes/token drifted from full mode");
+}
+
+/// The acceptance criterion: ≥40% fewer warm-step rounds than the
+/// sequential baseline, with per-class bytes unchanged **exactly** (the
+/// ≤1% tolerance of the criterion is met with zero slack — batching may
+/// merge rounds, never move a byte).
+#[test]
+fn batching_cuts_rounds_40pct_with_identical_bytes() {
+    let (bat_rounds, bat_bytes) = warm_step(NetworkProfile::wan2(), true, true, false);
+    let (seq_rounds, seq_bytes) = warm_step(NetworkProfile::wan2(), false, true, false);
+    let bat: u64 = bat_rounds.iter().map(|&(_, r)| r).sum();
+    let seq: u64 = seq_rounds.iter().map(|&(_, r)| r).sum();
+    assert!(
+        bat * 10 <= seq * 6,
+        "batched schedule must cut rounds/token >=40%: {bat} vs {seq}"
+    );
+    assert_eq!(bat_bytes, seq_bytes, "round batching must not change per-class bytes");
+}
+
+/// Per-step rounds are position-independent: prefill absorbs and warm
+/// steps share one budget, so a single pinned step is representative.
+#[test]
+fn step_rounds_are_position_independent() {
+    let cfg = ModelConfig::gpt2_tiny();
+    let w = ModelWeights::random(&cfg, 0x20D);
+    let mut eng = CentaurEngine::with_backend(
+        &cfg,
+        &w,
+        Box::new(NativeBackend::new()),
+        EngineOptions { seed: 0x20E, ..Default::default() },
+    )
+    .unwrap();
+    let mut sess = DecoderSession::new(&mut eng, &[5, 9]).unwrap();
+    let mut seen = Vec::new();
+    for t in [21u32, 34, 55] {
+        sess.absorb(t).unwrap();
+        seen.push(sess.last_step_cost().rounds_total());
+    }
+    assert!(seen.windows(2).all(|w| w[0] == w[1]), "per-step rounds drifted: {seen:?}");
+    assert_eq!(sess.decode_rounds_per_token(), golden_total(&GOLDEN_BATCHED));
+    assert_eq!(
+        sess.last_step_rounds_by_class(),
+        GOLDEN_BATCHED,
+        "session accessor must expose the pinned breakdown"
+    );
+}

@@ -224,6 +224,85 @@ fn correlated_decode_census_matches_plain_and_opens_pi1_once_per_layer() {
     }
 }
 
+/// ISSUE 5 census: the batched-opening decode schedule (DESIGN.md
+/// §Batched openings) must move **exactly** the payloads the sequential
+/// schedule moves — batching may merge rounds, never add, drop, or alter
+/// an opening. Both runs are identically seeded, so the multiset of
+/// transferred payloads (sender, receiver, class, size, digest) and the
+/// record-for-record P1 view census — the plaintexts each party sees —
+/// must match bit-exactly, while rounds shrink and bytes stay identical.
+#[test]
+fn batched_decode_census_is_exactly_the_sequential_census() {
+    use centaur::engine::decoder::DecoderSession;
+
+    let cfg = ModelConfig::gpt2_tiny();
+    let w = ModelWeights::random(&cfg, 91);
+    let prompt = [7u32, 11, 13];
+    let forced = [21u32, 34, 55];
+
+    let run = |round_batching: bool| {
+        let mut eng = CentaurEngine::with_backend(
+            &cfg,
+            &w,
+            Box::new(NativeBackend::new()),
+            EngineOptions {
+                record_views: true,
+                record_transfers: true,
+                seed: 92,
+                round_batching,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let (prefill_rounds, decode_rounds, bytes) = {
+            let mut sess = DecoderSession::new(&mut eng, &prompt).unwrap();
+            for &t in &forced {
+                sess.absorb(t).unwrap();
+            }
+            (
+                sess.prefill_cost().rounds_total(),
+                sess.decode_cost().rounds_total(),
+                sess.total_cost().bytes_total(),
+            )
+        };
+        (eng, prefill_rounds, decode_rounds, bytes)
+    };
+    let (bat_eng, bat_prefill, bat_decode, bat_bytes) = run(true);
+    let (seq_eng, seq_prefill, seq_decode, seq_bytes) = run(false);
+
+    // (1) Transferred-payload multiset identical: every opening the
+    // sequential schedule performs, exactly once each, and nothing else.
+    let mut bat_log = bat_eng.transfer_log().to_vec();
+    let mut seq_log = seq_eng.transfer_log().to_vec();
+    assert_eq!(bat_log.len(), seq_log.len(), "batching changed the number of transfers");
+    bat_log.sort();
+    seq_log.sort();
+    assert_eq!(bat_log, seq_log, "batching changed a transferred payload");
+
+    // (2) P1 view census identical record for record — labels, tags,
+    // shapes, and (identically seeded) the observed plaintexts themselves.
+    assert!(bat_eng.leaks().is_empty(), "leaks: {:?}", bat_eng.leaks());
+    assert_eq!(bat_eng.views.p1.len(), seq_eng.views.p1.len(), "census size must not change");
+    let absorbs = prompt.len() + forced.len();
+    assert_eq!(bat_eng.views.p1.len(), absorbs * (2 + 4 * cfg.layers));
+    for (bv, sv) in bat_eng.views.p1.iter().zip(seq_eng.views.p1.iter()) {
+        assert_eq!(bv.label, sv.label, "view order/labels must match the sequential path");
+        assert_eq!(bv.tag, sv.tag);
+        assert_eq!((bv.rows, bv.cols), (sv.rows, sv.cols));
+        let (bt, st) = (bv.tensor.as_ref().unwrap(), sv.tensor.as_ref().unwrap());
+        assert_eq!(bt.data(), st.data(), "view '{}' plaintext differs under batching", bv.label);
+    }
+
+    // (3) The whole point: same bytes, strictly fewer rounds, in both
+    // phases (prefill steps batch identically to warm steps).
+    assert_eq!(bat_bytes, seq_bytes, "batching must not change total bytes");
+    assert!(
+        bat_decode * 10 <= seq_decode * 6,
+        "warm decode rounds must drop >=40%: {bat_decode} vs {seq_decode}"
+    );
+    assert!(bat_prefill < seq_prefill);
+}
+
 #[test]
 fn permonly_leak_detector_fires() {
     let cfg = ModelConfig::gpt2_tiny();
