@@ -3,8 +3,9 @@
 //! amortization of a prefilled TriplePool (cold vs warm requests).
 
 use centaur::baselines::FrameworkKind;
-use centaur::coordinator::{Coordinator, MetricsSnapshot, ServerConfig};
+use centaur::coordinator::{Coordinator, MetricsSnapshot, ServerConfig, StreamEvent};
 use centaur::model::{ModelConfig, ModelWeights};
+use centaur::net::NetworkProfile;
 use centaur::util::bench::Bencher;
 use std::time::Duration;
 
@@ -18,7 +19,53 @@ fn serve_sequential(sc: ServerConfig, n_req: usize, n_ctx: usize) -> MetricsSnap
     coord.shutdown()
 }
 
+/// Serve `sessions` concurrent generate streams through the decode
+/// scheduler (gpt2-tiny, all submitted before any are drained so they
+/// ride the same continuously-batched steps); returns the snapshot with
+/// the batched-decode counters.
+fn serve_batched_decode(sessions: usize, steps: usize, profile: NetworkProfile) -> MetricsSnapshot {
+    let cfg = ModelConfig::gpt2_tiny();
+    let weights = ModelWeights::random(&cfg, 9);
+    let mut sc = ServerConfig::new(cfg, weights);
+    sc.framework = FrameworkKind::Centaur;
+    sc.max_batch = sessions;
+    sc.linger = Duration::from_millis(1);
+    sc.profile = profile;
+    let coord = Coordinator::start(sc).unwrap();
+    let rxs: Vec<_> = (0..sessions as u32)
+        .map(|i| coord.submit_generate(vec![5 + i, 9, 13 + i], steps))
+        .collect();
+    for rx in rxs {
+        loop {
+            match rx.recv().unwrap().unwrap() {
+                StreamEvent::Done(_) => break,
+                StreamEvent::Token { .. } => {}
+            }
+        }
+    }
+    coord.shutdown()
+}
+
 fn main() {
+    // CI smoke gate: only the continuous-batching section, with the
+    // amortization acceptance asserted — B=4 must at least halve the
+    // B=1 wire rounds per token (the ideal is solo/4).
+    if std::env::var("CENTAUR_BENCH_DECODE_ONLY").is_ok() {
+        let steps = 4;
+        let solo = serve_batched_decode(1, steps, NetworkProfile::lan());
+        let b4 = serve_batched_decode(4, steps, NetworkProfile::lan());
+        let (r1, r4) = (solo.batched_rounds_per_token(), b4.batched_rounds_per_token());
+        println!("decode-only smoke: B=1 rounds/token={r1:.2}, B=4 rounds/token={r4:.2}");
+        assert!(r1 > 0.0 && r4 > 0.0, "decode scheduler recorded no batched steps");
+        assert!(
+            r4 <= 0.5 * r1,
+            "B=4 amortized rounds/token {r4:.2} not <= half of B=1 ({r1:.2})"
+        );
+        assert!(b4.max_batch_sessions >= 2, "sessions never shared a decode step");
+        println!("decode-only smoke OK");
+        return;
+    }
+
     let mut b = Bencher::new();
     let cfg = ModelConfig::bert_tiny();
     let weights = ModelWeights::random(&cfg, 5);
@@ -77,4 +124,41 @@ fn main() {
         if speedup >= 1.0 { "faster" } else { "SLOWER" },
     );
     println!("    -> warm {}", warm.summary());
+
+    // Continuous batching (DESIGN.md §Continuous batching): B concurrent
+    // generate sessions ride every decode step's shared flights, so wire
+    // rounds amortize to (solo rounds)/B per token while bytes/token stay
+    // flat (each lane still ships its own payloads). The modeled s/token
+    // is rounds·RTT + bytes/bandwidth — on WAN the rounds term dominates,
+    // which is exactly what batching divides by B.
+    let gen_steps = if std::env::var("CENTAUR_BENCH_QUICK").is_ok() { 3 } else { 8 };
+    for pname in ["lan", "wan3"] {
+        let profile = NetworkProfile::by_name(pname).unwrap();
+        b.section(&format!(
+            "continuous batching: gpt2-tiny, {gen_steps}-step generates, {pname}"
+        ));
+        let mut solo_rpt = 0.0f64;
+        for sessions in [1usize, 2, 4, 8] {
+            let snap = serve_batched_decode(sessions, gen_steps, profile);
+            let rpt = snap.batched_rounds_per_token();
+            if sessions == 1 {
+                solo_rpt = rpt;
+            }
+            let bytes_per_token = if snap.tokens_generated == 0 {
+                0.0
+            } else {
+                snap.decode_bytes as f64 / snap.tokens_generated as f64
+            };
+            let s_per_token = rpt * profile.rtt + bytes_per_token * 8.0 / profile.bandwidth_bps;
+            println!(
+                "  B={sessions}: rounds/token={rpt:.2} ({:.2}x solo) bytes/token={} \
+                 modeled s/token={} max_lanes={} tokens={}",
+                if solo_rpt > 0.0 { rpt / solo_rpt } else { 1.0 },
+                centaur::util::human_bytes(bytes_per_token as u64),
+                centaur::util::human_secs(s_per_token),
+                snap.max_batch_sessions,
+                snap.tokens_generated,
+            );
+        }
+    }
 }

@@ -25,11 +25,35 @@ pub struct Batch<T> {
 
 /// Run the batching loop until the input channel disconnects.
 pub fn run<T: Send>(rx: Receiver<T>, tx: Sender<Batch<T>>, cfg: BatcherConfig) {
+    // No side route: every item is batchable.
+    let (side_tx, _side_rx) = std::sync::mpsc::channel();
+    run_routed(rx, tx, side_tx, |_| false, cfg);
+}
+
+/// Batching loop with a side route: items matching `is_side` bypass
+/// batching and are forwarded to `side_tx` immediately (the decode
+/// scheduler does its own continuous admission, so lingering generate
+/// requests here would only add head-of-line latency). Everything else is
+/// grouped into [`Batch`]es exactly as [`run`] does. Side-send failures
+/// are ignored — dropping the request drops its embedded stream sender,
+/// which the client observes as a disconnected stream.
+pub fn run_routed<T: Send>(
+    rx: Receiver<T>,
+    tx: Sender<Batch<T>>,
+    side_tx: Sender<T>,
+    is_side: impl Fn(&T) -> bool,
+    cfg: BatcherConfig,
+) {
     loop {
-        // Block for the first item of the next batch.
-        let first = match rx.recv() {
-            Ok(item) => item,
-            Err(_) => return,
+        // Block for the first batchable item of the next batch.
+        let first = loop {
+            match rx.recv() {
+                Ok(item) if is_side(&item) => {
+                    let _ = side_tx.send(item);
+                }
+                Ok(item) => break item,
+                Err(_) => return,
+            }
         };
         let opened = Instant::now();
         let mut items = vec![first];
@@ -40,6 +64,9 @@ pub fn run<T: Send>(rx: Receiver<T>, tx: Sender<Batch<T>>, cfg: BatcherConfig) {
                 break;
             }
             match rx.recv_timeout(left) {
+                Ok(item) if is_side(&item) => {
+                    let _ = side_tx.send(item);
+                }
                 Ok(item) => items.push(item),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => {
@@ -152,6 +179,52 @@ mod tests {
         assert_eq!(b.items, vec![0, 1, 2]);
         assert!(out_rx.recv().is_err(), "batcher must exit after disconnect");
         h.join().unwrap();
+    }
+
+    #[test]
+    fn routed_items_bypass_batching_and_keep_order() {
+        // Odd items take the side route immediately; evens batch as usual.
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::channel();
+        let (side_tx, side_rx) = mpsc::channel();
+        for i in 0..8 {
+            in_tx.send(i).unwrap();
+        }
+        drop(in_tx);
+        run_routed(
+            in_rx,
+            out_tx,
+            side_tx,
+            |&i: &i32| i % 2 == 1,
+            BatcherConfig { max_batch: 16, linger: Duration::from_millis(5) },
+        );
+        let side: Vec<i32> = side_rx.iter().collect();
+        assert_eq!(side, vec![1, 3, 5, 7]);
+        let batched: Vec<i32> = out_rx.iter().flat_map(|b: Batch<i32>| b.items).collect();
+        assert_eq!(batched, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn routed_side_disconnect_does_not_stall_batches() {
+        // The side receiver is gone; side items are dropped, batch items
+        // still flow and the loop still terminates on input disconnect.
+        let (in_tx, in_rx) = mpsc::channel();
+        let (out_tx, out_rx) = mpsc::channel();
+        let (side_tx, side_rx) = mpsc::channel();
+        drop(side_rx);
+        for i in 0..4 {
+            in_tx.send(i).unwrap();
+        }
+        drop(in_tx);
+        run_routed(
+            in_rx,
+            out_tx,
+            side_tx,
+            |&i: &i32| i >= 2,
+            BatcherConfig { max_batch: 16, linger: Duration::from_millis(5) },
+        );
+        let batched: Vec<i32> = out_rx.iter().flat_map(|b: Batch<i32>| b.items).collect();
+        assert_eq!(batched, vec![0, 1]);
     }
 
     #[test]

@@ -28,6 +28,15 @@ pub struct Metrics {
     /// Protocol rounds of the warm-decode phases (generated tokens) — the
     /// WAN latency driver (`rounds · RTT`).
     pub decode_rounds: u64,
+    /// Batched decode steps executed by the decode scheduler.
+    pub batched_decode_steps: u64,
+    /// Wire rounds across batched decode steps (counted once per step —
+    /// the whole batch shares each flight).
+    pub batch_wire_rounds: u64,
+    /// Tokens emitted through batched decode steps.
+    pub batch_tokens: u64,
+    /// Largest number of sessions that shared one decode step.
+    pub max_batch_sessions: u64,
 }
 
 impl Metrics {
@@ -47,6 +56,10 @@ impl Metrics {
             prefill_bytes: 0,
             decode_bytes: 0,
             decode_rounds: 0,
+            batched_decode_steps: 0,
+            batch_wire_rounds: 0,
+            batch_tokens: 0,
+            max_batch_sessions: 0,
         }
     }
 
@@ -80,6 +93,16 @@ impl Metrics {
         self.prefill_bytes += prefill_bytes;
         self.decode_bytes += decode_bytes;
         self.decode_rounds += decode_rounds;
+    }
+
+    /// Record one batched decode step: the wire rounds the whole batch
+    /// shared and the number of session lanes that rode them. Amortized
+    /// rounds/token falls out as `batch_wire_rounds / batch_tokens`.
+    pub fn record_batch_step(&mut self, rounds: u64, lanes: u64) {
+        self.batched_decode_steps += 1;
+        self.batch_wire_rounds += rounds;
+        self.batch_tokens += lanes;
+        self.max_batch_sessions = self.max_batch_sessions.max(lanes);
     }
 
     /// Compute quantiles and totals so far.
@@ -116,6 +139,10 @@ impl Metrics {
             prefill_bytes: self.prefill_bytes,
             decode_bytes: self.decode_bytes,
             decode_rounds: self.decode_rounds,
+            batched_decode_steps: self.batched_decode_steps,
+            batch_wire_rounds: self.batch_wire_rounds,
+            batch_tokens: self.batch_tokens,
+            max_batch_sessions: self.max_batch_sessions,
             elapsed,
         }
     }
@@ -165,6 +192,15 @@ pub struct MetricsSnapshot {
     pub decode_bytes: u64,
     /// Warm-decode protocol rounds across generation requests.
     pub decode_rounds: u64,
+    /// Batched decode steps executed by the decode scheduler.
+    pub batched_decode_steps: u64,
+    /// Wire rounds across batched decode steps (once per step, shared by
+    /// every lane riding it).
+    pub batch_wire_rounds: u64,
+    /// Tokens emitted through batched decode steps.
+    pub batch_tokens: u64,
+    /// Largest number of sessions that shared one decode step.
+    pub max_batch_sessions: u64,
     /// Wall-clock time since the coordinator started.
     pub elapsed: Duration,
 }
@@ -209,6 +245,18 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Amortized wire rounds per token across batched decode steps (0.0
+    /// when the decode scheduler ran no batched steps) — the
+    /// continuous-batching headline: B lanes sharing the solo 16-flight
+    /// schedule pay 16/B rounds per token.
+    pub fn batched_rounds_per_token(&self) -> f64 {
+        if self.batch_tokens == 0 {
+            0.0
+        } else {
+            self.batch_wire_rounds as f64 / self.batch_tokens as f64
+        }
+    }
+
     /// Human-readable summary block.
     pub fn summary(&self) -> String {
         let mut s = format!(
@@ -246,6 +294,14 @@ impl MetricsSnapshot {
                 crate::util::human_bytes(self.decode_bytes),
                 crate::util::human_bytes(self.decode_bytes_per_token()),
                 self.decode_rounds_per_token(),
+            ));
+        }
+        if self.batched_decode_steps > 0 {
+            s.push_str(&format!(
+                " batch_steps={} batch_max={} batch_rounds_per_token={:.2}",
+                self.batched_decode_steps,
+                self.max_batch_sessions,
+                self.batched_rounds_per_token(),
             ));
         }
         s
@@ -304,5 +360,23 @@ mod tests {
         assert!(s.summary().contains("decode_per_token"));
         assert!(s.summary().contains("decode_rounds_per_token=8"));
         assert!(s.summary().contains("corr_setup"));
+    }
+
+    #[test]
+    fn batch_counters_amortize_rounds_over_lanes() {
+        let mut m = Metrics::new();
+        // Three batched steps at widths 1, 4, 4: 48 wire rounds, 9 tokens.
+        m.record_batch_step(16, 1);
+        m.record_batch_step(16, 4);
+        m.record_batch_step(16, 4);
+        let s = m.snapshot();
+        assert_eq!(s.batched_decode_steps, 3);
+        assert_eq!(s.batch_wire_rounds, 48);
+        assert_eq!(s.batch_tokens, 9);
+        assert_eq!(s.max_batch_sessions, 4);
+        assert!((s.batched_rounds_per_token() - 48.0 / 9.0).abs() < 1e-9);
+        assert!(s.summary().contains("batch_max=4"));
+        // No batched steps → the summary block stays out entirely.
+        assert!(!Metrics::new().snapshot().summary().contains("batch_steps"));
     }
 }

@@ -25,9 +25,10 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::baselines::{permonly::PermOnlyEngine, smpc::SmpcEngine, FrameworkKind, PptiFramework};
+use crate::engine::decoder::DecodeBatch;
 use crate::engine::{CentaurEngine, EngineOptions};
-use crate::model::{ModelConfig, ModelWeights};
-use crate::mpc::TriplePool;
+use crate::model::{ModelConfig, ModelKind, ModelWeights};
+use crate::mpc::{TriplePool, TripleShape};
 use crate::net::NetworkProfile;
 use crate::runtime::{backend_by_name, NativeBackend};
 use crate::Result;
@@ -79,6 +80,13 @@ pub struct ServerConfig {
     /// rounds/token ~47% with identical bytes (DESIGN.md §Batched
     /// openings) — the WAN serving latency lever.
     pub round_batching: bool,
+    /// Concurrent decode sessions the offline prefill provisions for:
+    /// each decode shape's demand is multiplied by this, so B
+    /// simultaneously admitted sessions find their correlation bundles
+    /// and per-step triples stocked (shape keys are shared across
+    /// sessions; only multiplicities scale — see
+    /// [`crate::protocols::layer::decode_pool_shapes_batched`]).
+    pub decode_prefill_sessions: usize,
 }
 
 impl ServerConfig {
@@ -102,6 +110,7 @@ impl ServerConfig {
             decode_prefill_steps: 0,
             decode_correlations: true,
             round_batching: true,
+            decode_prefill_sessions: 1,
         }
     }
 }
@@ -178,36 +187,258 @@ enum Request {
     },
 }
 
+/// Build a concrete Centaur engine for a serving thread (workers use it
+/// boxed behind [`PptiFramework`]; the decode scheduler needs the
+/// concrete type to drive a [`DecodeBatch`]).
+fn build_centaur_engine(cfg: &ServerConfig, pool: Option<Arc<TriplePool>>) -> Result<CentaurEngine> {
+    let backend = if cfg.backend == "native" {
+        Box::new(NativeBackend::new()) as Box<dyn crate::runtime::Backend>
+    } else {
+        backend_by_name(&cfg.backend, &cfg.cfg.name, &cfg.artifacts_dir)?
+    };
+    CentaurEngine::with_backend(
+        &cfg.cfg,
+        &cfg.weights,
+        backend,
+        EngineOptions {
+            profile: cfg.profile,
+            seed: cfg.seed,
+            record_views: false,
+            fast_sim: cfg.fast_sim,
+            triple_pool: pool,
+            decode_correlations: cfg.decode_correlations,
+            round_batching: cfg.round_batching,
+            ..Default::default()
+        },
+    )
+}
+
 /// Build the framework engine inside a worker thread.
 fn build_engine(cfg: &ServerConfig, pool: Option<Arc<TriplePool>>) -> Result<Box<dyn PptiFramework>> {
     match cfg.framework {
-        FrameworkKind::Centaur => {
-            let backend = if cfg.backend == "native" {
-                Box::new(NativeBackend::new()) as Box<dyn crate::runtime::Backend>
-            } else {
-                backend_by_name(&cfg.backend, &cfg.cfg.name, &cfg.artifacts_dir)?
-            };
-            let eng = CentaurEngine::with_backend(
-                &cfg.cfg,
-                &cfg.weights,
-                backend,
-                EngineOptions {
-                    profile: cfg.profile,
-                    seed: cfg.seed,
-                    record_views: false,
-                    fast_sim: cfg.fast_sim,
-                    triple_pool: pool,
-                    decode_correlations: cfg.decode_correlations,
-                    round_batching: cfg.round_batching,
-                    ..Default::default()
-                },
-            )?;
-            Ok(Box::new(eng))
-        }
+        FrameworkKind::Centaur => Ok(Box::new(build_centaur_engine(cfg, pool)?)),
         FrameworkKind::PermOnly => {
             Ok(Box::new(PermOnlyEngine::new(&cfg.cfg, &cfg.weights, cfg.profile, false)))
         }
         smpc => Ok(Box::new(SmpcEngine::new(smpc, &cfg.cfg, &cfg.weights, cfg.profile, cfg.seed)?)),
+    }
+}
+
+/// Per-session bookkeeping the decode scheduler keeps alongside the
+/// [`DecodeBatch`] lane state.
+struct SchedLane {
+    stream: mpsc::Sender<Result<StreamEvent>>,
+    enqueued: Instant,
+    admitted: Instant,
+    /// Cleared when a stream send fails (client dropped the receiver) —
+    /// the session is evicted at the next step boundary instead of
+    /// burning shared-flight work nobody reads.
+    connected: bool,
+}
+
+/// Return the pool demand an early-evicted session will never consume:
+/// `steps_unconsumed` decode steps' worth of per-step triples. The
+/// session's correlation bundles are NOT released — those were dealt at
+/// admission, so their demand is genuinely spent.
+fn release_unconsumed_demand(pool: Option<&TriplePool>, cfg: &ServerConfig, steps_unconsumed: u64) {
+    let Some(pool) = pool else { return };
+    if steps_unconsumed == 0 {
+        return;
+    }
+    let mc = &cfg.cfg;
+    if cfg.decode_correlations {
+        let count = mc.layers as u64 * mc.h as u64 * steps_unconsumed;
+        pool.release_demand(TripleShape::matmul(1, mc.n_ctx, mc.dh()), count);
+    } else {
+        for (shape, count) in crate::protocols::layer::decode_step_shapes(mc) {
+            pool.release_demand(shape, count * steps_unconsumed);
+        }
+    }
+}
+
+/// Finalize one scheduler session: harvest its summary from the batch,
+/// record metrics, send `Done` when the client is still listening, and
+/// release phantom pool demand when it is not.
+fn finalize_session(
+    batch: &mut DecodeBatch<'_>,
+    lanes: &mut std::collections::HashMap<usize, SchedLane>,
+    metrics: &Mutex<Metrics>,
+    pool: Option<&TriplePool>,
+    cfg: &ServerConfig,
+    id: usize,
+) {
+    let Some(sum) = batch.remove(id) else { return };
+    let Some(lane) = lanes.remove(&id) else { return };
+    let latency = lane.enqueued.elapsed();
+    metrics.lock().unwrap().record_generate(
+        latency,
+        lane.admitted.elapsed(),
+        sum.tokens.len() as u64,
+        sum.setup_bytes,
+        sum.prefill_bytes,
+        sum.decode_bytes,
+        sum.rounds,
+        sum.decode_rounds,
+    );
+    if lane.connected {
+        let _ = lane.stream.send(Ok(StreamEvent::Done(GenSummary {
+            tokens: sum.tokens,
+            setup_bytes: sum.setup_bytes,
+            prefill_bytes: sum.prefill_bytes,
+            decode_bytes: sum.decode_bytes,
+            rounds: sum.rounds,
+            decode_rounds: sum.decode_rounds,
+            latency,
+        })));
+    } else {
+        release_unconsumed_demand(pool, cfg, sum.steps_unconsumed);
+    }
+}
+
+/// The decode scheduler: one engine, one long-lived [`DecodeBatch`],
+/// continuous admission. Generate requests routed here by the batcher
+/// join the running batch at step boundaries; every active session rides
+/// the same per-step flight schedule, so wire rounds amortize to
+/// (solo rounds)/B per token (DESIGN.md §Continuous batching). Sessions
+/// leave on step-budget exhaustion, context exhaustion, or client
+/// disconnect; the scheduler exits once the request channel closes and
+/// the batch drains.
+fn decode_scheduler(
+    cfg: ServerConfig,
+    pool: Option<Arc<TriplePool>>,
+    metrics: Arc<Mutex<Metrics>>,
+    rx: mpsc::Receiver<Request>,
+) {
+    // A dead engine must not strand clients: fail every queued request.
+    let fail_all = |rx: &mpsc::Receiver<Request>, why: &str| {
+        for req in rx.iter() {
+            match req {
+                Request::Generate { stream, .. } => {
+                    let _ = stream.send(Err(anyhow::anyhow!("decode scheduler unavailable: {why}")));
+                }
+                Request::Infer { .. } => {} // dropped responder reports disconnect
+            }
+        }
+    };
+    let mut engine = match build_centaur_engine(&cfg, pool.clone()) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("decode scheduler: engine init failed: {e}");
+            fail_all(&rx, &format!("engine init failed: {e}"));
+            return;
+        }
+    };
+    let mut batch = match DecodeBatch::new(&mut engine) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("decode scheduler: batch init failed: {e}");
+            fail_all(&rx, &format!("batch init failed: {e}"));
+            return;
+        }
+    };
+    let mut lanes: std::collections::HashMap<usize, SchedLane> = std::collections::HashMap::new();
+    let mut disconnected = false;
+
+    loop {
+        // Admission: block when the batch is idle, otherwise drain
+        // whatever is already queued — sessions join only at step
+        // boundaries, up to `max_batch` concurrent lanes.
+        while batch.len() < cfg.max_batch.max(1) && !disconnected {
+            let req = if batch.is_empty() {
+                match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(r) => r,
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            };
+            let Request::Generate { prompt, steps, enqueued, stream } = req else {
+                continue; // router predicate sends only Generate here
+            };
+            let admitted = Instant::now();
+            match batch.admit(&prompt, steps, None) {
+                Ok(id) => {
+                    lanes.insert(id, SchedLane { stream, enqueued, admitted, connected: true });
+                    // Prefill-only request (steps == 0): done before the
+                    // first shared step — finalize immediately.
+                    if batch.session(id).map(|s| s.is_done()).unwrap_or(false) {
+                        finalize_session(&mut batch, &mut lanes, &metrics, pool.as_deref(), &cfg, id);
+                    }
+                }
+                Err(e) => {
+                    let _ = stream.send(Err(e));
+                }
+            }
+        }
+        if batch.is_empty() {
+            if disconnected {
+                return;
+            }
+            continue;
+        }
+
+        // One shared step for every active lane.
+        match batch.step() {
+            Ok(emissions) => {
+                if let Some(first) = emissions.first() {
+                    metrics
+                        .lock()
+                        .unwrap()
+                        .record_batch_step(first.step_rounds, emissions.len() as u64);
+                }
+                for em in &emissions {
+                    let Some(lane) = lanes.get_mut(&em.session) else { continue };
+                    if lane.connected {
+                        let sent = lane
+                            .stream
+                            .send(Ok(StreamEvent::Token {
+                                index: em.index,
+                                token: em.token,
+                                step_bytes: em.step_bytes,
+                                step_rounds: em.step_rounds,
+                            }))
+                            .is_ok();
+                        if !sent {
+                            lane.connected = false;
+                        }
+                    }
+                }
+                // Eviction sweep: finished sessions and abandoned streams
+                // leave at the step boundary.
+                for id in batch.session_ids() {
+                    let done = batch.session(id).map(|s| s.is_done()).unwrap_or(true);
+                    let connected = lanes.get(&id).map(|l| l.connected).unwrap_or(false);
+                    if done || !connected {
+                        finalize_session(&mut batch, &mut lanes, &metrics, pool.as_deref(), &cfg, id);
+                    }
+                }
+            }
+            Err(e) => {
+                // A failed shared step fails every rider: the engine's
+                // transcript state is no longer trustworthy mid-step.
+                let msg = format!("batched decode step failed: {e}");
+                for id in batch.session_ids() {
+                    if let Some(sum) = batch.remove(id) {
+                        if let Some(lane) = lanes.remove(&id) {
+                            if lane.connected {
+                                let _ = lane.stream.send(Err(anyhow::anyhow!("{msg}")));
+                            }
+                            release_unconsumed_demand(pool.as_deref(), &cfg, sum.steps_unconsumed);
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -217,6 +448,7 @@ pub struct Coordinator {
     metrics: Arc<Mutex<Metrics>>,
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    scheduler: Option<JoinHandle<()>>,
     /// Shared offline-phase pool (Some when `offline_prefill` was set).
     pool: Option<Arc<TriplePool>>,
     refill: Option<JoinHandle<()>>,
@@ -248,11 +480,12 @@ impl Coordinator {
             // session-scoped fixed-operand bundles plus per-step value
             // triples (or the plain per-step profile with correlations
             // off), sized for the expected absorbs per request.
-            if config.decode_prefill_steps > 0 && config.cfg.kind == crate::model::ModelKind::Gpt2 {
-                for (shape, count) in crate::protocols::layer::decode_pool_shapes(
+            if config.decode_prefill_steps > 0 && config.cfg.kind == ModelKind::Gpt2 {
+                for (shape, count) in crate::protocols::layer::decode_pool_shapes_batched(
                     &config.cfg,
                     config.decode_correlations,
                     config.decode_prefill_steps as u64,
+                    config.decode_prefill_sessions as u64,
                 ) {
                     pool.register_demand(shape, count);
                 }
@@ -384,10 +617,42 @@ impl Coordinator {
             }));
         }
 
-        // Batcher thread.
+        // Decode scheduler (Centaur decoder models with round batching):
+        // generate requests bypass the batcher's linger window and join a
+        // continuously-batched DecodeBatch, sharing each step's flights
+        // across sessions. Other configurations keep the legacy
+        // one-session-per-worker generate path.
+        let scheduler_enabled = config.framework == FrameworkKind::Centaur
+            && config.cfg.kind == ModelKind::Gpt2
+            && config.round_batching;
+        let (gen_tx, gen_rx) = mpsc::channel::<Request>();
+        let scheduler = if scheduler_enabled {
+            let cfg = config.clone();
+            let sched_pool = pool.clone();
+            let m = Arc::clone(&metrics);
+            Some(std::thread::spawn(move || decode_scheduler(cfg, sched_pool, m, gen_rx)))
+        } else {
+            None
+        };
+
+        // Batcher thread. With the scheduler up, generate requests take
+        // the side route to it; inference requests batch as before. The
+        // batcher owns `gen_tx`, so its exit (submit channel closed)
+        // disconnects the scheduler, which drains its batch and exits.
         let bconf = BatcherConfig { max_batch: config.max_batch, linger: config.linger };
         let batcher = std::thread::spawn(move || {
-            batcher::run(submit_rx, work_tx, bconf);
+            if scheduler_enabled {
+                batcher::run_routed(
+                    submit_rx,
+                    work_tx,
+                    gen_tx,
+                    |r| matches!(r, Request::Generate { .. }),
+                    bconf,
+                );
+            } else {
+                drop(gen_tx);
+                batcher::run(submit_rx, work_tx, bconf);
+            }
         });
 
         Ok(Coordinator {
@@ -395,6 +660,7 @@ impl Coordinator {
             metrics,
             batcher: Some(batcher),
             workers,
+            scheduler,
             pool,
             refill,
             refill_stop,
@@ -465,6 +731,9 @@ impl Coordinator {
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        if let Some(sch) = self.scheduler.take() {
+            let _ = sch.join();
         }
         self.refill_stop.store(true, Ordering::Relaxed);
         if let Some(r) = self.refill.take() {
@@ -657,6 +926,69 @@ mod tests {
         assert_eq!(summary.tokens.len(), 3);
         assert!(pool.hits() > hits_before, "decode-shape triples must come from the pool");
         coord.shutdown();
+    }
+
+    #[test]
+    fn concurrent_generates_share_batched_decode_steps() {
+        // Three streams admitted into one DecodeBatch: every request
+        // completes with its full continuation, and the batch counters
+        // show shared steps (≤ the 12 a sequential run would take).
+        let mut sc = tiny_gpt_config();
+        sc.max_batch = 4;
+        let coord = Coordinator::start(sc).unwrap();
+        let rxs: Vec<_> = (0..3).map(|i| coord.submit_generate(vec![7, 11 + i as u32], 4)).collect();
+        let mut finished = 0;
+        for rx in rxs {
+            let mut tokens = Vec::new();
+            for ev in rx.iter() {
+                match ev.unwrap() {
+                    StreamEvent::Token { index, token, step_bytes, step_rounds } => {
+                        assert_eq!(index, tokens.len(), "tokens must stream in order");
+                        assert!(step_bytes > 0 && step_rounds > 0);
+                        tokens.push(token);
+                    }
+                    StreamEvent::Done(s) => {
+                        assert_eq!(s.tokens, tokens);
+                        assert_eq!(tokens.len(), 4);
+                        assert!(s.decode_rounds > 0);
+                        finished += 1;
+                        break;
+                    }
+                }
+            }
+        }
+        assert_eq!(finished, 3);
+        let snap = coord.shutdown();
+        assert_eq!(snap.generations, 3);
+        assert_eq!(snap.tokens_generated, 12);
+        assert_eq!(snap.batch_tokens, 12);
+        // 12 tokens over ≥ 4 shared steps (admission timing decides how
+        // many actually ride together; never more than one step/token).
+        assert!(
+            (4..=12).contains(&snap.batched_decode_steps),
+            "batched steps {}",
+            snap.batched_decode_steps
+        );
+        assert!(snap.summary().contains("batch_steps"));
+    }
+
+    #[test]
+    fn dropped_stream_evicts_session_and_frees_the_batch() {
+        // A client that walks away mid-generation must not wedge the
+        // scheduler or leak phantom pool demand: the next request still
+        // completes over the same batch.
+        let mut sc = tiny_gpt_config();
+        sc.offline_prefill = true;
+        sc.pool_depth = 1;
+        sc.decode_prefill_steps = 6;
+        let coord = Coordinator::start(sc).unwrap();
+        drop(coord.submit_generate(vec![7, 11, 13], 3));
+        let s = coord.generate_blocking(vec![7, 11, 13], 3).unwrap();
+        assert_eq!(s.tokens.len(), 3);
+        let snap = coord.shutdown();
+        // Both sessions finalize through the scheduler's metrics path.
+        assert_eq!(snap.generations, 2);
+        assert!(snap.tokens_generated >= 3);
     }
 
     #[test]

@@ -25,7 +25,7 @@
 use crate::data::greedy_regular_token;
 use crate::model::ModelKind;
 use crate::net::CostLedger;
-use crate::protocols::layer::{self, LayerKvCache};
+use crate::protocols::layer::{self, LayerKvCache, StepLane};
 use crate::protocols::{adaptation, embedding};
 use crate::tensor::FloatTensor;
 use crate::Result;
@@ -311,5 +311,496 @@ impl<'e> DecoderSession<'e> {
     /// Setup + prefill + decode merged.
     pub fn total_cost(&self) -> CostLedger {
         merged_phases(&self.setup, &self.prefill, &self.decode)
+    }
+}
+
+/// One session's state inside a [`DecodeBatch`]: private KV caches, the
+/// token stream, and the per-phase cost attribution of a solo
+/// [`DecoderSession`] — plus the continuous-batching lifecycle (step
+/// budget, optional EOS, done flag).
+pub struct BatchSession {
+    id: usize,
+    kv: Vec<LayerKvCache>,
+    pos: usize,
+    prefix: String,
+    tokens: Vec<u32>,
+    steps_left: usize,
+    eos: Option<u32>,
+    done: bool,
+    setup: CostLedger,
+    prefill_bytes: u64,
+    prefill_rounds: u64,
+    decode_bytes: u64,
+    decode_rounds: u64,
+    decode_steps: u64,
+    last_step_bytes: u64,
+    last_step_rounds: u64,
+    last_logits: FloatTensor,
+}
+
+impl BatchSession {
+    /// Stable session id within the batch (admission order, 0-based).
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Continuation tokens emitted so far (prompt excluded).
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    /// Tokens absorbed so far (prompt + generated).
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Next-token logits `(1, vocab)` for the last absorbed position.
+    pub fn logits(&self) -> &FloatTensor {
+        &self.last_logits
+    }
+
+    /// Whether the session has finished (step budget, EOS, or context
+    /// exhaustion) and only awaits [`DecodeBatch::remove`].
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// One-time session-correlation setup cost (cf.
+    /// [`DecoderSession::setup_cost`]).
+    pub fn setup_cost(&self) -> &CostLedger {
+        &self.setup
+    }
+
+    /// Lane-attributed online bytes of the cold-prefill phase.
+    pub fn prefill_bytes(&self) -> u64 {
+        self.prefill_bytes
+    }
+
+    /// Wire rounds this session waited through during prefill.
+    pub fn prefill_rounds(&self) -> u64 {
+        self.prefill_rounds
+    }
+
+    /// Lane-attributed online bytes of the warm-decode phase.
+    pub fn decode_bytes(&self) -> u64 {
+        self.decode_bytes
+    }
+
+    /// Wire rounds this session waited through during warm decode (the
+    /// latency it experienced — shared flights count once per step, not
+    /// once per lane).
+    pub fn decode_rounds(&self) -> u64 {
+        self.decode_rounds
+    }
+
+    /// Warm-decode absorbs so far.
+    pub fn decode_steps(&self) -> u64 {
+        self.decode_steps
+    }
+
+    /// Lane-attributed bytes of the most recent absorb.
+    pub fn last_step_bytes(&self) -> u64 {
+        self.last_step_bytes
+    }
+
+    /// Whole-step wire rounds of the most recent absorb.
+    pub fn last_step_rounds(&self) -> u64 {
+        self.last_step_rounds
+    }
+}
+
+/// Everything a scheduler needs to report a finished (or early-evicted)
+/// session, harvested by [`DecodeBatch::remove`].
+pub struct SessionSummary {
+    /// Continuation tokens emitted (prompt excluded).
+    pub tokens: Vec<u32>,
+    /// One-time correlation-setup bytes.
+    pub setup_bytes: u64,
+    /// Cold-prefill online bytes (lane-attributed).
+    pub prefill_bytes: u64,
+    /// Warm-decode online bytes (lane-attributed).
+    pub decode_bytes: u64,
+    /// Total wire rounds the session waited through (setup + prefill +
+    /// decode).
+    pub rounds: u64,
+    /// Warm-decode wire rounds.
+    pub decode_rounds: u64,
+    /// Generate steps the session never consumed (early eviction) — the
+    /// scheduler releases the matching pool demand.
+    pub steps_unconsumed: u64,
+}
+
+/// One token emission from a batched decode step.
+pub struct StepEmission {
+    /// Session id the token belongs to.
+    pub session: usize,
+    /// 0-based index of the token within the session's continuation.
+    pub index: usize,
+    /// The emitted token.
+    pub token: u32,
+    /// Online bytes attributed to this session's lane this step.
+    pub step_bytes: u64,
+    /// Whole-step wire rounds (the latency every lane shares).
+    pub step_rounds: u64,
+    /// Whether this emission finished the session (step budget, EOS, or
+    /// context exhaustion).
+    pub done: bool,
+}
+
+/// Continuous batching over one engine (DESIGN.md §Continuous batching):
+/// B concurrent generate sessions advance one token per [`DecodeBatch::step`],
+/// all riding the same flight schedule — rounds amortize to (solo
+/// rounds)/B per token while each session keeps its own KV caches,
+/// fixed-operand correlations, position, and P1 view labels.
+///
+/// Lifecycle: [`DecodeBatch::admit`] at any step boundary (the new
+/// session's prompt is prefilled solo, then it joins the shared steps),
+/// [`DecodeBatch::step`] advances every live session, sessions finish on
+/// their step budget / EOS / context exhaustion (or early via
+/// [`DecodeBatch::remove`]), and [`DecodeBatch::remove`] harvests the
+/// [`SessionSummary`].
+///
+/// With one session the batch is transfer-, ledger-, PRG-, and
+/// view-identical to a [`DecoderSession`] driven by `step_greedy` — the
+/// parity tests in `rust/tests/batched_decode.rs` pin that bit-exactly.
+/// With B > 1 the dealer's randomness interleaves across lanes, so shares
+/// differ from a solo run while each session's *token stream* still
+/// matches its solo run (low-bit truncation noise does not move the
+/// greedy argmax; asserted empirically under the test seeds).
+pub struct DecodeBatch<'e> {
+    eng: &'e mut CentaurEngine,
+    sessions: Vec<BatchSession>,
+    next_id: usize,
+    batch_decode_steps: u64,
+    batch_wire_rounds: u64,
+    batch_tokens: u64,
+    max_concurrent: usize,
+}
+
+impl<'e> DecodeBatch<'e> {
+    /// Wrap an engine for continuous batching. Requires a decoder model
+    /// and the batched round schedule
+    /// ([`super::EngineOptions::round_batching`], the default) — the
+    /// shared flights *are* the round batching, generalized over lanes.
+    pub fn new(eng: &'e mut CentaurEngine) -> Result<Self> {
+        anyhow::ensure!(eng.cfg.kind == ModelKind::Gpt2, "incremental decode needs a decoder model");
+        anyhow::ensure!(
+            eng.round_batching,
+            "continuous batching needs the batched decode schedule (round_batching)"
+        );
+        Ok(DecodeBatch {
+            eng,
+            sessions: Vec::new(),
+            next_id: 0,
+            batch_decode_steps: 0,
+            batch_wire_rounds: 0,
+            batch_tokens: 0,
+            max_concurrent: 0,
+        })
+    }
+
+    /// Admit a session at a step boundary: deal its correlations, prefill
+    /// its prompt (solo lanes — the cold phase does not ride the running
+    /// batch's flights), and schedule up to `steps` generated tokens,
+    /// stopping early when `eos` is emitted. Returns the session id.
+    ///
+    /// Mirrors [`DecoderSession::new`] exactly; the engine's P1 view
+    /// ledger is cleared only when the batch is empty, so live sessions'
+    /// censuses are never dropped.
+    pub fn admit(&mut self, prompt: &[u32], steps: usize, eos: Option<u32>) -> Result<usize> {
+        {
+            let eng = &mut *self.eng;
+            anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+            anyhow::ensure!(
+                prompt.len() + steps <= eng.cfg.n_ctx,
+                "prompt + generate steps must fit the context window"
+            );
+            eng.mpc.net.reset();
+            let mut kv = Vec::with_capacity(eng.cfg.layers);
+            for _ in 0..eng.cfg.layers {
+                if eng.decode_correlations {
+                    let corr = layer::deal_kv_correlations(
+                        &mut eng.mpc,
+                        &eng.cfg,
+                        &eng.pi1_sh,
+                        &eng.pi1_t_sh,
+                    )?;
+                    kv.push(LayerKvCache::with_correlations(eng.cfg.n_ctx, eng.cfg.d, corr));
+                } else {
+                    kv.push(LayerKvCache::new(eng.cfg.n_ctx, eng.cfg.d));
+                }
+            }
+            let setup = eng.mpc.net.ledger.clone();
+            if self.sessions.is_empty() {
+                eng.views.clear();
+            }
+            let id = self.next_id;
+            self.next_id += 1;
+            self.sessions.push(BatchSession {
+                id,
+                kv,
+                pos: 0,
+                prefix: if id == 0 { String::new() } else { format!("s{id} ") },
+                tokens: Vec::new(),
+                steps_left: steps,
+                eos,
+                done: steps == 0,
+                setup,
+                prefill_bytes: 0,
+                prefill_rounds: 0,
+                decode_bytes: 0,
+                decode_rounds: 0,
+                decode_steps: 0,
+                last_step_bytes: 0,
+                last_step_rounds: 0,
+                last_logits: FloatTensor::zeros(1, 1),
+            });
+        }
+        let idx = self.sessions.len() - 1;
+        for &t in prompt {
+            if let Err(e) = self.absorb_lanes(&[(idx, t)], false) {
+                self.sessions.pop();
+                return Err(e);
+            }
+        }
+        Ok(self.sessions[idx].id)
+    }
+
+    /// Advance every live session by one greedy token in ONE shared
+    /// flight schedule, returning the emissions in session order. An
+    /// empty return means the batch is idle (admit or remove sessions).
+    pub fn step(&mut self) -> Result<Vec<StepEmission>> {
+        let work: Vec<(usize, u32)> = self
+            .sessions
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.done)
+            .map(|(i, s)| (i, greedy_regular_token(s.last_logits.row(0))))
+            .collect();
+        if work.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.absorb_lanes(&work, true)?;
+        self.max_concurrent = self.max_concurrent.max(work.len());
+        self.batch_decode_steps += 1;
+        self.batch_wire_rounds += self.sessions[work[0].0].last_step_rounds;
+        self.batch_tokens += work.len() as u64;
+        let n_ctx = self.eng.cfg.n_ctx;
+        let mut out = Vec::with_capacity(work.len());
+        for &(i, tok) in &work {
+            let s = &mut self.sessions[i];
+            s.tokens.push(tok);
+            s.steps_left -= 1;
+            if s.steps_left == 0 || s.eos == Some(tok) || s.pos >= n_ctx {
+                s.done = true;
+            }
+            out.push(StepEmission {
+                session: s.id,
+                index: s.tokens.len() - 1,
+                token: tok,
+                step_bytes: s.last_step_bytes,
+                step_rounds: s.last_step_rounds,
+                done: s.done,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Remove a session (finished or early-evicted) and harvest its
+    /// summary. Returns `None` for an unknown id.
+    pub fn remove(&mut self, session_id: usize) -> Option<SessionSummary> {
+        let idx = self.sessions.iter().position(|s| s.id == session_id)?;
+        let s = self.sessions.remove(idx);
+        Some(SessionSummary {
+            setup_bytes: s.setup.bytes_total(),
+            prefill_bytes: s.prefill_bytes,
+            decode_bytes: s.decode_bytes,
+            rounds: s.setup.rounds_total() + s.prefill_rounds + s.decode_rounds,
+            decode_rounds: s.decode_rounds,
+            steps_unconsumed: s.steps_left as u64,
+            tokens: s.tokens,
+        })
+    }
+
+    /// The session with this id, if still in the batch.
+    pub fn session(&self, session_id: usize) -> Option<&BatchSession> {
+        self.sessions.iter().find(|s| s.id == session_id)
+    }
+
+    /// Ids of every session currently in the batch (live and finished).
+    pub fn session_ids(&self) -> Vec<usize> {
+        self.sessions.iter().map(|s| s.id).collect()
+    }
+
+    /// Sessions still generating (admitted, not yet done).
+    pub fn active(&self) -> usize {
+        self.sessions.iter().filter(|s| !s.done).count()
+    }
+
+    /// Sessions in the batch, including finished ones awaiting removal.
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Whether the batch holds no sessions at all.
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Batched decode steps executed so far.
+    pub fn batch_decode_steps(&self) -> u64 {
+        self.batch_decode_steps
+    }
+
+    /// Wire rounds spent across all batched decode steps (counted once
+    /// per step — the whole batch shares each flight).
+    pub fn batch_wire_rounds(&self) -> u64 {
+        self.batch_wire_rounds
+    }
+
+    /// Tokens emitted through batched decode steps.
+    pub fn batch_tokens(&self) -> u64 {
+        self.batch_tokens
+    }
+
+    /// Amortized wire rounds per generated token — the continuous-batching
+    /// headline ((solo rounds)/B when B lanes ride every step).
+    pub fn amortized_rounds_per_token(&self) -> f64 {
+        if self.batch_tokens == 0 {
+            0.0
+        } else {
+            self.batch_wire_rounds as f64 / self.batch_tokens as f64
+        }
+    }
+
+    /// Largest number of lanes that shared one decode step.
+    pub fn max_concurrent(&self) -> usize {
+        self.max_concurrent
+    }
+
+    /// One shared single-token forward for `work` = ascending
+    /// `(session index, token)` lanes. Prefill calls pass a single lane;
+    /// decode steps pass every live session — both run the exact same
+    /// path, which is what makes a B=1 batch bit-identical to a solo
+    /// [`DecoderSession`].
+    fn absorb_lanes(&mut self, work: &[(usize, u32)], decode_phase: bool) -> Result<()> {
+        anyhow::ensure!(!work.is_empty(), "empty absorb");
+        let eng = &mut *self.eng;
+        for &(idx, token) in work {
+            let s = &self.sessions[idx];
+            anyhow::ensure!(s.pos < eng.cfg.n_ctx, "context window exhausted");
+            anyhow::ensure!((token as usize) < eng.cfg.vocab, "token {token} out of vocab");
+        }
+        eng.mpc.net.reset();
+        let mut lane_bytes = vec![0u64; work.len()];
+        let logits: Vec<FloatTensor> = {
+            let mut ctx = layer::ProtoCtx {
+                mpc: &mut eng.mpc,
+                backend: eng.backend.as_mut(),
+                views: &mut eng.views,
+                fast_sim: eng.fast_sim,
+                round_batching: eng.round_batching,
+            };
+            // Embedding: lane 0 pays the input-share + Π_PPLN rounds, the
+            // other lanes' independent payloads ride the same flights.
+            let mut x_pis = Vec::with_capacity(work.len());
+            for (li, &(idx, token)) in work.iter().enumerate() {
+                let s = &self.sessions[idx];
+                let b0 = ctx.mpc.net.ledger.bytes_total();
+                x_pis.push(embedding::pp_embedding_at_lane(
+                    &mut ctx,
+                    &eng.pm,
+                    token,
+                    s.pos,
+                    li == 0,
+                    &s.prefix,
+                )?);
+                lane_bytes[li] += ctx.mpc.net.ledger.bytes_total() - b0;
+            }
+            // Build the protocol lanes: each borrows its session's KV
+            // caches and census prefix, disjoint across sessions.
+            let mut lanes: Vec<StepLane> = Vec::with_capacity(work.len());
+            {
+                let mut x_it = x_pis.into_iter();
+                let mut wi = 0;
+                for (i, s) in self.sessions.iter_mut().enumerate() {
+                    if wi < work.len() && work[wi].0 == i {
+                        wi += 1;
+                        lanes.push(StepLane {
+                            x_pi: x_it.next().expect("one x per lane"),
+                            kv: &mut s.kv,
+                            pos: s.pos,
+                            prefix: &s.prefix,
+                            bytes: 0,
+                        });
+                    }
+                }
+            }
+            anyhow::ensure!(lanes.len() == work.len(), "lane work list must be ascending");
+            let last = eng.pm.layers.len() - 1;
+            for (i, pl) in eng.pm.layers[..last].iter().enumerate() {
+                layer::transformer_layer_step_batch(
+                    &mut ctx,
+                    &eng.cfg,
+                    pl,
+                    &eng.pi1_sh,
+                    &eng.pi1_t_sh,
+                    &mut lanes,
+                    i,
+                    None,
+                )?;
+            }
+            let h_pis = layer::transformer_layer_step_batch(
+                &mut ctx,
+                &eng.cfg,
+                &eng.pm.layers[last],
+                &eng.pi1_sh,
+                &eng.pi1_t_sh,
+                &mut lanes,
+                last,
+                Some((
+                    eng.pm.final_ln_g.as_deref().expect("gpt weights"),
+                    eng.pm.final_ln_b.as_deref().expect("gpt weights"),
+                )),
+            )?
+            .expect("final tail returns the final-LN shares");
+            // Communication-free LM head per lane, then the logit
+            // returns: lane 0 pays the single Adaptation round, every
+            // lane's payload pair ships in that flight.
+            let mut logits = Vec::with_capacity(work.len());
+            for (li, h_pi) in h_pis.iter().enumerate() {
+                let b0 = ctx.mpc.net.ledger.bytes_total();
+                let logits_sh = adaptation::pp_lm_head_gpt2(&mut ctx, &eng.pm, h_pi)?;
+                let out = if li == 0 {
+                    adaptation::return_to_client(ctx.mpc, &logits_sh)?
+                } else {
+                    adaptation::return_to_client_unrounded(ctx.mpc, &logits_sh)?
+                };
+                lane_bytes[li] += ctx.mpc.net.ledger.bytes_total() - b0;
+                logits.push(out);
+            }
+            for (li, lane) in lanes.iter().enumerate() {
+                lane_bytes[li] += lane.bytes;
+            }
+            logits
+        };
+        let step = eng.mpc.net.ledger.clone();
+        let step_rounds = step.rounds_total();
+        for ((&(idx, _), bytes), out) in work.iter().zip(&lane_bytes).zip(logits) {
+            let s = &mut self.sessions[idx];
+            if decode_phase {
+                s.decode_bytes += bytes;
+                s.decode_rounds += step_rounds;
+                s.decode_steps += 1;
+            } else {
+                s.prefill_bytes += bytes;
+                s.prefill_rounds += step_rounds;
+            }
+            s.last_step_bytes = *bytes;
+            s.last_step_rounds = step_rounds;
+            s.last_logits = out;
+            s.pos += 1;
+        }
+        Ok(())
     }
 }

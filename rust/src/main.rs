@@ -127,7 +127,22 @@ fn cmd_infer(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args.opt_or("artifacts", &artifacts_dir()).to_string();
     let tag = args.opt_or("weights", "bert-tiny-qnli").to_string();
-    let (cfg, weights) = ModelWeights::load_tag(&dir, &tag)?;
+    // Trained artifacts when present; otherwise random weights for the
+    // matching architecture so serving smoke runs (CI) work untrained.
+    let (cfg, weights) = match ModelWeights::load_tag(&dir, &tag) {
+        Ok(cw) => cw,
+        Err(e) => {
+            let name = ModelConfig::ALL_NAMES
+                .iter()
+                .copied()
+                .find(|n| tag.starts_with(n))
+                .ok_or_else(|| anyhow::anyhow!("no artifacts for '{tag}' and no matching architecture: {e}"))?;
+            let cfg = ModelConfig::by_name(name).expect("ALL_NAMES entries resolve");
+            eprintln!("artifacts for '{tag}' missing — falling back to random {name} weights (smoke mode)");
+            let w = ModelWeights::random(&cfg, 7);
+            (cfg, w)
+        }
+    };
     let mut sc = ServerConfig::new(cfg.clone(), weights);
     sc.framework = FrameworkKind::by_name(args.opt_or("framework", "centaur"))
         .ok_or_else(|| anyhow::anyhow!("unknown framework"))?;
@@ -163,14 +178,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         let prompt_len = 4usize.min(sc.cfg.n_ctx.saturating_sub(gen_steps)).max(1);
         anyhow::ensure!(prompt_len + gen_steps <= sc.cfg.n_ctx, "--gen-steps exceeds n_ctx");
-        // Provision decode-shape triples for every absorb of a request.
+        // Provision decode-shape triples for every absorb of a request,
+        // scaled to the sessions the decode scheduler can batch at once.
         sc.decode_prefill_steps = prompt_len + gen_steps;
+        sc.decode_prefill_sessions = n_req.min(sc.max_batch).max(1);
         println!(
-            "serving {} generation requests ({} steps each) through {} ({} workers, {})",
+            "serving {} generation requests ({} steps each) through {} (batch<={}, {})",
             n_req,
             gen_steps,
             sc.framework.name(),
-            sc.workers,
+            sc.max_batch,
             sc.profile.name
         );
         let coord = Coordinator::start(sc)?;

@@ -443,6 +443,18 @@ impl TriplePool {
         sq.demand += count;
     }
 
+    /// Release previously registered demand on session teardown: a stream
+    /// that ends early (client dropped, EOS before the step budget) gives
+    /// back the per-step demand it will never consume, so the refill
+    /// thread stops overstocking dead shapes. Saturating — releasing more
+    /// than was registered clamps the shape's demand at zero rather than
+    /// underflowing.
+    pub fn release_demand(&self, shape: TripleShape, count: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let sq = inner.shapes.entry(shape).or_default();
+        sq.demand = sq.demand.saturating_sub(count);
+    }
+
     /// Generate one entry for the most depleted known shape (outside the
     /// lock). Returns `false` when every shape is at target — the refill
     /// thread sleeps on that.
@@ -746,6 +758,28 @@ mod tests {
         assert_eq!(pool.fill_to_target(), 6);
         assert!(matches!(pool.take(TripleShape::matmul(32, 1, 64)), Some(PoolItem::Mat(_))));
         assert_eq!((pool.hits(), pool.misses()), (1, 0));
+    }
+
+    #[test]
+    fn release_demand_retires_abandoned_session_stock() {
+        // A generate stream that ends early must hand back the per-step
+        // demand it registered, or the refill thread keeps overstocking a
+        // shape nobody will take again.
+        let pool = TriplePool::new(33, 2);
+        let shape = TripleShape::matmul(1, 32, 16);
+        pool.register_demand(shape, 5);
+        assert_eq!(pool.fill_to_target(), 10);
+        // Session consumed 2 steps, then the client dropped: release 3.
+        pool.release_demand(shape, 3);
+        while pool.take(shape).is_some() {}
+        assert_eq!(pool.fill_to_target(), 4, "target follows the surviving demand");
+        // Releasing more than was ever registered clamps at zero.
+        pool.release_demand(shape, 100);
+        while pool.take(shape).is_some() {}
+        assert_eq!(pool.fill_to_target(), 0, "dead shape must not be restocked");
+        // Releasing a never-registered shape is a harmless no-op.
+        pool.release_demand(TripleShape::elem(2, 2), 7);
+        assert_eq!(pool.fill_to_target(), 0);
     }
 
     #[test]

@@ -160,6 +160,18 @@ impl Mpc {
         Share { s0, s1 }
     }
 
+    /// Deferred-round input sharing for the session-batched decode
+    /// schedule: identical share generation and transfers to
+    /// [`Mpc::input_share`], no round charge — a batch-mate's charged
+    /// input flight carries this lane's two messages (independent
+    /// payloads from the same client round trip).
+    pub fn input_share_unrounded(&mut self, x: &RingTensor, class: OpClass) -> Share {
+        let sh = self.share_local(x);
+        let s0 = self.net.transfer(PartyId::P2, PartyId::P0, &sh.s0, class);
+        let s1 = self.net.transfer(PartyId::P2, PartyId::P1, &sh.s1, class);
+        Share { s0, s1 }
+    }
+
     /// Open a sharing to both parties (1 round, each party sends its share
     /// to the other: `2·8·|x|` bytes).
     pub fn open(&mut self, s: &Share, class: OpClass) -> RingTensor {

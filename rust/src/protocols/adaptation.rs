@@ -58,9 +58,18 @@ pub fn pp_lm_head_gpt2(ctx: &mut ProtoCtx, pm: &PermutedModel, h_pi: &Share) -> 
 /// Return the inference result to the client: both servers send their
 /// logit shares to P2 (1 round). Returns the reconstructed plaintext.
 pub fn return_to_client(mpc: &mut Mpc, logits: &Share) -> Result<crate::tensor::FloatTensor> {
+    let out = return_to_client_unrounded(mpc, logits)?;
+    mpc.net.round(OpClass::Adaptation, 1);
+    Ok(out)
+}
+
+/// Deferred-round logit return for the session-batched decode schedule:
+/// the same two server→client transfers as [`return_to_client`], no round
+/// charge — every lane's logits ship in the charging lane's single
+/// Adaptation flight (P2 receives B independent payload pairs at once).
+pub fn return_to_client_unrounded(mpc: &mut Mpc, logits: &Share) -> Result<crate::tensor::FloatTensor> {
     let s0 = mpc.net.transfer(PartyId::P0, PartyId::P2, &logits.s0, OpClass::Adaptation);
     let s1 = mpc.net.transfer(PartyId::P1, PartyId::P2, &logits.s1, OpClass::Adaptation);
-    mpc.net.round(OpClass::Adaptation, 1);
     let recon = crate::ring::add(&s0, &s1);
     Ok(crate::fixed::decode_tensor(&recon))
 }

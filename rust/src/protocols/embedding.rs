@@ -11,7 +11,7 @@ use crate::tensor::RingTensor;
 use crate::Result;
 
 use super::layer::ProtoCtx;
-use super::nonlin::pp_layernorm;
+use super::nonlin::{pp_layernorm, pp_layernorm_unrounded};
 
 /// Client-side: one-hot encode a token sequence in fixed point `(n, vocab)`.
 pub fn one_hot_fx(tokens: &[u32], vocab: usize) -> RingTensor {
@@ -61,9 +61,30 @@ pub fn pp_embedding(ctx: &mut ProtoCtx, pm: &PermutedModel, tokens: &[u32]) -> R
 /// token's sequence position `pos`. Charged to the Embedding class like the
 /// full lookup (input share `2·8·vocab` bytes + a `(1, d)` `Π_PPLN`).
 pub fn pp_embedding_at(ctx: &mut ProtoCtx, pm: &PermutedModel, token: u32, pos: usize) -> Result<Share> {
+    pp_embedding_at_lane(ctx, pm, token, pos, true, "")
+}
+
+/// Lane-aware single-token embedding for the session-batched decode step:
+/// the same transfers and P1 view as [`pp_embedding_at`] (labels carry the
+/// lane's `prefix`), but only the charging lane (`charge_rounds = true`,
+/// exactly one per batch) places the Embedding rounds — the other lanes'
+/// input shares and `Π_PPLN` halves ride the charging lane's flights, so
+/// the whole batch pays the solo 3-round embedding budget once.
+pub fn pp_embedding_at_lane(
+    ctx: &mut ProtoCtx,
+    pm: &PermutedModel,
+    token: u32,
+    pos: usize,
+    charge_rounds: bool,
+    prefix: &str,
+) -> Result<Share> {
     assert!(pos < pm.cfg.n_ctx, "position {pos} outside n_ctx {}", pm.cfg.n_ctx);
     let onehot = one_hot_fx(&[token], pm.cfg.vocab);
-    let x_sh = ctx.mpc.input_share(&onehot, OpClass::Embedding);
+    let x_sh = if charge_rounds {
+        ctx.mpc.input_share(&onehot, OpClass::Embedding)
+    } else {
+        ctx.mpc.input_share_unrounded(&onehot, OpClass::Embedding)
+    };
     let mut x_m = ctx.scalmul_rhs(&x_sh, &pm.emb_word, OpClass::Embedding);
     // P0 adds the permuted positional row for this position to its share.
     let pos_row = {
@@ -72,16 +93,30 @@ pub fn pp_embedding_at(ctx: &mut ProtoCtx, pm: &PermutedModel, token: u32, pos: 
         p
     };
     x_m = ctx.mpc.add_plain(&x_m, &pos_row);
-    pp_layernorm(
-        ctx.mpc,
-        ctx.backend,
-        ctx.views,
-        &x_m,
-        &pm.emb_ln_g,
-        &pm.emb_ln_b,
-        OpClass::Embedding,
-        &format!("X_M pi (embedding) pos{pos}"),
-    )
+    let label = format!("{prefix}X_M pi (embedding) pos{pos}");
+    if charge_rounds {
+        pp_layernorm(
+            ctx.mpc,
+            ctx.backend,
+            ctx.views,
+            &x_m,
+            &pm.emb_ln_g,
+            &pm.emb_ln_b,
+            OpClass::Embedding,
+            &label,
+        )
+    } else {
+        pp_layernorm_unrounded(
+            ctx.mpc,
+            ctx.backend,
+            ctx.views,
+            &x_m,
+            &pm.emb_ln_g,
+            &pm.emb_ln_b,
+            OpClass::Embedding,
+            &label,
+        )
+    }
 }
 
 /// Plaintext reference of the embedding output (unpermuted), for tests.

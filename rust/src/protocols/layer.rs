@@ -28,6 +28,7 @@ use crate::Result;
 
 use super::nonlin::{
     pp_gelu, pp_gelu_unrounded, pp_layernorm, pp_layernorm_unrounded, pp_softmax,
+    pp_softmax_unrounded,
 };
 use super::ppp;
 
@@ -391,6 +392,255 @@ pub fn decode_pool_shapes(cfg: &ModelConfig, correlations: bool, steps: u64) -> 
         (TripleShape::fixed_scores(h, n, d, n), l),
         (TripleShape::matmul(1, n, dh), l * h as u64 * steps),
     ]
+}
+
+/// Batch-aware pool demand: `sessions` concurrent decode sessions each
+/// deal their own correlation bundles and consume their own per-step
+/// value triples. The shape *keys* are shared — every session of the same
+/// model deals the same shapes — and the multiplicities add, so B
+/// sessions never alias one session's stock (the dealer keys the pool by
+/// shape, not by session).
+pub fn decode_pool_shapes_batched(
+    cfg: &ModelConfig,
+    correlations: bool,
+    steps: u64,
+    sessions: u64,
+) -> Vec<(TripleShape, u64)> {
+    decode_pool_shapes(cfg, correlations, steps)
+        .into_iter()
+        .map(|(s, c)| (s, c * sessions.max(1)))
+        .collect()
+}
+
+/// One session's slot in a session-batched decode step (the batch axis of
+/// DESIGN.md §Continuous batching). A lane is a `(session, position)`
+/// pair: it carries the session's current activation row, its private
+/// per-layer KV caches (with their fixed-operand correlations), and the
+/// sequence position the row lives at — so a future speculative decoder
+/// can put several lanes of one session at successive positions into the
+/// same batch without touching this type.
+pub struct StepLane<'a> {
+    /// The lane's current `(1, d)` activation `[xπ]`, updated in place by
+    /// each batched layer step.
+    pub x_pi: Share,
+    /// The lane's per-layer KV caches (one entry per model layer) —
+    /// per-session state, never shared across lanes.
+    pub kv: &'a mut Vec<LayerKvCache>,
+    /// The sequence position this lane's row occupies (ragged across the
+    /// batch: every lane attends over its own prefix length).
+    pub pos: usize,
+    /// View-label prefix identifying the session in P1's census (`""` for
+    /// the first session, `"s{id} "` after — keeps the B=1 census
+    /// bit-identical to the solo path).
+    pub prefix: &'a str,
+    /// Online bytes attributed to this lane so far this step (every
+    /// byte-moving op in the step is per-lane, so the lanes' sums equal
+    /// the whole-step ledger).
+    pub bytes: u64,
+}
+
+/// Session-batched decode step: one transformer layer advanced for B
+/// lanes at once, sharing the solo step's round schedule (DESIGN.md
+/// §Continuous batching). The lanes' payloads are mutually independent —
+/// each is formed from that session's own shares, caches, and
+/// correlations — so where the solo schedule ships one session's opening
+/// in a flight, the batched schedule ships B sessions' openings in the
+/// *same* flight: lane 0 runs the charged protocol variants, lanes 1+ run
+/// the deferred-round twins, and every dependency chain aligns
+/// flight-for-flight. Rounds per token amortize to (solo rounds)/B;
+/// bytes, transfers, per-session P1 views, and share algebra are exactly
+/// B solo steps' worth.
+///
+/// With one lane this is transfer-, ledger-, and PRG-identical to
+/// [`transformer_layer_step`] under the batched schedule (the parity
+/// tests in `rust/tests/batched_decode.rs` pin that bit-exactly).
+///
+/// `final_ln` fuses the final LayerNorm into the last layer's reshare
+/// flight (see [`transformer_layer_step_final`]) and returns every lane's
+/// `[Hπ]`. Requires [`ProtoCtx::round_batching`].
+#[allow(clippy::too_many_arguments)]
+pub fn transformer_layer_step_batch(
+    ctx: &mut ProtoCtx,
+    cfg: &ModelConfig,
+    pl: &PermLayer,
+    pi1_sh: &Share,
+    pi1_t_sh: &Share,
+    lanes: &mut [StepLane],
+    layer_idx: usize,
+    final_ln: Option<(&[f32], &[f32])>,
+) -> Result<Option<Vec<Share>>> {
+    anyhow::ensure!(ctx.round_batching, "session batching needs the batched decode schedule");
+    anyhow::ensure!(!lanes.is_empty(), "empty decode batch");
+    let dh = cfg.dh();
+    let scale = fixed::encode(1.0 / (dh as f64).sqrt());
+
+    // 1. q/k/v rows per lane (Π_ScalMul + bias, 0 comm).
+    let mut qkv = Vec::with_capacity(lanes.len());
+    for lane in lanes.iter() {
+        let q = {
+            let s = ctx.scalmul_nt(&lane.x_pi, &pl.wq, OpClass::Linear);
+            ctx.mpc.add_plain_row(&s, &pl.bq)
+        };
+        let k = {
+            let s = ctx.scalmul_nt(&lane.x_pi, &pl.wk, OpClass::Linear);
+            ctx.mpc.add_plain_row(&s, &pl.bk)
+        };
+        let v = {
+            let s = ctx.scalmul_nt(&lane.x_pi, &pl.wv, OpClass::Linear);
+            ctx.mpc.add_plain_row(&s, &pl.bv)
+        };
+        qkv.push((q, k, v));
+    }
+
+    // 2+3. Every lane's cache append and score products share ONE Linear
+    // flight: each lane's openings are mask differences over its own
+    // session state, independent of every other lane's.
+    ctx.mpc.begin_batch();
+    let mut o1_head_sets = Vec::with_capacity(lanes.len());
+    for (lane, (q, k, v)) in lanes.iter_mut().zip(&qkv) {
+        let b0 = ctx.mpc.net.ledger.bytes_total();
+        let kvc = &mut lane.kv[layer_idx];
+        let n = kvc.capacity();
+        kvc.append(ctx, pi1_t_sh, k, v, lane.pos)?;
+        let o1_heads = if let Some(c) = kvc.corr.as_mut() {
+            ctx.matmul_fixed_grown_scores(q, &c.f_k, &mut c.scores, lane.pos, n, OpClass::Linear)?
+        } else {
+            let kt: Vec<Share> =
+                (0..cfg.h).map(|h| kvc.k.col_block(h * dh, (h + 1) * dh).transpose()).collect();
+            let qh: Vec<Share> = (0..cfg.h).map(|h| q.col_block(h * dh, (h + 1) * dh)).collect();
+            let pairs: Vec<(&Share, &Share)> = qh.iter().zip(kt.iter()).collect();
+            ctx.matmul_batch(&pairs, OpClass::Linear)
+        };
+        lane.bytes += ctx.mpc.net.ledger.bytes_total() - b0;
+        o1_head_sets.push(o1_heads);
+    }
+    ctx.mpc.flush_batch(OpClass::Linear);
+    let mut o1s = Vec::with_capacity(lanes.len());
+    for (lane, heads) in lanes.iter().zip(&o1_head_sets) {
+        let n = lane.kv[layer_idx].capacity();
+        let mut o1 = stack_rows(heads); // (h, n)
+        o1 = ctx.mpc.scale_fx(&o1, scale);
+        o1 = ctx.mpc.add_plain(&o1, &causal_mask_row_fx(cfg.h, n, lane.pos));
+        o1s.push(o1);
+    }
+
+    // 4a. Π_PPP per lane, one shared Linear flight (each lane's opening
+    // depends only on its own score results; at B=1 the flush charges the
+    // same single round the solo schedule charges inside the protocol).
+    ctx.mpc.begin_batch();
+    let mut o1_p1s = Vec::with_capacity(lanes.len());
+    for (lane, o1) in lanes.iter_mut().zip(&o1s) {
+        let b0 = ctx.mpc.net.ledger.bytes_total();
+        let kvc = &mut lane.kv[layer_idx];
+        let o1_p1 = if let Some(c) = kvc.corr.as_mut() {
+            ctx.ppp_cols_fixed(o1, &c.f_pi1, &mut c.ppp, OpClass::Linear)?
+        } else {
+            ctx.matmul(o1, pi1_sh, OpClass::Linear)
+        };
+        lane.bytes += ctx.mpc.net.ledger.bytes_total() - b0;
+        o1_p1s.push(o1_p1);
+    }
+    ctx.mpc.flush_batch(OpClass::Linear);
+
+    // 4b. Π_PPSM: lane 0 pays the two softmax rounds; the other lanes'
+    // conversions ride the same two flights (independent `(h, n)` rows,
+    // each observed by P1 under its own session label).
+    let mut o2s = Vec::with_capacity(lanes.len());
+    for (li, (lane, o1_p1)) in lanes.iter_mut().zip(&o1_p1s).enumerate() {
+        let label = format!("{}decode O1pi1 layer{layer_idx} pos{}", lane.prefix, lane.pos);
+        let b0 = ctx.mpc.net.ledger.bytes_total();
+        let o2 = if li == 0 {
+            pp_softmax(ctx.mpc, ctx.backend, ctx.views, o1_p1, &label)?
+        } else {
+            pp_softmax_unrounded(ctx.mpc, ctx.backend, ctx.views, o1_p1, &label)?
+        };
+        lane.bytes += ctx.mpc.net.ledger.bytes_total() - b0;
+        o2s.push(o2);
+    }
+
+    // 5-7. Value products + output projection + residual per lane, one
+    // coalesced Linear flight (the batched twin of the fused tail's first
+    // flush).
+    ctx.mpc.begin_batch();
+    let mut res1s = Vec::with_capacity(lanes.len());
+    for (lane, o2_p1) in lanes.iter_mut().zip(&o2s) {
+        let b0 = ctx.mpc.net.ledger.bytes_total();
+        let kvc = &lane.kv[layer_idx];
+        let o2h: Vec<Share> = (0..cfg.h).map(|h| o2_p1.row_block(h, h + 1)).collect();
+        let vth: Vec<Share> =
+            (0..cfg.h).map(|h| kvc.v_tilde.col_block(h * dh, (h + 1) * dh)).collect();
+        let pairs3: Vec<(&Share, &Share)> = o2h.iter().zip(vth.iter()).collect();
+        let o3_heads = ctx.matmul_batch(&pairs3, OpClass::Linear);
+        let o3 = Share::concat_cols(&o3_heads); // (1, d)
+        let o4_pi = {
+            let s = ctx.scalmul_nt(&o3, &pl.wo, OpClass::Linear);
+            ctx.mpc.add_plain_row(&s, &pl.bo)
+        };
+        let res1 = ctx.mpc.add(&o4_pi, &lane.x_pi);
+        lane.bytes += ctx.mpc.net.ledger.bytes_total() - b0;
+        res1s.push(res1);
+    }
+    ctx.mpc.flush_batch(OpClass::Linear);
+
+    // 8-12. P1-plaintext FFN segment per lane — all lanes' output reshares
+    // coalesce into ONE LayerNorm round (the batched twin of the fused
+    // tail's closing flight), with the optional final LN fused in.
+    let mut h_out = final_ln.map(|_| Vec::with_capacity(lanes.len()));
+    for (lane, res1) in lanes.iter_mut().zip(&res1s) {
+        let b0 = ctx.mpc.net.ledger.bytes_total();
+        let l1_pi = pp_layernorm_unrounded(
+            ctx.mpc,
+            ctx.backend,
+            ctx.views,
+            res1,
+            &pl.ln1_g,
+            &pl.ln1_b,
+            OpClass::LayerNorm,
+            &format!("{}decode O4+X pi layer{layer_idx} pos{}", lane.prefix, lane.pos),
+        )?;
+        let o5_pi2 = {
+            let s = ctx.scalmul_nt(&l1_pi, &pl.w1, OpClass::Linear);
+            ctx.mpc.add_plain_row(&s, &pl.b1)
+        };
+        let g_pi2 = pp_gelu_unrounded(
+            ctx.mpc,
+            ctx.backend,
+            ctx.views,
+            &o5_pi2,
+            &format!("{}decode O5pi2 layer{layer_idx} pos{}", lane.prefix, lane.pos),
+        )?;
+        let o6_pi = {
+            let s = ctx.scalmul_nt(&g_pi2, &pl.w2, OpClass::Linear);
+            ctx.mpc.add_plain_row(&s, &pl.b2)
+        };
+        let res2 = ctx.mpc.add(&o6_pi, &l1_pi);
+        let l2_pi = pp_layernorm_unrounded(
+            ctx.mpc,
+            ctx.backend,
+            ctx.views,
+            &res2,
+            &pl.ln2_g,
+            &pl.ln2_b,
+            OpClass::LayerNorm,
+            &format!("{}decode O6+L1 pi layer{layer_idx} pos{}", lane.prefix, lane.pos),
+        )?;
+        if let (Some(hs), Some((g, b))) = (h_out.as_mut(), final_ln) {
+            hs.push(pp_layernorm_unrounded(
+                ctx.mpc,
+                ctx.backend,
+                ctx.views,
+                &l2_pi,
+                g,
+                b,
+                OpClass::Adaptation,
+                &format!("{}final LN pi", lane.prefix),
+            )?);
+        }
+        lane.x_pi = l2_pi;
+        lane.bytes += ctx.mpc.net.ledger.bytes_total() - b0;
+    }
+    ctx.mpc.net.round(OpClass::LayerNorm, 1);
+    Ok(h_out)
 }
 
 /// Single-token variant of [`transformer_layer`] for incremental decoding:
@@ -1173,6 +1423,22 @@ mod tests {
             assert_eq!(s, ps);
             assert_eq!(*c, pc * 6);
         }
+    }
+
+    #[test]
+    fn batched_pool_shapes_scale_per_session_without_aliasing_keys() {
+        let cfg = ModelConfig::gpt2_tiny();
+        for correlations in [true, false] {
+            let solo = decode_pool_shapes(&cfg, correlations, 6);
+            let quad = decode_pool_shapes_batched(&cfg, correlations, 6, 4);
+            assert_eq!(solo.len(), quad.len(), "batching must not invent or drop shape keys");
+            for ((s, c), (qs, qc)) in solo.iter().zip(quad.iter()) {
+                assert_eq!(s, qs, "shape keys are per-model, not per-session");
+                assert_eq!(*qc, c * 4, "multiplicities add across sessions");
+            }
+        }
+        // sessions = 0 is clamped: demand for at least one session
+        assert_eq!(decode_pool_shapes_batched(&cfg, true, 6, 0), decode_pool_shapes(&cfg, true, 6));
     }
 
     #[test]

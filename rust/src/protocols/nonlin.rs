@@ -69,6 +69,23 @@ pub fn pp_softmax(
     })
 }
 
+/// Deferred-round `Π_PPSM` for the session-batched decode schedule:
+/// identical transfers and P1 view to [`pp_softmax`], no round charge —
+/// a batch-mate's charged softmax flight carries this lane's halves
+/// (the payloads are independent across sessions, so they ship in the
+/// same two flights).
+pub fn pp_softmax_unrounded(
+    mpc: &mut Mpc,
+    backend: &mut dyn Backend,
+    views: &mut Views,
+    x: &Share,
+    label: &str,
+) -> Result<Share> {
+    pp_apply(mpc, backend, views, x, OpClass::Softmax, label, PermTag::Pi1, false, |b, t| {
+        b.softmax(t)
+    })
+}
+
 /// `Π_PPGeLU` (Algorithm 2): elementwise GeLU of `[Xπ₂]` → `[GeLU(X)π₂]`.
 pub fn pp_gelu(
     mpc: &mut Mpc,

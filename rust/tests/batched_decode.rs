@@ -1,0 +1,307 @@
+//! Continuous-batching parity suite (DESIGN.md §Continuous batching).
+//!
+//! The batch axis must be *free* at B=1: a [`DecodeBatch`] holding one
+//! session runs the exact op sequence of a solo [`DecoderSession`], so
+//! tokens, ledgers, the transfer census, and P1's view census are pinned
+//! bit-identical here. At B>1 the dealer's randomness interleaves across
+//! lanes, so shares differ from a solo run while each session's *token
+//! stream* still matches the plaintext greedy rollout wherever that
+//! rollout is decisive (the same margin-gating convention as
+//! `e2e_pipeline.rs`), and wire rounds amortize to (solo rounds)/B.
+
+use centaur::data::{greedy_regular_token, NUM_SPECIAL_TOKENS};
+use centaur::engine::decoder::{DecodeBatch, DecoderSession};
+use centaur::engine::{CentaurEngine, EngineOptions};
+use centaur::model::{plaintext, ModelConfig, ModelWeights, Variant};
+use centaur::runtime::NativeBackend;
+use centaur::util::prop::check;
+
+/// Fixed-point noise on tiny-model logits is ~1e-3; 0.03 is 30x that
+/// (same bound as the solo decode parity suite).
+const DECODE_MARGIN: f32 = 0.03;
+
+fn mk_engine(cfg: &ModelConfig, w: &ModelWeights, seed: u64, census: bool) -> CentaurEngine {
+    CentaurEngine::with_backend(
+        cfg,
+        w,
+        Box::new(NativeBackend::new()),
+        EngineOptions { seed, record_views: census, record_transfers: census, ..Default::default() },
+    )
+    .unwrap()
+}
+
+/// Margin-gated plaintext greedy rollout: `(token, decisive)` per step.
+/// Comparisons against protocol paths are only meaningful on the decisive
+/// *prefix* — after the first indecisive step the greedy continuations may
+/// legitimately diverge and everything downstream is chained off that.
+fn margin_gated_rollout(
+    cfg: &ModelConfig,
+    w: &ModelWeights,
+    prompt: &[u32],
+    steps: usize,
+) -> Vec<(u32, bool)> {
+    let mut seq = prompt.to_vec();
+    let mut expected = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let mut padded = seq.clone();
+        padded.resize(cfg.n_ctx, 0);
+        let logits = plaintext::forward(cfg, w, &padded, Variant::Exact);
+        let row = logits.row(seq.len() - 1);
+        let tok = greedy_regular_token(row);
+        let (mut best, mut second) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+        for &v in row.iter().skip(NUM_SPECIAL_TOKENS) {
+            if v > best {
+                second = best;
+                best = v;
+            } else if v > second {
+                second = v;
+            }
+        }
+        expected.push((tok, best - second >= DECODE_MARGIN));
+        seq.push(tok);
+    }
+    expected
+}
+
+/// Number of leading rollout steps that are all decisive — the span over
+/// which greedy token streams are forced and may be compared exactly.
+fn decisive_prefix(expected: &[(u32, bool)]) -> usize {
+    expected.iter().position(|&(_, d)| !d).unwrap_or(expected.len())
+}
+
+/// B=1 is the identity case of the batch axis: one admitted session must
+/// be *bit*-identical to a solo [`DecoderSession`] on the same engine
+/// seed — same tokens and logits (same PRG stream), same per-phase
+/// byte/round ledgers, the same transfer log in the same order, and a
+/// record-for-record equal P1 view census including payloads.
+#[test]
+fn single_session_batch_is_bit_identical_to_decoder_session() {
+    const STEPS: usize = 3;
+    check("B=1 batch == solo session", 3, |g| {
+        let cfg = ModelConfig::gpt2_tiny();
+        let seed = 0xBA7C4 ^ (g.case as u64).wrapping_mul(7919);
+        let w = ModelWeights::random(&cfg, seed);
+        let prompt: Vec<u32> = (0..3)
+            .map(|_| (g.below(cfg.vocab - NUM_SPECIAL_TOKENS) + NUM_SPECIAL_TOKENS) as u32)
+            .collect();
+
+        // Solo reference run.
+        let mut e_solo = mk_engine(&cfg, &w, seed ^ 0x5, true);
+        let mut solo_tokens = Vec::with_capacity(STEPS);
+        let (solo_setup, solo_prefill, solo_decode, solo_logits) = {
+            let mut sess = DecoderSession::new(&mut e_solo, &prompt).unwrap();
+            for _ in 0..STEPS {
+                solo_tokens.push(sess.step_greedy().unwrap());
+            }
+            (
+                sess.setup_cost().clone(),
+                sess.prefill_cost().clone(),
+                sess.decode_cost().clone(),
+                sess.logits().clone(),
+            )
+        };
+        assert!(e_solo.leaks().is_empty());
+
+        // Batched run on an engine with the identical seed.
+        let mut e_b = mk_engine(&cfg, &w, seed ^ 0x5, true);
+        let summary = {
+            let mut batch = DecodeBatch::new(&mut e_b).unwrap();
+            let id = batch.admit(&prompt, STEPS, None).unwrap();
+            let mut b_tokens = Vec::with_capacity(STEPS);
+            loop {
+                let emissions = batch.step().unwrap();
+                if emissions.is_empty() {
+                    break;
+                }
+                for em in &emissions {
+                    assert_eq!(em.session, id);
+                    b_tokens.push(em.token);
+                }
+            }
+            assert_eq!(b_tokens, solo_tokens, "token stream must be bit-identical at B=1");
+
+            let s = batch.session(id).unwrap();
+            assert_eq!(s.logits().data(), solo_logits.data(), "final logits must be bit-identical");
+            assert_eq!(s.setup_cost().bytes_total(), solo_setup.bytes_total());
+            assert_eq!(s.setup_cost().rounds_total(), solo_setup.rounds_total());
+            assert_eq!(s.prefill_bytes(), solo_prefill.bytes_total());
+            assert_eq!(s.prefill_rounds(), solo_prefill.rounds_total());
+            assert_eq!(s.decode_bytes(), solo_decode.bytes_total());
+            assert_eq!(s.decode_rounds(), solo_decode.rounds_total());
+            assert_eq!(s.decode_steps(), STEPS as u64);
+
+            assert_eq!(batch.batch_decode_steps(), STEPS as u64);
+            assert_eq!(batch.batch_tokens(), STEPS as u64);
+            assert_eq!(batch.max_concurrent(), 1);
+            batch.remove(id).unwrap()
+        };
+        assert_eq!(summary.tokens, solo_tokens);
+        assert_eq!(summary.steps_unconsumed, 0);
+        assert!(e_b.leaks().is_empty());
+
+        // Transfer census: same messages, same payloads, same order — the
+        // batched path at B=1 is the solo path, not merely equivalent.
+        assert_eq!(e_solo.transfer_log(), e_b.transfer_log(), "transfer logs must match in order");
+
+        // P1 view census: record-for-record equal including payload bits.
+        assert_eq!(e_solo.views.p1.len(), e_b.views.p1.len());
+        for (sv, bv) in e_solo.views.p1.iter().zip(&e_b.views.p1) {
+            assert_eq!(sv.label, bv.label);
+            assert_eq!(sv.tag, bv.tag);
+            assert_eq!((sv.rows, sv.cols), (bv.rows, bv.cols));
+            assert_eq!(
+                sv.tensor.as_ref().unwrap().data(),
+                bv.tensor.as_ref().unwrap().data(),
+                "view payload {} differs",
+                sv.label
+            );
+        }
+    });
+}
+
+/// B=4: four sessions admitted up front all ride the same flights. Each
+/// session's stream must match its own plaintext greedy rollout over the
+/// decisive prefix (and hence its solo protocol stream, which the solo
+/// parity suite pins to the same rollout), and the amortized wire rounds
+/// per token must come in at (solo rounds)/4 — well under the ≤8
+/// acceptance bound for gpt2-tiny's 16-round solo step.
+#[test]
+fn four_session_batch_matches_solo_streams_and_amortizes_rounds() {
+    const STEPS: usize = 4;
+    const B: usize = 4;
+    let cfg = ModelConfig::gpt2_tiny();
+    let seed = 0xB47C8u64;
+    let w = ModelWeights::random(&cfg, seed);
+    let base = NUM_SPECIAL_TOKENS as u32;
+    let prompts: Vec<Vec<u32>> =
+        (0..B as u32).map(|i| vec![base + 3 + i * 5, base + 7 + i, base + 2 + i * 2]).collect();
+    let rollouts: Vec<Vec<(u32, bool)>> =
+        prompts.iter().map(|p| margin_gated_rollout(&cfg, &w, p, STEPS)).collect();
+
+    // Solo per-step wire rounds, as the amortization denominator.
+    let mut e_solo = mk_engine(&cfg, &w, seed ^ 0x11, false);
+    let solo_step_rounds = {
+        let mut sess = DecoderSession::new(&mut e_solo, &prompts[0]).unwrap();
+        sess.step_greedy().unwrap();
+        sess.last_step_cost().rounds_total()
+    };
+    assert!(solo_step_rounds > 0);
+
+    let mut e_b = mk_engine(&cfg, &w, seed ^ 0x11, false);
+    let mut batch = DecodeBatch::new(&mut e_b).unwrap();
+    let ids: Vec<usize> =
+        prompts.iter().map(|p| batch.admit(p, STEPS, None).unwrap()).collect();
+    let mut streams: Vec<Vec<u32>> = vec![Vec::new(); B];
+    loop {
+        let emissions = batch.step().unwrap();
+        if emissions.is_empty() {
+            break;
+        }
+        for em in &emissions {
+            let lane = ids.iter().position(|&id| id == em.session).unwrap();
+            streams[lane].push(em.token);
+        }
+    }
+
+    for (lane, stream) in streams.iter().enumerate() {
+        assert_eq!(stream.len(), STEPS, "session {lane} must run its full step budget");
+        let n = decisive_prefix(&rollouts[lane]);
+        for (s, (&got, &(want, _))) in stream.iter().zip(&rollouts[lane]).take(n).enumerate() {
+            assert_eq!(
+                got, want,
+                "session {lane} step {s}: batched greedy diverged from the decisive plaintext rollout"
+            );
+        }
+    }
+
+    // All four sessions share every step's flights: 4 tokens per step at
+    // solo wire rounds → amortized rounds/token = solo/4.
+    assert_eq!(batch.batch_decode_steps(), STEPS as u64);
+    assert_eq!(batch.batch_tokens(), (B * STEPS) as u64);
+    assert_eq!(batch.max_concurrent(), B);
+    assert_eq!(batch.batch_wire_rounds(), STEPS as u64 * solo_step_rounds);
+    let amortized = batch.amortized_rounds_per_token();
+    assert!(
+        (amortized - solo_step_rounds as f64 / B as f64).abs() < 1e-9,
+        "amortized {amortized} != solo/{B}"
+    );
+    assert!(amortized <= 8.0, "amortized rounds/token {amortized} exceeds the acceptance bound");
+
+    for &id in &ids {
+        let summary = batch.remove(id).unwrap();
+        assert_eq!(summary.tokens.len(), STEPS);
+        assert_eq!(summary.steps_unconsumed, 0);
+        assert_eq!(summary.decode_rounds, STEPS as u64 * solo_step_rounds);
+    }
+    assert!(batch.is_empty());
+    drop(batch);
+    assert!(e_b.leaks().is_empty());
+}
+
+/// Continuous-batching lifecycle plumbing: sessions admitted mid-stream
+/// join the shared flights at the next step boundary, early eviction
+/// reports the unconsumed step budget, and the batch counters reconcile
+/// with the per-emission accounting throughout.
+#[test]
+fn staggered_admission_and_early_eviction_keep_counters_consistent() {
+    let cfg = ModelConfig::gpt2_tiny();
+    let w = ModelWeights::random(&cfg, 0x57A66);
+    let base = NUM_SPECIAL_TOKENS as u32;
+    let mut eng = mk_engine(&cfg, &w, 0x57A66 ^ 0x3, false);
+    let mut batch = DecodeBatch::new(&mut eng).unwrap();
+
+    let s0 = batch.admit(&[base + 3, base + 7], 6, None).unwrap();
+    let mut step_rounds = 0u64;
+    for _ in 0..2 {
+        let emissions = batch.step().unwrap();
+        assert_eq!(emissions.len(), 1);
+        assert_eq!(emissions[0].session, s0);
+        step_rounds = emissions[0].step_rounds;
+        assert!(step_rounds > 0);
+    }
+
+    // s1 joins at a step boundary and immediately shares the flights.
+    let s1 = batch.admit(&[base + 11, base + 1], 4, None).unwrap();
+    assert_eq!(batch.len(), 2);
+    assert_eq!(batch.active(), 2);
+    let emissions = batch.step().unwrap();
+    assert_eq!(emissions.len(), 2);
+    assert_eq!(emissions[0].step_rounds, step_rounds, "shared step keeps the solo round count");
+    assert_eq!(emissions[1].step_rounds, step_rounds);
+
+    // Early eviction after one consumed step: 3 of 4 steps unconsumed.
+    let evicted = batch.remove(s1).unwrap();
+    assert_eq!(evicted.tokens.len(), 1);
+    assert_eq!(evicted.steps_unconsumed, 3);
+    assert_eq!(batch.len(), 1);
+
+    // s0 runs out its remaining budget solo. Emitted so far: 2 solo-lane
+    // steps (s0) + one 2-lane step (s0 + the evicted s1) = 4 tokens.
+    let mut total_tokens = 4u64;
+    let mut s0_tokens = 3usize;
+    loop {
+        let emissions = batch.step().unwrap();
+        if emissions.is_empty() {
+            break;
+        }
+        assert_eq!(emissions.len(), 1);
+        s0_tokens += 1;
+        total_tokens += 1;
+    }
+    assert_eq!(s0_tokens, 6);
+    let done = batch.session(s0).unwrap();
+    assert!(done.is_done());
+    assert_eq!(done.decode_steps(), 6);
+
+    assert_eq!(batch.batch_decode_steps(), 6);
+    assert_eq!(batch.batch_tokens(), total_tokens);
+    assert_eq!(batch.batch_tokens(), 7); // 5 solo-lane steps + one 2-lane step
+    assert_eq!(batch.batch_wire_rounds(), 6 * step_rounds);
+    assert_eq!(batch.max_concurrent(), 2);
+
+    let summary = batch.remove(s0).unwrap();
+    assert_eq!(summary.tokens.len(), 6);
+    assert_eq!(summary.steps_unconsumed, 0);
+    assert!(batch.is_empty());
+    assert!(batch.step().unwrap().is_empty(), "an empty batch steps to an empty emission set");
+}

@@ -303,6 +303,103 @@ fn batched_decode_census_is_exactly_the_sequential_census() {
     assert!(bat_prefill < seq_prefill);
 }
 
+/// ISSUE 6 census: continuous batching shares wire *flights* across B
+/// sessions, but P1's observations must stay strictly per-session — no
+/// view may co-open two sessions' payloads into one tensor, every view
+/// routes to exactly one session via its lane prefix, and each session's
+/// census is record-for-record (label, tag, shape) the census of a solo
+/// [`DecoderSession`] run — batching adds zero observations.
+#[test]
+fn batched_sessions_keep_per_session_censuses_disjoint_and_solo_shaped() {
+    use centaur::engine::decoder::{DecodeBatch, DecoderSession};
+
+    let cfg = ModelConfig::gpt2_tiny();
+    let w = ModelWeights::random(&cfg, 0xB0);
+    let prompt = [7u32, 11, 13];
+    const STEPS: usize = 3;
+    const B: usize = 3;
+    let absorbs = prompt.len() + STEPS;
+    let solo_census = absorbs * (2 + 4 * cfg.layers);
+
+    // Solo baseline: the census structure every batched session must match.
+    let mut solo_eng = CentaurEngine::with_backend(
+        &cfg,
+        &w,
+        Box::new(NativeBackend::new()),
+        EngineOptions { record_views: true, seed: 0xB1, ..Default::default() },
+    )
+    .unwrap();
+    {
+        let mut sess = DecoderSession::new(&mut solo_eng, &prompt).unwrap();
+        for _ in 0..STEPS {
+            sess.step_greedy().unwrap();
+        }
+    }
+    assert_eq!(solo_eng.views.p1.len(), solo_census);
+
+    // B sessions admitted up front, stepped to completion on one engine.
+    let mut eng = CentaurEngine::with_backend(
+        &cfg,
+        &w,
+        Box::new(NativeBackend::new()),
+        EngineOptions { record_views: true, seed: 0xB2, ..Default::default() },
+    )
+    .unwrap();
+    {
+        let mut batch = DecodeBatch::new(&mut eng).unwrap();
+        for _ in 0..B {
+            batch.admit(&prompt, STEPS, None).unwrap();
+        }
+        while !batch.step().unwrap().is_empty() {}
+    }
+    assert!(eng.leaks().is_empty(), "leaks: {:?}", eng.leaks());
+    assert_eq!(eng.views.p1.len(), B * solo_census, "batching must add zero observations");
+
+    // 1. Shape discipline unchanged under batching: every observation is a
+    //    single-token row or an (h, n_ctx) score row — never KV-cache
+    //    shaped, and never a multi-row stack of several sessions' payloads.
+    for v in &eng.views.p1 {
+        assert!(
+            (v.rows, v.cols) != (cfg.n_ctx, cfg.d),
+            "view '{}' has the KV-cache shape {}x{}",
+            v.label,
+            v.rows,
+            v.cols
+        );
+        assert!(v.rows == 1 || v.rows == cfg.h, "view '{}' is not a single-token row", v.label);
+    }
+
+    // 2. Every view routes to exactly one session: session 0 keeps the
+    //    solo labels verbatim, session i>0 carries the "s{i} " lane prefix.
+    let mut per: Vec<Vec<_>> = vec![Vec::new(); B];
+    for v in &eng.views.p1 {
+        let sid = match v.label.strip_prefix('s').and_then(|r| r.split_once(' ')) {
+            Some((num, _)) => num.parse::<usize>().expect("lane prefix index"),
+            None => 0,
+        };
+        assert!(sid < B, "view '{}' names an unknown session", v.label);
+        per[sid].push(v);
+    }
+
+    // 3. Each session's census is record-for-record the solo census.
+    for (sid, views) in per.iter().enumerate() {
+        assert_eq!(views.len(), solo_census, "session {sid} census size");
+        let lane_prefix = if sid == 0 { String::new() } else { format!("s{sid} ") };
+        for (bv, sv) in views.iter().zip(solo_eng.views.p1.iter()) {
+            let stripped = bv.label.strip_prefix(&lane_prefix).expect("lane prefix routes the view");
+            assert_eq!(stripped, sv.label, "session {sid}: census order/labels diverge from solo");
+            assert_eq!(bv.tag, sv.tag, "session {sid}: view '{}' retagged", bv.label);
+            assert_ne!(bv.tag, PermTag::None, "view '{}' untagged", bv.label);
+            assert_eq!(
+                (bv.rows, bv.cols),
+                (sv.rows, sv.cols),
+                "session {sid}: view '{}' reshaped",
+                bv.label
+            );
+        }
+    }
+}
+
 #[test]
 fn permonly_leak_detector_fires() {
     let cfg = ModelConfig::gpt2_tiny();
