@@ -22,8 +22,14 @@ fn serve_sequential(sc: ServerConfig, n_req: usize, n_ctx: usize) -> MetricsSnap
 /// Serve `sessions` concurrent generate streams through the decode
 /// scheduler (gpt2-tiny, all submitted before any are drained so they
 /// ride the same continuously-batched steps); returns the snapshot with
-/// the batched-decode counters.
-fn serve_batched_decode(sessions: usize, steps: usize, profile: NetworkProfile) -> MetricsSnapshot {
+/// the batched-decode counters. `spec_k > 1` turns on speculative
+/// verify steps (tiny-model draft over the serving weights).
+fn serve_batched_decode(
+    sessions: usize,
+    steps: usize,
+    profile: NetworkProfile,
+    spec_k: usize,
+) -> MetricsSnapshot {
     let cfg = ModelConfig::gpt2_tiny();
     let weights = ModelWeights::random(&cfg, 9);
     let mut sc = ServerConfig::new(cfg, weights);
@@ -31,6 +37,7 @@ fn serve_batched_decode(sessions: usize, steps: usize, profile: NetworkProfile) 
     sc.max_batch = sessions;
     sc.linger = Duration::from_millis(1);
     sc.profile = profile;
+    sc.spec_k = spec_k;
     let coord = Coordinator::start(sc).unwrap();
     let rxs: Vec<_> = (0..sessions as u32)
         .map(|i| coord.submit_generate(vec![5 + i, 9, 13 + i], steps))
@@ -52,8 +59,8 @@ fn main() {
     // B=1 wire rounds per token (the ideal is solo/4).
     if std::env::var("CENTAUR_BENCH_DECODE_ONLY").is_ok() {
         let steps = 4;
-        let solo = serve_batched_decode(1, steps, NetworkProfile::lan());
-        let b4 = serve_batched_decode(4, steps, NetworkProfile::lan());
+        let solo = serve_batched_decode(1, steps, NetworkProfile::lan(), 1);
+        let b4 = serve_batched_decode(4, steps, NetworkProfile::lan(), 1);
         let (r1, r4) = (solo.batched_rounds_per_token(), b4.batched_rounds_per_token());
         println!("decode-only smoke: B=1 rounds/token={r1:.2}, B=4 rounds/token={r4:.2}");
         assert!(r1 > 0.0 && r4 > 0.0, "decode scheduler recorded no batched steps");
@@ -62,6 +69,17 @@ fn main() {
             "B=4 amortized rounds/token {r4:.2} not <= half of B=1 ({r1:.2})"
         );
         assert!(b4.max_batch_sessions >= 2, "sessions never shared a decode step");
+        // Speculative smoke: a solo spec_k=4 stream amortizes its verify
+        // chains over accepted tokens, landing below the plain solo
+        // rounds/token, with acceptance counters in the snapshot.
+        let spec = serve_batched_decode(1, steps, NetworkProfile::lan(), 4);
+        let rs = spec.batched_rounds_per_token();
+        println!(
+            "decode-only smoke: spec_k=4 rounds/accepted-token={rs:.2} accept={:.0}%",
+            spec.spec_acceptance_rate() * 100.0
+        );
+        assert!(spec.spec_proposed > 0, "spec_k=4 never proposed a draft token");
+        assert!(rs < r1, "speculative rounds/accepted {rs:.2} not below plain solo {r1:.2}");
         println!("decode-only smoke OK");
         return;
     }
@@ -139,7 +157,7 @@ fn main() {
         ));
         let mut solo_rpt = 0.0f64;
         for sessions in [1usize, 2, 4, 8] {
-            let snap = serve_batched_decode(sessions, gen_steps, profile);
+            let snap = serve_batched_decode(sessions, gen_steps, profile, 1);
             let rpt = snap.batched_rounds_per_token();
             if sessions == 1 {
                 solo_rpt = rpt;
@@ -158,6 +176,36 @@ fn main() {
                 centaur::util::human_secs(s_per_token),
                 snap.max_batch_sessions,
                 snap.tokens_generated,
+            );
+        }
+    }
+
+    // Speculative decode through the serving path (ISSUE 7): a solo
+    // stream rides k verify lanes per 16-round flight chain, so the
+    // rounds term amortizes over *accepted* tokens — the orthogonal
+    // axis to the B-lane batching above (they compose: B sessions × k
+    // lanes each).
+    for pname in ["lan", "wan3"] {
+        let profile = NetworkProfile::by_name(pname).unwrap();
+        b.section(&format!("speculative serving: gpt2-tiny solo, {gen_steps}-step generates, {pname}"));
+        for spec_k in [1usize, 2, 4, 8] {
+            let snap = serve_batched_decode(1, gen_steps, profile, spec_k);
+            let rpt = snap.batched_rounds_per_token();
+            let bytes_per_token = if snap.tokens_generated == 0 {
+                0.0
+            } else {
+                snap.decode_bytes as f64 / snap.tokens_generated as f64
+            };
+            let s_per_token = rpt * profile.rtt + bytes_per_token * 8.0 / profile.bandwidth_bps;
+            println!(
+                "  k={spec_k}: accept={:.0}% ({}/{}) rounds/accepted={rpt:.2} bytes/token={} \
+                 modeled s/token={} verify_steps={}",
+                snap.spec_acceptance_rate() * 100.0,
+                snap.spec_accepted,
+                snap.spec_proposed,
+                centaur::util::human_bytes(bytes_per_token as u64),
+                centaur::util::human_secs(s_per_token),
+                snap.batched_decode_steps,
             );
         }
     }

@@ -5,6 +5,7 @@
 
 use centaur::baselines::FrameworkKind;
 use centaur::engine::decoder::DecoderSession;
+use centaur::engine::draft::Draft;
 use centaur::engine::{CentaurEngine, EngineOptions};
 use centaur::model::{ModelConfig, ModelWeights};
 use centaur::net::NetworkProfile;
@@ -143,13 +144,90 @@ fn bench_decode(b: &mut Bencher) {
     );
 }
 
+/// Speculative decode (ISSUE 7): up to k draft tokens verified per
+/// 16-round flight chain, output token-identical to plain greedy.
+/// Reports acceptance plus rounds and s per *accepted* token over
+/// {lan, wan3} × k ∈ {1, 2, 4, 8}, and CI-gates the k=4 amortization
+/// floor (≤ 16/2 rounds per accepted token) and the wan3 headline:
+/// solo-stream s/token below the 16·RTT flight-chain floor.
+fn bench_speculative(b: &mut Bencher) {
+    let cfg = ModelConfig::gpt2_tiny().with_n_ctx(64);
+    let w = ModelWeights::random(&cfg, 7);
+    let prompt: Vec<u32> = vec![7, 11, 13, 17];
+    let steps = 8usize;
+    // The tiny-model draft shares the serving weights, so disagreements
+    // come only from fixed-point noise — the high-acceptance regime.
+    let draft = Draft::tiny(&cfg, &w);
+    b.section("gpt2-tiny @ n_ctx=64 — speculative decode: rounds and s per ACCEPTED token");
+    let mut k4_rounds_per_tok = f64::INFINITY;
+    let mut wan3_k4_s_per_tok = f64::INFINITY;
+    for profile in ["lan", "wan3"] {
+        let p = NetworkProfile::by_name(profile).unwrap();
+        for k in [1usize, 2, 4, 8] {
+            let mut res = None;
+            b.bench(&format!("{profile} spec_k={k} x{steps} tokens"), || {
+                let mut e = CentaurEngine::with_backend(
+                    &cfg,
+                    &w,
+                    Box::new(NativeBackend::new()),
+                    EngineOptions {
+                        profile: p,
+                        seed: 8,
+                        decode_correlations: true,
+                        round_batching: true,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                res = Some(e.generate_speculative(&prompt, steps, &draft, k).unwrap());
+            });
+            let (out, spec) = res.unwrap();
+            let toks = out.tokens.len() as f64;
+            let rpt = out.decode.rounds_total() as f64 / toks;
+            let spt = out.decode.total_time(&p) / toks;
+            println!(
+                "    -> {profile} k={k}: accept {:.0}% ({}/{} proposals, {} verify steps) | \
+                 {rpt:.1} rounds/token | {}/token",
+                spec.acceptance_rate() * 100.0,
+                spec.accepted,
+                spec.proposed,
+                spec.verify_steps,
+                human_secs(spt),
+            );
+            if k == 4 {
+                k4_rounds_per_tok = rpt;
+                if profile == "wan3" {
+                    wan3_k4_s_per_tok = spt;
+                }
+            }
+        }
+    }
+    // CI gates (ISSUE 7): the k=4 verify chain must amortize to at most
+    // half the 16-round solo schedule per accepted token, which puts
+    // wan3 solo-stream decode below the 16·RTT floor a one-token step
+    // can never beat.
+    assert!(
+        k4_rounds_per_tok <= 8.0,
+        "spec_k=4 must amortize to <=8 rounds/accepted token, got {k4_rounds_per_tok:.2}"
+    );
+    let wan3 = NetworkProfile::wan3();
+    let floor = 16.0 * wan3.rtt;
+    assert!(
+        wan3_k4_s_per_tok < floor,
+        "wan3 spec_k=4 s/token {wan3_k4_s_per_tok:.3} must beat the 16xRTT floor {floor:.3}"
+    );
+}
+
 fn main() {
     let mut b = Bencher::new();
     bench_decode(&mut b);
+    bench_speculative(&mut b);
     // CI smoke mode: assert the decode comm-reduction gates and stop —
     // the framework sweep below is the long part of this bench.
     if std::env::var("CENTAUR_BENCH_DECODE_ONLY").is_ok() {
-        println!("CENTAUR_BENCH_DECODE_ONLY set: decode gates passed, skipping framework sweep");
+        println!(
+            "CENTAUR_BENCH_DECODE_ONLY set: decode + speculative gates passed, skipping framework sweep"
+        );
         return;
     }
     let quick = std::env::var("CENTAUR_BENCH_QUICK").is_ok();

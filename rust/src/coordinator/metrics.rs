@@ -37,6 +37,10 @@ pub struct Metrics {
     pub batch_tokens: u64,
     /// Largest number of sessions that shared one decode step.
     pub max_batch_sessions: u64,
+    /// Draft tokens proposed by speculative verify steps.
+    pub spec_proposed: u64,
+    /// Draft tokens (draft hits) the private greedy choices accepted.
+    pub spec_accepted: u64,
 }
 
 impl Metrics {
@@ -60,6 +64,8 @@ impl Metrics {
             batch_wire_rounds: 0,
             batch_tokens: 0,
             max_batch_sessions: 0,
+            spec_proposed: 0,
+            spec_accepted: 0,
         }
     }
 
@@ -99,10 +105,27 @@ impl Metrics {
     /// shared and the number of session lanes that rode them. Amortized
     /// rounds/token falls out as `batch_wire_rounds / batch_tokens`.
     pub fn record_batch_step(&mut self, rounds: u64, lanes: u64) {
+        self.record_spec_step(rounds, lanes, lanes, 0, 0);
+    }
+
+    /// Record one (possibly speculative) batched decode step: `sessions`
+    /// lanes shared `rounds` wire rounds and emitted `tokens` accepted
+    /// tokens, with `proposed`/`accepted` draft bookkeeping. Plain steps
+    /// are the `tokens == sessions, proposed == 0` special case.
+    pub fn record_spec_step(
+        &mut self,
+        rounds: u64,
+        sessions: u64,
+        tokens: u64,
+        proposed: u64,
+        accepted: u64,
+    ) {
         self.batched_decode_steps += 1;
         self.batch_wire_rounds += rounds;
-        self.batch_tokens += lanes;
-        self.max_batch_sessions = self.max_batch_sessions.max(lanes);
+        self.batch_tokens += tokens;
+        self.max_batch_sessions = self.max_batch_sessions.max(sessions);
+        self.spec_proposed += proposed;
+        self.spec_accepted += accepted;
     }
 
     /// Compute quantiles and totals so far.
@@ -143,6 +166,8 @@ impl Metrics {
             batch_wire_rounds: self.batch_wire_rounds,
             batch_tokens: self.batch_tokens,
             max_batch_sessions: self.max_batch_sessions,
+            spec_proposed: self.spec_proposed,
+            spec_accepted: self.spec_accepted,
             elapsed,
         }
     }
@@ -201,6 +226,10 @@ pub struct MetricsSnapshot {
     pub batch_tokens: u64,
     /// Largest number of sessions that shared one decode step.
     pub max_batch_sessions: u64,
+    /// Draft tokens proposed by speculative verify steps.
+    pub spec_proposed: u64,
+    /// Draft tokens (draft hits) the private greedy choices accepted.
+    pub spec_accepted: u64,
     /// Wall-clock time since the coordinator started.
     pub elapsed: Duration,
 }
@@ -245,10 +274,23 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Fraction of speculative draft proposals the private greedy choices
+    /// accepted — the draft-hit rate (1.0 before any proposal, matching
+    /// [`crate::engine::decoder::SpeculativeState::acceptance_rate`]).
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            1.0
+        } else {
+            self.spec_accepted as f64 / self.spec_proposed as f64
+        }
+    }
+
     /// Amortized wire rounds per token across batched decode steps (0.0
     /// when the decode scheduler ran no batched steps) — the
     /// continuous-batching headline: B lanes sharing the solo 16-flight
-    /// schedule pay 16/B rounds per token.
+    /// schedule pay 16/B rounds per token. Speculative steps count
+    /// *accepted* tokens, so acceptance drives this below the solo floor
+    /// even at B = 1.
     pub fn batched_rounds_per_token(&self) -> f64 {
         if self.batch_tokens == 0 {
             0.0
@@ -302,6 +344,14 @@ impl MetricsSnapshot {
                 self.batched_decode_steps,
                 self.max_batch_sessions,
                 self.batched_rounds_per_token(),
+            ));
+        }
+        if self.spec_proposed > 0 {
+            s.push_str(&format!(
+                " spec_proposed={} spec_accepted={} spec_accept_rate={:.1}%",
+                self.spec_proposed,
+                self.spec_accepted,
+                self.spec_acceptance_rate() * 100.0
             ));
         }
         s
@@ -378,5 +428,27 @@ mod tests {
         assert!(s.summary().contains("batch_max=4"));
         // No batched steps → the summary block stays out entirely.
         assert!(!Metrics::new().snapshot().summary().contains("batch_steps"));
+    }
+
+    #[test]
+    fn speculative_steps_count_accepted_tokens() {
+        let mut m = Metrics::new();
+        // Two solo verify steps at k=4, 16 rounds each: 4 then 2 accepted.
+        m.record_spec_step(16, 1, 4, 3, 3);
+        m.record_spec_step(16, 1, 2, 3, 1);
+        let s = m.snapshot();
+        assert_eq!(s.batched_decode_steps, 2);
+        assert_eq!(s.batch_tokens, 6);
+        assert_eq!(s.max_batch_sessions, 1);
+        assert_eq!((s.spec_proposed, s.spec_accepted), (6, 4));
+        assert!((s.spec_acceptance_rate() - 4.0 / 6.0).abs() < 1e-9);
+        // Amortized rounds per *accepted* token dips below the 16 floor.
+        assert!((s.batched_rounds_per_token() - 32.0 / 6.0).abs() < 1e-9);
+        assert!(s.summary().contains("spec_accept_rate"));
+        // Plain batched runs never print the speculative block.
+        let mut p = Metrics::new();
+        p.record_batch_step(16, 4);
+        assert!(!p.snapshot().summary().contains("spec_proposed"));
+        assert_eq!(p.snapshot().spec_acceptance_rate(), 1.0);
     }
 }

@@ -87,6 +87,12 @@ pub struct ServerConfig {
     /// sessions; only multiplicities scale — see
     /// [`crate::protocols::layer::decode_pool_shapes_batched`]).
     pub decode_prefill_sessions: usize,
+    /// Speculative decode width (DESIGN.md §Speculative decode): when
+    /// > 1, the decode scheduler drives [`DecodeBatch::step_spec`] with a
+    /// public tiny-model draft built from the serving weights — up to
+    /// `spec_k` tokens verified per flight chain, output token-identical
+    /// to plain greedy. 1 (the default) keeps the plain one-token step.
+    pub spec_k: usize,
 }
 
 impl ServerConfig {
@@ -111,6 +117,7 @@ impl ServerConfig {
             decode_correlations: true,
             round_batching: true,
             decode_prefill_sessions: 1,
+            spec_k: 1,
         }
     }
 }
@@ -237,7 +244,9 @@ struct SchedLane {
 }
 
 /// Return the pool demand an early-evicted session will never consume:
-/// `steps_unconsumed` decode steps' worth of per-step triples. The
+/// `steps_unconsumed` decode steps' worth of per-step triples, times the
+/// configured speculative width (verify lanes consume per-step triples
+/// lane-by-lane, and provisioning scaled them the same way). The
 /// session's correlation bundles are NOT released — those were dealt at
 /// admission, so their demand is genuinely spent.
 fn release_unconsumed_demand(pool: Option<&TriplePool>, cfg: &ServerConfig, steps_unconsumed: u64) {
@@ -245,13 +254,14 @@ fn release_unconsumed_demand(pool: Option<&TriplePool>, cfg: &ServerConfig, step
     if steps_unconsumed == 0 {
         return;
     }
+    let lanes = cfg.spec_k.max(1) as u64;
     let mc = &cfg.cfg;
     if cfg.decode_correlations {
-        let count = mc.layers as u64 * mc.h as u64 * steps_unconsumed;
+        let count = mc.layers as u64 * mc.h as u64 * steps_unconsumed * lanes;
         pool.release_demand(TripleShape::matmul(1, mc.n_ctx, mc.dh()), count);
     } else {
         for (shape, count) in crate::protocols::layer::decode_step_shapes(mc) {
-            pool.release_demand(shape, count * steps_unconsumed);
+            pool.release_demand(shape, count * steps_unconsumed * lanes);
         }
     }
 }
@@ -338,6 +348,14 @@ fn decode_scheduler(
     };
     let mut lanes: std::collections::HashMap<usize, SchedLane> = std::collections::HashMap::new();
     let mut disconnected = false;
+    // Speculative decode (--spec-k > 1): a public tiny-model draft built
+    // from the serving weights proposes follow-up tokens; each shared
+    // step verifies them as extra lanes (DESIGN.md §Speculative decode).
+    let draft = if cfg.spec_k > 1 {
+        Some(crate::engine::draft::Draft::tiny(&cfg.cfg, &cfg.weights))
+    } else {
+        None
+    };
 
     loop {
         // Admission: block when the batch is idle, otherwise drain
@@ -387,14 +405,24 @@ fn decode_scheduler(
             continue;
         }
 
-        // One shared step for every active lane.
-        match batch.step() {
+        // One shared step for every active lane — a speculative verify
+        // step when a draft is configured, plain greedy otherwise.
+        let width = batch.active() as u64;
+        let spec0 = (batch.spec_proposed(), batch.spec_accepted());
+        let stepped = match &draft {
+            Some(d) => batch.step_spec(d, cfg.spec_k),
+            None => batch.step(),
+        };
+        match stepped {
             Ok(emissions) => {
                 if let Some(first) = emissions.first() {
-                    metrics
-                        .lock()
-                        .unwrap()
-                        .record_batch_step(first.step_rounds, emissions.len() as u64);
+                    metrics.lock().unwrap().record_spec_step(
+                        first.step_rounds,
+                        width,
+                        emissions.len() as u64,
+                        batch.spec_proposed() - spec0.0,
+                        batch.spec_accepted() - spec0.1,
+                    );
                 }
                 for em in &emissions {
                     let Some(lane) = lanes.get_mut(&em.session) else { continue };
@@ -481,11 +509,12 @@ impl Coordinator {
             // triples (or the plain per-step profile with correlations
             // off), sized for the expected absorbs per request.
             if config.decode_prefill_steps > 0 && config.cfg.kind == ModelKind::Gpt2 {
-                for (shape, count) in crate::protocols::layer::decode_pool_shapes_batched(
+                for (shape, count) in crate::protocols::layer::decode_pool_shapes_speculative(
                     &config.cfg,
                     config.decode_correlations,
                     config.decode_prefill_steps as u64,
                     config.decode_prefill_sessions as u64,
+                    config.spec_k.max(1) as u64,
                 ) {
                     pool.register_demand(shape, count);
                 }
@@ -970,6 +999,30 @@ mod tests {
             snap.batched_decode_steps
         );
         assert!(snap.summary().contains("batch_steps"));
+    }
+
+    #[test]
+    fn speculative_scheduler_keeps_greedy_parity_and_reports_acceptance() {
+        // Same request through a plain (spec_k = 1) and a speculative
+        // (spec_k = 4, tiny-model draft) coordinator: identical token
+        // stream, fewer shared steps, acceptance metrics in the summary.
+        let run = |spec_k: usize| {
+            let mut sc = tiny_gpt_config();
+            sc.spec_k = spec_k;
+            let coord = Coordinator::start(sc).unwrap();
+            let s = coord.generate_blocking(vec![7, 11, 13], 6).unwrap();
+            let snap = coord.shutdown();
+            (s.tokens, snap)
+        };
+        let (plain, _) = run(1);
+        let (spec, snap) = run(4);
+        assert_eq!(spec, plain, "speculative serving must keep greedy parity");
+        assert_eq!(snap.tokens_generated, 6);
+        // The draft shares the serving weights, so at least one proposal
+        // rides every verify step (and the summary reports the rate).
+        assert!(snap.spec_proposed > 0);
+        assert!(snap.batched_decode_steps <= 6);
+        assert!(snap.summary().contains("spec_accept_rate"));
     }
 
     #[test]

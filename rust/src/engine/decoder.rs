@@ -25,12 +25,40 @@
 use crate::data::greedy_regular_token;
 use crate::model::ModelKind;
 use crate::net::CostLedger;
-use crate::protocols::layer::{self, LayerKvCache, StepLane};
+use crate::protocols::layer::{self, LayerKvCache, SpecLane, StepLaneGroup};
 use crate::protocols::{adaptation, embedding};
 use crate::tensor::FloatTensor;
 use crate::Result;
 
+use super::draft::Draft;
 use super::CentaurEngine;
+
+/// Per-session speculative-decode bookkeeping (DESIGN.md §Speculative
+/// decode): draft proposals vs acceptances plus verify-step counts — the
+/// numbers behind the acceptance-rate and rounds-per-*accepted*-token
+/// serving metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpeculativeState {
+    /// Draft tokens proposed so far (`k - 1` per verify step — the lead
+    /// token is the session's own greedy choice, not a proposal).
+    pub proposed: u64,
+    /// Draft tokens the private model's greedy choices agreed with.
+    pub accepted: u64,
+    /// Speculative verify steps executed.
+    pub verify_steps: u64,
+}
+
+impl SpeculativeState {
+    /// Fraction of draft proposals accepted (1.0 before any proposal —
+    /// the degenerate k=1 schedule never speculates and never misses).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            1.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+}
 
 /// Result of one streamed generation: the tokens plus the phase-split cost.
 pub struct GenOutcome {
@@ -76,6 +104,9 @@ pub struct DecoderSession<'e> {
     decode_steps: u64,
     last_step: CostLedger,
     last_logits: FloatTensor,
+    history: Vec<u32>,
+    tokens_emitted: u64,
+    spec: SpeculativeState,
 }
 
 impl<'e> DecoderSession<'e> {
@@ -115,6 +146,9 @@ impl<'e> DecoderSession<'e> {
             decode_steps: 0,
             last_step: CostLedger::new(),
             last_logits: FloatTensor::zeros(1, 1),
+            history: Vec::new(),
+            tokens_emitted: 0,
+            spec: SpeculativeState::default(),
         };
         for &t in prompt {
             sess.absorb_phase(t, false)?;
@@ -155,6 +189,129 @@ impl<'e> DecoderSession<'e> {
         let next = greedy_regular_token(self.last_logits.row(0));
         self.absorb_phase(next, true)?;
         Ok(next)
+    }
+
+    /// One speculative verify step (DESIGN.md §Speculative decode): the
+    /// session's own greedy token leads, `draft` proposes up to `k - 1`
+    /// follow-ups conditioned on the public token history, and all of
+    /// them ride ONE batched flight chain as extra verify lanes. The
+    /// longest prefix agreeing with the private model's own greedy
+    /// choices is kept (the lead token always is — it *is* the greedy
+    /// choice), rejected rows are rolled back
+    /// ([`LayerKvCache::truncate_to`], which also rewinds the
+    /// fixed-operand correlation uses), and the accepted tokens are
+    /// returned: token-for-token what repeated [`DecoderSession::step_greedy`]
+    /// would have emitted, at one flight chain per up-to-k tokens.
+    pub fn step_speculative(&mut self, draft: &Draft, k: usize) -> Result<Vec<u32>> {
+        anyhow::ensure!(k >= 1, "spec_k must be >= 1");
+        let cap = self.remaining();
+        anyhow::ensure!(cap >= 1, "context window exhausted");
+        let l = k.min(cap);
+        let mut tokens = Vec::with_capacity(l);
+        tokens.push(greedy_regular_token(self.last_logits.row(0)));
+        if l > 1 {
+            let mut hist = self.history.clone();
+            hist.push(tokens[0]);
+            tokens.extend(draft.propose(&hist, l - 1));
+        }
+        let pos0 = self.pos;
+        let logits = self.absorb_spec(&tokens)?;
+        let mut m = 1;
+        while m < l && tokens[m] == greedy_regular_token(logits[m - 1].row(0)) {
+            m += 1;
+        }
+        if m < l {
+            for kvc in &mut self.kv {
+                kvc.truncate_to(pos0 + m)?;
+            }
+            self.pos = pos0 + m;
+        }
+        self.last_logits = logits[m - 1].clone();
+        tokens.truncate(m);
+        self.history.extend_from_slice(&tokens);
+        self.tokens_emitted += m as u64;
+        self.spec.proposed += (l - 1) as u64;
+        self.spec.accepted += (m - 1) as u64;
+        self.spec.verify_steps += 1;
+        Ok(tokens)
+    }
+
+    /// Absorb `tokens` at successive positions in ONE multi-lane flight
+    /// chain (warm-decode phase; requires the batched schedule). Returns
+    /// each lane's next-token logits; the caller applies the accept rule
+    /// and rolls rejected rows back.
+    fn absorb_spec(&mut self, tokens: &[u32]) -> Result<Vec<FloatTensor>> {
+        anyhow::ensure!(!tokens.is_empty(), "empty speculative absorb");
+        anyhow::ensure!(self.pos + tokens.len() <= self.eng.cfg.n_ctx, "context window exhausted");
+        anyhow::ensure!(
+            self.eng.round_batching,
+            "speculative decode needs the batched decode schedule (round_batching)"
+        );
+        for &t in tokens {
+            anyhow::ensure!((t as usize) < self.eng.cfg.vocab, "token {t} out of vocab");
+        }
+        let pos0 = self.pos;
+        let eng = &mut *self.eng;
+        eng.mpc.net.reset();
+        let logits = {
+            let mut ctx = layer::ProtoCtx {
+                mpc: &mut eng.mpc,
+                backend: eng.backend.as_mut(),
+                views: &mut eng.views,
+                fast_sim: eng.fast_sim,
+                round_batching: eng.round_batching,
+            };
+            let mut lanes = Vec::with_capacity(tokens.len());
+            for (j, &t) in tokens.iter().enumerate() {
+                let x_pi =
+                    embedding::pp_embedding_at_lane(&mut ctx, &eng.pm, t, pos0 + j, j == 0, "")?;
+                lanes.push(SpecLane { x_pi, pos: pos0 + j, bytes: 0 });
+            }
+            let mut groups = [StepLaneGroup { kv: &mut self.kv, prefix: "", lanes }];
+            let last = eng.pm.layers.len() - 1;
+            for (i, pl) in eng.pm.layers[..last].iter().enumerate() {
+                layer::transformer_layer_step_batch(
+                    &mut ctx,
+                    &eng.cfg,
+                    pl,
+                    &eng.pi1_sh,
+                    &eng.pi1_t_sh,
+                    &mut groups,
+                    i,
+                    None,
+                )?;
+            }
+            let h_pis = layer::transformer_layer_step_batch(
+                &mut ctx,
+                &eng.cfg,
+                &eng.pm.layers[last],
+                &eng.pi1_sh,
+                &eng.pi1_t_sh,
+                &mut groups,
+                last,
+                Some((
+                    eng.pm.final_ln_g.as_deref().expect("gpt weights"),
+                    eng.pm.final_ln_b.as_deref().expect("gpt weights"),
+                )),
+            )?
+            .expect("final tail returns the final-LN shares");
+            let mut outs = Vec::with_capacity(tokens.len());
+            for (j, h_pi) in h_pis[0].iter().enumerate() {
+                let logits_sh = adaptation::pp_lm_head_gpt2(&mut ctx, &eng.pm, h_pi)?;
+                outs.push(if j == 0 {
+                    adaptation::return_to_client(ctx.mpc, &logits_sh)?
+                } else {
+                    adaptation::return_to_client_unrounded(ctx.mpc, &logits_sh)?
+                });
+            }
+            outs
+        };
+        let step = eng.mpc.net.ledger.clone();
+        self.decode.merge(&step);
+        self.decode_steps += 1;
+        self.last_step = step;
+        self.pos += tokens.len();
+        Ok(logits)
     }
 
     /// One single-token forward through the full three-party protocol.
@@ -227,11 +384,13 @@ impl<'e> DecoderSession<'e> {
         if decode_phase {
             self.decode.merge(&step);
             self.decode_steps += 1;
+            self.tokens_emitted += 1;
         } else {
             self.prefill.merge(&step);
         }
         self.last_step = step;
         self.last_logits = logits;
+        self.history.push(token);
         self.pos += 1;
         Ok(())
     }
@@ -296,6 +455,30 @@ impl<'e> DecoderSession<'e> {
         }
     }
 
+    /// Tokens emitted during warm decode — accepted tokens for
+    /// speculative sessions, one per absorb otherwise.
+    pub fn tokens_emitted(&self) -> u64 {
+        self.tokens_emitted
+    }
+
+    /// Warm-decode wire rounds per *accepted* token — the speculative
+    /// headline metric: one verify flight chain (a fixed round count)
+    /// yields up to k tokens, so this drops below the per-step round
+    /// floor as acceptance rises. 0.0 before the first emitted token.
+    pub fn decode_rounds_per_accepted_token(&self) -> f64 {
+        if self.tokens_emitted == 0 {
+            0.0
+        } else {
+            self.decode.rounds_total() as f64 / self.tokens_emitted as f64
+        }
+    }
+
+    /// Speculative accept/reject bookkeeping (all-zero for sessions that
+    /// never called [`DecoderSession::step_speculative`]).
+    pub fn speculative(&self) -> &SpeculativeState {
+        &self.spec
+    }
+
     /// Per-[`crate::net::OpClass`] round breakdown of the most recent
     /// step — the table the round-budget harness pins golden values
     /// against (`rust/tests/round_budget.rs`).
@@ -336,6 +519,8 @@ pub struct BatchSession {
     last_step_bytes: u64,
     last_step_rounds: u64,
     last_logits: FloatTensor,
+    history: Vec<u32>,
+    spec: SpeculativeState,
 }
 
 impl BatchSession {
@@ -407,6 +592,12 @@ impl BatchSession {
     pub fn last_step_rounds(&self) -> u64 {
         self.last_step_rounds
     }
+
+    /// Speculative accept/reject bookkeeping (all-zero for sessions only
+    /// stepped through plain [`DecodeBatch::step`]).
+    pub fn speculative(&self) -> &SpeculativeState {
+        &self.spec
+    }
 }
 
 /// Everything a scheduler needs to report a finished (or early-evicted)
@@ -475,6 +666,8 @@ pub struct DecodeBatch<'e> {
     batch_wire_rounds: u64,
     batch_tokens: u64,
     max_concurrent: usize,
+    spec_proposed: u64,
+    spec_accepted: u64,
 }
 
 impl<'e> DecodeBatch<'e> {
@@ -496,6 +689,8 @@ impl<'e> DecodeBatch<'e> {
             batch_wire_rounds: 0,
             batch_tokens: 0,
             max_concurrent: 0,
+            spec_proposed: 0,
+            spec_accepted: 0,
         })
     }
 
@@ -554,6 +749,8 @@ impl<'e> DecodeBatch<'e> {
                 last_step_bytes: 0,
                 last_step_rounds: 0,
                 last_logits: FloatTensor::zeros(1, 1),
+                history: Vec::new(),
+                spec: SpeculativeState::default(),
             });
         }
         let idx = self.sessions.len() - 1;
@@ -602,6 +799,92 @@ impl<'e> DecodeBatch<'e> {
                 step_rounds: s.last_step_rounds,
                 done: s.done,
             });
+        }
+        Ok(out)
+    }
+
+    /// Advance every live session by one speculative verify step in ONE
+    /// shared flight schedule (DESIGN.md §Speculative decode): each
+    /// session contributes its greedy lead token plus up to `k - 1`
+    /// proposals from the public `draft` as extra lanes — B groups × k
+    /// lanes over one flight chain — then keeps its longest
+    /// greedy-agreeing prefix and rolls the rest back. Emissions come
+    /// back in session order, possibly several per session; the batch's
+    /// token counter advances by *accepted* tokens only, so
+    /// [`DecodeBatch::amortized_rounds_per_token`] is rounds per accepted
+    /// token. `step_spec(draft, 1)` never consults the draft and emits
+    /// exactly like [`DecodeBatch::step`].
+    pub fn step_spec(&mut self, draft: &Draft, k: usize) -> Result<Vec<StepEmission>> {
+        anyhow::ensure!(k >= 1, "spec_k must be >= 1");
+        let n_ctx = self.eng.cfg.n_ctx;
+        let mut work: Vec<(usize, Vec<u32>)> = Vec::new();
+        for (i, s) in self.sessions.iter().enumerate() {
+            if s.done {
+                continue;
+            }
+            let lead = greedy_regular_token(s.last_logits.row(0));
+            let l = k.min(s.steps_left).min(n_ctx - s.pos).max(1);
+            let mut toks = Vec::with_capacity(l);
+            toks.push(lead);
+            if l > 1 {
+                let mut hist = s.history.clone();
+                hist.push(lead);
+                toks.extend(draft.propose(&hist, l - 1));
+            }
+            work.push((i, toks));
+        }
+        if work.is_empty() {
+            return Ok(Vec::new());
+        }
+        let pos0s: Vec<usize> = work.iter().map(|(i, _)| self.sessions[*i].pos).collect();
+        let all_logits = self.absorb_groups(&work, true)?;
+        self.max_concurrent = self.max_concurrent.max(work.len());
+        self.batch_decode_steps += 1;
+        self.batch_wire_rounds += self.sessions[work[0].0].last_step_rounds;
+        let mut out = Vec::new();
+        for (((idx, toks), logits), pos0) in work.iter().zip(all_logits).zip(pos0s) {
+            let s = &mut self.sessions[*idx];
+            let l = toks.len();
+            let mut m = 1;
+            while m < l && toks[m] == greedy_regular_token(logits[m - 1].row(0)) {
+                m += 1;
+            }
+            // An accepted EOS ends the session — later accepted tokens
+            // would never have been generated, so roll them back too.
+            if let Some(e) = s.eos {
+                if let Some(j) = toks[..m].iter().position(|&t| t == e) {
+                    m = j + 1;
+                }
+            }
+            if m < l {
+                for kvc in &mut s.kv {
+                    kvc.truncate_to(pos0 + m)?;
+                }
+                s.pos = pos0 + m;
+            }
+            s.last_logits = logits[m - 1].clone();
+            s.spec.proposed += (l - 1) as u64;
+            s.spec.accepted += (m - 1) as u64;
+            s.spec.verify_steps += 1;
+            self.spec_proposed += (l - 1) as u64;
+            self.spec_accepted += (m - 1) as u64;
+            self.batch_tokens += m as u64;
+            for &tok in &toks[..m] {
+                s.tokens.push(tok);
+                s.history.push(tok);
+                s.steps_left -= 1;
+                if s.steps_left == 0 || s.eos == Some(tok) || s.pos >= n_ctx {
+                    s.done = true;
+                }
+                out.push(StepEmission {
+                    session: s.id,
+                    index: s.tokens.len() - 1,
+                    token: tok,
+                    step_bytes: s.last_step_bytes,
+                    step_rounds: s.last_step_rounds,
+                    done: s.done,
+                });
+            }
         }
         Ok(out)
     }
@@ -678,22 +961,65 @@ impl<'e> DecodeBatch<'e> {
         self.max_concurrent
     }
 
+    /// Draft tokens proposed across every speculative step.
+    pub fn spec_proposed(&self) -> u64 {
+        self.spec_proposed
+    }
+
+    /// Draft tokens accepted across every speculative step.
+    pub fn spec_accepted(&self) -> u64 {
+        self.spec_accepted
+    }
+
+    /// Fraction of draft proposals accepted (1.0 before any proposal).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            1.0
+        } else {
+            self.spec_accepted as f64 / self.spec_proposed as f64
+        }
+    }
+
     /// One shared single-token forward for `work` = ascending
     /// `(session index, token)` lanes. Prefill calls pass a single lane;
     /// decode steps pass every live session — both run the exact same
     /// path, which is what makes a B=1 batch bit-identical to a solo
     /// [`DecoderSession`].
     fn absorb_lanes(&mut self, work: &[(usize, u32)], decode_phase: bool) -> Result<()> {
+        let grouped: Vec<(usize, Vec<u32>)> = work.iter().map(|&(i, t)| (i, vec![t])).collect();
+        let logits = self.absorb_groups(&grouped, decode_phase)?;
+        for (&(idx, token), mut outs) in work.iter().zip(logits) {
+            let s = &mut self.sessions[idx];
+            s.history.push(token);
+            s.last_logits = outs.pop().expect("one logits row per lane");
+        }
+        Ok(())
+    }
+
+    /// One shared forward for `work` = ascending
+    /// `(session index, tokens)` lane groups, each session absorbing its
+    /// tokens at successive positions (speculative verify lanes). Updates
+    /// byte/round/position bookkeeping and returns every lane's
+    /// next-token logits per group; the caller owns token bookkeeping
+    /// (accept rule, history, rollback).
+    fn absorb_groups(
+        &mut self,
+        work: &[(usize, Vec<u32>)],
+        decode_phase: bool,
+    ) -> Result<Vec<Vec<FloatTensor>>> {
         anyhow::ensure!(!work.is_empty(), "empty absorb");
         let eng = &mut *self.eng;
-        for &(idx, token) in work {
-            let s = &self.sessions[idx];
-            anyhow::ensure!(s.pos < eng.cfg.n_ctx, "context window exhausted");
-            anyhow::ensure!((token as usize) < eng.cfg.vocab, "token {token} out of vocab");
+        for (idx, tokens) in work {
+            let s = &self.sessions[*idx];
+            anyhow::ensure!(!tokens.is_empty(), "empty lane group");
+            anyhow::ensure!(s.pos + tokens.len() <= eng.cfg.n_ctx, "context window exhausted");
+            for &t in tokens {
+                anyhow::ensure!((t as usize) < eng.cfg.vocab, "token {t} out of vocab");
+            }
         }
         eng.mpc.net.reset();
         let mut lane_bytes = vec![0u64; work.len()];
-        let logits: Vec<FloatTensor> = {
+        let logits: Vec<Vec<FloatTensor>> = {
             let mut ctx = layer::ProtoCtx {
                 mpc: &mut eng.mpc,
                 backend: eng.backend.as_mut(),
@@ -701,42 +1027,53 @@ impl<'e> DecodeBatch<'e> {
                 fast_sim: eng.fast_sim,
                 round_batching: eng.round_batching,
             };
-            // Embedding: lane 0 pays the input-share + Π_PPLN rounds, the
-            // other lanes' independent payloads ride the same flights.
-            let mut x_pis = Vec::with_capacity(work.len());
-            for (li, &(idx, token)) in work.iter().enumerate() {
-                let s = &self.sessions[idx];
+            // Embedding: the first lane overall pays the input-share +
+            // Π_PPLN rounds, every other lane's independent payload rides
+            // the same flights.
+            let mut x_pis: Vec<Vec<_>> = Vec::with_capacity(work.len());
+            let mut first = true;
+            for (wi, (idx, tokens)) in work.iter().enumerate() {
+                let s = &self.sessions[*idx];
                 let b0 = ctx.mpc.net.ledger.bytes_total();
-                x_pis.push(embedding::pp_embedding_at_lane(
-                    &mut ctx,
-                    &eng.pm,
-                    token,
-                    s.pos,
-                    li == 0,
-                    &s.prefix,
-                )?);
-                lane_bytes[li] += ctx.mpc.net.ledger.bytes_total() - b0;
+                let mut xs = Vec::with_capacity(tokens.len());
+                for (j, &t) in tokens.iter().enumerate() {
+                    xs.push(embedding::pp_embedding_at_lane(
+                        &mut ctx,
+                        &eng.pm,
+                        t,
+                        s.pos + j,
+                        first,
+                        &s.prefix,
+                    )?);
+                    first = false;
+                }
+                lane_bytes[wi] += ctx.mpc.net.ledger.bytes_total() - b0;
+                x_pis.push(xs);
             }
-            // Build the protocol lanes: each borrows its session's KV
-            // caches and census prefix, disjoint across sessions.
-            let mut lanes: Vec<StepLane> = Vec::with_capacity(work.len());
+            // Build the protocol lane groups: each borrows its session's
+            // KV caches and census prefix, disjoint across sessions.
+            let mut groups: Vec<StepLaneGroup> = Vec::with_capacity(work.len());
             {
                 let mut x_it = x_pis.into_iter();
                 let mut wi = 0;
                 for (i, s) in self.sessions.iter_mut().enumerate() {
                     if wi < work.len() && work[wi].0 == i {
                         wi += 1;
-                        lanes.push(StepLane {
-                            x_pi: x_it.next().expect("one x per lane"),
+                        let xs = x_it.next().expect("one x set per group");
+                        let pos0 = s.pos;
+                        groups.push(StepLaneGroup {
                             kv: &mut s.kv,
-                            pos: s.pos,
                             prefix: &s.prefix,
-                            bytes: 0,
+                            lanes: xs
+                                .into_iter()
+                                .enumerate()
+                                .map(|(j, x_pi)| SpecLane { x_pi, pos: pos0 + j, bytes: 0 })
+                                .collect(),
                         });
                     }
                 }
             }
-            anyhow::ensure!(lanes.len() == work.len(), "lane work list must be ascending");
+            anyhow::ensure!(groups.len() == work.len(), "lane work list must be ascending");
             let last = eng.pm.layers.len() - 1;
             for (i, pl) in eng.pm.layers[..last].iter().enumerate() {
                 layer::transformer_layer_step_batch(
@@ -745,7 +1082,7 @@ impl<'e> DecodeBatch<'e> {
                     pl,
                     &eng.pi1_sh,
                     &eng.pi1_t_sh,
-                    &mut lanes,
+                    &mut groups,
                     i,
                     None,
                 )?;
@@ -756,7 +1093,7 @@ impl<'e> DecodeBatch<'e> {
                 &eng.pm.layers[last],
                 &eng.pi1_sh,
                 &eng.pi1_t_sh,
-                &mut lanes,
+                &mut groups,
                 last,
                 Some((
                     eng.pm.final_ln_g.as_deref().expect("gpt weights"),
@@ -765,29 +1102,34 @@ impl<'e> DecodeBatch<'e> {
             )?
             .expect("final tail returns the final-LN shares");
             // Communication-free LM head per lane, then the logit
-            // returns: lane 0 pays the single Adaptation round, every
-            // lane's payload pair ships in that flight.
+            // returns: the first lane overall pays the single Adaptation
+            // round, every lane's payload pair ships in that flight.
             let mut logits = Vec::with_capacity(work.len());
-            for (li, h_pi) in h_pis.iter().enumerate() {
+            let mut first = true;
+            for (wi, group_h) in h_pis.iter().enumerate() {
                 let b0 = ctx.mpc.net.ledger.bytes_total();
-                let logits_sh = adaptation::pp_lm_head_gpt2(&mut ctx, &eng.pm, h_pi)?;
-                let out = if li == 0 {
-                    adaptation::return_to_client(ctx.mpc, &logits_sh)?
-                } else {
-                    adaptation::return_to_client_unrounded(ctx.mpc, &logits_sh)?
-                };
-                lane_bytes[li] += ctx.mpc.net.ledger.bytes_total() - b0;
-                logits.push(out);
+                let mut outs = Vec::with_capacity(group_h.len());
+                for h_pi in group_h {
+                    let logits_sh = adaptation::pp_lm_head_gpt2(&mut ctx, &eng.pm, h_pi)?;
+                    outs.push(if first {
+                        adaptation::return_to_client(ctx.mpc, &logits_sh)?
+                    } else {
+                        adaptation::return_to_client_unrounded(ctx.mpc, &logits_sh)?
+                    });
+                    first = false;
+                }
+                lane_bytes[wi] += ctx.mpc.net.ledger.bytes_total() - b0;
+                logits.push(outs);
             }
-            for (li, lane) in lanes.iter().enumerate() {
-                lane_bytes[li] += lane.bytes;
+            for (wi, g) in groups.iter().enumerate() {
+                lane_bytes[wi] += g.lanes.iter().map(|l| l.bytes).sum::<u64>();
             }
             logits
         };
         let step = eng.mpc.net.ledger.clone();
         let step_rounds = step.rounds_total();
-        for ((&(idx, _), bytes), out) in work.iter().zip(&lane_bytes).zip(logits) {
-            let s = &mut self.sessions[idx];
+        for ((idx, tokens), bytes) in work.iter().zip(&lane_bytes) {
+            let s = &mut self.sessions[*idx];
             if decode_phase {
                 s.decode_bytes += bytes;
                 s.decode_rounds += step_rounds;
@@ -798,9 +1140,8 @@ impl<'e> DecodeBatch<'e> {
             }
             s.last_step_bytes = *bytes;
             s.last_step_rounds = step_rounds;
-            s.last_logits = out;
-            s.pos += 1;
+            s.pos += tokens.len();
         }
-        Ok(())
+        Ok(logits)
     }
 }

@@ -1,0 +1,162 @@
+//! Public greedy draft sources for speculative decode.
+//!
+//! Speculative decode (DESIGN.md §Speculative decode) splits each decode
+//! step into a cheap public *draft* phase and one private *verify* flight
+//! chain: a draft source proposes k tokens, the engine absorbs all k as
+//! extra lanes on the batched schedule, and the accept rule keeps the
+//! longest prefix the private model's own greedy choices agree with.
+//!
+//! Both sources here are **public by construction** — CENTAUR's principle
+//! of pushing work outside the SMPC hot path without new assumptions:
+//!
+//! - [`Draft::TinyModel`] runs the plaintext reference forward over the
+//!   emitted prefix. The token stream is already public output (it is
+//!   returned to the client and seen by P1's scheduler), so conditioning a
+//!   public model on it reveals nothing new.
+//! - [`Draft::Ngram`] uses bigram statistics over the emitted prefix
+//!   itself — exactly the data P1 already holds.
+//!
+//! [`Draft::Adversarial`] is a test-only worst case: it proposes a token
+//! greedy decoding can never emit, so every proposal is rejected and the
+//! speculative path degenerates to one accepted (corrected) token per
+//! verify step — the rollback machinery's stress diet.
+
+use crate::data::{greedy_regular_token, NUM_SPECIAL_TOKENS};
+use crate::model::{forward, ModelConfig, ModelWeights, Variant};
+
+/// A public greedy draft source: proposes the next k tokens given the
+/// (public) emitted token history. Proposals are deterministic in the
+/// history, which is what makes speculative output reproducible enough to
+/// pin token-for-token in the parity tests.
+pub enum Draft {
+    /// Plaintext tiny-model forward over the history, greedy, iterated.
+    /// When serving drafts with the same weights the private model uses,
+    /// disagreements come only from fixed-point noise — acceptance is
+    /// near-total and k tokens ride almost every verify step.
+    TinyModel {
+        /// Draft model shape (its `n_ctx` bounds the conditioning window).
+        cfg: ModelConfig,
+        /// Draft model weights (public — e.g. the serving weights).
+        weights: ModelWeights,
+    },
+    /// Bigram most-frequent-successor statistics over the emitted prefix,
+    /// falling back to repeating the last token for unseen contexts. No
+    /// model at all — the cheapest possible draft, useful when no public
+    /// weights are available.
+    Ngram,
+    /// Always proposes token 0 (a special token greedy decoding never
+    /// emits): every proposal is rejected. Test-only worst case.
+    Adversarial,
+}
+
+impl Draft {
+    /// A tiny-model draft from (a copy of) public weights.
+    pub fn tiny(cfg: &ModelConfig, weights: &ModelWeights) -> Draft {
+        Draft::TinyModel { cfg: cfg.clone(), weights: weights.clone() }
+    }
+
+    /// Short display name for metrics and bench tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Draft::TinyModel { .. } => "tiny-model",
+            Draft::Ngram => "ngram",
+            Draft::Adversarial => "adversarial",
+        }
+    }
+
+    /// Propose the next `k` tokens after `history` (prompt + every emitted
+    /// token), greedily and deterministically.
+    pub fn propose(&self, history: &[u32], k: usize) -> Vec<u32> {
+        match self {
+            Draft::TinyModel { cfg, weights } => {
+                let mut ctxt: Vec<u32> = history.to_vec();
+                let mut out = Vec::with_capacity(k);
+                for _ in 0..k {
+                    let lo = ctxt.len().saturating_sub(cfg.n_ctx);
+                    let logits = forward(cfg, weights, &ctxt[lo..], Variant::Exact);
+                    let next = greedy_regular_token(logits.row(logits.rows() - 1));
+                    ctxt.push(next);
+                    out.push(next);
+                }
+                out
+            }
+            Draft::Ngram => {
+                let mut ctxt: Vec<u32> = history.to_vec();
+                let mut out = Vec::with_capacity(k);
+                for _ in 0..k {
+                    let next = bigram_next(&ctxt);
+                    ctxt.push(next);
+                    out.push(next);
+                }
+                out
+            }
+            Draft::Adversarial => vec![0; k],
+        }
+    }
+}
+
+/// Most frequent successor of the last token within `ctxt`, ties resolved
+/// to the smallest token id; repeats the last regular token (or the first
+/// regular id) when the context gives no bigram evidence.
+fn bigram_next(ctxt: &[u32]) -> u32 {
+    let last = match ctxt.last() {
+        Some(&t) => t,
+        None => return NUM_SPECIAL_TOKENS as u32,
+    };
+    let mut counts: std::collections::BTreeMap<u32, u32> = std::collections::BTreeMap::new();
+    for w in ctxt.windows(2) {
+        if w[0] == last && (w[1] as usize) >= NUM_SPECIAL_TOKENS {
+            *counts.entry(w[1]).or_insert(0) += 1;
+        }
+    }
+    match counts.into_iter().max_by_key(|&(t, c)| (c, std::cmp::Reverse(t))) {
+        Some((t, _)) => t,
+        None if (last as usize) >= NUM_SPECIAL_TOKENS => last,
+        None => NUM_SPECIAL_TOKENS as u32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ngram_prefers_most_frequent_successor() {
+        // 5→6 twice, 5→7 once: propose 6 after 5.
+        let hist = vec![5, 6, 5, 7, 5, 6, 5];
+        assert_eq!(Draft::Ngram.propose(&hist, 1), vec![6]);
+    }
+
+    #[test]
+    fn ngram_falls_back_to_repeating_unseen_last_token() {
+        let hist = vec![5, 6, 9];
+        assert_eq!(Draft::Ngram.propose(&hist, 2), vec![9, 9]);
+    }
+
+    #[test]
+    fn ngram_never_proposes_special_tokens() {
+        let hist = vec![0, 0, 0];
+        for t in Draft::Ngram.propose(&hist, 3) {
+            assert!((t as usize) >= NUM_SPECIAL_TOKENS);
+        }
+    }
+
+    #[test]
+    fn adversarial_proposes_unemittable_specials() {
+        assert_eq!(Draft::Adversarial.propose(&[5, 6], 3), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn tiny_model_draft_is_deterministic() {
+        let cfg = ModelConfig::gpt2_tiny();
+        let w = ModelWeights::random(&cfg, 7);
+        let d = Draft::tiny(&cfg, &w);
+        let a = d.propose(&[5, 6, 7], 4);
+        let b = d.propose(&[5, 6, 7], 4);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        for &t in &a {
+            assert!((t as usize) >= NUM_SPECIAL_TOKENS && (t as usize) < cfg.vocab);
+        }
+    }
+}

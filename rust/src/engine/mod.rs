@@ -13,6 +13,7 @@
 //! P1 reconstructs is recorded in [`views::Views`].
 
 pub mod decoder;
+pub mod draft;
 pub mod views;
 
 use crate::model::{ModelConfig, ModelKind, ModelWeights, PermSet, PermutedModel};
@@ -255,6 +256,36 @@ impl CentaurEngine {
         let (setup, prefill, decode) =
             (sess.setup_cost().clone(), sess.prefill_cost().clone(), sess.decode_cost().clone());
         Ok(decoder::GenOutcome { tokens, setup, prefill, decode })
+    }
+
+    /// Speculative incremental generation (DESIGN.md §Speculative decode):
+    /// like [`CentaurEngine::generate_streaming`], but each warm step
+    /// verifies up to `spec_k` tokens — the session's own greedy lead plus
+    /// `spec_k - 1` proposals from the public `draft` — in ONE batched
+    /// flight chain, keeping the longest greedy-agreeing prefix and
+    /// rolling the rest back. The emitted stream is token-for-token what
+    /// plain greedy decode produces; rounds per *accepted* token drop
+    /// toward (flight rounds)/spec_k as acceptance rises. Returns the
+    /// outcome plus the accept/reject bookkeeping.
+    pub fn generate_speculative(
+        &mut self,
+        prompt: &[u32],
+        steps: usize,
+        draft: &draft::Draft,
+        spec_k: usize,
+    ) -> Result<(decoder::GenOutcome, decoder::SpeculativeState)> {
+        anyhow::ensure!(spec_k >= 1, "spec_k must be >= 1");
+        anyhow::ensure!(!prompt.is_empty() && prompt.len() + steps <= self.cfg.n_ctx, "prompt+steps must fit n_ctx");
+        let mut sess = decoder::DecoderSession::new(self, prompt)?;
+        let mut tokens = Vec::with_capacity(steps);
+        while tokens.len() < steps {
+            let k = spec_k.min(steps - tokens.len());
+            tokens.extend(sess.step_speculative(draft, k)?);
+        }
+        let spec = *sess.speculative();
+        let (setup, prefill, decode) =
+            (sess.setup_cost().clone(), sess.prefill_cost().clone(), sess.decode_cost().clone());
+        Ok((decoder::GenOutcome { tokens, setup, prefill, decode }, spec))
     }
 
     /// The pre-KV-cache generation path: re-run the full padded forward

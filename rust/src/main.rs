@@ -7,6 +7,7 @@
 //!                [--offline-prefill] [--pool-depth 2]
 //! centaur serve  --weights gpt2-tiny-wikitext103 --gen-steps 8 --requests 4
 //!                [--offline-prefill] [--no-decode-corr] [--no-round-batching]  # streaming incremental decode
+//!                [--spec-k 4]  # speculative multi-token verify per flight chain
 //! centaur compare --model bert-tiny [--full]
 //! centaur artifacts-check
 //! ```
@@ -161,6 +162,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Batched-opening decode schedule on by default; `--no-round-batching`
     // runs the sequential per-opening schedule (round-budget baseline).
     sc.round_batching = !args.flag("no-round-batching");
+    // Speculative decode width: `--spec-k 4` verifies up to 4 draft
+    // tokens per flight chain (tiny-model draft over the serving
+    // weights), output token-identical to plain greedy.
+    sc.spec_k = args.opt_usize("spec-k", 1);
+    anyhow::ensure!(sc.spec_k >= 1, "--spec-k must be >= 1");
+    anyhow::ensure!(
+        sc.spec_k == 1 || sc.round_batching,
+        "--spec-k > 1 needs the batched decode schedule (drop --no-round-batching)"
+    );
     let n_req = args.opt_usize("requests", 16);
 
     // Streaming generation mode: each request decodes `--gen-steps` tokens

@@ -161,6 +161,7 @@ impl TripleShape {
 /// exactly one otherwise), a fresh mask sharing `[A]` and the correlation
 /// `[C]` against the session mask `B` (`C = A·B`, `B_col·A`, or
 /// `A·B_blockᵀ` depending on the family).
+#[derive(Clone)]
 pub struct FixedUse {
     /// `([A], [C])` per varying-operand block.
     pub blocks: Vec<(Share, Share)>,
@@ -180,6 +181,12 @@ pub struct FixedOperandCorrelation {
     pub mask: Share,
     /// Pre-dealt per-use bundles, consumed strictly in order.
     uses: VecDeque<FixedUse>,
+    /// Consumed bundles, retained in consumption order so speculative
+    /// rollback can restore them ([`FixedOperandCorrelation::rewind_uses_to`]):
+    /// a rolled-back use must come back as the *same* bundle, or the
+    /// re-verified position would silently switch masks and break the
+    /// share-for-share rollback identity the tests pin.
+    consumed: Vec<FixedUse>,
     /// Bundles dealt in total (for exhaustion diagnostics).
     dealt: usize,
     /// Uses consumed so far (use index of the next [`FixedUse`]).
@@ -203,7 +210,48 @@ impl FixedOperandCorrelation {
         };
         let idx = self.used;
         self.used += 1;
+        self.consumed.push(u.clone());
         Ok((idx, u))
+    }
+
+    /// Rewind the use counter to `target_used`, restoring the consumed
+    /// bundles in order so the next [`FixedOperandCorrelation::take_use`]
+    /// returns exactly the bundle that use index was originally dealt.
+    ///
+    /// Speculative decode calls this when rejected draft positions are
+    /// rolled back: the position-keyed families (`FixedAppendLeft`,
+    /// `FixedScoresGrown`) *must* rewind or the next append would find its
+    /// use index ahead of its position, and rewinding all families keeps
+    /// `uses_left` equal to a session that never ran the rejected lanes.
+    /// Reusing a restored mask for the corrected row reveals only the
+    /// masked *difference* of the two candidate rows — see DESIGN.md
+    /// §Speculative decode for why that stays inside the π-permuted
+    /// protection class.
+    pub fn rewind_uses_to(&mut self, target_used: usize) -> crate::Result<()> {
+        anyhow::ensure!(
+            target_used <= self.used,
+            "cannot rewind forward: {} uses consumed, target {target_used}",
+            self.used
+        );
+        while self.used > target_used {
+            let u = self.consumed.pop().expect("one retained bundle per consumed use");
+            self.uses.push_front(u);
+            self.used -= 1;
+        }
+        Ok(())
+    }
+
+    /// Rewind the masked-opening counter (row-grown family only): after a
+    /// rollback to `rows` written rows, the next
+    /// [`super::Mpc::open_fixed_grown_row`] re-opens row `rows`.
+    pub fn rewind_opened_to(&mut self, rows: u64) -> crate::Result<()> {
+        anyhow::ensure!(
+            rows <= self.opened,
+            "cannot rewind openings forward: {} opened, target {rows}",
+            self.opened
+        );
+        self.opened = rows;
+        Ok(())
     }
 
     /// Per-use bundles still available.
@@ -344,7 +392,15 @@ fn generate_fixed(rng: &mut Rng, shape: TripleShape) -> FixedOperandCorrelation 
         }
         _ => unreachable!("generate_fixed called for a per-use triple kind"),
     };
-    FixedOperandCorrelation { shape, mask, uses, dealt: shape.uses, used: 0, opened: 0 }
+    FixedOperandCorrelation {
+        shape,
+        mask,
+        uses,
+        consumed: Vec::new(),
+        dealt: shape.uses,
+        used: 0,
+        opened: 0,
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -453,6 +509,13 @@ impl TriplePool {
         let mut inner = self.inner.lock().unwrap();
         let sq = inner.shapes.entry(shape).or_default();
         sq.demand = sq.demand.saturating_sub(count);
+    }
+
+    /// Outstanding registered demand for `shape` (0 for unknown shapes).
+    /// The speculative rollback tests assert this balances to zero after
+    /// session eviction releases the per-lane demand it registered.
+    pub fn demand_for(&self, shape: TripleShape) -> u64 {
+        self.inner.lock().unwrap().shapes.get(&shape).map_or(0, |sq| sq.demand)
     }
 
     /// Generate one entry for the most depleted known shape (outside the
@@ -840,6 +903,56 @@ mod tests {
                 assert_eq!(ring::matmul(&a.reconstruct(), &bt), c.reconstruct());
             }
         }
+    }
+
+    #[test]
+    fn fixed_use_rewind_restores_identical_bundles_in_order() {
+        let mut d = Dealer::new(Rng::new(96));
+        let mut sc = d.fixed_correlation(TripleShape::fixed_scores(2, 6, 8, 6));
+        let mut seen = Vec::new();
+        for i in 0..4 {
+            let (idx, u) = sc.take_use().unwrap();
+            assert_eq!(idx, i);
+            seen.push(u);
+        }
+        sc.opened = 4;
+        assert_eq!(sc.uses_left(), 2);
+        // Roll positions 2..4 back, then replay: the restored bundles must
+        // be the very ones consumed, with matching indices and openings.
+        sc.rewind_uses_to(2).unwrap();
+        sc.rewind_opened_to(2).unwrap();
+        assert_eq!(sc.uses_left(), 4);
+        assert_eq!(sc.openings(), 2);
+        for i in 2..6 {
+            let (idx, u) = sc.take_use().unwrap();
+            assert_eq!(idx, i);
+            if i < 4 {
+                for (b, (a0, c0)) in u.blocks.iter().zip(&seen[i].blocks) {
+                    assert_eq!(&b.0, a0);
+                    assert_eq!(&b.1, c0);
+                }
+            }
+        }
+        assert!(sc.take_use().is_err(), "dealt count still bounds total uses");
+        // Rewinding forward (or past what was opened) is an error.
+        assert!(sc.rewind_uses_to(7).is_err());
+        assert!(sc.rewind_opened_to(9).is_err());
+        // Full rewind-to-zero restores the entire session bundle.
+        sc.rewind_uses_to(0).unwrap();
+        assert_eq!(sc.uses_left(), 6);
+    }
+
+    #[test]
+    fn demand_for_reports_outstanding_registrations() {
+        let pool = TriplePool::new(97, 1);
+        let shape = TripleShape::matmul(1, 16, 8);
+        assert_eq!(pool.demand_for(shape), 0);
+        pool.register_demand(shape, 6);
+        assert_eq!(pool.demand_for(shape), 6);
+        pool.release_demand(shape, 4);
+        assert_eq!(pool.demand_for(shape), 2);
+        pool.release_demand(shape, 5);
+        assert_eq!(pool.demand_for(shape), 0, "release clamps at zero");
     }
 
     #[test]

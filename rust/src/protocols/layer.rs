@@ -208,6 +208,12 @@ pub struct LayerKvCache {
     k: Share,
     v_tilde: Share,
     len: usize,
+    /// Per-append `[Ṽ]` update deltas in append order. `[Ṽ]` is *dense* —
+    /// every outer-product append touches all `n_ctx · d` entries — so
+    /// speculative rollback cannot zero rows; it subtracts the retained
+    /// deltas in reverse (exact in the ring) instead
+    /// ([`LayerKvCache::truncate_to`]).
+    upds: Vec<Share>,
     /// Session-scoped fixed-operand correlations (`None` = the plain
     /// per-step Beaver path, kept as the pre-correlation baseline).
     corr: Option<KvCorrelations>,
@@ -274,6 +280,7 @@ impl LayerKvCache {
             k: Share { s0: RingTensor::zeros(n_ctx, d), s1: RingTensor::zeros(n_ctx, d) },
             v_tilde: Share { s0: RingTensor::zeros(n_ctx, d), s1: RingTensor::zeros(n_ctx, d) },
             len: 0,
+            upds: Vec::new(),
             corr: None,
         }
     }
@@ -288,6 +295,7 @@ impl LayerKvCache {
             k: Share { s0: RingTensor::zeros(0, d), s1: RingTensor::zeros(0, d) },
             v_tilde: Share { s0: RingTensor::zeros(n_ctx, d), s1: RingTensor::zeros(n_ctx, d) },
             len: 0,
+            upds: Vec::new(),
             corr: Some(corr),
         }
     }
@@ -339,6 +347,7 @@ impl LayerKvCache {
             let upd = ctx.matmul_fixed_lhs_col(&c.f_pi1_t, v_new, &mut c.append, pos, OpClass::Linear)?;
             ctx.mpc.net.round(OpClass::Linear, 1);
             self.v_tilde = ctx.mpc.add(&self.v_tilde, &upd);
+            self.upds.push(upd);
         } else {
             self.k.s0.row_mut(pos).copy_from_slice(k_new.s0.row(0));
             self.k.s1.row_mut(pos).copy_from_slice(k_new.s1.row(0));
@@ -346,9 +355,76 @@ impl LayerKvCache {
             let col = pi1_t_sh.col_block(pos, pos + 1);
             let upd = ctx.matmul(&col, v_new, OpClass::Linear);
             self.v_tilde = ctx.mpc.add(&self.v_tilde, &upd);
+            self.upds.push(upd);
         }
         self.len = pos + 1;
         Ok(())
+    }
+
+    /// Roll the cache back so exactly `pos` tokens remain — the reject
+    /// half of speculative decode (DESIGN.md §Speculative decode).
+    ///
+    /// Everything an append did is undone exactly, locally, with zero
+    /// communication:
+    /// * `[Ṽ]` — the retained per-append outer-product deltas are
+    ///   subtracted in reverse (exact mod 2⁶⁴, since ring addition is
+    ///   invertible);
+    /// * `[K]` — the plain path re-zeroes the rolled-back rows; the
+    ///   correlated path re-zeroes the public masked rows `f_k` and
+    ///   rewinds the row-opening counter so the corrected row re-opens at
+    ///   the same position;
+    /// * fixed-operand correlations — the consumed per-use bundles of all
+    ///   three families are restored
+    ///   ([`FixedOperandCorrelation::rewind_uses_to`]; every absorb
+    ///   consumes exactly one use per family, so `used == len` going in),
+    ///   and the matching pool demand is handed back by the caller.
+    pub fn truncate_to(&mut self, pos: usize) -> Result<()> {
+        anyhow::ensure!(pos <= self.len, "cannot truncate forward (len {}, target {pos})", self.len);
+        while self.len > pos {
+            let upd = self.upds.pop().expect("one retained delta per append");
+            self.v_tilde = Share {
+                s0: crate::ring::sub(&self.v_tilde.s0, &upd.s0),
+                s1: crate::ring::sub(&self.v_tilde.s1, &upd.s1),
+            };
+            self.len -= 1;
+            let row = self.len;
+            if let Some(c) = self.corr.as_mut() {
+                c.f_k.row_mut(row).fill(0);
+            } else {
+                self.k.s0.row_mut(row).fill(0);
+                self.k.s1.row_mut(row).fill(0);
+            }
+        }
+        if let Some(c) = self.corr.as_mut() {
+            c.ppp.rewind_uses_to(pos)?;
+            c.append.rewind_uses_to(pos)?;
+            c.scores.rewind_uses_to(pos)?;
+            c.scores.rewind_opened_to(pos as u64)?;
+        }
+        Ok(())
+    }
+
+    /// FNV-1a digest over the cache's entire share state (`[K]`/`f_k`,
+    /// `[Ṽ]`, length) — lets the rollback property tests assert
+    /// share-for-share state identity without exposing the raw cache
+    /// sharings in the public API.
+    pub fn state_digest(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        let mut eat = |t: &RingTensor| {
+            for &v in t.data() {
+                for b in v.to_le_bytes() {
+                    h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+                }
+            }
+        };
+        eat(&self.k.s0);
+        eat(&self.k.s1);
+        eat(&self.v_tilde.s0);
+        eat(&self.v_tilde.s1);
+        if let Some(c) = self.corr.as_ref() {
+            eat(&c.f_k);
+        }
+        h ^ self.len as u64
     }
 }
 
@@ -406,37 +482,73 @@ pub fn decode_pool_shapes_batched(
     steps: u64,
     sessions: u64,
 ) -> Vec<(TripleShape, u64)> {
+    decode_pool_shapes_speculative(cfg, correlations, steps, sessions, 1)
+}
+
+/// Speculative-aware pool demand: each of `sessions` sessions runs up to
+/// `steps` verify steps of `spec_k` lanes each. Every lane consumes the
+/// per-step *non-fixed* triples (the `[Ṽ]` value products — and, without
+/// correlations, the whole plain per-step profile), so those shapes scale
+/// by `spec_k`. The fixed-operand correlation bundles do **not** scale:
+/// they are dealt once per session for the full `n_ctx` capacity, and
+/// rollback rewinds their uses, so net consumption stays bounded by
+/// positions regardless of how many rejected lanes were speculated.
+pub fn decode_pool_shapes_speculative(
+    cfg: &ModelConfig,
+    correlations: bool,
+    steps: u64,
+    sessions: u64,
+    spec_k: u64,
+) -> Vec<(TripleShape, u64)> {
     decode_pool_shapes(cfg, correlations, steps)
         .into_iter()
-        .map(|(s, c)| (s, c * sessions.max(1)))
+        .map(|(s, c)| {
+            let lanes = if s.is_fixed() { 1 } else { spec_k.max(1) };
+            (s, c * lanes * sessions.max(1))
+        })
         .collect()
 }
 
-/// One session's slot in a session-batched decode step (the batch axis of
-/// DESIGN.md §Continuous batching). A lane is a `(session, position)`
-/// pair: it carries the session's current activation row, its private
-/// per-layer KV caches (with their fixed-operand correlations), and the
-/// sequence position the row lives at — so a future speculative decoder
-/// can put several lanes of one session at successive positions into the
-/// same batch without touching this type.
-pub struct StepLane<'a> {
+/// One `(session, position)` lane inside a [`StepLaneGroup`]: the
+/// activation row being advanced and the sequence position it lives at.
+pub struct SpecLane {
     /// The lane's current `(1, d)` activation `[xπ]`, updated in place by
     /// each batched layer step.
     pub x_pi: Share,
-    /// The lane's per-layer KV caches (one entry per model layer) —
-    /// per-session state, never shared across lanes.
-    pub kv: &'a mut Vec<LayerKvCache>,
     /// The sequence position this lane's row occupies (ragged across the
     /// batch: every lane attends over its own prefix length).
     pub pos: usize,
-    /// View-label prefix identifying the session in P1's census (`""` for
-    /// the first session, `"s{id} "` after — keeps the B=1 census
-    /// bit-identical to the solo path).
-    pub prefix: &'a str,
     /// Online bytes attributed to this lane so far this step (every
     /// byte-moving op in the step is per-lane, so the lanes' sums equal
     /// the whole-step ledger).
     pub bytes: u64,
+}
+
+/// One session's slot in a session-batched decode step (the batch axis of
+/// DESIGN.md §Continuous batching, generalized for speculative decode):
+/// the session's private per-layer KV caches plus one or more lanes at
+/// **successive positions** (`pos`, `pos+1`, …). Continuous batching uses
+/// B single-lane groups; speculative decode puts a session's k draft
+/// verify positions into one group, and the two compose freely (B groups
+/// × k lanes, all in one flight schedule).
+///
+/// Within a group the lanes must be ordered by ascending position: lane
+/// `j`'s score products read the masked K rows lanes `0..j` just wrote
+/// (valid flight-sharing — every opening is an independent mask
+/// difference formed from local state).
+pub struct StepLaneGroup<'a> {
+    /// The session's per-layer KV caches (one entry per model layer) —
+    /// per-session state, never shared across groups, shared by the
+    /// group's own lanes.
+    pub kv: &'a mut Vec<LayerKvCache>,
+    /// View-label prefix identifying the session in P1's census (`""` for
+    /// the first session, `"s{id} "` after — keeps the B=1 census
+    /// bit-identical to the solo path). Lanes are told apart by their
+    /// `pos{p}` label suffix, exactly like successive solo steps.
+    pub prefix: &'a str,
+    /// The group's lanes at successive positions (`lanes[j].pos ==
+    /// lanes[0].pos + j`). A plain batched decode step has exactly one.
+    pub lanes: Vec<SpecLane>,
 }
 
 /// Session-batched decode step: one transformer layer advanced for B
@@ -465,179 +577,234 @@ pub fn transformer_layer_step_batch(
     pl: &PermLayer,
     pi1_sh: &Share,
     pi1_t_sh: &Share,
-    lanes: &mut [StepLane],
+    groups: &mut [StepLaneGroup],
     layer_idx: usize,
     final_ln: Option<(&[f32], &[f32])>,
-) -> Result<Option<Vec<Share>>> {
+) -> Result<Option<Vec<Vec<Share>>>> {
     anyhow::ensure!(ctx.round_batching, "session batching needs the batched decode schedule");
-    anyhow::ensure!(!lanes.is_empty(), "empty decode batch");
+    anyhow::ensure!(!groups.is_empty(), "empty decode batch");
+    for g in groups.iter() {
+        anyhow::ensure!(!g.lanes.is_empty(), "empty lane group");
+        for (j, lane) in g.lanes.iter().enumerate() {
+            anyhow::ensure!(
+                lane.pos == g.lanes[0].pos + j,
+                "group lanes must sit at successive positions"
+            );
+        }
+    }
     let dh = cfg.dh();
     let scale = fixed::encode(1.0 / (dh as f64).sqrt());
 
     // 1. q/k/v rows per lane (Π_ScalMul + bias, 0 comm).
-    let mut qkv = Vec::with_capacity(lanes.len());
-    for lane in lanes.iter() {
-        let q = {
-            let s = ctx.scalmul_nt(&lane.x_pi, &pl.wq, OpClass::Linear);
-            ctx.mpc.add_plain_row(&s, &pl.bq)
-        };
-        let k = {
-            let s = ctx.scalmul_nt(&lane.x_pi, &pl.wk, OpClass::Linear);
-            ctx.mpc.add_plain_row(&s, &pl.bk)
-        };
-        let v = {
-            let s = ctx.scalmul_nt(&lane.x_pi, &pl.wv, OpClass::Linear);
-            ctx.mpc.add_plain_row(&s, &pl.bv)
-        };
-        qkv.push((q, k, v));
+    let mut qkv: Vec<Vec<(Share, Share, Share)>> = Vec::with_capacity(groups.len());
+    for g in groups.iter() {
+        let mut rows = Vec::with_capacity(g.lanes.len());
+        for lane in &g.lanes {
+            let q = {
+                let s = ctx.scalmul_nt(&lane.x_pi, &pl.wq, OpClass::Linear);
+                ctx.mpc.add_plain_row(&s, &pl.bq)
+            };
+            let k = {
+                let s = ctx.scalmul_nt(&lane.x_pi, &pl.wk, OpClass::Linear);
+                ctx.mpc.add_plain_row(&s, &pl.bk)
+            };
+            let v = {
+                let s = ctx.scalmul_nt(&lane.x_pi, &pl.wv, OpClass::Linear);
+                ctx.mpc.add_plain_row(&s, &pl.bv)
+            };
+            rows.push((q, k, v));
+        }
+        qkv.push(rows);
     }
 
     // 2+3. Every lane's cache append and score products share ONE Linear
     // flight: each lane's openings are mask differences over its own
-    // session state, independent of every other lane's.
+    // session state, independent of every other lane's. Within a group the
+    // lanes run in ascending position order, so lane j's score products
+    // read the masked K rows lanes 0..j just wrote (the batch defers only
+    // rounds — values are computed eagerly). Each lane also snapshots the
+    // group's `[Ṽ]` right after its own append: its stage-5 value products
+    // must see exactly its own prefix, not the dense updates of the
+    // group's later (possibly rejected) lanes.
     ctx.mpc.begin_batch();
-    let mut o1_head_sets = Vec::with_capacity(lanes.len());
-    for (lane, (q, k, v)) in lanes.iter_mut().zip(&qkv) {
-        let b0 = ctx.mpc.net.ledger.bytes_total();
-        let kvc = &mut lane.kv[layer_idx];
-        let n = kvc.capacity();
-        kvc.append(ctx, pi1_t_sh, k, v, lane.pos)?;
-        let o1_heads = if let Some(c) = kvc.corr.as_mut() {
-            ctx.matmul_fixed_grown_scores(q, &c.f_k, &mut c.scores, lane.pos, n, OpClass::Linear)?
-        } else {
-            let kt: Vec<Share> =
-                (0..cfg.h).map(|h| kvc.k.col_block(h * dh, (h + 1) * dh).transpose()).collect();
-            let qh: Vec<Share> = (0..cfg.h).map(|h| q.col_block(h * dh, (h + 1) * dh)).collect();
-            let pairs: Vec<(&Share, &Share)> = qh.iter().zip(kt.iter()).collect();
-            ctx.matmul_batch(&pairs, OpClass::Linear)
-        };
-        lane.bytes += ctx.mpc.net.ledger.bytes_total() - b0;
-        o1_head_sets.push(o1_heads);
+    let mut o1_head_sets: Vec<Vec<Vec<Share>>> = Vec::with_capacity(groups.len());
+    let mut v_snaps: Vec<Vec<Option<Share>>> = Vec::with_capacity(groups.len());
+    for (g, rows) in groups.iter_mut().zip(&qkv) {
+        let mut head_sets = Vec::with_capacity(g.lanes.len());
+        let mut snaps = Vec::with_capacity(g.lanes.len());
+        let n_lanes = g.lanes.len();
+        for (j, (lane, (q, k, v))) in g.lanes.iter_mut().zip(rows).enumerate() {
+            let b0 = ctx.mpc.net.ledger.bytes_total();
+            let kvc = &mut g.kv[layer_idx];
+            let n = kvc.capacity();
+            kvc.append(ctx, pi1_t_sh, k, v, lane.pos)?;
+            let o1_heads = if let Some(c) = kvc.corr.as_mut() {
+                ctx.matmul_fixed_grown_scores(q, &c.f_k, &mut c.scores, lane.pos, n, OpClass::Linear)?
+            } else {
+                let kt: Vec<Share> =
+                    (0..cfg.h).map(|h| kvc.k.col_block(h * dh, (h + 1) * dh).transpose()).collect();
+                let qh: Vec<Share> = (0..cfg.h).map(|h| q.col_block(h * dh, (h + 1) * dh)).collect();
+                let pairs: Vec<(&Share, &Share)> = qh.iter().zip(kt.iter()).collect();
+                ctx.matmul_batch(&pairs, OpClass::Linear)
+            };
+            // Only non-final lanes need the clone — the last lane's live
+            // [Ṽ] *is* its snapshot, which keeps single-lane groups (and
+            // so the pinned B=1 parity) byte- and allocation-identical.
+            snaps.push(if j + 1 < n_lanes { Some(kvc.v_tilde.clone()) } else { None });
+            lane.bytes += ctx.mpc.net.ledger.bytes_total() - b0;
+            head_sets.push(o1_heads);
+        }
+        o1_head_sets.push(head_sets);
+        v_snaps.push(snaps);
     }
     ctx.mpc.flush_batch(OpClass::Linear);
-    let mut o1s = Vec::with_capacity(lanes.len());
-    for (lane, heads) in lanes.iter().zip(&o1_head_sets) {
-        let n = lane.kv[layer_idx].capacity();
-        let mut o1 = stack_rows(heads); // (h, n)
-        o1 = ctx.mpc.scale_fx(&o1, scale);
-        o1 = ctx.mpc.add_plain(&o1, &causal_mask_row_fx(cfg.h, n, lane.pos));
-        o1s.push(o1);
+    let mut o1s: Vec<Vec<Share>> = Vec::with_capacity(groups.len());
+    for (g, head_sets) in groups.iter().zip(&o1_head_sets) {
+        let n = g.kv[layer_idx].capacity();
+        let mut group_o1s = Vec::with_capacity(g.lanes.len());
+        for (lane, heads) in g.lanes.iter().zip(head_sets) {
+            let mut o1 = stack_rows(heads); // (h, n)
+            o1 = ctx.mpc.scale_fx(&o1, scale);
+            o1 = ctx.mpc.add_plain(&o1, &causal_mask_row_fx(cfg.h, n, lane.pos));
+            group_o1s.push(o1);
+        }
+        o1s.push(group_o1s);
     }
 
     // 4a. Π_PPP per lane, one shared Linear flight (each lane's opening
     // depends only on its own score results; at B=1 the flush charges the
     // same single round the solo schedule charges inside the protocol).
     ctx.mpc.begin_batch();
-    let mut o1_p1s = Vec::with_capacity(lanes.len());
-    for (lane, o1) in lanes.iter_mut().zip(&o1s) {
-        let b0 = ctx.mpc.net.ledger.bytes_total();
-        let kvc = &mut lane.kv[layer_idx];
-        let o1_p1 = if let Some(c) = kvc.corr.as_mut() {
-            ctx.ppp_cols_fixed(o1, &c.f_pi1, &mut c.ppp, OpClass::Linear)?
-        } else {
-            ctx.matmul(o1, pi1_sh, OpClass::Linear)
-        };
-        lane.bytes += ctx.mpc.net.ledger.bytes_total() - b0;
-        o1_p1s.push(o1_p1);
+    let mut o1_p1s: Vec<Vec<Share>> = Vec::with_capacity(groups.len());
+    for (g, group_o1s) in groups.iter_mut().zip(&o1s) {
+        let mut outs = Vec::with_capacity(g.lanes.len());
+        for (lane, o1) in g.lanes.iter_mut().zip(group_o1s) {
+            let b0 = ctx.mpc.net.ledger.bytes_total();
+            let kvc = &mut g.kv[layer_idx];
+            let o1_p1 = if let Some(c) = kvc.corr.as_mut() {
+                ctx.ppp_cols_fixed(o1, &c.f_pi1, &mut c.ppp, OpClass::Linear)?
+            } else {
+                ctx.matmul(o1, pi1_sh, OpClass::Linear)
+            };
+            lane.bytes += ctx.mpc.net.ledger.bytes_total() - b0;
+            outs.push(o1_p1);
+        }
+        o1_p1s.push(outs);
     }
     ctx.mpc.flush_batch(OpClass::Linear);
 
-    // 4b. Π_PPSM: lane 0 pays the two softmax rounds; the other lanes'
-    // conversions ride the same two flights (independent `(h, n)` rows,
-    // each observed by P1 under its own session label).
-    let mut o2s = Vec::with_capacity(lanes.len());
-    for (li, (lane, o1_p1)) in lanes.iter_mut().zip(&o1_p1s).enumerate() {
-        let label = format!("{}decode O1pi1 layer{layer_idx} pos{}", lane.prefix, lane.pos);
-        let b0 = ctx.mpc.net.ledger.bytes_total();
-        let o2 = if li == 0 {
-            pp_softmax(ctx.mpc, ctx.backend, ctx.views, o1_p1, &label)?
-        } else {
-            pp_softmax_unrounded(ctx.mpc, ctx.backend, ctx.views, o1_p1, &label)?
-        };
-        lane.bytes += ctx.mpc.net.ledger.bytes_total() - b0;
-        o2s.push(o2);
+    // 4b. Π_PPSM: the first lane pays the two softmax rounds; every other
+    // lane's conversion rides the same two flights (independent `(h, n)`
+    // rows, each observed by P1 under its own session label and position).
+    let mut o2s: Vec<Vec<Share>> = Vec::with_capacity(groups.len());
+    let mut first = true;
+    for (g, group_o1_p1s) in groups.iter_mut().zip(&o1_p1s) {
+        let mut outs = Vec::with_capacity(g.lanes.len());
+        for (lane, o1_p1) in g.lanes.iter_mut().zip(group_o1_p1s) {
+            let label = format!("{}decode O1pi1 layer{layer_idx} pos{}", g.prefix, lane.pos);
+            let b0 = ctx.mpc.net.ledger.bytes_total();
+            let o2 = if first {
+                pp_softmax(ctx.mpc, ctx.backend, ctx.views, o1_p1, &label)?
+            } else {
+                pp_softmax_unrounded(ctx.mpc, ctx.backend, ctx.views, o1_p1, &label)?
+            };
+            first = false;
+            lane.bytes += ctx.mpc.net.ledger.bytes_total() - b0;
+            outs.push(o2);
+        }
+        o2s.push(outs);
     }
 
     // 5-7. Value products + output projection + residual per lane, one
     // coalesced Linear flight (the batched twin of the fused tail's first
-    // flush).
+    // flush). Each lane attends over its own `[Ṽ]` snapshot.
     ctx.mpc.begin_batch();
-    let mut res1s = Vec::with_capacity(lanes.len());
-    for (lane, o2_p1) in lanes.iter_mut().zip(&o2s) {
-        let b0 = ctx.mpc.net.ledger.bytes_total();
-        let kvc = &lane.kv[layer_idx];
-        let o2h: Vec<Share> = (0..cfg.h).map(|h| o2_p1.row_block(h, h + 1)).collect();
-        let vth: Vec<Share> =
-            (0..cfg.h).map(|h| kvc.v_tilde.col_block(h * dh, (h + 1) * dh)).collect();
-        let pairs3: Vec<(&Share, &Share)> = o2h.iter().zip(vth.iter()).collect();
-        let o3_heads = ctx.matmul_batch(&pairs3, OpClass::Linear);
-        let o3 = Share::concat_cols(&o3_heads); // (1, d)
-        let o4_pi = {
-            let s = ctx.scalmul_nt(&o3, &pl.wo, OpClass::Linear);
-            ctx.mpc.add_plain_row(&s, &pl.bo)
-        };
-        let res1 = ctx.mpc.add(&o4_pi, &lane.x_pi);
-        lane.bytes += ctx.mpc.net.ledger.bytes_total() - b0;
-        res1s.push(res1);
+    let mut res1s: Vec<Vec<Share>> = Vec::with_capacity(groups.len());
+    for ((g, group_o2s), snaps) in groups.iter_mut().zip(&o2s).zip(&v_snaps) {
+        let mut outs = Vec::with_capacity(g.lanes.len());
+        for ((lane, o2_p1), snap) in g.lanes.iter_mut().zip(group_o2s).zip(snaps) {
+            let b0 = ctx.mpc.net.ledger.bytes_total();
+            let v_tilde = snap.as_ref().unwrap_or(&g.kv[layer_idx].v_tilde);
+            let o2h: Vec<Share> = (0..cfg.h).map(|h| o2_p1.row_block(h, h + 1)).collect();
+            let vth: Vec<Share> =
+                (0..cfg.h).map(|h| v_tilde.col_block(h * dh, (h + 1) * dh)).collect();
+            let pairs3: Vec<(&Share, &Share)> = o2h.iter().zip(vth.iter()).collect();
+            let o3_heads = ctx.matmul_batch(&pairs3, OpClass::Linear);
+            let o3 = Share::concat_cols(&o3_heads); // (1, d)
+            let o4_pi = {
+                let s = ctx.scalmul_nt(&o3, &pl.wo, OpClass::Linear);
+                ctx.mpc.add_plain_row(&s, &pl.bo)
+            };
+            let res1 = ctx.mpc.add(&o4_pi, &lane.x_pi);
+            lane.bytes += ctx.mpc.net.ledger.bytes_total() - b0;
+            outs.push(res1);
+        }
+        res1s.push(outs);
     }
     ctx.mpc.flush_batch(OpClass::Linear);
 
     // 8-12. P1-plaintext FFN segment per lane — all lanes' output reshares
     // coalesce into ONE LayerNorm round (the batched twin of the fused
     // tail's closing flight), with the optional final LN fused in.
-    let mut h_out = final_ln.map(|_| Vec::with_capacity(lanes.len()));
-    for (lane, res1) in lanes.iter_mut().zip(&res1s) {
-        let b0 = ctx.mpc.net.ledger.bytes_total();
-        let l1_pi = pp_layernorm_unrounded(
-            ctx.mpc,
-            ctx.backend,
-            ctx.views,
-            res1,
-            &pl.ln1_g,
-            &pl.ln1_b,
-            OpClass::LayerNorm,
-            &format!("{}decode O4+X pi layer{layer_idx} pos{}", lane.prefix, lane.pos),
-        )?;
-        let o5_pi2 = {
-            let s = ctx.scalmul_nt(&l1_pi, &pl.w1, OpClass::Linear);
-            ctx.mpc.add_plain_row(&s, &pl.b1)
-        };
-        let g_pi2 = pp_gelu_unrounded(
-            ctx.mpc,
-            ctx.backend,
-            ctx.views,
-            &o5_pi2,
-            &format!("{}decode O5pi2 layer{layer_idx} pos{}", lane.prefix, lane.pos),
-        )?;
-        let o6_pi = {
-            let s = ctx.scalmul_nt(&g_pi2, &pl.w2, OpClass::Linear);
-            ctx.mpc.add_plain_row(&s, &pl.b2)
-        };
-        let res2 = ctx.mpc.add(&o6_pi, &l1_pi);
-        let l2_pi = pp_layernorm_unrounded(
-            ctx.mpc,
-            ctx.backend,
-            ctx.views,
-            &res2,
-            &pl.ln2_g,
-            &pl.ln2_b,
-            OpClass::LayerNorm,
-            &format!("{}decode O6+L1 pi layer{layer_idx} pos{}", lane.prefix, lane.pos),
-        )?;
-        if let (Some(hs), Some((g, b))) = (h_out.as_mut(), final_ln) {
-            hs.push(pp_layernorm_unrounded(
+    let mut h_out = final_ln.map(|_| Vec::with_capacity(groups.len()));
+    for (g, group_res1s) in groups.iter_mut().zip(&res1s) {
+        let mut group_h = final_ln.map(|_| Vec::with_capacity(g.lanes.len()));
+        for (lane, res1) in g.lanes.iter_mut().zip(group_res1s) {
+            let b0 = ctx.mpc.net.ledger.bytes_total();
+            let l1_pi = pp_layernorm_unrounded(
                 ctx.mpc,
                 ctx.backend,
                 ctx.views,
-                &l2_pi,
-                g,
-                b,
-                OpClass::Adaptation,
-                &format!("{}final LN pi", lane.prefix),
-            )?);
+                res1,
+                &pl.ln1_g,
+                &pl.ln1_b,
+                OpClass::LayerNorm,
+                &format!("{}decode O4+X pi layer{layer_idx} pos{}", g.prefix, lane.pos),
+            )?;
+            let o5_pi2 = {
+                let s = ctx.scalmul_nt(&l1_pi, &pl.w1, OpClass::Linear);
+                ctx.mpc.add_plain_row(&s, &pl.b1)
+            };
+            let g_pi2 = pp_gelu_unrounded(
+                ctx.mpc,
+                ctx.backend,
+                ctx.views,
+                &o5_pi2,
+                &format!("{}decode O5pi2 layer{layer_idx} pos{}", g.prefix, lane.pos),
+            )?;
+            let o6_pi = {
+                let s = ctx.scalmul_nt(&g_pi2, &pl.w2, OpClass::Linear);
+                ctx.mpc.add_plain_row(&s, &pl.b2)
+            };
+            let res2 = ctx.mpc.add(&o6_pi, &l1_pi);
+            let l2_pi = pp_layernorm_unrounded(
+                ctx.mpc,
+                ctx.backend,
+                ctx.views,
+                &res2,
+                &pl.ln2_g,
+                &pl.ln2_b,
+                OpClass::LayerNorm,
+                &format!("{}decode O6+L1 pi layer{layer_idx} pos{}", g.prefix, lane.pos),
+            )?;
+            if let (Some(hs), Some((gamma, beta))) = (group_h.as_mut(), final_ln) {
+                hs.push(pp_layernorm_unrounded(
+                    ctx.mpc,
+                    ctx.backend,
+                    ctx.views,
+                    &l2_pi,
+                    gamma,
+                    beta,
+                    OpClass::Adaptation,
+                    &format!("{}final LN pi", g.prefix),
+                )?);
+            }
+            lane.x_pi = l2_pi;
+            lane.bytes += ctx.mpc.net.ledger.bytes_total() - b0;
         }
-        lane.x_pi = l2_pi;
-        lane.bytes += ctx.mpc.net.ledger.bytes_total() - b0;
+        if let (Some(all), Some(gh)) = (h_out.as_mut(), group_h) {
+            all.push(gh);
+        }
     }
     ctx.mpc.net.round(OpClass::LayerNorm, 1);
     Ok(h_out)
@@ -1475,5 +1642,178 @@ mod tests {
         assert_eq!(s.rows(), 4);
         assert_eq!(s.row_block(0, 2).reconstruct(), a.reconstruct());
         assert_eq!(s.row_block(2, 4).reconstruct(), b.reconstruct());
+    }
+
+    /// Rolling back speculative rows must restore the cache and the
+    /// correlation state exactly: share digest, `uses_left`, and opening
+    /// counters all return to their pre-speculation values, and decoding
+    /// continues through the rewound positions on the restored bundles.
+    #[test]
+    fn truncate_to_restores_cache_digest_and_correlation_uses() {
+        let mut cfg = ModelConfig::gpt2_tiny();
+        cfg.layers = 1;
+        let w = ModelWeights::random(&cfg, 191);
+        let mut rng = Rng::new(192);
+        let perms = PermSet::random(&cfg, &mut rng);
+        let pm = PermutedModel::build(&cfg, &w, perms.clone());
+        let n = cfg.n_ctx;
+        let x = FloatTensor::from_fn(n, cfg.d, |r, c| ((r * 19 + c * 3) % 17) as f32 * 0.05 - 0.4);
+        let x_pi = perms.pi.apply_cols(&x);
+
+        let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 193);
+        let mut backend = NativeBackend::new();
+        let mut views = Views::new(false);
+        let pi1_sh = ppp::share_perm(&mut mpc, &perms.pi1, OpClass::Linear);
+        let pi1_t_sh = ppp::share_perm_t(&mut mpc, &perms.pi1, OpClass::Linear);
+        let corr = deal_kv_correlations(&mut mpc, &cfg, &pi1_sh, &pi1_t_sh).unwrap();
+        let mut kv = LayerKvCache::with_correlations(n, cfg.d, corr);
+        let run_step =
+            |mpc: &mut Mpc, backend: &mut NativeBackend, views: &mut Views, kv: &mut LayerKvCache, t| {
+                let row = FloatTensor::from_vec(1, cfg.d, x_pi.row(t).to_vec());
+                let row_sh = mpc.share_local(&fixed::encode_tensor(&row));
+                let mut ctx =
+                    ProtoCtx { mpc, backend, views, fast_sim: false, round_batching: true };
+                transformer_layer_step(
+                    &mut ctx, &cfg, &pm.layers[0], &pi1_sh, &pi1_t_sh, &row_sh, kv, t, 0,
+                )
+                .unwrap();
+            };
+        for t in 0..3 {
+            run_step(&mut mpc, &mut backend, &mut views, &mut kv, t);
+        }
+        let digest3 = kv.state_digest();
+        let (u3, o3) = {
+            let c = kv.correlations().unwrap();
+            (
+                (c.ppp.uses_left(), c.append.uses_left(), c.scores.uses_left()),
+                (c.ppp.openings(), c.append.openings(), c.scores.openings()),
+            )
+        };
+        // Two speculative rows, both rejected.
+        for t in 3..5 {
+            run_step(&mut mpc, &mut backend, &mut views, &mut kv, t);
+        }
+        assert_ne!(kv.state_digest(), digest3, "speculative rows must change the cache state");
+        kv.truncate_to(3).unwrap();
+        assert_eq!(kv.len(), 3);
+        assert_eq!(kv.state_digest(), digest3, "rollback must restore the share state exactly");
+        let c = kv.correlations().unwrap();
+        assert_eq!((c.ppp.uses_left(), c.append.uses_left(), c.scores.uses_left()), u3);
+        assert_eq!((c.ppp.openings(), c.append.openings(), c.scores.openings()), o3);
+        // Forward truncation is refused; truncating to the current length
+        // is a no-op.
+        assert!(kv.truncate_to(4).is_err());
+        kv.truncate_to(3).unwrap();
+        assert_eq!(kv.state_digest(), digest3);
+        // The restored bundles serve the corrected rows without exhausting.
+        for t in 3..5 {
+            run_step(&mut mpc, &mut backend, &mut views, &mut kv, t);
+        }
+        assert_eq!(kv.len(), 5);
+    }
+
+    /// k verify lanes through ONE batched flight chain must compute the
+    /// same per-position outputs as k sequential single-token steps (the
+    /// speculative correctness core: per-lane causal masking + per-lane
+    /// `[Ṽ]` snapshots) at the round cost of ONE step, regardless of k.
+    #[test]
+    fn multi_lane_group_matches_sequential_steps_at_single_step_rounds() {
+        let mut cfg = ModelConfig::gpt2_tiny();
+        cfg.layers = 1;
+        let w = ModelWeights::random(&cfg, 181);
+        let mut rng = Rng::new(182);
+        let perms = PermSet::random(&cfg, &mut rng);
+        let pm = PermutedModel::build(&cfg, &w, perms.clone());
+        let n = cfg.n_ctx;
+        let x = FloatTensor::from_fn(n, cfg.d, |r, c| ((r * 7 + c * 5) % 21) as f32 * 0.06 - 0.55);
+        let x_pi = perms.pi.apply_cols(&x);
+        let k = 3usize;
+
+        // Sequential reference: k single-token steps.
+        let seq = {
+            let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 183);
+            let mut backend = NativeBackend::new();
+            let mut views = Views::new(false);
+            let pi1_sh = ppp::share_perm(&mut mpc, &perms.pi1, OpClass::Linear);
+            let pi1_t_sh = ppp::share_perm_t(&mut mpc, &perms.pi1, OpClass::Linear);
+            let corr = deal_kv_correlations(&mut mpc, &cfg, &pi1_sh, &pi1_t_sh).unwrap();
+            let mut kv = LayerKvCache::with_correlations(n, cfg.d, corr);
+            let mut outs = Vec::new();
+            for t in 0..k {
+                let row = FloatTensor::from_vec(1, cfg.d, x_pi.row(t).to_vec());
+                let row_sh = mpc.share_local(&fixed::encode_tensor(&row));
+                let mut ctx = ProtoCtx {
+                    mpc: &mut mpc,
+                    backend: &mut backend,
+                    views: &mut views,
+                    fast_sim: false,
+                    round_batching: true,
+                };
+                let out = transformer_layer_step(
+                    &mut ctx, &cfg, &pm.layers[0], &pi1_sh, &pi1_t_sh, &row_sh, &mut kv, t, 0,
+                )
+                .unwrap();
+                outs.push(fixed::decode_tensor(&out.reconstruct()));
+            }
+            outs
+        };
+
+        // Speculative: the same k tokens as lanes of ONE batch call.
+        let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 183);
+        let mut backend = NativeBackend::new();
+        let mut views = Views::new(false);
+        let pi1_sh = ppp::share_perm(&mut mpc, &perms.pi1, OpClass::Linear);
+        let pi1_t_sh = ppp::share_perm_t(&mut mpc, &perms.pi1, OpClass::Linear);
+        let corr = deal_kv_correlations(&mut mpc, &cfg, &pi1_sh, &pi1_t_sh).unwrap();
+        let mut kv = vec![LayerKvCache::with_correlations(n, cfg.d, corr)];
+        let lanes: Vec<SpecLane> = (0..k)
+            .map(|t| {
+                let row = FloatTensor::from_vec(1, cfg.d, x_pi.row(t).to_vec());
+                SpecLane { x_pi: mpc.share_local(&fixed::encode_tensor(&row)), pos: t, bytes: 0 }
+            })
+            .collect();
+        let before_r = mpc.net.ledger.rounds_total();
+        let mut groups = [StepLaneGroup { kv: &mut kv, prefix: "", lanes }];
+        {
+            let mut ctx = ProtoCtx {
+                mpc: &mut mpc,
+                backend: &mut backend,
+                views: &mut views,
+                fast_sim: false,
+                round_batching: true,
+            };
+            transformer_layer_step_batch(
+                &mut ctx, &cfg, &pm.layers[0], &pi1_sh, &pi1_t_sh, &mut groups, 0, None,
+            )
+            .unwrap();
+        }
+        let batch_rounds = mpc.net.ledger.rounds_total() - before_r;
+        assert_eq!(batch_rounds, 6, "k lanes must ride one 6-round layer flight chain");
+        for (t, want) in seq.iter().enumerate() {
+            let got = fixed::decode_tensor(&groups[0].lanes[t].x_pi.reconstruct());
+            let diff = got.max_abs_diff(want);
+            assert!(diff < 0.05, "lane {t} diverges from its sequential step: diff {diff}");
+        }
+        assert_eq!(groups[0].kv[0].len(), k, "every lane's row must be appended");
+    }
+
+    #[test]
+    fn speculative_pool_shapes_scale_verify_lanes_not_session_bundles() {
+        let cfg = ModelConfig::gpt2_tiny();
+        for correlations in [true, false] {
+            let base = decode_pool_shapes(&cfg, correlations, 6);
+            let spec = decode_pool_shapes_speculative(&cfg, correlations, 6, 2, 4);
+            assert_eq!(base.len(), spec.len(), "speculation must not invent or drop shape keys");
+            for ((s, c), (ss, sc)) in base.iter().zip(spec.iter()) {
+                assert_eq!(s, ss, "shape keys are per-model");
+                let lanes = if s.is_fixed() { 1 } else { 4 };
+                assert_eq!(*sc, c * lanes * 2, "sessions × verify lanes, session bundles exempt");
+            }
+        }
+        // spec_k = 1 degenerates to the batched profile exactly.
+        assert_eq!(
+            decode_pool_shapes_speculative(&cfg, true, 6, 3, 1),
+            decode_pool_shapes_batched(&cfg, true, 6, 3)
+        );
     }
 }

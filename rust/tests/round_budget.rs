@@ -132,6 +132,58 @@ fn batching_cuts_rounds_40pct_with_identical_bytes() {
     assert_eq!(bat_bytes, seq_bytes, "round batching must not change per-class bytes");
 }
 
+/// ISSUE 7 golden row: a speculative verify step rides ONE batched flight
+/// chain — exactly the [`GOLDEN_BATCHED`] per-class round table — no
+/// matter how many verify lanes it carries. k scales bytes (each lane
+/// ships its own payloads), never rounds, which is the whole speculative
+/// win: rounds per *accepted* token amortize to `16 / accepted-per-step`.
+#[test]
+fn speculative_verify_step_charges_one_flight_chain_regardless_of_k() {
+    use centaur::engine::draft::Draft;
+
+    let cfg = ModelConfig::gpt2_tiny();
+    let w = ModelWeights::random(&cfg, 0x20F);
+    for k in [1usize, 2, 4, 8] {
+        // Adversarial draft: every verify step keeps exactly one token, so
+        // the per-step ledger is fully deterministic in k.
+        let mut eng = CentaurEngine::with_backend(
+            &cfg,
+            &w,
+            Box::new(NativeBackend::new()),
+            EngineOptions { seed: 0x210, ..Default::default() },
+        )
+        .unwrap();
+        let mut sess = DecoderSession::new(&mut eng, &[7, 11, 13]).unwrap();
+        let emitted = sess.step_speculative(&Draft::Adversarial, k).unwrap();
+        assert_eq!(emitted.len(), 1, "the adversarial draft degenerates to one token per step");
+        assert_eq!(
+            sess.decode_cost().rounds_by_class(),
+            GOLDEN_BATCHED,
+            "k={k}: a verify step must charge exactly one batched flight chain"
+        );
+        // A second verify step doubles the budget — still k-independent.
+        sess.step_speculative(&Draft::Adversarial, k).unwrap();
+        assert_eq!(sess.decode_cost().rounds_total(), 2 * golden_total(&GOLDEN_BATCHED), "k={k}");
+    }
+
+    // With a real draft the chain is still one golden row, and the
+    // amortized metric divides it by whatever the step accepted.
+    let mut eng = CentaurEngine::with_backend(
+        &cfg,
+        &w,
+        Box::new(NativeBackend::new()),
+        EngineOptions { seed: 0x210, ..Default::default() },
+    )
+    .unwrap();
+    let mut sess = DecoderSession::new(&mut eng, &[7, 11, 13]).unwrap();
+    let emitted = sess.step_speculative(&Draft::tiny(&cfg, &w), 4).unwrap();
+    assert!(!emitted.is_empty());
+    assert_eq!(sess.decode_cost().rounds_by_class(), GOLDEN_BATCHED);
+    let amortized = sess.decode_rounds_per_accepted_token();
+    let want = golden_total(&GOLDEN_BATCHED) as f64 / emitted.len() as f64;
+    assert!((amortized - want).abs() < 1e-12, "rounds/accepted {amortized} != 16/{}", emitted.len());
+}
+
 /// Per-step rounds are position-independent: prefill absorbs and warm
 /// steps share one budget, so a single pinned step is representative.
 #[test]

@@ -400,6 +400,107 @@ fn batched_sessions_keep_per_session_censuses_disjoint_and_solo_shaped() {
     }
 }
 
+/// ISSUE 7 census: a speculative session's P1 view census is exactly the
+/// union of the solo-step censuses plus the rejected verify lanes'
+/// records — a rejected lane re-absorbs its position after rollback, so
+/// its `2 + 4·layers` records appear once more than in the plain session
+/// — with no new label, tag, or shape class, and never a KV-cache-shaped
+/// tensor. The draft conditions only on already-emitted (public) tokens,
+/// so the only thing speculation adds to P1's view is *which positions
+/// repeat* — the accepted-prefix lengths, public like the token count
+/// itself (DESIGN.md §Speculative decode).
+#[test]
+fn speculative_census_is_solo_union_plus_pinned_verify_lane_records() {
+    use centaur::engine::draft::Draft;
+    use std::collections::HashMap;
+
+    let cfg = ModelConfig::gpt2_tiny();
+    let w = ModelWeights::random(&cfg, 0xC1);
+    let prompt = [7u32, 11, 13];
+    let steps = 3usize;
+    let mk = || {
+        CentaurEngine::with_backend(
+            &cfg,
+            &w,
+            Box::new(NativeBackend::new()),
+            EngineOptions { record_views: true, seed: 0xC2, ..Default::default() },
+        )
+        .unwrap()
+    };
+
+    // Plain solo baseline: prompt + one absorb per emitted token.
+    let mut plain_eng = mk();
+    plain_eng.generate(&prompt, steps).unwrap();
+    let per_absorb = 2 + 4 * cfg.layers;
+    assert_eq!(plain_eng.views.p1.len(), (prompt.len() + steps) * per_absorb);
+
+    // Speculative worst case, k=2 with the always-rejected draft: the
+    // verify steps absorb positions (3,4), (4,5), (5) — the rejected
+    // lanes re-open pos 4 and pos 5 once each after their rollback.
+    let mut spec_eng = mk();
+    let (out, spec) = spec_eng.generate_speculative(&prompt, steps, &Draft::Adversarial, 2).unwrap();
+    assert_eq!(out.tokens.len(), steps);
+    assert_eq!(spec.accepted, 0);
+    assert_eq!(spec.verify_steps, steps as u64);
+    assert!(spec_eng.leaks().is_empty(), "leaks: {:?}", spec_eng.leaks());
+    assert_eq!(spec_eng.views.p1.len(), (prompt.len() + 5) * per_absorb);
+
+    // Shape/tag discipline unchanged by speculation: no KV-cache-shaped
+    // observation, single-token rows only, every record π-tagged and
+    // structurally identical to the solo record of the same label.
+    let plain_shapes: HashMap<&str, _> = plain_eng
+        .views
+        .p1
+        .iter()
+        .map(|v| (v.label.as_str(), (v.tag, v.rows, v.cols)))
+        .collect();
+    for v in &spec_eng.views.p1 {
+        assert!(
+            (v.rows, v.cols) != (cfg.n_ctx, cfg.d),
+            "view '{}' has the KV-cache shape {}x{}",
+            v.label,
+            v.rows,
+            v.cols
+        );
+        assert!(v.rows == 1 || v.rows == cfg.h, "view '{}' is not a single-token row", v.label);
+        assert_ne!(v.tag, PermTag::None, "view '{}' untagged", v.label);
+        let &(tag, rows, cols) = plain_shapes
+            .get(v.label.as_str())
+            .unwrap_or_else(|| panic!("view '{}' is not in any solo-step census", v.label));
+        assert_eq!((v.tag, v.rows, v.cols), (tag, rows, cols), "view '{}' reclassified", v.label);
+    }
+
+    // Census arithmetic: the speculative multiset is the solo multiset
+    // plus exactly the two rejected lanes' per-absorb records.
+    let census = |eng: &CentaurEngine| {
+        let mut m: HashMap<String, usize> = HashMap::new();
+        for v in &eng.views.p1 {
+            *m.entry(v.label.clone()).or_default() += 1;
+        }
+        m
+    };
+    let (plain_census, spec_census) = (census(&plain_eng), census(&spec_eng));
+    let mut extra = 0usize;
+    for (label, &n) in &spec_census {
+        let base = plain_census.get(label).copied().unwrap_or(0);
+        assert!(n == base || n == base + 1, "view '{label}' repeated beyond one rejected lane");
+        if n == base + 1 {
+            assert!(
+                label.contains("pos4") || label.contains("pos5"),
+                "extra record '{label}' is not a rejected verify lane"
+            );
+            extra += 1;
+        }
+    }
+    assert_eq!(extra, 2 * per_absorb, "exactly the two rejected lanes' records are extra");
+    for (label, &n) in &plain_census {
+        assert!(
+            spec_census.get(label).copied().unwrap_or(0) >= n,
+            "solo view '{label}' missing from the speculative census"
+        );
+    }
+}
+
 #[test]
 fn permonly_leak_detector_fires() {
     let cfg = ModelConfig::gpt2_tiny();

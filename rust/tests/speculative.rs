@@ -1,0 +1,332 @@
+//! Speculative-decode suite (DESIGN.md §Speculative decode).
+//!
+//! Two properties carry the whole feature:
+//!
+//! 1. **Greedy parity** — the emitted stream is token-for-token what plain
+//!    incremental greedy decode produces, for every draft source, every
+//!    `spec_k`, and every network profile. The accept rule only ever keeps
+//!    draft tokens the private model's own greedy choice agrees with, so
+//!    speculation changes *when* tokens are computed, never *which*.
+//!    Weight seeds are screened for a fully decisive plaintext rollout
+//!    (top-1/top-2 logit margin ≥ 30× the fixed-point noise) so the pins
+//!    are exact token equalities, not margin-gated comparisons.
+//! 2. **Rollback exactness** — rejecting speculative rows must leave the
+//!    session in the share-for-share state of a twin that never appended
+//!    them: cache digests, correlation `uses_left`, opening counters, and
+//!    every subsequent step's output shares are bit-identical, and the
+//!    `TriplePool` demand a speculative session registered balances to
+//!    zero when eviction hands the unconsumed lane demand back.
+
+use centaur::data::{greedy_regular_token, NUM_SPECIAL_TOKENS};
+use centaur::engine::draft::Draft;
+use centaur::engine::views::Views;
+use centaur::engine::{CentaurEngine, EngineOptions};
+use centaur::fixed;
+use centaur::model::{plaintext, ModelConfig, ModelWeights, PermSet, PermutedModel, Variant};
+use centaur::mpc::{Mpc, Share, TriplePool, TripleShape};
+use centaur::net::{NetSim, NetworkProfile, OpClass};
+use centaur::protocols::layer::{
+    self, deal_kv_correlations, transformer_layer_step, LayerKvCache, ProtoCtx,
+};
+use centaur::protocols::ppp;
+use centaur::runtime::NativeBackend;
+use centaur::tensor::FloatTensor;
+use centaur::util::prop::check;
+use centaur::util::rng::Rng;
+
+/// Fixed-point noise on tiny-model logits is ~1e-3; 30× that margin makes
+/// every protocol run (plain, speculative, rolled-back re-steps — each a
+/// different noise realization) resolve the same argmax as plaintext, so
+/// the parity assertions below are exact, not margin-gated.
+const DECISIVE_MARGIN: f32 = 0.03;
+
+fn mk_engine(cfg: &ModelConfig, w: &ModelWeights, profile: NetworkProfile, seed: u64) -> CentaurEngine {
+    CentaurEngine::with_backend(
+        cfg,
+        w,
+        Box::new(NativeBackend::new()),
+        EngineOptions { profile, seed, ..Default::default() },
+    )
+    .unwrap()
+}
+
+/// Search weight seeds from `base` for one whose plaintext greedy rollout
+/// is decisive at every step; returns the weights and the pinned rollout.
+/// Deterministic: the same `base` always lands on the same seed.
+fn decisive_weights(cfg: &ModelConfig, prompt: &[u32], steps: usize, base: u64) -> (ModelWeights, Vec<u32>) {
+    'seed: for off in 0..64u64 {
+        let w = ModelWeights::random(cfg, base + off);
+        let mut seq = prompt.to_vec();
+        let mut toks = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let mut padded = seq.clone();
+            padded.resize(cfg.n_ctx, 0);
+            let logits = plaintext::forward(cfg, &w, &padded, Variant::Exact);
+            let row = logits.row(seq.len() - 1);
+            let (mut best, mut second) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+            for &v in row.iter().skip(NUM_SPECIAL_TOKENS) {
+                if v > best {
+                    second = best;
+                    best = v;
+                } else if v > second {
+                    second = v;
+                }
+            }
+            if best - second < DECISIVE_MARGIN {
+                continue 'seed;
+            }
+            let tok = greedy_regular_token(row);
+            toks.push(tok);
+            seq.push(tok);
+        }
+        return (w, toks);
+    }
+    panic!("no weight seed with a fully decisive {steps}-step rollout in {base}..{}", base + 64);
+}
+
+/// The tentpole pin: across 3 decisive weight draws × {lan, wan3} ×
+/// k ∈ {1, 2, 4, 8} × both serving draft sources, the speculative stream
+/// equals the plain incremental greedy stream token for token — including
+/// the degenerate k=1 schedule, which must also charge the plain path's
+/// exact decode ledger (it runs the identical single-lane flights).
+#[test]
+fn speculative_stream_is_token_identical_to_plain_greedy() {
+    let cfg = ModelConfig::gpt2_tiny();
+    let prompt: Vec<u32> = vec![7, 11, 13, 17];
+    let steps = 5usize;
+    for base in [300u64, 400, 500] {
+        let (w, rollout) = decisive_weights(&cfg, &prompt, steps, base);
+        let mut plain_e = mk_engine(&cfg, &w, NetworkProfile::lan(), base ^ 0xA);
+        let plain = plain_e.generate_streaming(&prompt, steps, &mut |_, _, _| true).unwrap();
+        assert_eq!(plain.tokens, rollout, "decisive rollout must pin the plain protocol stream");
+        assert!(plain_e.leaks().is_empty());
+
+        for pname in ["lan", "wan3"] {
+            let profile = NetworkProfile::by_name(pname).unwrap();
+            for k in [1usize, 2, 4, 8] {
+                for draft in [Draft::tiny(&cfg, &w), Draft::Ngram] {
+                    let mut e = mk_engine(&cfg, &w, profile, base ^ 0xA);
+                    let (out, spec) = e.generate_speculative(&prompt, steps, &draft, k).unwrap();
+                    assert_eq!(
+                        out.tokens,
+                        plain.tokens,
+                        "weights {base}/{pname}/k={k}/{}: speculative stream diverged from plain greedy",
+                        draft.name()
+                    );
+                    assert!(e.leaks().is_empty(), "speculative decode must stay leak-free");
+                    assert!(spec.accepted <= spec.proposed, "cannot accept more than proposed");
+                    assert!(spec.verify_steps <= steps as u64, "one verify step yields >=1 token");
+                    if k == 1 {
+                        // Degenerate schedule: no proposals ever made, and
+                        // the single-lane flights are the plain path —
+                        // byte- and round-identical decode ledger.
+                        assert_eq!(spec.proposed, 0);
+                        assert_eq!(spec.verify_steps, steps as u64);
+                        assert_eq!(out.decode.bytes_total(), plain.decode.bytes_total());
+                        assert_eq!(out.decode.rounds_total(), plain.decode.rounds_total());
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The always-rejected worst case: an adversarial draft proposes a token
+/// greedy decode can never emit, so every verify step rolls its whole
+/// speculative tail back and keeps exactly one corrected token — the
+/// stream still matches plain greedy, and the round bill degrades to the
+/// plain schedule (one 16-round flight chain per token), never below it.
+#[test]
+fn adversarial_draft_rolls_back_every_proposal_with_exact_parity() {
+    let cfg = ModelConfig::gpt2_tiny();
+    let prompt: Vec<u32> = vec![9, 23, 6];
+    let steps = 4usize;
+    let (w, rollout) = decisive_weights(&cfg, &prompt, steps, 700);
+    let mut plain_e = mk_engine(&cfg, &w, NetworkProfile::lan(), 701);
+    let plain = plain_e.generate_streaming(&prompt, steps, &mut |_, _, _| true).unwrap();
+    assert_eq!(plain.tokens, rollout);
+
+    let mut e = mk_engine(&cfg, &w, NetworkProfile::lan(), 701);
+    let (out, spec) = e.generate_speculative(&prompt, steps, &Draft::Adversarial, 4).unwrap();
+    assert_eq!(out.tokens, plain.tokens, "all-reject speculation must still match plain greedy");
+    assert!(e.leaks().is_empty());
+    assert_eq!(spec.accepted, 0, "the adversarial draft's proposals are never accepted");
+    assert_eq!(spec.verify_steps, steps as u64, "one corrected token per verify step");
+    // Lane budgets shrink with the remaining step budget (4,3,2,1 lanes),
+    // so the draft was asked for 3+2+1+0 proposals.
+    assert_eq!(spec.proposed, 6);
+    assert_eq!(spec.acceptance_rate(), 0.0);
+    // Every verify step is one flight chain at plain-step rounds: with
+    // nothing accepted the round bill equals the plain schedule exactly.
+    assert_eq!(out.decode.rounds_total(), plain.decode.rounds_total());
+}
+
+/// One full `transformer_layer_step` against the caches of a given stack;
+/// returns the decoded output row's shares for bit-comparison.
+#[allow(clippy::too_many_arguments)]
+fn full_step(
+    mpc: &mut Mpc,
+    backend: &mut NativeBackend,
+    views: &mut Views,
+    cfg: &ModelConfig,
+    pm: &PermutedModel,
+    pi1_sh: &Share,
+    pi1_t_sh: &Share,
+    kv: &mut LayerKvCache,
+    x_pi: &FloatTensor,
+    t: usize,
+) -> (Vec<u64>, Vec<u64>) {
+    let row = FloatTensor::from_vec(1, cfg.d, x_pi.row(t).to_vec());
+    let row_sh = mpc.share_local(&fixed::encode_tensor(&row));
+    let mut ctx = ProtoCtx { mpc, backend, views, fast_sim: false, round_batching: true };
+    let out =
+        transformer_layer_step(&mut ctx, cfg, &pm.layers[0], pi1_sh, pi1_t_sh, &row_sh, kv, t, 0)
+            .unwrap();
+    (out.s0.data().to_vec(), out.s1.data().to_vec())
+}
+
+/// Rollback vs a never-appended twin, under randomized
+/// (step^a, append^r, truncate, step^b) schedules: two stacks with the
+/// same seeds run `a` real steps; stack A then appends `r` speculative
+/// rows (the correlated append path is deterministic — it consumes
+/// correlation bundles, not fresh randomness) and rolls them back, stack
+/// B never sees them. Cache digests, correlation `uses_left`, opening
+/// counters, and all `b` subsequent step outputs must be share-for-share
+/// identical — rollback is invisible to the rest of the session.
+#[test]
+fn rollback_matches_never_appended_twin_share_for_share() {
+    check("rollback == never-appended twin", 4, |g| {
+        let mut cfg = ModelConfig::gpt2_tiny();
+        cfg.layers = 1;
+        let seed = 0x5BEC ^ (g.case as u64).wrapping_mul(0x9E37);
+        let w = ModelWeights::random(&cfg, seed);
+        let mut prng = Rng::new(seed ^ 1);
+        let perms = PermSet::random(&cfg, &mut prng);
+        let pm = PermutedModel::build(&cfg, &w, perms.clone());
+        let n = cfg.n_ctx;
+        let a = 1 + g.below(3); // committed prefix steps
+        let r = 1 + g.below(3); // speculative rows, all rejected
+        let b = 1 + g.below(2); // post-rollback steps
+        let x = FloatTensor::from_fn(n, cfg.d, |row, col| {
+            ((row * 13 + col * 7 + g.case * 3) % 23) as f32 * 0.04 - 0.4
+        });
+        let x_pi = perms.pi.apply_cols(&x);
+
+        // Two identical stacks (same mpc seed => same share masks, same
+        // dealer stream) with per-layer correlated caches.
+        let mut stacks = Vec::new();
+        for _ in 0..2 {
+            let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), seed ^ 2);
+            let backend = NativeBackend::new();
+            let views = Views::new(false);
+            let pi1_sh = ppp::share_perm(&mut mpc, &perms.pi1, OpClass::Linear);
+            let pi1_t_sh = ppp::share_perm_t(&mut mpc, &perms.pi1, OpClass::Linear);
+            let corr = deal_kv_correlations(&mut mpc, &cfg, &pi1_sh, &pi1_t_sh).unwrap();
+            let kv = LayerKvCache::with_correlations(n, cfg.d, corr);
+            stacks.push((mpc, backend, views, pi1_sh, pi1_t_sh, kv));
+        }
+
+        // Committed prefix: identical on both stacks.
+        for t in 0..a {
+            for (mpc, backend, views, pi1_sh, pi1_t_sh, kv) in stacks.iter_mut() {
+                full_step(mpc, backend, views, &cfg, &pm, pi1_sh, pi1_t_sh, kv, &x_pi, t);
+            }
+        }
+
+        // Speculative rows: both stacks *share* the rows (keeping the mask
+        // PRGs in lockstep — sharing is client-side), but only stack A
+        // appends them and rolls back.
+        for j in 0..r {
+            let krow = FloatTensor::from_vec(1, cfg.d, x_pi.row(a + j).to_vec());
+            let vrow = FloatTensor::from_vec(1, cfg.d, x_pi.row((a + j + 1) % n).to_vec());
+            for (i, (mpc, backend, views, _, pi1_t_sh, kv)) in stacks.iter_mut().enumerate() {
+                let k_sh = mpc.share_local(&fixed::encode_tensor(&krow));
+                let v_sh = mpc.share_local(&fixed::encode_tensor(&vrow));
+                if i == 0 {
+                    let mut ctx = ProtoCtx {
+                        mpc,
+                        backend,
+                        views,
+                        fast_sim: false,
+                        round_batching: true,
+                    };
+                    kv.append(&mut ctx, pi1_t_sh, &k_sh, &v_sh, a + j).unwrap();
+                }
+            }
+        }
+        assert_eq!(stacks[0].5.len(), a + r);
+        stacks[0].5.truncate_to(a).unwrap();
+
+        // Share-for-share state identity: digest + correlation counters.
+        assert_eq!(
+            stacks[0].5.state_digest(),
+            stacks[1].5.state_digest(),
+            "case {}: rollback must restore the exact twin cache state (a={a} r={r})",
+            g.case
+        );
+        let snap = |kv: &LayerKvCache| {
+            let c = kv.correlations().unwrap();
+            (
+                c.ppp.uses_left(),
+                c.append.uses_left(),
+                c.scores.uses_left(),
+                c.ppp.openings(),
+                c.append.openings(),
+                c.scores.openings(),
+            )
+        };
+        assert_eq!(snap(&stacks[0].5), snap(&stacks[1].5), "correlation counters must match the twin");
+
+        // Every subsequent step must be bit-identical: rollback restored
+        // the same consumed bundles, and appends drew no fresh randomness.
+        for t in a..a + b {
+            let mut outs = Vec::new();
+            for (mpc, backend, views, pi1_sh, pi1_t_sh, kv) in stacks.iter_mut() {
+                outs.push(full_step(mpc, backend, views, &cfg, &pm, pi1_sh, pi1_t_sh, kv, &x_pi, t));
+            }
+            assert_eq!(outs[0], outs[1], "case {}: step {t} shares diverged after rollback", g.case);
+        }
+        assert_eq!(stacks[0].5.state_digest(), stacks[1].5.state_digest());
+    });
+}
+
+/// Demand accounting closes the speculative loop: a session registers
+/// lane-scaled per-step value-triple demand
+/// ([`layer::decode_pool_shapes_speculative`]); eviction hands back
+/// exactly the unconsumed share, so an untouched session balances to zero
+/// while the fixed correlation bundles (dealt at admission) stay spent.
+#[test]
+fn evicted_speculative_session_pool_demand_balances_to_zero() {
+    let cfg = ModelConfig::gpt2_tiny();
+    let (steps, spec_k) = (6u64, 4u64);
+    let pool = TriplePool::new(1, 2);
+    let shapes = layer::decode_pool_shapes_speculative(&cfg, true, steps, 1, spec_k);
+    for &(shape, count) in &shapes {
+        pool.register_demand(shape, count);
+    }
+    let value_shape = TripleShape::matmul(1, cfg.n_ctx, cfg.dh());
+    let per_step_lane = cfg.layers as u64 * cfg.h as u64;
+    assert_eq!(
+        pool.demand_for(value_shape),
+        per_step_lane * steps * spec_k,
+        "value-triple demand must scale with the verify lanes"
+    );
+
+    // Eviction before any step ran: all steps unconsumed, lane-scaled —
+    // the same arithmetic the coordinator's release path applies.
+    pool.release_demand(value_shape, per_step_lane * steps * spec_k);
+    assert_eq!(pool.demand_for(value_shape), 0, "demand must balance to zero after eviction");
+    for &(shape, count) in shapes.iter().filter(|(s, _)| s.is_fixed()) {
+        assert_eq!(
+            pool.demand_for(shape),
+            count,
+            "correlation bundles are dealt at admission and stay registered"
+        );
+    }
+
+    // Partial consumption: 2 of 6 steps ran, eviction releases the other
+    // 4 — exactly the consumed share remains registered.
+    pool.register_demand(value_shape, per_step_lane * steps * spec_k);
+    pool.release_demand(value_shape, per_step_lane * (steps - 2) * spec_k);
+    assert_eq!(pool.demand_for(value_shape), per_step_lane * 2 * spec_k);
+}
