@@ -7,7 +7,7 @@ use centaur::coordinator::{Coordinator, MetricsSnapshot, ServerConfig, StreamEve
 use centaur::model::{ModelConfig, ModelWeights};
 use centaur::net::NetworkProfile;
 use centaur::util::bench::Bencher;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Serve `n_req` sequential requests; returns the final metrics snapshot
 /// (per-request latency lives in its p50/p95).
@@ -53,7 +53,70 @@ fn serve_batched_decode(
     coord.shutdown()
 }
 
+/// Serve `sessions` concurrent generate streams with the offline phase
+/// provisioned for exactly that mix (synchronous prefill + background
+/// [`centaur::mpc::PoolService`]); returns the final snapshot plus the
+/// measured server-start time — probe inference and the synchronous pool
+/// fill, i.e. the batched shard-refill path (full per-shape deficit under
+/// two lock trips instead of two per triple).
+fn serve_offline_streams(sessions: usize, steps: usize) -> (MetricsSnapshot, Duration) {
+    let cfg = ModelConfig::gpt2_tiny();
+    let weights = ModelWeights::random(&cfg, 9);
+    let mut sc = ServerConfig::new(cfg, weights);
+    sc.framework = FrameworkKind::Centaur;
+    sc.max_batch = sessions;
+    sc.linger = Duration::from_millis(1);
+    sc.offline_prefill = true;
+    sc.pool_depth = 2;
+    sc.decode_prefill_steps = 3 + steps; // 3-token prompt + generated steps
+    sc.decode_prefill_sessions = sessions;
+    let t0 = Instant::now();
+    let coord = Coordinator::start(sc).unwrap();
+    let started = t0.elapsed();
+    let rxs: Vec<_> = (0..sessions as u32)
+        .map(|i| coord.submit_generate(vec![5 + i, 9, 13 + i], steps))
+        .collect();
+    for rx in rxs {
+        loop {
+            match rx.recv().unwrap().unwrap() {
+                StreamEvent::Done(_) => break,
+                StreamEvent::Token { .. } => {}
+            }
+        }
+    }
+    (coord.shutdown(), started)
+}
+
 fn main() {
+    // CI smoke gate: only the offline-phase service section, with the
+    // starvation acceptance asserted — at B=8 the warm decode path must
+    // be entirely pool-served: hit-rate >= 0.99 and zero online-path
+    // generation events after the prefill baseline.
+    if std::env::var("CENTAUR_BENCH_OFFLINE_ONLY").is_ok() {
+        let (snap, started) = serve_offline_streams(8, 3);
+        println!(
+            "offline-only smoke: warm_hit_rate={:.1}% warm_starved={} \
+             offline_triples={} ({:.0}/s) start={}",
+            snap.warm_pool_hit_rate() * 100.0,
+            snap.warm_pool_starved,
+            snap.pool_generated,
+            snap.offline_triples_per_sec(),
+            centaur::util::human_secs(started.as_secs_f64()),
+        );
+        assert!(snap.warm_pool_hits > 0, "warm sessions never drew from the pool");
+        assert_eq!(
+            snap.warm_pool_starved, 0,
+            "online-path triple generation on a provisioned shape"
+        );
+        assert!(
+            snap.warm_pool_hit_rate() >= 0.99,
+            "warm pool hit-rate {:.3} below 0.99",
+            snap.warm_pool_hit_rate()
+        );
+        println!("offline-only smoke OK");
+        return;
+    }
+
     // CI smoke gate: only the continuous-batching section, with the
     // amortization acceptance asserted — B=4 must at least halve the
     // B=1 wire rounds per token (the ideal is solo/4).
@@ -142,6 +205,36 @@ fn main() {
         if speedup >= 1.0 { "faster" } else { "SLOWER" },
     );
     println!("    -> warm {}", warm.summary());
+
+    // Offline phase as a service (DESIGN.md §Offline phase): B concurrent
+    // generate streams against a pool provisioned for exactly that mix.
+    // The table is the serving-side acceptance — the warm decode path
+    // never waits on triple generation at any request rate, and the
+    // dealer's offline throughput (triples/s, bytes/s) and per-shard pool
+    // depth are first-class metrics. `start` includes the synchronous
+    // prefill, i.e. the batched shard refill: each shape's full deficit
+    // is generated under two lock trips instead of two per triple.
+    let off_steps = if std::env::var("CENTAUR_BENCH_QUICK").is_ok() { 2 } else { 3 };
+    b.section(&format!("offline service: gpt2-tiny, {off_steps}-step generates, B streams"));
+    for sessions in [1usize, 2, 4, 8] {
+        let (snap, started) = serve_offline_streams(sessions, off_steps);
+        let depth_min = snap.pool_shard_depths.iter().min().copied().unwrap_or(0);
+        let depth_max = snap.pool_shard_depths.iter().max().copied().unwrap_or(0);
+        println!(
+            "  B={sessions}: triples/s={:.0} offline={}/s pool_depth={} \
+             shard_depth={depth_min}..{depth_max} warm_hit_rate={:.1}% starved={} start={}",
+            snap.offline_triples_per_sec(),
+            centaur::util::human_bytes(snap.offline_bytes_per_sec() as u64),
+            snap.pool_pooled,
+            snap.warm_pool_hit_rate() * 100.0,
+            snap.warm_pool_starved,
+            centaur::util::human_secs(started.as_secs_f64()),
+        );
+        assert_eq!(
+            snap.warm_pool_starved, 0,
+            "B={sessions}: warm request generated triples on the online path"
+        );
+    }
 
     // Continuous batching (DESIGN.md §Continuous batching): B concurrent
     // generate sessions ride every decode step's shared flights, so wire

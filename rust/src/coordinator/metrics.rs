@@ -1,6 +1,10 @@
-//! Serving metrics: latency quantiles, throughput, protocol totals.
+//! Serving metrics: latency quantiles, throughput, protocol totals, and
+//! first-class offline-phase counters (triples/s, offline bytes/s,
+//! per-shard pool depth, starvation events) when a dealer pool is active.
 
 use std::time::{Duration, Instant};
+
+use crate::mpc::PoolStats;
 
 /// Accumulating metrics (guarded by a mutex in the coordinator).
 pub struct Metrics {
@@ -145,6 +149,14 @@ impl Metrics {
             batches: self.batches,
             pool_hits: 0,
             pool_misses: 0,
+            pool_starved: 0,
+            pool_generated: 0,
+            pool_offline_bytes: 0,
+            pool_pooled: 0,
+            pool_shard_depths: Vec::new(),
+            warm_pool_hits: 0,
+            warm_pool_misses: 0,
+            warm_pool_starved: 0,
             p50: q(0.50),
             p95: q(0.95),
             p99: q(0.99),
@@ -190,6 +202,27 @@ pub struct MetricsSnapshot {
     pub pool_hits: u64,
     /// Offline-pool misses (triples generated on the request path).
     pub pool_misses: u64,
+    /// Offline-pool starvation events: misses on shapes the offline phase
+    /// knew about — the failure mode the service exists to prevent.
+    pub pool_starved: u64,
+    /// Triples generated into the pool over the coordinator's lifetime
+    /// (prefill + background service).
+    pub pool_generated: u64,
+    /// Bytes of correlated randomness generated into the pool — divide by
+    /// `elapsed` for the offline-phase dealer bandwidth.
+    pub pool_offline_bytes: u64,
+    /// Entries currently pooled across all shapes.
+    pub pool_pooled: u64,
+    /// Entries currently pooled per shard slot (empty without a pool).
+    pub pool_shard_depths: Vec<usize>,
+    /// Pool hits after the prefill baseline (warm requests only).
+    pub warm_pool_hits: u64,
+    /// Pool misses after the prefill baseline (warm requests only; the
+    /// shape-learning probe's cold misses are excluded).
+    pub warm_pool_misses: u64,
+    /// Starvation events after the prefill baseline — nonzero means a
+    /// warm request waited on online-path triple generation.
+    pub warm_pool_starved: u64,
     /// Median end-to-end request latency.
     pub p50: Duration,
     /// 95th-percentile end-to-end request latency.
@@ -235,11 +268,23 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
-    /// Record offline-pool counters (called by the coordinator when a
-    /// [`crate::mpc::TriplePool`] is active).
-    pub fn set_pool(&mut self, hits: u64, misses: u64) {
-        self.pool_hits = hits;
-        self.pool_misses = misses;
+    /// Record offline-pool counters from a [`PoolStats`] snapshot (called
+    /// by the coordinator when a [`crate::mpc::TriplePool`] is active).
+    /// `baseline` is the stats captured right after the prefill finished:
+    /// subtracting it isolates the warm-serving counters from the
+    /// shape-learning probe's inevitable cold misses.
+    pub fn set_pool(&mut self, stats: &PoolStats, baseline: Option<&PoolStats>) {
+        self.pool_hits = stats.hits;
+        self.pool_misses = stats.misses;
+        self.pool_starved = stats.starved;
+        self.pool_generated = stats.generated;
+        self.pool_offline_bytes = stats.offline_bytes;
+        self.pool_pooled = stats.pooled;
+        self.pool_shard_depths = stats.shard_depths.clone();
+        let base = baseline.cloned().unwrap_or_default();
+        self.warm_pool_hits = stats.hits.saturating_sub(base.hits);
+        self.warm_pool_misses = stats.misses.saturating_sub(base.misses);
+        self.warm_pool_starved = stats.starved.saturating_sub(base.starved);
     }
 
     /// Fraction of dealer triple requests served from the offline pool
@@ -251,6 +296,31 @@ impl MetricsSnapshot {
         } else {
             self.pool_hits as f64 / total as f64
         }
+    }
+
+    /// Fraction of *warm* dealer triple requests (after the prefill
+    /// baseline) served from the offline pool. 1.0 when no warm take
+    /// happened — nothing missed; pair with a `warm_pool_hits > 0` check
+    /// when asserting a load test actually exercised the pool.
+    pub fn warm_pool_hit_rate(&self) -> f64 {
+        let total = self.warm_pool_hits + self.warm_pool_misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.warm_pool_hits as f64 / total as f64
+        }
+    }
+
+    /// Offline-phase throughput: triples generated into the pool per
+    /// wall-clock second since the coordinator started.
+    pub fn offline_triples_per_sec(&self) -> f64 {
+        self.pool_generated as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    /// Offline-phase dealer bandwidth: bytes of correlated randomness
+    /// generated into the pool per wall-clock second.
+    pub fn offline_bytes_per_sec(&self) -> f64 {
+        self.pool_offline_bytes as f64 / self.elapsed.as_secs_f64().max(1e-9)
     }
 
     /// Warm-decode communication per generated token (0 when no tokens
@@ -317,10 +387,27 @@ impl MetricsSnapshot {
         );
         if self.pool_hits + self.pool_misses > 0 {
             s.push_str(&format!(
-                " pool_hits={} pool_misses={} pool_hit_rate={:.1}%",
+                " pool_hits={} pool_misses={} pool_hit_rate={:.1}% warm_pool_hit_rate={:.1}%",
                 self.pool_hits,
                 self.pool_misses,
-                self.pool_hit_rate() * 100.0
+                self.pool_hit_rate() * 100.0,
+                self.warm_pool_hit_rate() * 100.0
+            ));
+        }
+        if self.pool_generated > 0 {
+            let depth_min = self.pool_shard_depths.iter().min().copied().unwrap_or(0);
+            let depth_max = self.pool_shard_depths.iter().max().copied().unwrap_or(0);
+            s.push_str(&format!(
+                " offline_triples={} offline_triples_per_sec={:.0} offline_bytes_per_sec={}/s \
+                 pool_depth={} shard_depth={}..{} starvation_events={} warm_starved={}",
+                self.pool_generated,
+                self.offline_triples_per_sec(),
+                crate::util::human_bytes(self.offline_bytes_per_sec() as u64),
+                self.pool_pooled,
+                depth_min,
+                depth_max,
+                self.pool_starved,
+                self.warm_pool_starved,
             ));
         }
         // Gate on generations (not tokens): a zero-token generation still
@@ -382,7 +469,61 @@ mod tests {
         assert_eq!(s.p99, Duration::ZERO);
         assert_eq!(s.tokens_generated, 0);
         assert_eq!(s.decode_bytes_per_token(), 0);
+        assert_eq!((s.pool_starved, s.pool_generated, s.pool_offline_bytes), (0, 0, 0));
+        assert!(s.pool_shard_depths.is_empty());
+        assert_eq!((s.warm_pool_hits, s.warm_pool_misses, s.warm_pool_starved), (0, 0, 0));
+        // No warm take happened → nothing missed.
+        assert_eq!(s.warm_pool_hit_rate(), 1.0);
         assert!(!s.summary().contains("decode_per_token"));
+        assert!(!s.summary().contains("pool_hit_rate"));
+        assert!(!s.summary().contains("offline_triples"));
+    }
+
+    #[test]
+    fn pool_stats_feed_offline_serving_counters() {
+        let mut m = Metrics::new();
+        m.record(Duration::from_millis(5), Duration::from_millis(4), 10, 1);
+        let mut s = m.snapshot();
+        // Prefill baseline: the shape-learning probe's 3 cold misses plus
+        // the synchronous fill; then a serving window of 41 warm takes.
+        let baseline = PoolStats {
+            hits: 0,
+            misses: 3,
+            starved: 0,
+            generated: 12,
+            offline_bytes: 1 << 20,
+            pooled: 12,
+            shapes: 3,
+            shard_depths: vec![2; 8],
+        };
+        let now = PoolStats {
+            hits: 40,
+            misses: 4,
+            starved: 1,
+            generated: 52,
+            offline_bytes: 5 << 20,
+            pooled: 12,
+            shapes: 3,
+            shard_depths: vec![1, 2, 2, 2, 1, 2, 2, 0],
+        };
+        s.set_pool(&now, Some(&baseline));
+        assert_eq!((s.pool_hits, s.pool_misses, s.pool_starved), (40, 4, 1));
+        assert_eq!((s.warm_pool_hits, s.warm_pool_misses, s.warm_pool_starved), (40, 1, 1));
+        assert!((s.warm_pool_hit_rate() - 40.0 / 41.0).abs() < 1e-9);
+        assert_eq!(s.pool_generated, 52);
+        assert_eq!(s.pool_offline_bytes, 5 << 20);
+        assert!(s.offline_triples_per_sec() > 0.0);
+        assert!(s.offline_bytes_per_sec() > 0.0);
+        assert_eq!(s.pool_shard_depths.len(), 8);
+        let sum = s.summary();
+        assert!(sum.contains("pool_hit_rate"));
+        assert!(sum.contains("offline_triples_per_sec"));
+        assert!(sum.contains("starvation_events=1"));
+        assert!(sum.contains("shard_depth=0..2"));
+        // Without a baseline, warm counters equal the raw totals.
+        let mut raw = m.snapshot();
+        raw.set_pool(&now, None);
+        assert_eq!((raw.warm_pool_hits, raw.warm_pool_misses), (40, 4));
     }
 
     #[test]

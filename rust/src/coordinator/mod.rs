@@ -18,7 +18,6 @@ mod metrics;
 pub use batcher::{Batch, BatcherConfig};
 pub use metrics::{Metrics, MetricsSnapshot};
 
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -28,7 +27,7 @@ use crate::baselines::{permonly::PermOnlyEngine, smpc::SmpcEngine, FrameworkKind
 use crate::engine::decoder::DecodeBatch;
 use crate::engine::{CentaurEngine, EngineOptions};
 use crate::model::{ModelConfig, ModelKind, ModelWeights};
-use crate::mpc::{TriplePool, TripleShape};
+use crate::mpc::{PoolService, PoolStats, TriplePool, TripleShape};
 use crate::net::NetworkProfile;
 use crate::runtime::{backend_by_name, NativeBackend};
 use crate::Result;
@@ -93,6 +92,10 @@ pub struct ServerConfig {
     /// `spec_k` tokens verified per flight chain, output token-identical
     /// to plain greedy. 1 (the default) keeps the plain one-token step.
     pub spec_k: usize,
+    /// Offline-service worker threads keeping the triple pool topped up
+    /// (with `offline_prefill`): shards are owned round-robin, so extra
+    /// workers regenerate depleted shards concurrently under load.
+    pub offline_workers: usize,
 }
 
 impl ServerConfig {
@@ -118,6 +121,7 @@ impl ServerConfig {
             round_batching: true,
             decode_prefill_sessions: 1,
             spec_k: 1,
+            offline_workers: 2,
         }
     }
 }
@@ -479,8 +483,12 @@ pub struct Coordinator {
     scheduler: Option<JoinHandle<()>>,
     /// Shared offline-phase pool (Some when `offline_prefill` was set).
     pool: Option<Arc<TriplePool>>,
-    refill: Option<JoinHandle<()>>,
-    refill_stop: Arc<AtomicBool>,
+    /// Background offline service keeping the pool topped up.
+    service: Option<PoolService>,
+    /// Pool counters right after the synchronous prefill: the warm-serving
+    /// hit/miss/starvation metrics are measured against this baseline, so
+    /// the shape-learning probe's cold misses don't pollute them.
+    pool_baseline: Option<PoolStats>,
 }
 
 impl Coordinator {
@@ -525,26 +533,17 @@ impl Coordinator {
             None
         };
 
-        // Background refill: regenerate consumed triples off the request
-        // path. Parked with a short sleep when the pool is at target. Holds
-        // only a Weak reference so the thread also exits when the
-        // coordinator (and its workers) are dropped without `shutdown()` —
-        // the stop flag covers the graceful path.
-        let refill_stop = Arc::new(AtomicBool::new(false));
-        let refill = pool.as_ref().map(|p| {
-            let weak = Arc::downgrade(p);
-            let stop = Arc::clone(&refill_stop);
-            std::thread::spawn(move || loop {
-                if stop.load(Ordering::Relaxed) {
-                    break;
-                }
-                let Some(p) = weak.upgrade() else { break };
-                if !p.refill_once() {
-                    drop(p);
-                    std::thread::sleep(Duration::from_millis(1));
-                }
-            })
-        });
+        // Warm baseline: everything on the counters so far is the probe's
+        // cold misses plus the synchronous prefill. Serving metrics report
+        // warm hit/starvation rates relative to this snapshot.
+        let pool_baseline = pool.as_ref().map(|p| p.stats());
+
+        // Offline service: shard-owning worker threads regenerate consumed
+        // triples off the request path (DESIGN.md §Offline phase). The
+        // workers hold only `Weak` pool references, so they also exit when
+        // the coordinator is dropped without `shutdown()`.
+        let service =
+            pool.as_ref().map(|p| TriplePool::start_service(p, config.offline_workers.max(1)));
 
         // Workers: one engine each, fed by a shared work queue guarded by a
         // mutex-wrapped receiver (simple m:n fan-out).
@@ -691,8 +690,8 @@ impl Coordinator {
             workers,
             scheduler,
             pool,
-            refill,
-            refill_stop,
+            service,
+            pool_baseline,
         })
     }
 
@@ -737,12 +736,13 @@ impl Coordinator {
             .map_err(|_| anyhow::anyhow!("coordinator shut down"))?
     }
 
-    /// Snapshot of metrics so far (includes offline-pool hit/miss counters
-    /// when an offline prefill pool is active).
+    /// Snapshot of metrics so far (includes the offline-phase counters —
+    /// hits/misses, starvation events, triples/s, per-shard depth — when
+    /// an offline prefill pool is active).
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut snap = self.metrics.lock().unwrap().snapshot();
         if let Some(p) = &self.pool {
-            snap.set_pool(p.hits(), p.misses());
+            snap.set_pool(&p.stats(), self.pool_baseline.as_ref());
         }
         snap
     }
@@ -764,13 +764,12 @@ impl Coordinator {
         if let Some(sch) = self.scheduler.take() {
             let _ = sch.join();
         }
-        self.refill_stop.store(true, Ordering::Relaxed);
-        if let Some(r) = self.refill.take() {
-            let _ = r.join();
+        if let Some(s) = self.service.take() {
+            s.stop();
         }
         let mut snap = self.metrics.lock().unwrap().snapshot();
         if let Some(p) = &self.pool {
-            snap.set_pool(p.hits(), p.misses());
+            snap.set_pool(&p.stats(), self.pool_baseline.as_ref());
         }
         snap
     }
@@ -1042,6 +1041,44 @@ mod tests {
         // Both sessions finalize through the scheduler's metrics path.
         assert_eq!(snap.generations, 2);
         assert!(snap.tokens_generated >= 3);
+    }
+
+    #[test]
+    fn offline_service_reports_warm_metrics_without_starvation() {
+        // The tentpole end-to-end: with the offline phase provisioned for
+        // the request mix, warm serving never generates triples on the
+        // online path — the snapshot's warm counters (measured against the
+        // post-prefill baseline, so the probe's cold misses don't count)
+        // show a perfect hit rate and zero starvation events.
+        let mut sc = tiny_gpt_config();
+        sc.offline_prefill = true;
+        sc.pool_depth = 2;
+        sc.decode_prefill_steps = 6; // prompt 3 + steps 3
+        sc.decode_prefill_sessions = 2;
+        let coord = Coordinator::start(sc).unwrap();
+        let pool = Arc::clone(coord.triple_pool().expect("offline_prefill must create a pool"));
+        let rxs: Vec<_> = (0..2).map(|i| coord.submit_generate(vec![7, 11 + i as u32, 13], 3)).collect();
+        for rx in rxs {
+            loop {
+                match rx.recv().unwrap().unwrap() {
+                    StreamEvent::Done(s) => {
+                        assert_eq!(s.tokens.len(), 3);
+                        break;
+                    }
+                    StreamEvent::Token { .. } => continue,
+                }
+            }
+        }
+        let snap = coord.shutdown();
+        assert!(snap.warm_pool_hits > 0, "warm sessions must draw from the pool");
+        assert_eq!(snap.warm_pool_misses, 0, "offline phase must cover the warm request mix");
+        assert_eq!(snap.warm_pool_starved, 0, "no online-path triple generation allowed");
+        assert!(snap.warm_pool_hit_rate() >= 0.99);
+        assert!(snap.pool_generated > 0);
+        assert!(snap.pool_offline_bytes > 0);
+        assert_eq!(snap.pool_shard_depths.len(), pool.shard_count());
+        assert!(snap.summary().contains("offline_triples_per_sec"));
+        assert!(snap.summary().contains("warm_pool_hit_rate"));
     }
 
     #[test]

@@ -115,22 +115,26 @@ impl<'e> DecoderSession<'e> {
     ///
     /// With fixed-operand correlations enabled (the default,
     /// [`super::EngineOptions::decode_correlations`]), session start deals
-    /// one correlation bundle per family per layer — pool-first, generated
-    /// on demand on a cold start — and performs the one-time masked
-    /// openings of π₁/π₁ᵀ, charged to the separate `setup` ledger
-    /// (`OpClass::Correlation`) so warm-step ledgers stay clean.
+    /// the whole session's correlations in one shared-mask bundle per
+    /// open-once family — pool-first, generated on demand on a cold start —
+    /// and performs the one-time masked openings of π₁/π₁ᵀ **once for all
+    /// layers** (`layer::deal_session_kv_correlations`), charged to the
+    /// separate `setup` ledger (`OpClass::Correlation`) so warm-step
+    /// ledgers stay clean.
     pub fn new(eng: &'e mut CentaurEngine, prompt: &[u32]) -> Result<Self> {
         anyhow::ensure!(eng.cfg.kind == ModelKind::Gpt2, "incremental decode needs a decoder model");
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         anyhow::ensure!(prompt.len() <= eng.cfg.n_ctx, "prompt longer than n_ctx");
         eng.mpc.net.reset();
         let mut kv = Vec::with_capacity(eng.cfg.layers);
-        for _ in 0..eng.cfg.layers {
-            if eng.decode_correlations {
-                let corr =
-                    layer::deal_kv_correlations(&mut eng.mpc, &eng.cfg, &eng.pi1_sh, &eng.pi1_t_sh)?;
+        if eng.decode_correlations {
+            let corrs =
+                layer::deal_session_kv_correlations(&mut eng.mpc, &eng.cfg, &eng.pi1_sh, &eng.pi1_t_sh)?;
+            for corr in corrs {
                 kv.push(LayerKvCache::with_correlations(eng.cfg.n_ctx, eng.cfg.d, corr));
-            } else {
+            }
+        } else {
+            for _ in 0..eng.cfg.layers {
                 kv.push(LayerKvCache::new(eng.cfg.n_ctx, eng.cfg.d));
             }
         }
@@ -712,16 +716,18 @@ impl<'e> DecodeBatch<'e> {
             );
             eng.mpc.net.reset();
             let mut kv = Vec::with_capacity(eng.cfg.layers);
-            for _ in 0..eng.cfg.layers {
-                if eng.decode_correlations {
-                    let corr = layer::deal_kv_correlations(
-                        &mut eng.mpc,
-                        &eng.cfg,
-                        &eng.pi1_sh,
-                        &eng.pi1_t_sh,
-                    )?;
+            if eng.decode_correlations {
+                let corrs = layer::deal_session_kv_correlations(
+                    &mut eng.mpc,
+                    &eng.cfg,
+                    &eng.pi1_sh,
+                    &eng.pi1_t_sh,
+                )?;
+                for corr in corrs {
                     kv.push(LayerKvCache::with_correlations(eng.cfg.n_ctx, eng.cfg.d, corr));
-                } else {
+                }
+            } else {
+                for _ in 0..eng.cfg.layers {
                     kv.push(LayerKvCache::new(eng.cfg.n_ctx, eng.cfg.d));
                 }
             }

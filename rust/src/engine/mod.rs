@@ -587,6 +587,11 @@ mod tests {
         // the Correlation class), so warm-step ledgers stay clean
         assert!(out.setup.bytes_total() > 0, "default sessions set up correlations");
         assert_eq!(out.setup.bytes_total(), out.setup.class(OpClass::Correlation).bytes);
+        // the shared-π₁ session mask keeps setup layer-independent: exactly
+        // two masked openings (π₁ − B, π₁ᵀ − B') regardless of n_layers
+        let n = cfg.n_ctx as u64;
+        assert_eq!(out.setup.bytes_total(), 2 * 2 * 8 * n * n);
+        assert_eq!(out.setup.rounds_total(), 2);
         assert_eq!(
             out.total().bytes_total(),
             out.setup.bytes_total() + out.prefill.bytes_total() + out.decode.bytes_total()

@@ -15,12 +15,19 @@
 //! request path (a *pool hit*) and only falls back to on-demand generation —
 //! a plaintext [`ring::matmul`] per triple, the dominant offline cost —
 //! when the pool is dry (a *pool miss*). The pool learns its shape profile
-//! from misses, so one cold inference teaches it exactly what a request
-//! consumes; a background thread then keeps every shape topped up.
+//! from misses and per-session demand registrations, so one cold inference
+//! teaches it exactly what a request consumes; the offline phase then runs
+//! as a *service* ([`TriplePool::start_service`]): the pool is sharded by
+//! shape key across independently locked slots, refill workers partition
+//! the slots and stream correlations ahead of demand, and drained misses
+//! under live load ratchet the per-shape target up so the service catches
+//! up instead of starving (DESIGN.md §Offline phase).
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::ring;
 use crate::tensor::RingTensor;
@@ -73,7 +80,10 @@ pub enum TripleKind {
 
 /// Shape key for pooled correlated randomness: the op kind plus the
 /// `(m, k, n)` operand shape (`Elem`/`Square` use `(rows, cols, 0)`) and,
-/// for the session-scoped fixed-operand families, the dealt use count.
+/// for the session-scoped fixed-operand families, the dealt use count. A
+/// non-zero `layers` marks a *session bundle* key: `layers` per-layer
+/// correlations sharing **one** mask (DESIGN.md §Offline phase — the
+/// shared π₁ session mask, opened once for the whole session).
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub struct TripleShape {
     /// Primitive this entry feeds.
@@ -85,37 +95,53 @@ pub struct TripleShape {
     /// Columns of the right operand (0 for `Elem`/`Square`).
     pub n: usize,
     /// Per-use bundles dealt for a fixed-operand correlation (0 for the
-    /// per-use triple kinds).
+    /// per-use triple kinds). For a session-bundle key this is the use
+    /// count of **each** per-layer correlation.
     pub uses: usize,
+    /// Per-layer correlations in a shared-mask session bundle (0 for a
+    /// plain single-correlation key).
+    pub layers: usize,
 }
 
 impl TripleShape {
     /// Key for a `Π_MatMul` triple `X (m×k) @ Y (k×n)`.
     pub fn matmul(m: usize, k: usize, n: usize) -> Self {
-        TripleShape { kind: TripleKind::Matmul, m, k, n, uses: 0 }
+        TripleShape { kind: TripleKind::Matmul, m, k, n, uses: 0, layers: 0 }
     }
     /// Key for an elementwise triple of shape `rows×cols`.
     pub fn elem(rows: usize, cols: usize) -> Self {
-        TripleShape { kind: TripleKind::Elem, m: rows, k: cols, n: 0, uses: 0 }
+        TripleShape { kind: TripleKind::Elem, m: rows, k: cols, n: 0, uses: 0, layers: 0 }
     }
     /// Key for a square pair of shape `rows×cols`.
     pub fn square(rows: usize, cols: usize) -> Self {
-        TripleShape { kind: TripleKind::Square, m: rows, k: cols, n: 0, uses: 0 }
+        TripleShape { kind: TripleKind::Square, m: rows, k: cols, n: 0, uses: 0, layers: 0 }
     }
     /// Key for a right-fixed `Π_PPP` correlation: per-use `X (m×n)` against
     /// the session-fixed `π₁ (n×n)`, with `uses` dealt uses.
     pub fn fixed_ppp(m: usize, n: usize, uses: usize) -> Self {
-        TripleShape { kind: TripleKind::FixedPppRight, m, k: n, n, uses }
+        TripleShape { kind: TripleKind::FixedPppRight, m, k: n, n, uses, layers: 0 }
     }
     /// Key for a left-fixed column-per-use correlation: session-fixed
     /// `π₁ᵀ (n×n)`, use `i` multiplies column `i` by a fresh `(1, d)` row.
     pub fn fixed_append(n: usize, d: usize, uses: usize) -> Self {
-        TripleShape { kind: TripleKind::FixedAppendLeft, m: n, k: n, n: d, uses }
+        TripleShape { kind: TripleKind::FixedAppendLeft, m: n, k: n, n: d, uses, layers: 0 }
     }
     /// Key for a row-grown score correlation over a `(n, d)` write-once
     /// cache with `h` attention heads.
     pub fn fixed_scores(h: usize, n: usize, d: usize, uses: usize) -> Self {
-        TripleShape { kind: TripleKind::FixedScoresGrown, m: h, k: n, n: d, uses }
+        TripleShape { kind: TripleKind::FixedScoresGrown, m: h, k: n, n: d, uses, layers: 0 }
+    }
+    /// Session-bundle key: `layers` [`TripleShape::fixed_ppp`]-style
+    /// correlations (each with `uses` uses) sharing **one** π₁ mask, so
+    /// the masked opening happens once per session instead of once per
+    /// layer.
+    pub fn fixed_ppp_session(m: usize, n: usize, uses: usize, layers: usize) -> Self {
+        TripleShape { kind: TripleKind::FixedPppRight, m, k: n, n, uses, layers }
+    }
+    /// Session-bundle key: `layers` [`TripleShape::fixed_append`]-style
+    /// correlations sharing one π₁ᵀ mask (one opening per session).
+    pub fn fixed_append_session(n: usize, d: usize, uses: usize, layers: usize) -> Self {
+        TripleShape { kind: TripleKind::FixedAppendLeft, m: n, k: n, n: d, uses, layers }
     }
 
     /// Whether this key names a session-scoped fixed-operand correlation.
@@ -126,24 +152,36 @@ impl TripleShape {
         )
     }
 
+    /// Whether this key names a shared-mask session bundle
+    /// ([`TripleShape::fixed_ppp_session`] /
+    /// [`TripleShape::fixed_append_session`]).
+    pub fn is_session_bundle(&self) -> bool {
+        self.layers > 0
+    }
+
     /// Bytes of correlated randomness the dealer distributes for one entry
     /// of this shape (both parties' shares of every tensor). For the
     /// fixed-operand families this covers the whole session bundle — one
-    /// mask plus `uses` per-use correlations — and is charged **once** per
-    /// session, never once per use (the session-amortized mask must not be
-    /// double-counted per take).
+    /// mask plus `uses` per-use correlations per layer (a shared-mask
+    /// bundle distributes the mask sharing **once** for all its layers) —
+    /// and is charged **once** per session, never once per use (the
+    /// session-amortized mask must not be double-counted per take).
     pub fn offline_bytes(&self) -> u64 {
+        let l = self.layers.max(1) as u64;
         match self.kind {
             TripleKind::Matmul => 8 * 2 * (self.m * self.k + self.k * self.n + self.m * self.n) as u64,
             TripleKind::Elem => 8 * 2 * 3 * (self.m * self.k) as u64,
             TripleKind::Square => 8 * 2 * 2 * (self.m * self.k) as u64,
-            // mask (k×n) + uses × (A (m×k) + C (m×n))
+            // mask (k×n) + layers × uses × (A (m×k) + C (m×n))
             TripleKind::FixedPppRight => {
-                8 * 2 * (self.k * self.n + self.uses * (self.m * self.k + self.m * self.n)) as u64
+                8 * 2
+                    * ((self.k * self.n) as u64
+                        + l * (self.uses * (self.m * self.k + self.m * self.n)) as u64)
             }
-            // mask (m×k) + uses × (A (1×n) + C (m×n))
+            // mask (m×k) + layers × uses × (A (1×n) + C (m×n))
             TripleKind::FixedAppendLeft => {
-                8 * 2 * (self.m * self.k + self.uses * (self.n + self.m * self.n)) as u64
+                8 * 2
+                    * ((self.m * self.k) as u64 + l * (self.uses * (self.n + self.m * self.n)) as u64)
             }
             // mask (k×n) + Σ_{i<uses} m × (A (1×n/m) + C (1×(i+1)))
             TripleKind::FixedScoresGrown => {
@@ -270,6 +308,28 @@ impl FixedOperandCorrelation {
     pub fn openings(&self) -> u64 {
         self.opened
     }
+
+    /// Adopt the session's shared-mask opening: in a shared-π₁ session
+    /// bundle every per-layer correlation holds the **same** mask sharing
+    /// `[B]`, so the masked difference `fixed − B` is opened on the wire
+    /// once (for the first layer) and the remaining layers adopt that
+    /// public value without a second transfer. This marks the correlation
+    /// opened so the per-layer security census still reports exactly one
+    /// opening per session per layer, and so a second (real) opening is
+    /// rejected exactly as it is after [`super::Mpc::open_fixed_operand`].
+    pub fn adopt_shared_opening(&mut self) -> crate::Result<()> {
+        anyhow::ensure!(
+            matches!(self.shape.kind, TripleKind::FixedPppRight | TripleKind::FixedAppendLeft),
+            "adopt_shared_opening is for the open-once fixed families, got {:?}",
+            self.shape.kind
+        );
+        anyhow::ensure!(
+            self.opened == 0,
+            "fixed operand already opened for this correlation — refusing a second opening"
+        );
+        self.opened = 1;
+        Ok(())
+    }
 }
 
 /// One pooled entry (kind matches the [`TripleShape`] it is stored under).
@@ -280,6 +340,10 @@ pub enum PoolItem {
     Square(SquarePair),
     /// A session-scoped fixed-operand correlation bundle.
     Fixed(FixedOperandCorrelation),
+    /// A shared-mask session bundle: one per-layer correlation per entry,
+    /// all holding the **same** mask sharing (stored under a
+    /// [`TripleShape`] with `layers > 0`).
+    FixedSession(Vec<FixedOperandCorrelation>),
 }
 
 // ---------------------------------------------------------------------
@@ -333,34 +397,43 @@ fn generate_item(rng: &mut Rng, shape: TripleShape) -> PoolItem {
             PoolItem::Square(SquarePair { a: share_with(rng, a), c: share_with(rng, c) })
         }
         TripleKind::FixedPppRight | TripleKind::FixedAppendLeft | TripleKind::FixedScoresGrown => {
-            PoolItem::Fixed(generate_fixed(rng, shape))
+            if shape.is_session_bundle() {
+                PoolItem::FixedSession(generate_fixed_session(rng, shape))
+            } else {
+                PoolItem::Fixed(generate_fixed(rng, shape))
+            }
         }
     }
 }
 
-/// Generate a whole fixed-operand session bundle: the session mask `B`
-/// plus `shape.uses` per-use `([A], [C])` correlations (the dealer knows
-/// `B` in plaintext while dealing, exactly as it knows `A·B` for a plain
-/// Beaver triple).
-fn generate_fixed(rng: &mut Rng, shape: TripleShape) -> FixedOperandCorrelation {
+/// Dimensions of the fixed-operand mask for a fixed-family shape.
+fn fixed_mask_dims(shape: &TripleShape) -> (usize, usize) {
+    match shape.kind {
+        TripleKind::FixedPppRight | TripleKind::FixedScoresGrown => (shape.k, shape.n),
+        TripleKind::FixedAppendLeft => (shape.m, shape.k),
+        _ => unreachable!("fixed_mask_dims called for a per-use triple kind"),
+    }
+}
+
+/// Deal `shape.uses` per-use `([A], [C])` correlations against the fixed
+/// mask `b` (known to the dealer in plaintext, exactly as it knows `A·B`
+/// for a plain Beaver triple).
+fn deal_fixed_uses(rng: &mut Rng, shape: &TripleShape, b: &RingTensor) -> VecDeque<FixedUse> {
     let mut uses = VecDeque::with_capacity(shape.uses);
-    let mask = match shape.kind {
+    match shape.kind {
         TripleKind::FixedPppRight => {
             // fixed right operand (k×n); per-use left X (m×k), C = A·B.
-            let b = rand_tensor(rng, shape.k, shape.n);
             for _ in 0..shape.uses {
                 let a = rand_tensor(rng, shape.m, shape.k);
-                let c = ring::matmul(&a, &b);
+                let c = ring::matmul(&a, b);
                 uses.push_back(FixedUse {
                     blocks: vec![(share_with(rng, a), share_with(rng, c))],
                 });
             }
-            share_with(rng, b)
         }
         TripleKind::FixedAppendLeft => {
             // fixed left operand (m×k), one column per use; per-use right
             // Y (1×n), C = B[:,i]·A.
-            let b = rand_tensor(rng, shape.m, shape.k);
             for i in 0..shape.uses {
                 let a = rand_tensor(rng, 1, shape.n);
                 let c = ring::matmul(&b.col_block(i, i + 1), &a);
@@ -368,39 +441,73 @@ fn generate_fixed(rng: &mut Rng, shape: TripleShape) -> FixedOperandCorrelation 
                     blocks: vec![(share_with(rng, a), share_with(rng, c))],
                 });
             }
-            share_with(rng, b)
         }
         TripleKind::FixedScoresGrown => {
             // write-once right operand (k×n) with m head blocks of width
             // n/m; use i deals, per head, A (1×dh) and C = A·B_blockᵀ over
             // the written rows 0..=i.
-            let (heads, rows, cols) = (shape.m, shape.k, shape.n);
+            let (heads, cols) = (shape.m, shape.n);
             let dh = cols / heads;
-            let b = rand_tensor(rng, rows, cols);
             for i in 0..shape.uses {
                 let written = i + 1;
                 let mut blocks = Vec::with_capacity(heads);
                 for h in 0..heads {
                     let a = rand_tensor(rng, 1, dh);
-                    let bt = head_block_t(&b, h, dh, written);
+                    let bt = head_block_t(b, h, dh, written);
                     let c = ring::matmul(&a, &bt);
                     blocks.push((share_with(rng, a), share_with(rng, c)));
                 }
                 uses.push_back(FixedUse { blocks });
             }
-            share_with(rng, b)
         }
-        _ => unreachable!("generate_fixed called for a per-use triple kind"),
-    };
+        _ => unreachable!("deal_fixed_uses called for a per-use triple kind"),
+    }
+    uses
+}
+
+/// Generate a whole fixed-operand session bundle: the session mask `B`
+/// plus `shape.uses` per-use `([A], [C])` correlations (the dealer knows
+/// `B` in plaintext while dealing, exactly as it knows `A·B` for a plain
+/// Beaver triple).
+fn generate_fixed(rng: &mut Rng, shape: TripleShape) -> FixedOperandCorrelation {
+    debug_assert!(!shape.is_session_bundle(), "session bundles go through generate_fixed_session");
+    let (rows, cols) = fixed_mask_dims(&shape);
+    let b = rand_tensor(rng, rows, cols);
+    let uses = deal_fixed_uses(rng, &shape, &b);
     FixedOperandCorrelation {
         shape,
-        mask,
+        mask: share_with(rng, b),
         uses,
         consumed: Vec::new(),
         dealt: shape.uses,
         used: 0,
         opened: 0,
     }
+}
+
+/// Generate a shared-mask session bundle: ONE mask `B` (and one sharing of
+/// it) serving `shape.layers` per-layer correlations, each with its own
+/// `shape.uses` fresh per-use bundles dealt against that same `B`. Every
+/// per-layer correlation carries the *per-layer* key (`layers = 0`) so all
+/// downstream per-use machinery — openings, rewind, the security census —
+/// is oblivious to how the mask was amortized.
+fn generate_fixed_session(rng: &mut Rng, shape: TripleShape) -> Vec<FixedOperandCorrelation> {
+    debug_assert!(shape.is_session_bundle(), "per-layer shapes go through generate_fixed");
+    let per_layer = TripleShape { layers: 0, ..shape };
+    let (rows, cols) = fixed_mask_dims(&shape);
+    let b = rand_tensor(rng, rows, cols);
+    let mask = share_with(rng, b.clone());
+    (0..shape.layers)
+        .map(|_| FixedOperandCorrelation {
+            shape: per_layer,
+            mask: mask.clone(),
+            uses: deal_fixed_uses(rng, &per_layer, &b),
+            consumed: Vec::new(),
+            dealt: per_layer.uses,
+            used: 0,
+            opened: 0,
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------
@@ -410,67 +517,144 @@ fn generate_fixed(rng: &mut Rng, shape: TripleShape) -> FixedOperandCorrelation 
 #[derive(Default)]
 struct ShapeQueue {
     q: VecDeque<PoolItem>,
-    /// Misses recorded *before this shape was ever stocked* — after one
-    /// cold inference this is exactly the per-request demand, which sizes
-    /// the refill target. Steady-state misses (pool drained under load) do
-    /// NOT grow it: they fall back to on-demand generation instead of
-    /// ratcheting the target toward the per-shape cap and ballooning
-    /// memory.
+    /// Misses recorded *before this shape was ever stocked* plus demand
+    /// registered by sessions up front — after one cold inference (or one
+    /// `register_demand` pass) this is exactly the per-request demand,
+    /// which sizes the refill target together with `surge`.
     demand: u64,
+    /// Load-adaptive ratchet: drained misses while registered demand is
+    /// live (the pool stocked this shape, sessions still want it, and the
+    /// service fell behind) raise the target by one request-equivalent
+    /// each, so the service catches up instead of starving forever at the
+    /// cold-start target. Retired (reset to zero) when the last registered
+    /// session releases its demand, so dead shapes are not restocked.
+    surge: u64,
     /// Entries ever pushed for this shape (gates demand learning).
     stocked: u64,
 }
 
-struct PoolInner {
+/// One independently locked slot of the sharded pool: a shape→queue map
+/// plus a shard-local dealer PRG (forked per generated item, so any shard
+/// can deterministically generate any shape without a global lock).
+struct ShardInner {
     shapes: HashMap<TripleShape, ShapeQueue>,
     rng: Rng,
-    offline_bytes: u64,
-    generated: u64,
 }
+
+/// Shard slots in the pool. Shapes hash to a fixed slot, so an online
+/// `take` of one shape class never contends with generation (or takes) of
+/// another; the offline service partitions slots across its workers.
+const POOL_SHARDS: usize = 8;
 
 /// Shape-keyed store of pre-generated correlated randomness, shared across
 /// a coordinator's worker engines (offline-phase amortization).
 ///
-/// Thread-safe: `take` is a short critical section (pop + counters), and
-/// refill generates triples *outside* the lock so workers are never blocked
-/// behind a plaintext matmul.
+/// Sharded: shapes hash (FNV-1a over the shape key) to one of
+/// [`POOL_SHARDS`] independently locked slots, so an online `take` only
+/// ever contends with activity on its own shape class — never with
+/// generation or takes elsewhere. Generation always happens *outside* the
+/// shard lock (the lock covers a pop/push plus counters), so workers are
+/// never blocked behind a plaintext matmul.
 pub struct TriplePool {
-    inner: Mutex<PoolInner>,
+    shards: Vec<Mutex<ShardInner>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Misses on shapes the offline phase knew about (stocked before, or
+    /// registered demand outstanding): the online path had to generate
+    /// on demand because the service fell behind. The serve-bench gate
+    /// asserts this stays zero during warm decode.
+    starved: AtomicU64,
+    /// Entries ever generated into the pool (offline-throughput metric;
+    /// also the per-item PRG fork tag).
+    generated: AtomicU64,
+    /// Bytes of correlated randomness generated into the pool.
+    offline_bytes: AtomicU64,
     /// Refill target per shape, in units of observed per-request demand.
     depth: usize,
     /// Hard cap on pooled entries per shape (memory guard).
     max_per_shape: usize,
 }
 
+/// Point-in-time statistics of a [`TriplePool`] (one lock round-trip over
+/// the shards; feeds the serving metrics snapshot).
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    /// Takes served from pre-generated randomness.
+    pub hits: u64,
+    /// Takes that fell back to on-demand generation.
+    pub misses: u64,
+    /// Misses on shapes the offline phase knew about (see
+    /// [`TriplePool::starvation_events`]).
+    pub starved: u64,
+    /// Entries ever generated into the pool.
+    pub generated: u64,
+    /// Bytes of correlated randomness generated into the pool.
+    pub offline_bytes: u64,
+    /// Entries currently pooled across all shapes.
+    pub pooled: u64,
+    /// Distinct shapes the pool has learned.
+    pub shapes: u64,
+    /// Entries currently pooled per shard slot (length
+    /// [`TriplePool::shard_count`]).
+    pub shard_depths: Vec<usize>,
+}
+
 impl TriplePool {
     /// Pool keeping `depth` requests' worth of triples per shape.
     pub fn new(seed: u64, depth: usize) -> Self {
+        let shards = (0..POOL_SHARDS)
+            .map(|i| {
+                Mutex::new(ShardInner {
+                    shapes: HashMap::new(),
+                    // domain-separate from per-engine dealers AND per shard
+                    rng: Rng::new(seed ^ 0xB34B3A ^ ((i as u64) << 48)),
+                })
+            })
+            .collect();
         TriplePool {
-            inner: Mutex::new(PoolInner {
-                shapes: HashMap::new(),
-                rng: Rng::new(seed ^ 0xB34B3A), // domain-separate from per-engine dealers
-                offline_bytes: 0,
-                generated: 0,
-            }),
+            shards,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            starved: AtomicU64::new(0),
+            generated: AtomicU64::new(0),
+            offline_bytes: AtomicU64::new(0),
             depth: depth.max(1),
             max_per_shape: 256,
         }
     }
 
-    fn target(&self, demand: u64) -> usize {
-        ((demand as usize) * self.depth).min(self.max_per_shape)
+    /// Deterministic shard slot for a shape (FNV-1a over the key fields —
+    /// the std `HashMap` hasher is randomized per process, which would make
+    /// shard layout, and thus per-shard PRG streams, nondeterministic).
+    fn shard_of(&self, shape: &TripleShape) -> usize {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for v in [
+            shape.kind as u64,
+            shape.m as u64,
+            shape.k as u64,
+            shape.n as u64,
+            shape.uses as u64,
+            shape.layers as u64,
+        ] {
+            h = (h ^ v).wrapping_mul(0x1000_0000_01b3);
+        }
+        (h % self.shards.len() as u64) as usize
+    }
+
+    fn target(&self, sq: &ShapeQueue) -> usize {
+        (((sq.demand + sq.surge) as usize) * self.depth).min(self.max_per_shape)
     }
 
     /// Pop a pre-generated entry for `shape`, recording a hit or a miss.
     /// A miss before the shape was ever stocked also registers demand, so
-    /// one cold inference teaches refill the per-request profile; later
-    /// misses (pool drained under load) leave the target untouched.
+    /// one cold inference teaches refill the per-request profile; a miss
+    /// on a *drained* shape with live registered demand raises the surge
+    /// target instead (load-adaptive: the cold-start target was too small
+    /// for the concurrent-session load, so the service must stock more).
+    /// Either way a miss on a shape the offline phase knew about counts as
+    /// a starvation event.
     pub fn take(&self, shape: TripleShape) -> Option<PoolItem> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shards[self.shard_of(&shape)].lock().unwrap();
         let sq = inner.shapes.entry(shape).or_default();
         match sq.q.pop_front() {
             Some(item) => {
@@ -478,8 +662,13 @@ impl TriplePool {
                 Some(item)
             }
             None => {
+                if sq.stocked > 0 || sq.demand > 0 {
+                    self.starved.fetch_add(1, Ordering::Relaxed);
+                }
                 if sq.stocked == 0 {
                     sq.demand += 1;
+                } else if sq.demand > 0 {
+                    sq.surge += 1;
                 }
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 None
@@ -494,7 +683,7 @@ impl TriplePool {
     /// full-inference probe never touches) before the first generation
     /// request arrives — see `protocols::layer::decode_step_shapes`.
     pub fn register_demand(&self, shape: TripleShape, count: u64) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.shards[self.shard_of(&shape)].lock().unwrap();
         let sq = inner.shapes.entry(shape).or_default();
         sq.demand += count;
     }
@@ -502,57 +691,128 @@ impl TriplePool {
     /// Release previously registered demand on session teardown: a stream
     /// that ends early (client dropped, EOS before the step budget) gives
     /// back the per-step demand it will never consume, so the refill
-    /// thread stops overstocking dead shapes. Saturating — releasing more
+    /// service stops overstocking dead shapes. Saturating — releasing more
     /// than was registered clamps the shape's demand at zero rather than
-    /// underflowing.
+    /// underflowing — and releases of never-stocked, never-registered
+    /// shapes are pure no-ops (no phantom map entry is created). When the
+    /// last registered demand drains, the load-adaptive surge retires with
+    /// it: a dead shape must not keep a ratcheted target alive.
     pub fn release_demand(&self, shape: TripleShape, count: u64) {
-        let mut inner = self.inner.lock().unwrap();
-        let sq = inner.shapes.entry(shape).or_default();
-        sq.demand = sq.demand.saturating_sub(count);
+        let mut inner = self.shards[self.shard_of(&shape)].lock().unwrap();
+        if let Some(sq) = inner.shapes.get_mut(&shape) {
+            sq.demand = sq.demand.saturating_sub(count);
+            if sq.demand == 0 {
+                sq.surge = 0;
+            }
+        }
     }
 
-    /// Outstanding registered demand for `shape` (0 for unknown shapes).
-    /// The speculative rollback tests assert this balances to zero after
-    /// session eviction releases the per-lane demand it registered.
+    /// Outstanding registered demand for `shape` (0 for unknown shapes;
+    /// no map entry is created by asking). The speculative rollback tests
+    /// assert this balances to zero after session eviction releases the
+    /// per-lane demand it registered.
     pub fn demand_for(&self, shape: TripleShape) -> u64 {
-        self.inner.lock().unwrap().shapes.get(&shape).map_or(0, |sq| sq.demand)
+        let inner = self.shards[self.shard_of(&shape)].lock().unwrap();
+        inner.shapes.get(&shape).map_or(0, |sq| sq.demand)
     }
 
-    /// Generate one entry for the most depleted known shape (outside the
-    /// lock). Returns `false` when every shape is at target — the refill
-    /// thread sleeps on that.
+    /// Refill target for `shape` right now: `(demand + surge) × depth`,
+    /// capped by the per-shape memory guard (diagnostics / tests).
+    pub fn target_for(&self, shape: TripleShape) -> usize {
+        let inner = self.shards[self.shard_of(&shape)].lock().unwrap();
+        inner.shapes.get(&shape).map_or(0, |sq| self.target(sq))
+    }
+
+    /// Push one freshly generated batch for `shape` into its shard,
+    /// respecting the per-shape cap. Returns entries actually stocked.
+    fn push_generated(&self, shard: usize, shape: TripleShape, items: Vec<PoolItem>) -> u64 {
+        let mut pushed = 0u64;
+        {
+            let mut inner = self.shards[shard].lock().unwrap();
+            let sq = inner.shapes.entry(shape).or_default();
+            for item in items {
+                if sq.q.len() >= self.max_per_shape {
+                    break;
+                }
+                sq.stocked += 1;
+                sq.q.push_back(item);
+                pushed += 1;
+            }
+        }
+        self.offline_bytes.fetch_add(pushed * shape.offline_bytes(), Ordering::Relaxed);
+        pushed
+    }
+
+    /// Generate one entry for the globally most depleted known shape
+    /// (outside any lock). Returns `false` when every shape is at target.
+    /// Kept as the single-step refill primitive; the offline service and
+    /// prefill use the batched [`TriplePool::refill_shard`] instead.
     pub fn refill_once(&self) -> bool {
-        let (shape, mut rng) = {
-            let mut inner = self.inner.lock().unwrap();
+        let mut best: Option<(usize, usize, TripleShape)> = None; // (q.len, shard, shape)
+        for (si, shard) in self.shards.iter().enumerate() {
+            let inner = shard.lock().unwrap();
+            for (s, sq) in &inner.shapes {
+                let more_depleted = match best {
+                    Some((len, _, _)) => sq.q.len() < len,
+                    None => true,
+                };
+                if sq.q.len() < self.target(sq) && more_depleted {
+                    best = Some((sq.q.len(), si, *s));
+                }
+            }
+        }
+        let Some((_, si, shape)) = best else { return false };
+        let mut rng = {
+            let tag = self.generated.fetch_add(1, Ordering::Relaxed);
+            self.shards[si].lock().unwrap().rng.fork(0xF111 ^ tag)
+        };
+        let item = generate_item(&mut rng, shape);
+        self.push_generated(si, shape, vec![item]) == 1
+    }
+
+    /// Batched refill of one shard: pick its most depleted shape, then
+    /// generate the **entire** deficit for that shape outside the lock
+    /// (one lock to pick + fork PRGs, one lock to push the batch) instead
+    /// of re-scanning every shape under the lock per single triple.
+    /// Returns entries stocked (0 = this shard is at target).
+    pub fn refill_shard(&self, shard: usize) -> u64 {
+        let (shape, rngs) = {
+            let mut inner = self.shards[shard].lock().unwrap();
             let pick = inner
                 .shapes
                 .iter()
-                .filter(|(_, sq)| sq.demand > 0 && sq.q.len() < self.target(sq.demand))
+                .filter(|(_, sq)| sq.q.len() < self.target(sq))
                 .min_by_key(|(_, sq)| sq.q.len())
-                .map(|(s, _)| *s);
-            let Some(shape) = pick else { return false };
-            let tag = inner.generated;
-            inner.generated += 1;
-            let rng = inner.rng.fork(0xF111 ^ tag);
-            (shape, rng)
+                .map(|(s, sq)| (*s, self.target(sq) - sq.q.len()));
+            let Some((shape, deficit)) = pick else { return 0 };
+            let rngs: Vec<Rng> = (0..deficit)
+                .map(|_| {
+                    let tag = self.generated.fetch_add(1, Ordering::Relaxed);
+                    inner.rng.fork(0xF111 ^ tag)
+                })
+                .collect();
+            (shape, rngs)
         };
-        let item = generate_item(&mut rng, shape);
-        let mut inner = self.inner.lock().unwrap();
-        inner.offline_bytes += shape.offline_bytes();
-        let sq = inner.shapes.entry(shape).or_default();
-        sq.stocked += 1;
-        sq.q.push_back(item);
-        true
+        let items: Vec<PoolItem> =
+            rngs.into_iter().map(|mut rng| generate_item(&mut rng, shape)).collect();
+        self.push_generated(shard, shape, items)
     }
 
     /// Synchronously top up every known shape to target (server-start
-    /// prefill). Returns the number of entries generated.
+    /// prefill), one batched shard pass at a time. Returns the number of
+    /// entries generated.
     pub fn fill_to_target(&self) -> u64 {
         let mut n = 0;
-        while self.refill_once() {
-            n += 1;
+        loop {
+            let mut round = 0;
+            for si in 0..self.shards.len() {
+                round += self.refill_shard(si);
+            }
+            if round == 0 {
+                return n;
+            }
+            n += round;
         }
-        n
     }
 
     /// Pool hits so far (requests served from pre-generated randomness).
@@ -563,6 +823,18 @@ impl TriplePool {
     /// Pool misses so far (on-demand generation on the request path).
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Misses on shapes the offline phase knew about — the online path had
+    /// to generate on demand because the service fell behind (cold probe
+    /// misses on never-seen shapes don't count).
+    pub fn starvation_events(&self) -> u64 {
+        self.starved.load(Ordering::Relaxed)
+    }
+
+    /// Entries ever generated into the pool (offline-throughput metric).
+    pub fn generated_total(&self) -> u64 {
+        self.generated.load(Ordering::Relaxed)
     }
 
     /// Fraction of takes served from the pool (0 when nothing was taken).
@@ -578,18 +850,112 @@ impl TriplePool {
 
     /// Total entries currently pooled across all shapes.
     pub fn pooled_total(&self) -> usize {
-        self.inner.lock().unwrap().shapes.values().map(|sq| sq.q.len()).sum()
+        self.shard_depths().into_iter().sum()
     }
 
     /// Number of distinct shapes the pool has learned.
     pub fn shapes_known(&self) -> usize {
-        self.inner.lock().unwrap().shapes.len()
+        self.shards.iter().map(|s| s.lock().unwrap().shapes.len()).sum()
+    }
+
+    /// Number of independently locked shard slots.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Entries currently pooled per shard slot.
+    pub fn shard_depths(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().shapes.values().map(|sq| sq.q.len()).sum())
+            .collect()
     }
 
     /// Bytes of correlated randomness generated into the pool (offline
     /// traffic, reported separately from the online ledger).
     pub fn offline_bytes(&self) -> u64 {
-        self.inner.lock().unwrap().offline_bytes
+        self.offline_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time statistics (counters plus one pass over the shards).
+    pub fn stats(&self) -> PoolStats {
+        let mut pooled = 0u64;
+        let mut shapes = 0u64;
+        let mut shard_depths = Vec::with_capacity(self.shards.len());
+        for s in &self.shards {
+            let inner = s.lock().unwrap();
+            let depth: usize = inner.shapes.values().map(|sq| sq.q.len()).sum();
+            pooled += depth as u64;
+            shapes += inner.shapes.len() as u64;
+            shard_depths.push(depth);
+        }
+        PoolStats {
+            hits: self.hits(),
+            misses: self.misses(),
+            starved: self.starvation_events(),
+            generated: self.generated_total(),
+            offline_bytes: self.offline_bytes(),
+            pooled,
+            shapes,
+            shard_depths,
+        }
+    }
+
+    /// Spawn the offline phase as a service: `workers` background threads
+    /// partition the shard slots round-robin and keep their shards at
+    /// target, sleeping only when everything is topped up. Threads hold a
+    /// [`Weak`] pool reference, so dropping the last owning [`Arc`] stops
+    /// them even without an explicit [`PoolService::stop`].
+    pub fn start_service(pool: &Arc<TriplePool>, workers: usize) -> PoolService {
+        let stop = Arc::new(AtomicBool::new(false));
+        let n = workers.clamp(1, pool.shard_count());
+        let threads = (0..n)
+            .map(|w| {
+                let weak: Weak<TriplePool> = Arc::downgrade(pool);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || loop {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let Some(pool) = weak.upgrade() else { return };
+                    let mut stocked = 0;
+                    let mut si = w;
+                    while si < pool.shard_count() {
+                        stocked += pool.refill_shard(si);
+                        si += n;
+                    }
+                    drop(pool);
+                    if stocked == 0 {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                })
+            })
+            .collect();
+        PoolService { stop, threads }
+    }
+}
+
+/// Handle to a running offline-phase service (see
+/// [`TriplePool::start_service`]). Stop it explicitly with
+/// [`PoolService::stop`]; otherwise the worker threads exit on their own
+/// once the last owning pool [`Arc`] is dropped.
+pub struct PoolService {
+    stop: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl PoolService {
+    /// Number of refill worker threads.
+    pub fn workers(&self) -> usize {
+        self.threads.len()
+    }
+
+    /// Signal every refill worker to stop and join them.
+    pub fn stop(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for t in self.threads {
+            let _ = t.join();
+        }
     }
 }
 
@@ -672,6 +1038,7 @@ impl Dealer {
     /// re-distributed per take).
     pub fn fixed_correlation(&mut self, shape: TripleShape) -> FixedOperandCorrelation {
         debug_assert!(shape.is_fixed(), "fixed_correlation needs a fixed-operand shape");
+        debug_assert!(!shape.is_session_bundle(), "use fixed_session_correlations for bundles");
         self.account(shape);
         if let Some(pool) = &self.pool {
             if let Some(PoolItem::Fixed(c)) = pool.take(shape) {
@@ -679,6 +1046,24 @@ impl Dealer {
             }
         }
         generate_fixed(&mut self.rng, shape)
+    }
+
+    /// Serve a shared-mask session bundle: `shape.layers` per-layer
+    /// correlations holding the **same** mask sharing, so the session
+    /// opens the fixed operand once and every layer adopts the opening
+    /// (see [`FixedOperandCorrelation::adopt_shared_opening`]). Pool-first
+    /// with the same cold-start on-demand fallback as the other families;
+    /// the whole bundle — one mask plus `layers × uses` per-use
+    /// correlations — is charged to `offline_bytes` exactly once here.
+    pub fn fixed_session_correlations(&mut self, shape: TripleShape) -> Vec<FixedOperandCorrelation> {
+        debug_assert!(shape.is_session_bundle(), "needs a layers > 0 session-bundle shape");
+        self.account(shape);
+        if let Some(pool) = &self.pool {
+            if let Some(PoolItem::FixedSession(cs)) = pool.take(shape) {
+                return cs;
+            }
+        }
+        generate_fixed_session(&mut self.rng, shape)
     }
 
     /// Serve a square pair of shape `rows×cols`.
@@ -798,16 +1183,47 @@ mod tests {
     }
 
     #[test]
-    fn steady_state_misses_do_not_inflate_target() {
+    fn drained_misses_under_live_demand_ratchet_the_target() {
+        // Regression (ISSUE 8 satellite): take() used to grow demand only
+        // while stocked == 0, so a shape drained under sustained load kept
+        // its cold-start target forever and the refill service never
+        // caught up. Hammering a drained shape with registered demand must
+        // now raise the target.
         let pool = TriplePool::new(27, 2);
         let shape = TripleShape::elem(3, 3);
-        let _ = pool.take(shape); // learning miss: demand = 1
+        pool.register_demand(shape, 1);
         assert_eq!(pool.fill_to_target(), 2);
-        // Drain past empty: these misses must not ratchet the target up.
-        for _ in 0..10 {
-            let _ = pool.take(shape);
+        assert_eq!(pool.target_for(shape), 2);
+        // A burst of concurrent sessions drains the stock, then keeps
+        // missing: every drained miss is a starvation event AND a surge.
+        for _ in 0..2 {
+            assert!(pool.take(shape).is_some());
         }
-        assert_eq!(pool.fill_to_target(), 2, "target stays at demand x depth");
+        for _ in 0..3 {
+            assert!(pool.take(shape).is_none());
+        }
+        assert_eq!(pool.starvation_events(), 3);
+        assert_eq!(pool.target_for(shape), (1 + 3) * 2, "drained misses must grow the target");
+        assert_eq!(pool.fill_to_target(), 8);
+        // The ratchet retires with the last registered session: a dead
+        // shape must not keep a surged target alive.
+        pool.release_demand(shape, 1);
+        assert_eq!(pool.target_for(shape), 0);
+        assert_eq!(pool.fill_to_target(), 0);
+    }
+
+    #[test]
+    fn cold_misses_still_learn_demand_without_starvation_events() {
+        // Pre-first-stock misses are the probe teaching the pool its shape
+        // profile — they register demand but are NOT starvation (the
+        // offline phase could not have known the shape yet).
+        let pool = TriplePool::new(28, 2);
+        let shape = TripleShape::elem(3, 3);
+        let _ = pool.take(shape);
+        let _ = pool.take(shape);
+        assert_eq!(pool.demand_for(shape), 2);
+        assert_eq!(pool.starvation_events(), 1, "only the second miss hit a known shape");
+        assert_eq!(pool.fill_to_target(), 4);
     }
 
     #[test]
@@ -834,15 +1250,41 @@ mod tests {
         assert_eq!(pool.fill_to_target(), 10);
         // Session consumed 2 steps, then the client dropped: release 3.
         pool.release_demand(shape, 3);
-        while pool.take(shape).is_some() {}
+        // Drain exactly the stock (a trailing drained miss would be a
+        // legitimate surge under the load-adaptive ratchet).
+        for _ in 0..10 {
+            assert!(pool.take(shape).is_some());
+        }
         assert_eq!(pool.fill_to_target(), 4, "target follows the surviving demand");
         // Releasing more than was ever registered clamps at zero.
         pool.release_demand(shape, 100);
-        while pool.take(shape).is_some() {}
+        for _ in 0..4 {
+            assert!(pool.take(shape).is_some());
+        }
         assert_eq!(pool.fill_to_target(), 0, "dead shape must not be restocked");
+        // A miss on the dead shape is starvation-visible but must not
+        // resurrect the target (no live demand → no surge).
+        assert!(pool.take(shape).is_none());
+        assert_eq!(pool.fill_to_target(), 0);
         // Releasing a never-registered shape is a harmless no-op.
         pool.release_demand(TripleShape::elem(2, 2), 7);
         assert_eq!(pool.fill_to_target(), 0);
+    }
+
+    #[test]
+    fn releases_and_queries_of_unknown_shapes_leave_no_phantom_entries() {
+        // Regression (ISSUE 8 satellite): release_demand used entry
+        // or_default semantics, inserting an empty ShapeQueue for every
+        // never-stocked shape a speculative eviction released — leaking a
+        // map entry per unseen shape.
+        let pool = TriplePool::new(41, 2);
+        pool.register_demand(TripleShape::elem(2, 2), 1);
+        assert_eq!(pool.shapes_known(), 1);
+        pool.release_demand(TripleShape::matmul(1, 64, 16), 12);
+        pool.release_demand(TripleShape::fixed_ppp(2, 8, 8), 1);
+        assert_eq!(pool.demand_for(TripleShape::matmul(1, 64, 16)), 0);
+        assert_eq!(pool.target_for(TripleShape::fixed_ppp(2, 8, 8)), 0);
+        assert_eq!(pool.shapes_known(), 1, "unknown-shape releases must not leak map entries");
     }
 
     #[test]
@@ -1048,5 +1490,229 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(pool.hits() + pool.misses(), 5);
+    }
+
+    #[test]
+    fn session_bundle_shares_one_mask_across_layers() {
+        let mut d = Dealer::new(Rng::new(101));
+        let shape = TripleShape::fixed_ppp_session(2, 6, 4, 3);
+        let mut layers = d.fixed_session_correlations(shape);
+        assert_eq!(layers.len(), 3);
+        let mask0 = layers[0].mask.clone();
+        let b = mask0.reconstruct();
+        for corr in &mut layers {
+            // Per-layer key (layers erased): downstream per-use machinery
+            // is oblivious to how the mask was amortized.
+            assert_eq!(corr.shape, TripleShape::fixed_ppp(2, 6, 4));
+            assert_eq!(corr.mask, mask0, "every layer holds the same mask sharing");
+            assert_eq!(corr.openings(), 0);
+            corr.adopt_shared_opening().unwrap();
+            assert_eq!(corr.openings(), 1);
+            assert!(corr.adopt_shared_opening().is_err(), "no second opening per layer");
+            for _ in 0..4 {
+                let (_, u) = corr.take_use().unwrap();
+                let (a, c) = &u.blocks[0];
+                assert_eq!(ring::matmul(&a.reconstruct(), &b), c.reconstruct());
+            }
+            assert!(corr.take_use().is_err(), "per-layer uses still bounded");
+        }
+        // Per-use randomness stays fresh per layer despite the shared mask.
+        assert_ne!(
+            layers[0].consumed[0].blocks[0].0.reconstruct(),
+            layers[1].consumed[0].blocks[0].0.reconstruct()
+        );
+        // The row-grown family never adopts (it opens per written row).
+        let mut sc = d.fixed_correlation(TripleShape::fixed_scores(2, 4, 4, 2));
+        assert!(sc.adopt_shared_opening().is_err());
+    }
+
+    #[test]
+    fn session_append_bundle_keeps_column_per_use_identity() {
+        let mut d = Dealer::new(Rng::new(102));
+        let shape = TripleShape::fixed_append_session(6, 3, 6, 2);
+        let mut layers = d.fixed_session_correlations(shape);
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0].mask, layers[1].mask);
+        let b = layers[0].mask.reconstruct();
+        for corr in &mut layers {
+            for i in 0..6 {
+                let (_, u) = corr.take_use().unwrap();
+                let (a, c) = &u.blocks[0];
+                assert_eq!(
+                    ring::matmul(&b.col_block(i, i + 1), &a.reconstruct()),
+                    c.reconstruct()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn session_bundle_offline_bytes_charge_the_shared_mask_once() {
+        let shape = TripleShape::fixed_ppp_session(2, 4, 3, 3);
+        // mask 4×4 + 3 layers × 3 uses × (A 2×4 + C 2×4) elements, ×16 B.
+        assert_eq!(shape.offline_bytes(), 16 * (16 + 3 * 48));
+        // Cheaper than 3 independent per-layer bundles: the mask sharing
+        // is distributed once, not once per layer.
+        let per_layer = TripleShape::fixed_ppp(2, 4, 3);
+        assert_eq!(shape.offline_bytes() + 2 * 16 * 16, 3 * per_layer.offline_bytes());
+        let app = TripleShape::fixed_append_session(4, 2, 3, 3);
+        // mask 4×4 + 3 layers × 3 uses × (A 2 + C 8) elements.
+        assert_eq!(app.offline_bytes(), 16 * (16 + 3 * 30));
+
+        let mut d = Dealer::new(Rng::new(103));
+        let _ = d.fixed_session_correlations(shape);
+        assert_eq!(d.offline_bytes, shape.offline_bytes());
+        assert_eq!(d.triples_served, 1, "one session bundle, one serve");
+    }
+
+    #[test]
+    fn session_bundles_pool_like_any_other_shape() {
+        let pool = Arc::new(TriplePool::new(104, 1));
+        let mut d = Dealer::new(Rng::new(105));
+        d.attach_pool(Arc::clone(&pool));
+        let shape = TripleShape::fixed_append_session(6, 3, 6, 2);
+        pool.register_demand(shape, 1);
+        assert_eq!(pool.fill_to_target(), 1);
+        let layers = d.fixed_session_correlations(shape);
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0].mask, layers[1].mask);
+        assert_eq!((pool.hits(), pool.misses()), (1, 0));
+        assert_eq!(pool.offline_bytes(), shape.offline_bytes());
+        // Cold fallback still works once the pool is drained.
+        let cold = d.fixed_session_correlations(shape);
+        assert_eq!(cold.len(), 2);
+        assert_eq!(pool.misses(), 1);
+        // The session key and its per-layer key are distinct pool shapes.
+        assert!(pool.take(TripleShape::fixed_append(6, 3, 6)).is_none());
+    }
+
+    #[test]
+    fn batched_shard_refill_matches_fill_semantics() {
+        // refill_shard generates the full deficit of its pick in one
+        // batch; driving shards to fixpoint equals the old per-item fill.
+        let pool = TriplePool::new(106, 3);
+        pool.register_demand(TripleShape::matmul(2, 4, 3), 2);
+        pool.register_demand(TripleShape::elem(5, 5), 1);
+        let mut total = 0;
+        loop {
+            let round: u64 = (0..pool.shard_count()).map(|si| pool.refill_shard(si)).sum();
+            if round == 0 {
+                break;
+            }
+            total += round;
+        }
+        assert_eq!(total, 2 * 3 + 3);
+        assert_eq!(pool.pooled_total(), 9);
+        assert!(!pool.refill_once(), "already at target");
+    }
+
+    #[test]
+    fn offline_service_keeps_shards_topped_up() {
+        let pool = Arc::new(TriplePool::new(107, 2));
+        let shape = TripleShape::matmul(2, 4, 3);
+        pool.register_demand(shape, 2);
+        let service = TriplePool::start_service(&pool, 2);
+        assert_eq!(service.workers(), 2);
+        // The service reaches the 4-entry target with no synchronous fill.
+        let mut waited = 0;
+        while pool.pooled_total() < 4 && waited < 5000 {
+            std::thread::sleep(Duration::from_millis(1));
+            waited += 1;
+        }
+        assert_eq!(pool.pooled_total(), 4);
+        // Draining under live demand: the service restocks on its own.
+        for _ in 0..4 {
+            assert!(pool.take(shape).is_some());
+        }
+        let mut waited = 0;
+        while pool.pooled_total() < 4 && waited < 5000 {
+            std::thread::sleep(Duration::from_millis(1));
+            waited += 1;
+        }
+        assert!(pool.pooled_total() >= 4);
+        service.stop();
+        // A stopped service generates nothing more.
+        let left = pool.pooled_total();
+        for _ in 0..left {
+            assert!(pool.take(shape).is_some());
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(pool.pooled_total(), 0);
+    }
+
+    #[test]
+    fn pool_stress_producers_consumers_balance() {
+        // ISSUE 8 satellite: N producer / M consumer stress — no deadlock,
+        // hits + misses == takes, offline_bytes monotone, and demand
+        // balances back to zero once every session has evicted.
+        const PRODUCERS: usize = 3;
+        const CONSUMERS: usize = 4;
+        const ROUNDS: usize = 50;
+        let pool = Arc::new(TriplePool::new(108, 2));
+        let shapes = [
+            TripleShape::matmul(1, 16, 8),
+            TripleShape::elem(4, 4),
+            TripleShape::square(3, 5),
+            TripleShape::fixed_ppp(2, 8, 4),
+        ];
+        let takes = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let producers: Vec<_> = (0..PRODUCERS)
+            .map(|w| {
+                let p = Arc::clone(&pool);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut last = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let mut si = w;
+                        while si < p.shard_count() {
+                            p.refill_shard(si);
+                            si += PRODUCERS;
+                        }
+                        let now = p.offline_bytes();
+                        assert!(now >= last, "offline_bytes must be monotone");
+                        last = now;
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..CONSUMERS)
+            .map(|c| {
+                let p = Arc::clone(&pool);
+                let takes = Arc::clone(&takes);
+                std::thread::spawn(move || {
+                    for round in 0..ROUNDS {
+                        let s = shapes[(c + round) % shapes.len()];
+                        p.register_demand(s, 1); // session admits
+                        for _ in 0..3 {
+                            let _ = p.take(s);
+                            takes.fetch_add(1, Ordering::Relaxed);
+                        }
+                        p.release_demand(s, 1); // session evicts
+                    }
+                })
+            })
+            .collect();
+        for h in consumers {
+            h.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        for h in producers {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            pool.hits() + pool.misses(),
+            takes.load(Ordering::Relaxed),
+            "every take is exactly one hit or one miss"
+        );
+        let stats = pool.stats();
+        assert_eq!(stats.hits + stats.misses, (CONSUMERS * ROUNDS * 3) as u64);
+        assert_eq!(stats.offline_bytes, pool.offline_bytes());
+        assert_eq!(stats.shard_depths.len(), pool.shard_count());
+        // All sessions evicted → registered demand balances to zero.
+        for s in shapes {
+            pool.release_demand(s, u64::MAX); // retire any surge leftovers
+            assert_eq!(pool.demand_for(s), 0);
+        }
     }
 }

@@ -16,7 +16,9 @@ use crate::tensor::RingTensor;
 use crate::util::rng::Rng;
 use dealer::Dealer;
 
-pub use dealer::{FixedOperandCorrelation, FixedUse, TripleKind, TriplePool, TripleShape};
+pub use dealer::{
+    FixedOperandCorrelation, FixedUse, PoolService, PoolStats, TripleKind, TriplePool, TripleShape,
+};
 
 /// A 2-party additive sharing of a ring tensor: `x = s0 + s1 (mod 2^64)`.
 #[derive(Clone, Debug, PartialEq)]

@@ -272,6 +272,53 @@ pub fn deal_kv_correlations(
     })
 }
 
+/// Deal and open the fixed-operand correlations for **every** layer of a
+/// decode session at once, sharing one dealt π₁ mask (and one π₁ᵀ mask)
+/// across the layers: the engine holds a single session permutation used
+/// by all layers, so the masked differences `π₁ − B` and `π₁ᵀ − B'` are
+/// each opened on the wire once per *session* instead of once per layer —
+/// `corr_setup` drops from `2·L·(2·8·n²)` to `2·(2·8·n²)` bytes (an
+/// `n_layers×` cut) and from `2·L` to `2` Correlation rounds. The
+/// remaining layers adopt the shared opening
+/// ([`FixedOperandCorrelation::adopt_shared_opening`]), so the per-layer
+/// security census still reports exactly one π₁-side opening per layer,
+/// and the per-layer row-grown score correlations stay independent (each
+/// layer's K cache is its own write-once stream).
+pub fn deal_session_kv_correlations(
+    mpc: &mut Mpc,
+    cfg: &ModelConfig,
+    pi1_sh: &Share,
+    pi1_t_sh: &Share,
+) -> Result<Vec<KvCorrelations>> {
+    let n = cfg.n_ctx;
+    let (d, h, l) = (cfg.d, cfg.h, cfg.layers);
+    anyhow::ensure!(l > 0, "a decode session needs at least one layer");
+    let mut ppps =
+        mpc.dealer.fixed_session_correlations(TripleShape::fixed_ppp_session(h, n, n, l));
+    let f_pi1 = mpc.open_fixed_operand(pi1_sh, &mut ppps[0], OpClass::Correlation)?;
+    for c in ppps.iter_mut().skip(1) {
+        c.adopt_shared_opening()?;
+    }
+    let mut appends =
+        mpc.dealer.fixed_session_correlations(TripleShape::fixed_append_session(n, d, n, l));
+    let f_pi1_t = mpc.open_fixed_operand(pi1_t_sh, &mut appends[0], OpClass::Correlation)?;
+    for c in appends.iter_mut().skip(1) {
+        c.adopt_shared_opening()?;
+    }
+    Ok(ppps
+        .into_iter()
+        .zip(appends)
+        .map(|(ppp, append)| KvCorrelations {
+            ppp,
+            f_pi1: f_pi1.clone(),
+            append,
+            f_pi1_t: f_pi1_t.clone(),
+            scores: mpc.dealer.fixed_correlation(TripleShape::fixed_scores(h, n, d, n)),
+            f_k: RingTensor::zeros(n, d),
+        })
+        .collect())
+}
+
 impl LayerKvCache {
     /// Empty cache for a layer of width `d` and capacity `n_ctx` tokens.
     pub fn new(n_ctx: usize, d: usize) -> Self {
@@ -449,12 +496,14 @@ pub fn decode_step_shapes(cfg: &ModelConfig) -> Vec<(TripleShape, u64)> {
 }
 
 /// Pool demand of one decode session (`steps` absorbs). With fixed-operand
-/// correlations the session consumes one correlation bundle of each family
-/// per layer (dealt for the full `n_ctx` capacity) plus the per-step value
-/// products — the only decode matmuls still fed by plain Beaver triples
-/// (their `[Ṽ]` operand genuinely changes every step; see DESIGN.md
-/// §Fixed-operand correlations). Without correlations it is `steps` times
-/// the plain per-step profile of [`decode_step_shapes`].
+/// correlations the session consumes one shared-mask **session bundle** of
+/// the π₁ and π₁ᵀ families (all layers in one entry, dealt for the full
+/// `n_ctx` capacity — see [`deal_session_kv_correlations`]), one row-grown
+/// score bundle per layer, plus the per-step value products — the only
+/// decode matmuls still fed by plain Beaver triples (their `[Ṽ]` operand
+/// genuinely changes every step; see DESIGN.md §Fixed-operand
+/// correlations). Without correlations it is `steps` times the plain
+/// per-step profile of [`decode_step_shapes`].
 pub fn decode_pool_shapes(cfg: &ModelConfig, correlations: bool, steps: u64) -> Vec<(TripleShape, u64)> {
     if !correlations {
         return decode_step_shapes(cfg).into_iter().map(|(s, c)| (s, c * steps)).collect();
@@ -463,8 +512,8 @@ pub fn decode_pool_shapes(cfg: &ModelConfig, correlations: bool, steps: u64) -> 
     let (d, h, dh) = (cfg.d, cfg.h, cfg.dh());
     let l = cfg.layers as u64;
     vec![
-        (TripleShape::fixed_ppp(h, n, n), l),
-        (TripleShape::fixed_append(n, d, n), l),
+        (TripleShape::fixed_ppp_session(h, n, n, cfg.layers), 1),
+        (TripleShape::fixed_append_session(n, d, n, cfg.layers), 1),
         (TripleShape::fixed_scores(h, n, d, n), l),
         (TripleShape::matmul(1, n, dh), l * h as u64 * steps),
     ]
@@ -1500,6 +1549,57 @@ mod tests {
         assert!(plain_bytes > corr_bytes * 2, "per-layer warm saving should exceed 2x");
     }
 
+    /// The shared-π₁ session deal opens each fixed operand once for the
+    /// whole session: exactly two wire openings (π₁ − B, π₁ᵀ − B'), every
+    /// layer adopting the same mask and reporting one opening to the
+    /// census, and `corr_setup` exactly `n_layers×` below the per-layer
+    /// dealing it replaces.
+    #[test]
+    fn session_deal_opens_each_pi1_mask_once_for_all_layers() {
+        let cfg = ModelConfig::gpt2_tiny();
+        let mut rng = Rng::new(181);
+        let perms = PermSet::random(&cfg, &mut rng);
+        let n = cfg.n_ctx;
+        let l = cfg.layers;
+        assert!(l >= 2, "needs a multi-layer model to exercise mask sharing");
+
+        let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 182);
+        let pi1_sh = ppp::share_perm(&mut mpc, &perms.pi1, OpClass::Linear);
+        let pi1_t_sh = ppp::share_perm_t(&mut mpc, &perms.pi1, OpClass::Linear);
+        let before_b = mpc.net.ledger.bytes_total();
+        let before_r = mpc.net.ledger.rounds_total();
+        let corrs = deal_session_kv_correlations(&mut mpc, &cfg, &pi1_sh, &pi1_t_sh).unwrap();
+        let setup_bytes = mpc.net.ledger.bytes_total() - before_b;
+        let setup_rounds = mpc.net.ledger.rounds_total() - before_r;
+        assert_eq!(corrs.len(), l);
+        assert_eq!(setup_bytes, 2 * (2 * 8 * (n * n) as u64), "two wire openings per session");
+        assert_eq!(setup_rounds, 2);
+
+        let pi1 = pi1_sh.reconstruct();
+        let pi1_t = pi1_t_sh.reconstruct();
+        for c in &corrs {
+            assert_eq!(c.ppp.openings(), 1, "census: one π₁ opening per layer");
+            assert_eq!(c.append.openings(), 1);
+            assert_eq!(c.scores.openings(), 0);
+            assert_eq!(c.ppp.mask, corrs[0].ppp.mask, "one shared π₁ mask");
+            assert_eq!(c.append.mask, corrs[0].append.mask, "one shared π₁ᵀ mask");
+            // The adopted public opening is valid for every layer.
+            assert_eq!(crate::ring::sub(&pi1, &c.ppp.mask.reconstruct()), c.f_pi1);
+            assert_eq!(crate::ring::sub(&pi1_t, &c.append.mask.reconstruct()), c.f_pi1_t);
+        }
+
+        // The per-layer dealing pays the opening L times over.
+        let mut mpc2 = Mpc::new(NetSim::new(NetworkProfile::lan()), 183);
+        let pi1_sh2 = ppp::share_perm(&mut mpc2, &perms.pi1, OpClass::Linear);
+        let pi1_t_sh2 = ppp::share_perm_t(&mut mpc2, &perms.pi1, OpClass::Linear);
+        let before2 = mpc2.net.ledger.bytes_total();
+        for _ in 0..l {
+            let _ = deal_kv_correlations(&mut mpc2, &cfg, &pi1_sh2, &pi1_t_sh2).unwrap();
+        }
+        let per_layer_bytes = mpc2.net.ledger.bytes_total() - before2;
+        assert_eq!(per_layer_bytes, setup_bytes * l as u64, "corr_setup cut exactly n_layers x");
+    }
+
     /// The batched schedule must be a pure re-scheduling: identically
     /// seeded stacks produce **bit-identical** output shares (same PRG and
     /// dealer consumption order), identical bytes, and 6 rounds per layer
@@ -1566,15 +1666,16 @@ mod tests {
     fn decode_pool_shapes_cover_both_modes() {
         let cfg = ModelConfig::gpt2_tiny();
         let l = cfg.layers as u64;
-        // correlations on: three session bundles per layer + value triples
+        // correlations on: one shared-mask session bundle per open-once
+        // family, per-layer score bundles, plus the value triples
         let with = decode_pool_shapes(&cfg, true, 6);
         assert_eq!(with.len(), 4);
-        assert!(with
-            .iter()
-            .any(|(s, c)| *s == TripleShape::fixed_ppp(cfg.h, cfg.n_ctx, cfg.n_ctx) && *c == l));
-        assert!(with
-            .iter()
-            .any(|(s, c)| *s == TripleShape::fixed_append(cfg.n_ctx, cfg.d, cfg.n_ctx) && *c == l));
+        assert!(with.iter().any(|(s, c)| *s
+            == TripleShape::fixed_ppp_session(cfg.h, cfg.n_ctx, cfg.n_ctx, cfg.layers)
+            && *c == 1));
+        assert!(with.iter().any(|(s, c)| *s
+            == TripleShape::fixed_append_session(cfg.n_ctx, cfg.d, cfg.n_ctx, cfg.layers)
+            && *c == 1));
         assert!(with
             .iter()
             .any(|(s, c)| *s == TripleShape::fixed_scores(cfg.h, cfg.n_ctx, cfg.d, cfg.n_ctx) && *c == l));
