@@ -4,6 +4,8 @@
 //! Run: `cargo bench --bench bench_ring` (CENTAUR_BENCH_QUICK=1 for smoke).
 
 use centaur::ring;
+use centaur::runtime::kernel;
+use centaur::runtime::RingKernel;
 use centaur::tensor::RingTensor;
 use centaur::util::bench::Bencher;
 use centaur::util::rng::Rng;
@@ -15,6 +17,59 @@ fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> RingTensor {
 fn main() {
     let mut b = Bencher::new();
     let mut rng = Rng::new(42);
+
+    b.section("kernel dispatch — §Perf iteration 5 (per-kernel A/B, EXPERIMENTS.md)");
+    let selected = kernel::selected_name();
+    for d in kernel::available_kernels() {
+        let mark = if d.name == selected { " <- selected" } else { "" };
+        println!("  registry: {:<7} available={:<5} ({}){mark}", d.name, d.available, d.detail);
+    }
+    // (scalar Gmac/s, selected Gmac/s) on the FFN shape for the smoke gate.
+    let mut ffn_scalar = 0.0f64;
+    let mut ffn_selected = 0.0f64;
+    for (m, k, n, label) in [
+        (128usize, 768usize, 768usize, "qkv/wo 128x768x768"),
+        (128, 768, 3072, "ffn-up 128x768x3072"),
+        (128, 128, 128, "attention 128x128x128"),
+    ] {
+        let a = rand_mat(&mut rng, m, k);
+        let w = rand_mat(&mut rng, n, k); // stored (out,in) for matmul_nt
+        let macs = (m * k * n) as f64;
+        for d in kernel::available_kernels() {
+            if !d.available || d.name == "xla" {
+                continue;
+            }
+            let kern = kernel::kernel_by_name(d.name).expect("probed available");
+            let s = b.bench(&format!("{label} [{}]", d.name), || {
+                std::hint::black_box(kern.matmul_nt(&a, &w));
+            });
+            let gmacs = macs / s.median.as_secs_f64() / 1e9;
+            println!("    -> {gmacs:.2} Gmac/s [{}]", d.name);
+            if label.starts_with("ffn-up") {
+                if d.name == "scalar" {
+                    ffn_scalar = gmacs;
+                }
+                if d.name == selected {
+                    ffn_selected = gmacs;
+                }
+            }
+        }
+    }
+    // CI smoke gate: the auto-selected kernel must not be slower than the
+    // scalar fallback on the FFN hot shape (0.9 slack for timer noise on
+    // shared runners). A SIMD kernel losing to scalar means the dispatch
+    // order is lying about this host.
+    if selected != "scalar" && ffn_scalar > 0.0 {
+        assert!(
+            ffn_selected >= 0.9 * ffn_scalar,
+            "selected kernel '{selected}' ({ffn_selected:.2} Gmac/s) slower than scalar \
+             ({ffn_scalar:.2} Gmac/s) on 128x768x3072"
+        );
+        println!(
+            "  smoke OK: {selected} {:.2}x scalar on 128x768x3072",
+            ffn_selected / ffn_scalar
+        );
+    }
 
     b.section("ring matmul — Centaur linear-layer shapes (bert-base, n=128)");
     for (m, k, n, label) in [

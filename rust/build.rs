@@ -1,0 +1,34 @@
+//! Toolchain probe for the SIMD ring kernels.
+//!
+//! The AVX-512 intrinsics (`_mm512_mullo_epi64` & co) stabilized in rustc
+//! 1.89; the crate's MSRV is 1.75. Rather than raise the floor for one
+//! optional kernel, probe the compiler version here and expose
+//! `cfg(centaur_avx512)` only when the intrinsics exist — older toolchains
+//! still build every other kernel and `runtime::kernel` reports the avx512
+//! entry as unavailable with this reason.
+
+use std::process::Command;
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    println!("cargo:rerun-if-env-changed=RUSTC");
+    // Declare the custom cfg for rustc's check-cfg (cargo ≥ 1.80 understands
+    // the directive; older cargos treat unknown keys as inert metadata).
+    println!("cargo:rustc-check-cfg=cfg(centaur_avx512)");
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let version = Command::new(&rustc)
+        .arg("--version")
+        .output()
+        .ok()
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .unwrap_or_default();
+    // Format: "rustc 1.89.0 (…)" or "rustc 1.91.0-nightly (…)".
+    if let Some(rest) = version.strip_prefix("rustc ") {
+        let mut parts = rest.split(['.', '-', ' ']);
+        let major: u64 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+        let minor: u64 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+        if major > 1 || (major == 1 && minor >= 89) {
+            println!("cargo:rustc-cfg=centaur_avx512");
+        }
+    }
+}

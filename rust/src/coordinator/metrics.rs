@@ -180,6 +180,7 @@ impl Metrics {
             max_batch_sessions: self.max_batch_sessions,
             spec_proposed: self.spec_proposed,
             spec_accepted: self.spec_accepted,
+            ring_kernel: crate::runtime::kernel::selected_name().to_string(),
             elapsed,
         }
     }
@@ -263,6 +264,10 @@ pub struct MetricsSnapshot {
     pub spec_proposed: u64,
     /// Draft tokens (draft hits) the private greedy choices accepted.
     pub spec_accepted: u64,
+    /// Ring matmul kernel the dispatch layer selected for this process
+    /// (see [`crate::runtime::kernel`]): `scalar`, `avx2`, `avx512`,
+    /// `neon`, or `xla`.
+    pub ring_kernel: String,
     /// Wall-clock time since the coordinator started.
     pub elapsed: Duration,
 }
@@ -372,8 +377,9 @@ impl MetricsSnapshot {
     /// Human-readable summary block.
     pub fn summary(&self) -> String {
         let mut s = format!(
-            "requests={} batches={} p50={} p95={} p99={} mean_service={} \
+            "ring_kernel={} requests={} batches={} p50={} p95={} p99={} mean_service={} \
              throughput={:.2} req/s comm={} rounds={} elapsed={}",
+            self.ring_kernel,
             self.completed,
             self.batches,
             crate::util::human_secs(self.p50.as_secs_f64()),
@@ -448,6 +454,17 @@ impl MetricsSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn snapshot_reports_ring_kernel() {
+        let s = Metrics::new().snapshot();
+        assert!(
+            crate::runtime::kernel::KERNEL_NAMES.contains(&s.ring_kernel.as_str()),
+            "unexpected kernel name {:?}",
+            s.ring_kernel
+        );
+        assert!(s.summary().contains(&format!("ring_kernel={}", s.ring_kernel)));
+    }
 
     #[test]
     fn quantiles_ordered() {

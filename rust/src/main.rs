@@ -23,25 +23,33 @@ use centaur::Result;
 
 fn main() {
     let args = Args::from_env();
-    let rc = match args.command.as_deref() {
-        Some("report") => cmd_report(&args),
-        Some("infer") => cmd_infer(&args),
-        Some("serve") => cmd_serve(&args),
-        Some("compare") => cmd_compare(&args),
-        Some("artifacts-check") => cmd_artifacts_check(&args),
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    // Global ring-kernel selection: `--ring-kernel scalar|avx2|avx512|neon|xla`
+    // (same registry as CENTAUR_RING_KERNEL, wins over it). Fail fast here so
+    // a typo'd or host-unsupported kernel is a CLI error, not a mid-run panic.
+    centaur::runtime::kernel::set_override(args.opt("ring-kernel"))?;
+    match args.command.as_deref() {
+        Some("report") => cmd_report(args),
+        Some("infer") => cmd_infer(args),
+        Some("serve") => cmd_serve(args),
+        Some("compare") => cmd_compare(args),
+        Some("artifacts-check") => cmd_artifacts_check(args),
         _ => {
             eprintln!(
                 "centaur {} — hybrid privacy-preserving transformer inference\n\
                  usage: centaur <report|infer|serve|compare|artifacts-check> [options]\n\
+                 global options: --ring-kernel <scalar|avx2|avx512|neon|xla>\n\
                  report targets: table1 table2 table3 table4 fig3 fig4 fig7 fig8 fig10 all",
                 centaur::VERSION
             );
             Ok(())
         }
-    };
-    if let Err(e) = rc {
-        eprintln!("error: {e:#}");
-        std::process::exit(1);
     }
 }
 

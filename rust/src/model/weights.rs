@@ -130,25 +130,62 @@ impl ModelWeights {
             Some("gpt2") => ModelKind::Gpt2,
             other => anyhow::bail!("bad kind {other:?}"),
         };
+        // Required numeric fields fail loudly: a missing or malformed "d"
+        // used to default to 0 and surface much later as an empty model or
+        // an out-of-range panic with no hint which manifest field was bad.
+        let req = |field: &str| -> Result<usize> {
+            match man.get(field) {
+                json::Json::Null => anyhow::bail!(
+                    "manifest {}/manifest.json: missing required field '{field}'",
+                    dir.display()
+                ),
+                v => v.as_usize().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "manifest {}/manifest.json: field '{field}' is {v}, expected a non-negative integer",
+                        dir.display()
+                    )
+                }),
+            }
+        };
         let cfg = ModelConfig {
             name: man.get("model").as_str().unwrap_or("?").to_string(),
             kind,
-            vocab: man.get("vocab").as_usize().unwrap_or(0),
-            n_ctx: man.get("n_ctx").as_usize().unwrap_or(0),
-            d: man.get("d").as_usize().unwrap_or(0),
-            h: man.get("h").as_usize().unwrap_or(0),
-            layers: man.get("layers").as_usize().unwrap_or(0),
-            k: man.get("k").as_usize().unwrap_or(0),
-            n_classes: man.get("n_classes").as_usize().unwrap_or(2),
+            vocab: req("vocab")?,
+            n_ctx: req("n_ctx")?,
+            d: req("d")?,
+            h: req("h")?,
+            layers: req("layers")?,
+            k: req("k")?,
+            // Optional with a default, but present-and-malformed still errors.
+            n_classes: match man.get("n_classes") {
+                json::Json::Null => 2,
+                _ => req("n_classes")?,
+            },
         };
         let blob = std::fs::read(dir.join("weights.bin"))
             .map_err(|e| anyhow::anyhow!("read weights.bin: {e}"))?;
         let mut tensors: BTreeMap<String, FloatTensor> = BTreeMap::new();
         for t in man.get("tensors").as_arr().unwrap_or(&[]) {
-            let name = t.get("name").as_str().unwrap_or_default().to_string();
-            let rows = t.get("rows").as_usize().unwrap_or(0);
-            let cols = t.get("cols").as_usize().unwrap_or(0);
-            let off = t.get("offset").as_usize().unwrap_or(0) * 4;
+            let name = match t.get("name").as_str() {
+                Some(n) if !n.is_empty() => n.to_string(),
+                _ => anyhow::bail!(
+                    "manifest {}/manifest.json: tensor entry {t} has no 'name'",
+                    dir.display()
+                ),
+            };
+            let treq = |field: &str| -> Result<usize> {
+                t.get(field).as_usize().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "manifest {}/manifest.json: tensor '{name}' field '{field}' is {}, \
+                         expected a non-negative integer",
+                        dir.display(),
+                        t.get(field)
+                    )
+                })
+            };
+            let rows = treq("rows")?;
+            let cols = treq("cols")?;
+            let off = treq("offset")? * 4;
             let need = rows * cols * 4;
             anyhow::ensure!(off + need <= blob.len(), "tensor {name} out of range");
             let mut data = Vec::with_capacity(rows * cols);
@@ -301,6 +338,51 @@ mod tests {
         assert_eq!(lcfg.layers, 1);
         assert_eq!(w.emb_word.shape(), (cfg.vocab, cfg.d));
         assert_eq!(w.layers[0].wq.get(0, 1), 0.01);
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    fn write_checkpoint(tag: &str, manifest: &str) -> std::path::PathBuf {
+        let tmp = std::env::temp_dir().join(format!("centaur_ctwb_{}_{tag}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), manifest).unwrap();
+        std::fs::write(tmp.join("weights.bin"), b"").unwrap();
+        tmp
+    }
+
+    #[test]
+    fn missing_field_names_the_field() {
+        // "d" absent — must not silently become a 0-dim model.
+        let tmp = write_checkpoint(
+            "missing_d",
+            r#"{"model":"m","kind":"bert","vocab":8,"n_ctx":4,"h":2,"layers":0,"k":8,"tensors":[]}"#,
+        );
+        let err = ModelWeights::load(&tmp).unwrap_err().to_string();
+        assert!(err.contains("'d'"), "error should name the field: {err}");
+        assert!(err.contains("missing"), "error should say it is missing: {err}");
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn malformed_field_names_the_field() {
+        // "layers" is a string — the old loader truncated it to 0 layers.
+        let tmp = write_checkpoint(
+            "bad_layers",
+            r#"{"model":"m","kind":"bert","vocab":8,"n_ctx":4,"d":4,"h":2,"layers":"two","k":8,"tensors":[]}"#,
+        );
+        let err = ModelWeights::load(&tmp).unwrap_err().to_string();
+        assert!(err.contains("'layers'"), "error should name the field: {err}");
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn malformed_tensor_entry_names_tensor_and_field() {
+        let tmp = write_checkpoint(
+            "bad_tensor",
+            r#"{"model":"m","kind":"bert","vocab":8,"n_ctx":4,"d":4,"h":2,"layers":0,"k":8,
+                "tensors":[{"name":"emb.word","rows":-8,"cols":4,"offset":0}]}"#,
+        );
+        let err = ModelWeights::load(&tmp).unwrap_err().to_string();
+        assert!(err.contains("emb.word") && err.contains("'rows'"), "got: {err}");
         std::fs::remove_dir_all(&tmp).ok();
     }
 }

@@ -22,6 +22,12 @@
 //! the slots and stream correlations ahead of demand, and drained misses
 //! under live load ratchet the per-shape target up so the service catches
 //! up instead of starving (DESIGN.md §Offline phase).
+//!
+//! Triple generation lowers to [`ring::matmul`], so it rides the same
+//! [`RingKernel`](crate::runtime::kernel::RingKernel) dispatch as the
+//! online phase — a host with AVX-512/AVX2/NEON refills pools with the
+//! SIMD kernel automatically, and the shares it deals are bit-identical
+//! to scalar output (wrapping ring addition is order-independent).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};

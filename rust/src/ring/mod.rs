@@ -5,9 +5,16 @@
 //! [`matmul`] is the L3 performance hot spot: every `Π_ScalMul` (plaintext
 //! weights × share) and every Beaver-triple `Π_MatMul` lowers to it. Tile
 //! sizes were tuned in EXPERIMENTS.md §Perf.
+//!
+//! The inner kernel is dispatched through
+//! [`runtime::kernel`](crate::runtime::kernel) (§Perf iteration 5): SIMD
+//! implementations (AVX2/AVX-512/NEON) are runtime-detected and selectable
+//! via `CENTAUR_RING_KERNEL`, with [`dot_wrapping`] as the guaranteed
+//! bit-identical scalar fallback — wrapping addition commutes, so every
+//! kernel produces the same ring element.
 
+use crate::runtime::kernel::{self, RingKernel};
 use crate::tensor::RingTensor;
-use crate::util::pool;
 
 /// Elementwise wrapping addition.
 pub fn add(a: &RingTensor, b: &RingTensor) -> RingTensor {
@@ -54,17 +61,13 @@ pub fn add_assign(a: &mut RingTensor, b: &RingTensor) {
     }
 }
 
-/// k-tile edge for the blocked matmul. §Perf iteration 2/3: the model
-/// dims (d ≤ 1280, k ≤ 5120) run fastest untiled — re-walking the output
-/// row per tile cost more than the L1 reuse bought — so the tile only
-/// engages for vocabulary-sized inner dims (embedding lookups, k ≈ 50k).
-const TILE_K: usize = 4096;
-
 /// Wrapping dot product, 4-lane unrolled with chunked iterators so the
 /// compiler drops all bounds checks (EXPERIMENTS.md §Perf iteration 1:
 /// indexed `while` loop → chunks_exact, ~1.2-1.4× on the hot shapes).
+/// This is the scalar reference kernel; SIMD variants live in
+/// [`runtime::kernel`](crate::runtime::kernel) and must match it bit-exactly.
 #[inline]
-fn dot_wrapping(a: &[i64], b: &[i64]) -> i64 {
+pub fn dot_wrapping(a: &[i64], b: &[i64]) -> i64 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = [0i64; 4];
     let mut ac = a.chunks_exact(4);
@@ -90,8 +93,9 @@ fn dot_wrapping(a: &[i64], b: &[i64]) -> i64 {
 ///
 /// Implementation notes (perf):
 /// * `B` is transposed once so both operands stream row-major.
-/// * The inner kernel accumulates in four independent lanes to expose ILP —
-///   wrapping i64 mul/add vectorize on AVX2 (`vpmullq` fallback is fine).
+/// * The inner kernel comes from the [`runtime::kernel`](crate::runtime::kernel)
+///   dispatch — explicit-width SIMD where the host supports it, the 4-lane
+///   ILP scalar kernel otherwise.
 /// * Rows are distributed over the thread pool in contiguous chunks.
 pub fn matmul(a: &RingTensor, b: &RingTensor) -> RingTensor {
     assert_eq!(a.cols(), b.rows(), "ring matmul inner dim");
@@ -101,33 +105,13 @@ pub fn matmul(a: &RingTensor, b: &RingTensor) -> RingTensor {
 
 /// Wrapping `A (m×k) @ B^T` where `B` is given as `(n×k)` (row-major), the
 /// natural layout for weights stored (out_features, in_features).
+///
+/// Dispatches through the selected [`runtime::kernel`](crate::runtime::kernel)
+/// implementation (scalar/AVX2/AVX-512/NEON/xla); rows are distributed over
+/// the thread pool in contiguous chunks, so the split is bit-exact by
+/// construction and the result is kernel-independent.
 pub fn matmul_nt(a: &RingTensor, bt: &RingTensor) -> RingTensor {
-    assert_eq!(a.cols(), bt.cols(), "ring matmul_nt inner dim");
-    let (m, k, n) = (a.rows(), a.cols(), bt.rows());
-    let mut out = RingTensor::zeros(m, n);
-    let rows_per_chunk = 1usize.max(m.div_ceil(pool::num_threads() * 2));
-    let chunk_elems = rows_per_chunk * n;
-    let a_data = a.data();
-    let bt_data = bt.data();
-    pool::par_chunks_mut(out.data_mut(), chunk_elems, |ci, chunk| {
-        let r0 = ci * rows_per_chunk;
-        let rows_here = chunk.len() / n;
-        for dr in 0..rows_here {
-            let r = r0 + dr;
-            let arow = &a_data[r * k..(r + 1) * k];
-            let orow = &mut chunk[dr * n..(dr + 1) * n];
-            // k-tiling keeps arow tile in L1 across all n columns.
-            for k0 in (0..k).step_by(TILE_K) {
-                let k1 = (k0 + TILE_K).min(k);
-                for c in 0..n {
-                    let brow = &bt_data[c * k + k0..c * k + k1];
-                    let atile = &arow[k0..k1];
-                    orow[c] = orow[c].wrapping_add(dot_wrapping(atile, brow));
-                }
-            }
-        }
-    });
-    out
+    kernel::selected().matmul_nt(a, bt)
 }
 
 /// Reference (naive) matmul for testing the blocked kernel.

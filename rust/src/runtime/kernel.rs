@@ -1,0 +1,842 @@
+//! Ring-kernel dispatch: explicit-width SIMD inner kernels for the
+//! `Z_{2^64}` matmul, selected at runtime (EXPERIMENTS.md §Perf iteration 5).
+//!
+//! [`ring::matmul_nt`](crate::ring::matmul_nt) — the L3 compute hot spot
+//! every `Π_ScalMul`, Beaver product, and dealer triple generation lowers
+//! to — routes through the [`RingKernel`] trait here, the integer sibling
+//! of the float [`Backend`](super::Backend) dispatch. Registered kernels:
+//!
+//! * `scalar` — the 4-lane unrolled `chunks_exact` kernel (§Perf
+//!   iteration 1), always available; the guaranteed-identical fallback.
+//! * `avx2` — 4×i64 lanes via `core::arch` intrinsics; the 64-bit wrapping
+//!   product is synthesized from three 32×32→64 multiplies (AVX2 has no
+//!   `vpmullq`). Four output columns are blocked per pass so each loaded
+//!   `A` vector is reused 4×.
+//! * `avx512` — 8×i64 lanes with the native `vpmullq`
+//!   (`_mm512_mullo_epi64`, AVX-512F+DQ). Compiled only on rustc ≥ 1.89
+//!   (`build.rs` probe; the intrinsics stabilized there).
+//! * `neon` — 2×i64 lanes on aarch64, same three-multiply synthesis
+//!   (NEON has no 64-bit vector multiply either).
+//! * `xla` — the AOT ring artifacts (`artifacts/ring/manifest.json`)
+//!   through PJRT; one registered implementation like any other, present
+//!   only with the off-by-default `xla` cargo feature and never
+//!   auto-selected.
+//!
+//! Every kernel is **bit-exact** by construction: wrapping addition in
+//! `Z_{2^64}` is associative and commutative, so lane order cannot change
+//! the sum, and the property suite (`rust/tests/ring_kernels.rs`) pins all
+//! host-available kernels against `matmul_naive` on degenerate and
+//! lane-width ± 1 shapes.
+//!
+//! Selection mirrors `CENTAUR_THREADS`: the `CENTAUR_RING_KERNEL` env var
+//! (`auto`, `scalar`, `avx2`, `avx512`, `neon`, `xla`) or the `centaur
+//! --ring-kernel <name>` CLI flag ([`set_override`]). `auto` (the default)
+//! picks the widest kernel the host CPU supports. The choice is cached
+//! after the first [`selected`] call; [`refresh`] drops the cache for
+//! benches/tests that vary the env var mid-process.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::tensor::RingTensor;
+use crate::util::pool;
+use crate::Result;
+
+/// k-tile edge for the blocked matmul (moved from `ring`; §Perf iteration
+/// 2/3): model dims (k ≤ 5120) run untiled, vocabulary-sized inner dims
+/// (k ≈ 50k) get blocked so the `A` row tile stays in L1.
+pub const TILE_K: usize = 4096;
+
+/// Inner-kernel interface for wrapping `Z_{2^64}` matrix products.
+///
+/// Implementations must be bit-exact with [`ScalarKernel`] (wrapping i64
+/// semantics; any summation order is identical in the ring). `matmul_nt`
+/// has a provided row-parallel driver over the shared thread pool; only
+/// whole-matrix backends (the `xla` artifact path) override it.
+pub trait RingKernel: Send + Sync {
+    /// Registry name (`scalar`, `avx2`, …), reported in metrics/benches.
+    fn name(&self) -> &'static str;
+
+    /// Wrapping dot product over `Z_{2^64}`. Slices must be equal length.
+    fn dot(&self, a: &[i64], b: &[i64]) -> i64;
+
+    /// Accumulate `out += A_rows @ Bt^T` for a contiguous band of output
+    /// rows: `a_rows` is `(rows × k)` row-major, `bt` the full `(n × k)`
+    /// transposed right operand, `out` the `(rows × n)` output band.
+    fn matmul_nt_chunk(&self, a_rows: &[i64], bt: &[i64], out: &mut [i64], k: usize, n: usize);
+
+    /// Full wrapping `A (m×k) @ B^T` with `B` given `(n×k)` row-major,
+    /// distributed over the thread pool in contiguous row bands.
+    fn matmul_nt(&self, a: &RingTensor, bt: &RingTensor) -> RingTensor {
+        assert_eq!(a.cols(), bt.cols(), "ring matmul_nt inner dim");
+        let (m, k, n) = (a.rows(), a.cols(), bt.rows());
+        let mut out = RingTensor::zeros(m, n);
+        if m == 0 || n == 0 {
+            return out;
+        }
+        let rows_per_chunk = 1usize.max(m.div_ceil(pool::num_threads() * 2));
+        let chunk_elems = rows_per_chunk * n;
+        let a_data = a.data();
+        let bt_data = bt.data();
+        pool::par_chunks_mut(out.data_mut(), chunk_elems, |ci, chunk| {
+            let r0 = ci * rows_per_chunk;
+            let rows_here = chunk.len() / n;
+            self.matmul_nt_chunk(&a_data[r0 * k..(r0 + rows_here) * k], bt_data, chunk, k, n);
+        });
+        out
+    }
+}
+
+/// The §Perf iteration-1 scalar kernel: 4-lane unrolled `chunks_exact`
+/// dot product ([`crate::ring::dot_wrapping`]). Always available — the
+/// reference every SIMD kernel is pinned against.
+pub struct ScalarKernel;
+
+static SCALAR: ScalarKernel = ScalarKernel;
+
+impl RingKernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn dot(&self, a: &[i64], b: &[i64]) -> i64 {
+        crate::ring::dot_wrapping(a, b)
+    }
+
+    fn matmul_nt_chunk(&self, a_rows: &[i64], bt: &[i64], out: &mut [i64], k: usize, n: usize) {
+        let rows = if n == 0 { 0 } else { out.len() / n };
+        for dr in 0..rows {
+            let arow = &a_rows[dr * k..(dr + 1) * k];
+            let orow = &mut out[dr * n..(dr + 1) * n];
+            // k-tiling keeps the arow tile in L1 across all n columns.
+            for k0 in (0..k).step_by(TILE_K) {
+                let k1 = (k0 + TILE_K).min(k);
+                let atile = &arow[k0..k1];
+                for c in 0..n {
+                    let btile = &bt[c * k + k0..c * k + k1];
+                    orow[c] = orow[c].wrapping_add(crate::ring::dot_wrapping(atile, btile));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86_avx2 {
+    //! AVX2 kernel: 4×i64 lanes, wrapping 64-bit product synthesized as
+    //! `lo·lo + ((hi·lo + lo·hi) << 32)` from `vpmuludq` (exact mod 2^64;
+    //! signedness is immaterial in the ring).
+
+    use core::arch::x86_64::*;
+
+    use super::{RingKernel, TILE_K};
+
+    pub(super) static AVX2: Avx2Kernel = Avx2Kernel;
+
+    /// 4-lane AVX2 kernel (runtime-detected; only reachable through the
+    /// registry probe, which guarantees the `avx2` CPU feature).
+    pub struct Avx2Kernel;
+
+    pub(super) fn available() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+
+    /// Lane-wise wrapping i64 multiply (no `vpmullq` below AVX-512).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn mul64(a: __m256i, b: __m256i) -> __m256i {
+        let a_hi = _mm256_srli_epi64::<32>(a);
+        let b_hi = _mm256_srli_epi64::<32>(b);
+        let lo = _mm256_mul_epu32(a, b);
+        let cross = _mm256_add_epi64(_mm256_mul_epu32(a_hi, b), _mm256_mul_epu32(a, b_hi));
+        _mm256_add_epi64(lo, _mm256_slli_epi64::<32>(cross))
+    }
+
+    /// Wrapping horizontal sum of the 4 lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256i) -> i64 {
+        let mut t = [0i64; 4];
+        _mm256_storeu_si256(t.as_mut_ptr() as *mut __m256i, v);
+        t[0].wrapping_add(t[1]).wrapping_add(t[2]).wrapping_add(t[3])
+    }
+
+    /// One `A` tile against four `B^T` rows (equal lengths): the loaded
+    /// `A` vector is reused across all four accumulator chains.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot4(a: &[i64], b0: &[i64], b1: &[i64], b2: &[i64], b3: &[i64]) -> [i64; 4] {
+        let len = a.len();
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let mut acc2 = _mm256_setzero_si256();
+        let mut acc3 = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 4 <= len {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let v0 = _mm256_loadu_si256(b0.as_ptr().add(i) as *const __m256i);
+            let v1 = _mm256_loadu_si256(b1.as_ptr().add(i) as *const __m256i);
+            let v2 = _mm256_loadu_si256(b2.as_ptr().add(i) as *const __m256i);
+            let v3 = _mm256_loadu_si256(b3.as_ptr().add(i) as *const __m256i);
+            acc0 = _mm256_add_epi64(acc0, mul64(va, v0));
+            acc1 = _mm256_add_epi64(acc1, mul64(va, v1));
+            acc2 = _mm256_add_epi64(acc2, mul64(va, v2));
+            acc3 = _mm256_add_epi64(acc3, mul64(va, v3));
+            i += 4;
+        }
+        let mut out = [hsum(acc0), hsum(acc1), hsum(acc2), hsum(acc3)];
+        while i < len {
+            let x = *a.get_unchecked(i);
+            out[0] = out[0].wrapping_add(x.wrapping_mul(*b0.get_unchecked(i)));
+            out[1] = out[1].wrapping_add(x.wrapping_mul(*b1.get_unchecked(i)));
+            out[2] = out[2].wrapping_add(x.wrapping_mul(*b2.get_unchecked(i)));
+            out[3] = out[3].wrapping_add(x.wrapping_mul(*b3.get_unchecked(i)));
+            i += 1;
+        }
+        out
+    }
+
+    /// Single-column vector dot (column-block tail).
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot1(a: &[i64], b: &[i64]) -> i64 {
+        let len = a.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 4 <= len {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            acc = _mm256_add_epi64(acc, mul64(va, vb));
+            i += 4;
+        }
+        let mut out = hsum(acc);
+        while i < len {
+            out = out.wrapping_add(a.get_unchecked(i).wrapping_mul(*b.get_unchecked(i)));
+            i += 1;
+        }
+        out
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn chunk(a_rows: &[i64], bt: &[i64], out: &mut [i64], k: usize, n: usize) {
+        let rows = if n == 0 { 0 } else { out.len() / n };
+        for dr in 0..rows {
+            let arow = &a_rows[dr * k..(dr + 1) * k];
+            let orow = &mut out[dr * n..(dr + 1) * n];
+            for k0 in (0..k).step_by(TILE_K) {
+                let k1 = (k0 + TILE_K).min(k);
+                let atile = &arow[k0..k1];
+                let mut c = 0;
+                while c + 4 <= n {
+                    let d = dot4(
+                        atile,
+                        &bt[c * k + k0..c * k + k1],
+                        &bt[(c + 1) * k + k0..(c + 1) * k + k1],
+                        &bt[(c + 2) * k + k0..(c + 2) * k + k1],
+                        &bt[(c + 3) * k + k0..(c + 3) * k + k1],
+                    );
+                    orow[c] = orow[c].wrapping_add(d[0]);
+                    orow[c + 1] = orow[c + 1].wrapping_add(d[1]);
+                    orow[c + 2] = orow[c + 2].wrapping_add(d[2]);
+                    orow[c + 3] = orow[c + 3].wrapping_add(d[3]);
+                    c += 4;
+                }
+                while c < n {
+                    let btile = &bt[c * k + k0..c * k + k1];
+                    orow[c] = orow[c].wrapping_add(dot1(atile, btile));
+                    c += 1;
+                }
+            }
+        }
+    }
+
+    impl RingKernel for Avx2Kernel {
+        fn name(&self) -> &'static str {
+            "avx2"
+        }
+
+        fn dot(&self, a: &[i64], b: &[i64]) -> i64 {
+            debug_assert_eq!(a.len(), b.len());
+            // SAFETY: the registry only hands this kernel out when the host
+            // advertises avx2 (`available()` above).
+            unsafe { dot1(a, b) }
+        }
+
+        fn matmul_nt_chunk(&self, a_rows: &[i64], bt: &[i64], out: &mut [i64], k: usize, n: usize) {
+            // SAFETY: see `dot` — avx2 is guaranteed by the registry probe.
+            unsafe { chunk(a_rows, bt, out, k, n) }
+        }
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", centaur_avx512))]
+mod x86_avx512 {
+    //! AVX-512 kernel: 8×i64 lanes with the native 64-bit `vpmullq`
+    //! (AVX-512DQ). Gated on rustc ≥ 1.89 by the `build.rs` probe.
+
+    use core::arch::x86_64::*;
+
+    use super::{RingKernel, TILE_K};
+
+    pub(super) static AVX512: Avx512Kernel = Avx512Kernel;
+
+    /// 8-lane AVX-512F/DQ kernel (runtime-detected via the registry probe).
+    pub struct Avx512Kernel;
+
+    pub(super) fn available() -> bool {
+        std::arch::is_x86_feature_detected!("avx512f") && std::arch::is_x86_feature_detected!("avx512dq")
+    }
+
+    /// Wrapping horizontal sum of the 8 lanes.
+    #[inline]
+    #[target_feature(enable = "avx512f,avx512dq")]
+    unsafe fn hsum(v: __m512i) -> i64 {
+        let mut t = [0i64; 8];
+        _mm512_storeu_epi64(t.as_mut_ptr(), v);
+        t.iter().fold(0i64, |s, &x| s.wrapping_add(x))
+    }
+
+    /// One `A` tile against four `B^T` rows (equal lengths).
+    #[target_feature(enable = "avx512f,avx512dq")]
+    unsafe fn dot4(a: &[i64], b0: &[i64], b1: &[i64], b2: &[i64], b3: &[i64]) -> [i64; 4] {
+        let len = a.len();
+        let mut acc0 = _mm512_setzero_si512();
+        let mut acc1 = _mm512_setzero_si512();
+        let mut acc2 = _mm512_setzero_si512();
+        let mut acc3 = _mm512_setzero_si512();
+        let mut i = 0;
+        while i + 8 <= len {
+            let va = _mm512_loadu_epi64(a.as_ptr().add(i));
+            let v0 = _mm512_loadu_epi64(b0.as_ptr().add(i));
+            let v1 = _mm512_loadu_epi64(b1.as_ptr().add(i));
+            let v2 = _mm512_loadu_epi64(b2.as_ptr().add(i));
+            let v3 = _mm512_loadu_epi64(b3.as_ptr().add(i));
+            acc0 = _mm512_add_epi64(acc0, _mm512_mullo_epi64(va, v0));
+            acc1 = _mm512_add_epi64(acc1, _mm512_mullo_epi64(va, v1));
+            acc2 = _mm512_add_epi64(acc2, _mm512_mullo_epi64(va, v2));
+            acc3 = _mm512_add_epi64(acc3, _mm512_mullo_epi64(va, v3));
+            i += 8;
+        }
+        let mut out = [hsum(acc0), hsum(acc1), hsum(acc2), hsum(acc3)];
+        while i < len {
+            let x = *a.get_unchecked(i);
+            out[0] = out[0].wrapping_add(x.wrapping_mul(*b0.get_unchecked(i)));
+            out[1] = out[1].wrapping_add(x.wrapping_mul(*b1.get_unchecked(i)));
+            out[2] = out[2].wrapping_add(x.wrapping_mul(*b2.get_unchecked(i)));
+            out[3] = out[3].wrapping_add(x.wrapping_mul(*b3.get_unchecked(i)));
+            i += 1;
+        }
+        out
+    }
+
+    /// Single-column vector dot (column-block tail).
+    #[target_feature(enable = "avx512f,avx512dq")]
+    unsafe fn dot1(a: &[i64], b: &[i64]) -> i64 {
+        let len = a.len();
+        let mut acc = _mm512_setzero_si512();
+        let mut i = 0;
+        while i + 8 <= len {
+            let va = _mm512_loadu_epi64(a.as_ptr().add(i));
+            let vb = _mm512_loadu_epi64(b.as_ptr().add(i));
+            acc = _mm512_add_epi64(acc, _mm512_mullo_epi64(va, vb));
+            i += 8;
+        }
+        let mut out = hsum(acc);
+        while i < len {
+            out = out.wrapping_add(a.get_unchecked(i).wrapping_mul(*b.get_unchecked(i)));
+            i += 1;
+        }
+        out
+    }
+
+    #[target_feature(enable = "avx512f,avx512dq")]
+    unsafe fn chunk(a_rows: &[i64], bt: &[i64], out: &mut [i64], k: usize, n: usize) {
+        let rows = if n == 0 { 0 } else { out.len() / n };
+        for dr in 0..rows {
+            let arow = &a_rows[dr * k..(dr + 1) * k];
+            let orow = &mut out[dr * n..(dr + 1) * n];
+            for k0 in (0..k).step_by(TILE_K) {
+                let k1 = (k0 + TILE_K).min(k);
+                let atile = &arow[k0..k1];
+                let mut c = 0;
+                while c + 4 <= n {
+                    let d = dot4(
+                        atile,
+                        &bt[c * k + k0..c * k + k1],
+                        &bt[(c + 1) * k + k0..(c + 1) * k + k1],
+                        &bt[(c + 2) * k + k0..(c + 2) * k + k1],
+                        &bt[(c + 3) * k + k0..(c + 3) * k + k1],
+                    );
+                    orow[c] = orow[c].wrapping_add(d[0]);
+                    orow[c + 1] = orow[c + 1].wrapping_add(d[1]);
+                    orow[c + 2] = orow[c + 2].wrapping_add(d[2]);
+                    orow[c + 3] = orow[c + 3].wrapping_add(d[3]);
+                    c += 4;
+                }
+                while c < n {
+                    let btile = &bt[c * k + k0..c * k + k1];
+                    orow[c] = orow[c].wrapping_add(dot1(atile, btile));
+                    c += 1;
+                }
+            }
+        }
+    }
+
+    impl RingKernel for Avx512Kernel {
+        fn name(&self) -> &'static str {
+            "avx512"
+        }
+
+        fn dot(&self, a: &[i64], b: &[i64]) -> i64 {
+            debug_assert_eq!(a.len(), b.len());
+            // SAFETY: registry probe guarantees avx512f+avx512dq.
+            unsafe { dot1(a, b) }
+        }
+
+        fn matmul_nt_chunk(&self, a_rows: &[i64], bt: &[i64], out: &mut [i64], k: usize, n: usize) {
+            // SAFETY: registry probe guarantees avx512f+avx512dq.
+            unsafe { chunk(a_rows, bt, out, k, n) }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm_neon {
+    //! NEON kernel: 2×i64 lanes. Like AVX2, NEON has no 64-bit vector
+    //! multiply, so the wrapping product is synthesized from `vmull_u32`.
+
+    use core::arch::aarch64::*;
+
+    use super::{RingKernel, TILE_K};
+
+    pub(super) static NEON: NeonKernel = NeonKernel;
+
+    /// 2-lane NEON kernel (aarch64; runtime-detected for form's sake —
+    /// NEON is baseline on every aarch64 target this crate builds for).
+    pub struct NeonKernel;
+
+    pub(super) fn available() -> bool {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+
+    /// Lane-wise wrapping i64 multiply: `lo·lo + ((hi·lo + lo·hi) << 32)`.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn mul64(a: int64x2_t, b: int64x2_t) -> int64x2_t {
+        let au = vreinterpretq_u64_s64(a);
+        let bu = vreinterpretq_u64_s64(b);
+        let a_lo = vmovn_u64(au);
+        let b_lo = vmovn_u64(bu);
+        let a_hi = vmovn_u64(vshrq_n_u64::<32>(au));
+        let b_hi = vmovn_u64(vshrq_n_u64::<32>(bu));
+        let lo = vmull_u32(a_lo, b_lo);
+        let cross = vaddq_u64(vmull_u32(a_hi, b_lo), vmull_u32(a_lo, b_hi));
+        vreinterpretq_s64_u64(vaddq_u64(lo, vshlq_n_u64::<32>(cross)))
+    }
+
+    /// Wrapping horizontal sum of the 2 lanes.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn hsum(v: int64x2_t) -> i64 {
+        vgetq_lane_s64::<0>(v).wrapping_add(vgetq_lane_s64::<1>(v))
+    }
+
+    /// One `A` tile against four `B^T` rows (equal lengths).
+    #[target_feature(enable = "neon")]
+    unsafe fn dot4(a: &[i64], b0: &[i64], b1: &[i64], b2: &[i64], b3: &[i64]) -> [i64; 4] {
+        let len = a.len();
+        let mut acc0 = vdupq_n_s64(0);
+        let mut acc1 = vdupq_n_s64(0);
+        let mut acc2 = vdupq_n_s64(0);
+        let mut acc3 = vdupq_n_s64(0);
+        let mut i = 0;
+        while i + 2 <= len {
+            let va = vld1q_s64(a.as_ptr().add(i));
+            acc0 = vaddq_s64(acc0, mul64(va, vld1q_s64(b0.as_ptr().add(i))));
+            acc1 = vaddq_s64(acc1, mul64(va, vld1q_s64(b1.as_ptr().add(i))));
+            acc2 = vaddq_s64(acc2, mul64(va, vld1q_s64(b2.as_ptr().add(i))));
+            acc3 = vaddq_s64(acc3, mul64(va, vld1q_s64(b3.as_ptr().add(i))));
+            i += 2;
+        }
+        let mut out = [hsum(acc0), hsum(acc1), hsum(acc2), hsum(acc3)];
+        if i < len {
+            let x = *a.get_unchecked(i);
+            out[0] = out[0].wrapping_add(x.wrapping_mul(*b0.get_unchecked(i)));
+            out[1] = out[1].wrapping_add(x.wrapping_mul(*b1.get_unchecked(i)));
+            out[2] = out[2].wrapping_add(x.wrapping_mul(*b2.get_unchecked(i)));
+            out[3] = out[3].wrapping_add(x.wrapping_mul(*b3.get_unchecked(i)));
+        }
+        out
+    }
+
+    /// Single-column vector dot (column-block tail).
+    #[target_feature(enable = "neon")]
+    unsafe fn dot1(a: &[i64], b: &[i64]) -> i64 {
+        let len = a.len();
+        let mut acc = vdupq_n_s64(0);
+        let mut i = 0;
+        while i + 2 <= len {
+            let va = vld1q_s64(a.as_ptr().add(i));
+            let vb = vld1q_s64(b.as_ptr().add(i));
+            acc = vaddq_s64(acc, mul64(va, vb));
+            i += 2;
+        }
+        let mut out = hsum(acc);
+        if i < len {
+            out = out.wrapping_add(a.get_unchecked(i).wrapping_mul(*b.get_unchecked(i)));
+        }
+        out
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn chunk(a_rows: &[i64], bt: &[i64], out: &mut [i64], k: usize, n: usize) {
+        let rows = if n == 0 { 0 } else { out.len() / n };
+        for dr in 0..rows {
+            let arow = &a_rows[dr * k..(dr + 1) * k];
+            let orow = &mut out[dr * n..(dr + 1) * n];
+            for k0 in (0..k).step_by(TILE_K) {
+                let k1 = (k0 + TILE_K).min(k);
+                let atile = &arow[k0..k1];
+                let mut c = 0;
+                while c + 4 <= n {
+                    let d = dot4(
+                        atile,
+                        &bt[c * k + k0..c * k + k1],
+                        &bt[(c + 1) * k + k0..(c + 1) * k + k1],
+                        &bt[(c + 2) * k + k0..(c + 2) * k + k1],
+                        &bt[(c + 3) * k + k0..(c + 3) * k + k1],
+                    );
+                    orow[c] = orow[c].wrapping_add(d[0]);
+                    orow[c + 1] = orow[c + 1].wrapping_add(d[1]);
+                    orow[c + 2] = orow[c + 2].wrapping_add(d[2]);
+                    orow[c + 3] = orow[c + 3].wrapping_add(d[3]);
+                    c += 4;
+                }
+                while c < n {
+                    let btile = &bt[c * k + k0..c * k + k1];
+                    orow[c] = orow[c].wrapping_add(dot1(atile, btile));
+                    c += 1;
+                }
+            }
+        }
+    }
+
+    impl RingKernel for NeonKernel {
+        fn name(&self) -> &'static str {
+            "neon"
+        }
+
+        fn dot(&self, a: &[i64], b: &[i64]) -> i64 {
+            debug_assert_eq!(a.len(), b.len());
+            // SAFETY: registry probe guarantees neon.
+            unsafe { dot1(a, b) }
+        }
+
+        fn matmul_nt_chunk(&self, a_rows: &[i64], bt: &[i64], out: &mut [i64], k: usize, n: usize) {
+            // SAFETY: registry probe guarantees neon.
+            unsafe { chunk(a_rows, bt, out, k, n) }
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
+mod xla_ring {
+    //! The AOT ring-artifact path as a registered kernel: selecting
+    //! `CENTAUR_RING_KERNEL=xla` routes every `ring::matmul_nt` through
+    //! `artifacts/ring/manifest.json` (PJRT execution), falling back to the
+    //! scalar kernel for shapes with no compiled artifact (counted).
+
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
+
+    use super::{RingKernel, SCALAR};
+    use crate::tensor::RingTensor;
+
+    pub(super) static XLA: XlaRingKernel =
+        XlaRingKernel { backend: Mutex::new(None), fallbacks: AtomicU64::new(0) };
+
+    /// Lazy PJRT-backed ring kernel. Artifacts dir comes from
+    /// `CENTAUR_ARTIFACTS` (default `data::artifacts_dir()`), the model tag
+    /// from `CENTAUR_XLA_MODEL` (default `bert-tiny`).
+    pub struct XlaRingKernel {
+        backend: Mutex<Option<crate::runtime::XlaBackend>>,
+        fallbacks: AtomicU64,
+    }
+
+    impl XlaRingKernel {
+        /// Matmuls served by the scalar fallback (no artifact for shape).
+        pub fn fallbacks(&self) -> u64 {
+            self.fallbacks.load(Ordering::Relaxed)
+        }
+    }
+
+    impl RingKernel for XlaRingKernel {
+        fn name(&self) -> &'static str {
+            "xla"
+        }
+
+        fn dot(&self, a: &[i64], b: &[i64]) -> i64 {
+            // No dot artifacts are lowered; the ring set is matmul-only.
+            crate::ring::dot_wrapping(a, b)
+        }
+
+        fn matmul_nt_chunk(&self, a_rows: &[i64], bt: &[i64], out: &mut [i64], k: usize, n: usize) {
+            SCALAR.matmul_nt_chunk(a_rows, bt, out, k, n)
+        }
+
+        fn matmul_nt(&self, a: &RingTensor, bt: &RingTensor) -> RingTensor {
+            let mut guard = self.backend.lock().unwrap();
+            if guard.is_none() {
+                let dir = std::env::var("CENTAUR_ARTIFACTS")
+                    .unwrap_or_else(|_| crate::data::artifacts_dir());
+                let model =
+                    std::env::var("CENTAUR_XLA_MODEL").unwrap_or_else(|_| "bert-tiny".to_string());
+                match crate::runtime::XlaBackend::new(&dir, &model) {
+                    Ok(b) => *guard = Some(b),
+                    // An explicitly selected kernel must not silently
+                    // degrade — fail as loudly as a bad kernel name does.
+                    Err(e) => panic!("CENTAUR_RING_KERNEL=xla: cannot start PJRT backend: {e:#}"),
+                }
+            }
+            let backend = guard.as_mut().unwrap();
+            let b = bt.transpose();
+            match backend.ring_matmul(a, &b) {
+                Ok(Some(c)) => c,
+                Ok(None) | Err(_) => {
+                    self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                    drop(guard);
+                    (&SCALAR as &dyn RingKernel).matmul_nt(a, bt)
+                }
+            }
+        }
+    }
+}
+
+/// Registry order — also the documentation order. `auto` resolution
+/// probes `AUTO_ORDER` instead (widest first, never `xla`).
+pub const KERNEL_NAMES: &[&str] = &["scalar", "avx2", "avx512", "neon", "xla"];
+
+const AUTO_ORDER: &[&str] = &["avx512", "avx2", "neon", "scalar"];
+
+/// `usize::MAX` = no cached selection.
+static SELECTED: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// One registry row: a kernel name plus whether this host/build can run it.
+#[derive(Clone, Debug)]
+pub struct KernelDesc {
+    /// Registry name (`scalar`, `avx2`, `avx512`, `neon`, `xla`).
+    pub name: &'static str,
+    /// Whether [`kernel_by_name`] would succeed for it here.
+    pub available: bool,
+    /// `"ok"`, or the reason the kernel is unavailable.
+    pub detail: String,
+}
+
+fn probe_scalar() -> std::result::Result<&'static dyn RingKernel, String> {
+    Ok(&SCALAR)
+}
+
+#[cfg(target_arch = "x86_64")]
+fn probe_avx2() -> std::result::Result<&'static dyn RingKernel, String> {
+    if x86_avx2::available() {
+        Ok(&x86_avx2::AVX2)
+    } else {
+        Err("host CPU does not advertise avx2".to_string())
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn probe_avx2() -> std::result::Result<&'static dyn RingKernel, String> {
+    Err("avx2 kernel requires an x86_64 host".to_string())
+}
+
+#[cfg(all(target_arch = "x86_64", centaur_avx512))]
+fn probe_avx512() -> std::result::Result<&'static dyn RingKernel, String> {
+    if x86_avx512::available() {
+        Ok(&x86_avx512::AVX512)
+    } else {
+        Err("host CPU does not advertise avx512f+avx512dq".to_string())
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", not(centaur_avx512)))]
+fn probe_avx512() -> std::result::Result<&'static dyn RingKernel, String> {
+    Err("built without AVX-512 support (needs rustc >= 1.89; see build.rs)".to_string())
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn probe_avx512() -> std::result::Result<&'static dyn RingKernel, String> {
+    Err("avx512 kernel requires an x86_64 host".to_string())
+}
+
+#[cfg(target_arch = "aarch64")]
+fn probe_neon() -> std::result::Result<&'static dyn RingKernel, String> {
+    if arm_neon::available() {
+        Ok(&arm_neon::NEON)
+    } else {
+        Err("host CPU does not advertise neon".to_string())
+    }
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn probe_neon() -> std::result::Result<&'static dyn RingKernel, String> {
+    Err("neon kernel requires an aarch64 host".to_string())
+}
+
+#[cfg(feature = "xla")]
+fn probe_xla() -> std::result::Result<&'static dyn RingKernel, String> {
+    Ok(&xla_ring::XLA)
+}
+
+#[cfg(not(feature = "xla"))]
+fn probe_xla() -> std::result::Result<&'static dyn RingKernel, String> {
+    Err("built without the `xla` feature (rebuild with --features xla)".to_string())
+}
+
+fn probe(name: &str) -> std::result::Result<&'static dyn RingKernel, String> {
+    match name {
+        "scalar" => probe_scalar(),
+        "avx2" => probe_avx2(),
+        "avx512" => probe_avx512(),
+        "neon" => probe_neon(),
+        "xla" => probe_xla(),
+        other => {
+            Err(format!("unknown ring kernel '{other}' (expected one of {KERNEL_NAMES:?} or auto)"))
+        }
+    }
+}
+
+/// Describe every registered kernel and its availability on this
+/// host/build (diagnostics, benches, `--ring-kernel` error messages).
+pub fn available_kernels() -> Vec<KernelDesc> {
+    KERNEL_NAMES
+        .iter()
+        .map(|&name| match probe(name) {
+            Ok(_) => KernelDesc { name, available: true, detail: "ok".to_string() },
+            Err(why) => KernelDesc { name, available: false, detail: why },
+        })
+        .collect()
+}
+
+/// Resolve a kernel by registry name, erroring with the reason when the
+/// host/build cannot run it. Does not change the dispatched selection.
+pub fn kernel_by_name(name: &str) -> Result<&'static dyn RingKernel> {
+    probe(name).map_err(|why| anyhow::anyhow!("ring kernel '{name}': {why}"))
+}
+
+fn auto_kernel() -> (usize, &'static dyn RingKernel) {
+    for &name in AUTO_ORDER {
+        if let Ok(k) = probe(name) {
+            let idx = KERNEL_NAMES.iter().position(|&n| n == name).unwrap();
+            return (idx, k);
+        }
+    }
+    unreachable!("scalar kernel is always available")
+}
+
+/// The kernel every `ring::matmul_nt` dispatches through.
+///
+/// Resolution order: a programmatic [`set_override`] or cached prior
+/// selection; else `CENTAUR_RING_KERNEL` (a name, or `auto`/empty); else
+/// auto-detection (widest host kernel). An explicitly named kernel that is
+/// unknown or unavailable **panics** — a forced kernel silently degrading
+/// to another would make every A/B number dishonest.
+pub fn selected() -> &'static dyn RingKernel {
+    let idx = SELECTED.load(Ordering::Relaxed);
+    if idx != usize::MAX {
+        return probe(KERNEL_NAMES[idx]).expect("cached ring kernel no longer available");
+    }
+    let (idx, kern) = match std::env::var("CENTAUR_RING_KERNEL") {
+        Ok(name) if !name.is_empty() && name != "auto" => match probe(&name) {
+            Ok(k) => (KERNEL_NAMES.iter().position(|&n| n == name.as_str()).unwrap(), k),
+            Err(why) => panic!("CENTAUR_RING_KERNEL={name}: {why}"),
+        },
+        _ => auto_kernel(),
+    };
+    SELECTED.store(idx, Ordering::Relaxed);
+    kern
+}
+
+/// Name of the currently dispatched kernel (resolving it if needed).
+pub fn selected_name() -> &'static str {
+    selected().name()
+}
+
+/// Force the dispatched kernel (`Some(name)`) or clear the cache and fall
+/// back to env/auto resolution (`None`). The CLI's `--ring-kernel` flag
+/// lands here; errors (with the availability reason) instead of panicking
+/// so callers can report nicely.
+pub fn set_override(name: Option<&str>) -> Result<()> {
+    match name {
+        None => {
+            SELECTED.store(usize::MAX, Ordering::Relaxed);
+            Ok(())
+        }
+        Some(name) => {
+            let _ = kernel_by_name(name).map_err(|e| {
+                let avail: Vec<&str> =
+                    available_kernels().iter().filter(|d| d.available).map(|d| d.name).collect();
+                anyhow::anyhow!("{e} (available here: {avail:?})")
+            })?;
+            let idx = KERNEL_NAMES.iter().position(|&n| n == name).unwrap();
+            SELECTED.store(idx, Ordering::Relaxed);
+            Ok(())
+        }
+    }
+}
+
+/// Drop the cached selection so the next [`selected`] re-reads
+/// `CENTAUR_RING_KERNEL` — for benches/tests that vary the env var
+/// mid-process (mirrors [`pool::refresh_threads`]).
+pub fn refresh() {
+    SELECTED.store(usize::MAX, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rt(r: usize, c: usize, rng: &mut Rng) -> RingTensor {
+        RingTensor::from_vec(r, c, rng.vec_i64(r * c))
+    }
+
+    #[test]
+    fn scalar_always_probes() {
+        assert_eq!(kernel_by_name("scalar").unwrap().name(), "scalar");
+        assert!(available_kernels().iter().any(|d| d.name == "scalar" && d.available));
+    }
+
+    #[test]
+    fn unknown_kernel_is_descriptive_error() {
+        let err = kernel_by_name("warp9").unwrap_err().to_string();
+        assert!(err.contains("warp9") && err.contains("scalar"), "{err}");
+    }
+
+    #[test]
+    fn override_roundtrip() {
+        set_override(Some("scalar")).unwrap();
+        assert_eq!(selected_name(), "scalar");
+        assert!(set_override(Some("warp9")).is_err());
+        // a failed override must not clobber the previous selection
+        assert_eq!(selected_name(), "scalar");
+        set_override(None).unwrap();
+        let auto = selected_name();
+        assert!(KERNEL_NAMES.contains(&auto));
+    }
+
+    #[test]
+    fn every_available_kernel_matches_scalar() {
+        let mut rng = Rng::new(0xC0FFEE);
+        let a = rt(5, 67, &mut rng);
+        let bt = rt(9, 67, &mut rng);
+        let want = (&ScalarKernel as &dyn RingKernel).matmul_nt(&a, &bt);
+        for desc in available_kernels() {
+            if !desc.available || desc.name == "xla" {
+                continue;
+            }
+            let k = kernel_by_name(desc.name).unwrap();
+            assert_eq!(k.matmul_nt(&a, &bt), want, "kernel {}", desc.name);
+            let x = rng.vec_i64(33);
+            let y = rng.vec_i64(33);
+            assert_eq!(k.dot(&x, &y), crate::ring::dot_wrapping(&x, &y), "dot {}", desc.name);
+        }
+    }
+}

@@ -14,7 +14,13 @@
 //! The engine asks for ops by shape; `XlaBackend` dispatches to a compiled
 //! executable when the model's manifest has that shape and falls back to
 //! native otherwise (counted, so benches can assert zero fallbacks).
+//!
+//! The integer side has its own dispatch layer: [`kernel`] selects the
+//! `Z_{2^64}` matmul inner kernel ([`kernel::RingKernel`] — scalar, AVX2,
+//! AVX-512, NEON, or the `xla` ring artifacts) at runtime, the way
+//! [`Backend`] selects the float op executor.
 
+pub mod kernel;
 pub mod native;
 mod registry;
 #[cfg(feature = "xla")]
@@ -22,6 +28,7 @@ mod xla_backend;
 #[cfg(not(feature = "xla"))]
 mod xla_stub;
 
+pub use kernel::RingKernel;
 pub use native::NativeBackend;
 pub use registry::{ArtifactRegistry, OpKey};
 #[cfg(feature = "xla")]

@@ -1,4 +1,8 @@
 //! Pure-Rust backend — semantics mirror `python/compile/kernels/ref.py`.
+//!
+//! This backend covers the *float* ops P1 runs on permuted data. The
+//! integer ring matmuls are dispatched separately through
+//! [`kernel`](super::kernel) — see [`kernel::RingKernel`](super::kernel::RingKernel).
 
 use super::{Backend, LN_EPS};
 use crate::tensor::FloatTensor;

@@ -36,32 +36,61 @@ impl ArtifactRegistry {
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
             .map_err(|e| anyhow::anyhow!("cannot read {}: {e} (run `make artifacts`)", manifest_path.display()))?;
-        let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("bad manifest: {e}"))?;
+        let doc = json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("bad manifest {}: {e}", manifest_path.display()))?;
+        // Field accessors fail loudly with the entry and field name — the
+        // old `unwrap_or(0)` / `unwrap_or_default()` turned a typo'd
+        // manifest into a registry full of 0×0 keys that silently never
+        // matched, so every op fell back to native with no diagnostic.
+        fn str_field(path: &Path, entry: &json::Json, field: &str) -> Result<String> {
+            match entry.get(field).as_str() {
+                Some(s) if !s.is_empty() => Ok(s.to_string()),
+                _ => anyhow::bail!(
+                    "manifest {}: entry {entry} field '{field}' missing or not a non-empty string",
+                    path.display()
+                ),
+            }
+        }
+        fn usize_field(path: &Path, entry: &json::Json, field: &str) -> Result<usize> {
+            entry.get(field).as_usize().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "manifest {}: entry {entry} field '{field}' is {}, expected a non-negative integer",
+                    path.display(),
+                    entry.get(field)
+                )
+            })
+        }
         let mut ops = BTreeMap::new();
         for op in doc.get("ops").as_arr().unwrap_or(&[]) {
             let key = OpKey {
-                op: op.get("op").as_str().unwrap_or_default().to_string(),
-                rows: op.get("rows").as_usize().unwrap_or(0),
-                cols: op.get("cols").as_usize().unwrap_or(0),
+                op: str_field(&manifest_path, op, "op")?,
+                rows: usize_field(&manifest_path, op, "rows")?,
+                cols: usize_field(&manifest_path, op, "cols")?,
             };
-            let file = dir.join(op.get("file").as_str().unwrap_or_default());
+            let file = dir.join(str_field(&manifest_path, op, "file")?);
             anyhow::ensure!(file.exists(), "missing artifact {}", file.display());
             ops.insert(key, file);
         }
         let mut ring = BTreeMap::new();
-        let ring_manifest = Path::new(artifacts_dir).join("ring").join("manifest.json");
-        if let Ok(rt) = std::fs::read_to_string(&ring_manifest) {
-            if let Ok(rdoc) = json::parse(&rt) {
+        let ring_dir = Path::new(artifacts_dir).join("ring");
+        let ring_manifest = ring_dir.join("manifest.json");
+        // Absent ring manifest is fine (the ring set is optional); any other
+        // read or parse failure is a real error — the old `if let Ok` chain
+        // swallowed corrupt manifests and the registry quietly had no ring
+        // kernels.
+        match std::fs::read_to_string(&ring_manifest) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => anyhow::bail!("cannot read {}: {e}", ring_manifest.display()),
+            Ok(rt) => {
+                let rdoc = json::parse(&rt)
+                    .map_err(|e| anyhow::anyhow!("bad ring manifest {}: {e}", ring_manifest.display()))?;
                 for e in rdoc.get("shapes").as_arr().unwrap_or(&[]) {
                     let key = (
-                        e.get("m").as_usize().unwrap_or(0),
-                        e.get("k").as_usize().unwrap_or(0),
-                        e.get("n").as_usize().unwrap_or(0),
+                        usize_field(&ring_manifest, e, "m")?,
+                        usize_field(&ring_manifest, e, "k")?,
+                        usize_field(&ring_manifest, e, "n")?,
                     );
-                    ring.insert(
-                        key,
-                        Path::new(artifacts_dir).join("ring").join(e.get("file").as_str().unwrap_or_default()),
-                    );
+                    ring.insert(key, ring_dir.join(str_field(&ring_manifest, e, "file")?));
                 }
             }
         }
@@ -120,5 +149,65 @@ mod tests {
     fn missing_manifest_is_helpful_error() {
         let err = ArtifactRegistry::load("/nonexistent", "toy").unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    fn toy_dir(tag: &str) -> std::path::PathBuf {
+        let tmp = std::env::temp_dir().join(format!("centaur_reg_{}_{tag}", std::process::id()));
+        let mdir = tmp.join("toy");
+        std::fs::create_dir_all(&mdir).unwrap();
+        std::fs::write(mdir.join("manifest.json"), r#"{"model":"toy","ops":[]}"#).unwrap();
+        tmp
+    }
+
+    #[test]
+    fn corrupt_ring_manifest_is_an_error_not_silence() {
+        // A parse failure in ring/manifest.json used to be swallowed by an
+        // `if let Ok` chain, leaving the registry with zero ring kernels.
+        let tmp = toy_dir("ring_corrupt");
+        let rdir = tmp.join("ring");
+        std::fs::create_dir_all(&rdir).unwrap();
+        std::fs::write(rdir.join("manifest.json"), "{not json").unwrap();
+        let err = ArtifactRegistry::load(tmp.to_str().unwrap(), "toy").unwrap_err().to_string();
+        assert!(err.contains("ring") && err.contains("manifest"), "got: {err}");
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn absent_ring_manifest_is_fine() {
+        let tmp = toy_dir("ring_absent");
+        let reg = ArtifactRegistry::load(tmp.to_str().unwrap(), "toy").unwrap();
+        assert!(reg.lookup_ring(128, 768, 768).is_none());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn malformed_op_field_names_the_field() {
+        let tmp = std::env::temp_dir().join(format!("centaur_reg_{}_badop", std::process::id()));
+        let mdir = tmp.join("toy");
+        std::fs::create_dir_all(&mdir).unwrap();
+        std::fs::write(mdir.join("softmax_4x4.hlo.txt"), "HloModule x").unwrap();
+        std::fs::write(
+            mdir.join("manifest.json"),
+            r#"{"model":"toy","ops":[{"op":"softmax","rows":"four","cols":4,"file":"softmax_4x4.hlo.txt"}]}"#,
+        )
+        .unwrap();
+        let err = ArtifactRegistry::load(tmp.to_str().unwrap(), "toy").unwrap_err().to_string();
+        assert!(err.contains("'rows'"), "error should name the field: {err}");
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn malformed_ring_shape_names_the_field() {
+        let tmp = toy_dir("ring_badshape");
+        let rdir = tmp.join("ring");
+        std::fs::create_dir_all(&rdir).unwrap();
+        std::fs::write(
+            rdir.join("manifest.json"),
+            r#"{"shapes":[{"m":128,"k":-768,"n":768,"file":"rm.hlo.txt"}]}"#,
+        )
+        .unwrap();
+        let err = ArtifactRegistry::load(tmp.to_str().unwrap(), "toy").unwrap_err().to_string();
+        assert!(err.contains("'k'"), "error should name the field: {err}");
+        std::fs::remove_dir_all(&tmp).ok();
     }
 }

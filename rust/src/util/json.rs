@@ -31,9 +31,18 @@ impl Json {
             _ => None,
         }
     }
-    /// Numeric value truncated to `usize`.
+    /// Numeric value as `usize` — strict: `None` unless this is a finite,
+    /// non-negative number with zero fractional part that fits in `usize`.
+    /// (The old lossy version truncated `-1` and `2.7` to something
+    /// plausible, which is how malformed manifests silently became
+    /// zero-sized models.)
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|n| n as usize)
+        match self.as_f64() {
+            Some(n) if n.is_finite() && n.fract() == 0.0 && n >= 0.0 && n < usize::MAX as f64 => {
+                Some(n as usize)
+            }
+            _ => None,
+        }
     }
     /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
@@ -440,6 +449,17 @@ mod tests {
             ("arr", Json::Arr(vec![1usize.into(), 2usize.into()])),
         ]);
         assert_eq!(parse(&v.pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn as_usize_is_strict() {
+        assert_eq!(parse("17").unwrap().as_usize(), Some(17));
+        assert_eq!(parse("0").unwrap().as_usize(), Some(0));
+        assert_eq!(parse("-1").unwrap().as_usize(), None, "negatives must not truncate to 0");
+        assert_eq!(parse("2.7").unwrap().as_usize(), None, "fractions must not truncate");
+        assert_eq!(parse("1e300").unwrap().as_usize(), None, "overflow must not saturate");
+        assert_eq!(parse("\"12\"").unwrap().as_usize(), None, "strings are not numbers");
+        assert_eq!(Json::Null.as_usize(), None);
     }
 
     #[test]

@@ -2,30 +2,53 @@
 //!
 //! The ring matmul and Beaver generation use [`par_chunks_mut`] to split an
 //! output buffer across OS threads. Thread count defaults to the host
-//! parallelism and can be capped with the `CENTAUR_THREADS` env var.
+//! parallelism and can be capped with the `CENTAUR_THREADS` env var. The
+//! cap is cached after the first read; benches/tests that vary it
+//! mid-process must call [`refresh_threads`] (or [`set_num_threads`]) —
+//! without that, a `set_var` after the first parallel loop is silently
+//! ignored and everything keeps running at the stale width.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// Cached worker count; 0 = not yet resolved.
+static CACHED: AtomicUsize = AtomicUsize::new(0);
+
 /// Number of worker threads to use for data-parallel loops.
 pub fn num_threads() -> usize {
-    static CACHED: AtomicUsize = AtomicUsize::new(0);
     let c = CACHED.load(Ordering::Relaxed);
     if c != 0 {
         return c;
     }
-    let n = std::env::var("CENTAUR_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-        });
+    let n = threads_from_env();
     CACHED.store(n, Ordering::Relaxed);
     n
 }
 
+/// Resolve the worker count from `CENTAUR_THREADS` / host parallelism
+/// (no caching — [`num_threads`] wraps this).
+fn threads_from_env() -> usize {
+    std::env::var("CENTAUR_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+}
+
+/// Override the worker count programmatically (clamped to ≥ 1). Takes
+/// precedence over `CENTAUR_THREADS` until [`refresh_threads`] is called.
+pub fn set_num_threads(n: usize) {
+    CACHED.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Drop the cached worker count so the next [`num_threads`] call re-reads
+/// `CENTAUR_THREADS` — the documented path for benches/tests that vary the
+/// cap mid-process.
+pub fn refresh_threads() {
+    CACHED.store(0, Ordering::Relaxed);
+}
+
 /// Run `f(chunk_index, chunk)` over disjoint mutable chunks of `data`,
-/// one task per chunk, across up to [`num_threads`] threads. `chunk_rows`
+/// one task per chunk, across up to [`num_threads`] threads. `chunk_len`
 /// is expressed in *elements*; the final chunk may be shorter.
 pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk_len: usize, f: F)
 where
@@ -75,8 +98,14 @@ where
     T: Default + Clone,
 {
     let mut out = vec![T::default(); n];
-    par_chunks_mut(&mut out, 1usize.max(n.div_ceil(num_threads() * 4)), |ci, chunk| {
-        let base = ci * 1usize.max(n.div_ceil(num_threads() * 4));
+    // One binding for the chunk length: the base-index computation below
+    // must use the *same* value par_chunks_mut splits with — recomputing
+    // it from num_threads() in two places drifted when the cached width
+    // changed between the two reads (refresh_threads from another thread),
+    // scattering results to wrong indices.
+    let chunk_len = 1usize.max(n.div_ceil(num_threads() * 4));
+    par_chunks_mut(&mut out, chunk_len, |ci, chunk| {
+        let base = ci * chunk_len;
         for (j, slot) in chunk.iter_mut().enumerate() {
             *slot = f(base + j);
         }
@@ -87,6 +116,10 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
+
+    /// Serialize tests that mutate the global thread-count cache.
+    static CACHE_LOCK: Mutex<()> = Mutex::new(());
 
     #[test]
     fn chunks_cover_everything() {
@@ -113,5 +146,45 @@ mod tests {
         for (i, &x) in out.iter().enumerate() {
             assert_eq!(x, i * 3);
         }
+    }
+
+    #[test]
+    fn par_map_non_divisible_across_widths() {
+        // Regression for the chunk-length drift: non-divisible n over odd
+        // widths must land every result at its own index, at every width.
+        let _g = CACHE_LOCK.lock().unwrap();
+        for width in [1usize, 2, 3, 5, 7] {
+            set_num_threads(width);
+            for n in [1usize, 9, 10, 97, 10_007] {
+                let out = par_map(n, |i| i as u64 * 7 + 1);
+                for (i, &x) in out.iter().enumerate() {
+                    assert_eq!(x, i as u64 * 7 + 1, "width={width} n={n} i={i}");
+                }
+            }
+        }
+        refresh_threads();
+    }
+
+    #[test]
+    fn thread_cap_refresh_is_honored() {
+        // Regression: the first read used to be cached forever, so a
+        // mid-process CENTAUR_THREADS change was silently ignored.
+        let _g = CACHE_LOCK.lock().unwrap();
+        let before = std::env::var("CENTAUR_THREADS").ok();
+        let _ = num_threads(); // populate the cache
+        std::env::set_var("CENTAUR_THREADS", "3");
+        refresh_threads();
+        assert_eq!(num_threads(), 3);
+        std::env::set_var("CENTAUR_THREADS", "5");
+        assert_eq!(num_threads(), 3, "without refresh the cache must hold");
+        refresh_threads();
+        assert_eq!(num_threads(), 5);
+        set_num_threads(2);
+        assert_eq!(num_threads(), 2, "programmatic override wins");
+        match before {
+            Some(v) => std::env::set_var("CENTAUR_THREADS", v),
+            None => std::env::remove_var("CENTAUR_THREADS"),
+        }
+        refresh_threads();
     }
 }

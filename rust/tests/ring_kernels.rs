@@ -1,0 +1,106 @@
+//! Property tests pinning every host-selectable ring kernel against the
+//! naive reference, bit-for-bit (ISSUE 9).
+//!
+//! Wrapping addition in `Z_{2^64}` is associative and commutative, so a
+//! SIMD kernel that reorders the summation still produces the identical
+//! ring element — these tests enforce that across degenerate and
+//! lane-width ± 1 shapes on every kernel the host can run, plus the
+//! forced-scalar dispatch path CI exercises via `CENTAUR_RING_KERNEL`.
+
+use centaur::ring;
+use centaur::runtime::kernel;
+use centaur::runtime::RingKernel;
+use centaur::tensor::RingTensor;
+use centaur::util::rng::Rng;
+
+fn rt(r: usize, c: usize, rng: &mut Rng) -> RingTensor {
+    RingTensor::from_vec(r, c, rng.vec_i64(r * c))
+}
+
+/// Every kernel the host/build can actually run, except `xla` (needs
+/// artifacts + PJRT; covered by the artifact smoke, not unit parity).
+fn host_kernels() -> Vec<&'static dyn RingKernel> {
+    kernel::available_kernels()
+        .iter()
+        .filter(|d| d.available && d.name != "xla")
+        .map(|d| kernel::kernel_by_name(d.name).unwrap())
+        .collect()
+}
+
+/// m/k/n grid around the SIMD lane widths (2, 4, 8) and the 4-column
+/// register block: 0, 1, lane ± 1, block ± 1, and non-multiples.
+const AWKWARD: &[usize] = &[0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17];
+
+#[test]
+fn all_kernels_match_naive_on_awkward_shapes() {
+    let kernels = host_kernels();
+    assert!(!kernels.is_empty(), "scalar must always be available");
+    let mut rng = Rng::new(0x5EED_0009);
+    for &m in AWKWARD {
+        for &k in AWKWARD {
+            for &n in AWKWARD {
+                let a = rt(m, k, &mut rng);
+                let b = rt(k, n, &mut rng);
+                let want = ring::matmul_naive(&a, &b);
+                let bt = b.transpose();
+                for kern in &kernels {
+                    assert_eq!(
+                        kern.matmul_nt(&a, &bt),
+                        want,
+                        "kernel {} diverged at m={m} k={k} n={n}",
+                        kern.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_kernels_match_naive_on_larger_odd_shapes() {
+    let kernels = host_kernels();
+    let mut rng = Rng::new(0xDEC0DE);
+    // Odd, non-power-of-two shapes large enough to cross the 4-column
+    // block and every lane width many times, plus extreme-value operands
+    // that make any non-wrapping accumulation overflow visibly.
+    for (m, k, n) in [(64, 257, 129), (33, 1023, 65), (5, 4099, 3)] {
+        let a = rt(m, k, &mut rng);
+        let mut b = rt(k, n, &mut rng);
+        b.data_mut()[0] = i64::MAX;
+        b.data_mut()[k * n - 1] = i64::MIN;
+        let want = ring::matmul_naive(&a, &b);
+        let bt = b.transpose();
+        for kern in &kernels {
+            assert_eq!(kern.matmul_nt(&a, &bt), want, "kernel {} at {m}x{k}x{n}", kern.name());
+        }
+    }
+}
+
+#[test]
+fn all_kernels_match_scalar_dot() {
+    let kernels = host_kernels();
+    let mut rng = Rng::new(0xD07);
+    for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 16, 31, 64, 257, 1000] {
+        let x = rng.vec_i64(len);
+        let y = rng.vec_i64(len);
+        let want = ring::dot_wrapping(&x, &y);
+        for kern in &kernels {
+            assert_eq!(kern.dot(&x, &y), want, "kernel {} dot at len {len}", kern.name());
+        }
+    }
+}
+
+#[test]
+fn dispatched_matmul_matches_naive() {
+    // Whatever kernel this host/env resolves to (including the CI leg that
+    // forces CENTAUR_RING_KERNEL=scalar), the public ring::matmul must
+    // agree with the reference.
+    let mut rng = Rng::new(0xABCD);
+    let a = rt(13, 37, &mut rng);
+    let b = rt(37, 11, &mut rng);
+    assert_eq!(ring::matmul(&a, &b), ring::matmul_naive(&a, &b));
+    assert!(
+        kernel::KERNEL_NAMES.contains(&kernel::selected_name()),
+        "dispatch resolved to an unregistered kernel"
+    );
+}
