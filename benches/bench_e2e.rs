@@ -218,15 +218,124 @@ fn bench_speculative(b: &mut Bencher) {
     );
 }
 
+/// Integrity-checked inference (ISSUE 10): the same seeded request with
+/// audit off vs on, solo and batched B=4. The audit layer is
+/// zero-perturbation — tokens and the protocol ledger are bit-identical
+/// — so its entire wire cost is the emulated σ-exchange accounted in
+/// [`centaur::mpc::AuditCounters`], reported here per token next to the
+/// semi-honest cost. CI gate (EXPERIMENTS.md audit-overhead table):
+/// audited total bytes ≤ 2× the semi-honest bytes.
+fn bench_audit(b: &mut Bencher) {
+    let cfg = ModelConfig::gpt2_tiny().with_n_ctx(64);
+    let w = ModelWeights::random(&cfg, 7);
+    let prompt: Vec<u32> = vec![7, 11, 13, 17];
+    let steps = 8usize;
+    b.section("gpt2-tiny @ n_ctx=64 — integrity-checked inference: audit off vs on");
+
+    let mk = |audit: bool| {
+        CentaurEngine::with_backend(
+            &cfg,
+            &w,
+            Box::new(NativeBackend::new()),
+            EngineOptions { profile: NetworkProfile::lan(), seed: 8, audit, ..Default::default() },
+        )
+        .unwrap()
+    };
+    // Solo stream: (tokens, total ledger, counters).
+    let run_solo = |audit: bool, b: &mut Bencher| {
+        let mut res = None;
+        b.bench(&format!("solo x{steps} tokens, audit={}", if audit { "on" } else { "off" }), || {
+            let mut e = mk(audit);
+            let out = e.generate_streaming(&prompt, steps, &mut |_, _, _| true).unwrap();
+            res = Some((out.tokens.clone(), out.total(), e.audit_counters()));
+        });
+        res.unwrap()
+    };
+    // Batched B=4: per-session cost summaries summed (lane-attributed).
+    let run_batched = |audit: bool, b: &mut Bencher| {
+        let mut res = None;
+        b.bench(&format!("batched B=4 x{steps} tokens, audit={}", if audit { "on" } else { "off" }), || {
+            let mut e = mk(audit);
+            let mut batch = centaur::engine::decoder::DecodeBatch::new(&mut e).unwrap();
+            let mut ids = Vec::new();
+            for i in 0..4u32 {
+                ids.push(batch.admit(&[7, 11 + i, 13, 17], steps, None).unwrap());
+            }
+            while !batch.step().unwrap().is_empty() {}
+            let (mut tokens, mut bytes, mut rounds) = (Vec::new(), 0u64, 0u64);
+            for id in ids {
+                let s = batch.remove(id).unwrap();
+                tokens.extend(s.tokens);
+                bytes += s.setup_bytes + s.prefill_bytes + s.decode_bytes;
+                rounds = rounds.max(s.rounds);
+            }
+            drop(batch);
+            res = Some((tokens, bytes, rounds, e.audit_counters()));
+        });
+        res.unwrap()
+    };
+
+    let (tok_off, total_off, c_off) = run_solo(false, b);
+    let (tok_on, total_on, c_on) = run_solo(true, b);
+    assert!(c_off.is_none());
+    let c = c_on.expect("audit-on counters");
+    assert_eq!(tok_on, tok_off, "audit must not perturb tokens");
+    assert_eq!(total_on.bytes_total(), total_off.bytes_total(), "audit must not touch the ledger");
+    assert_eq!(total_on.rounds_total(), total_off.rounds_total());
+    assert_eq!(c.mac_failures, 0, "honest bench run must verify clean");
+    assert!(c.mac_checks > 0);
+    let solo_bytes = total_on.bytes_total();
+    let ntok = (prompt.len() + steps) as u64;
+    println!(
+        "    -> solo   : {}/token semi-honest + {}/token audit σ-overhead ({} checks, {} openings) | audited/plain {:.4}x",
+        human_bytes(solo_bytes / ntok),
+        human_bytes(c.overhead_bytes / ntok),
+        c.mac_checks,
+        c.openings,
+        (solo_bytes + c.overhead_bytes) as f64 / solo_bytes as f64,
+    );
+    assert!(
+        c.overhead_bytes <= solo_bytes,
+        "audited total must stay <=2x the semi-honest bytes: overhead {} vs protocol {}",
+        c.overhead_bytes,
+        solo_bytes
+    );
+
+    let (btok_off, bbytes_off, _, bc_off) = run_batched(false, b);
+    let (btok_on, bbytes_on, brounds_on, bc_on) = run_batched(true, b);
+    assert!(bc_off.is_none());
+    let bc = bc_on.expect("audit-on counters");
+    assert_eq!(btok_on, btok_off, "audit must not perturb batched tokens");
+    assert_eq!(bbytes_on, bbytes_off, "audit must not touch batched session ledgers");
+    assert_eq!(bc.mac_failures, 0);
+    let btok = 4 * (4 + steps) as u64;
+    println!(
+        "    -> batched: {}/token semi-honest + {}/token audit σ-overhead ({} checks, {} openings) | {} rounds | audited/plain {:.4}x",
+        human_bytes(bbytes_on / btok),
+        human_bytes(bc.overhead_bytes / btok),
+        bc.mac_checks,
+        bc.openings,
+        brounds_on,
+        (bbytes_on + bc.overhead_bytes) as f64 / bbytes_on as f64,
+    );
+    assert!(
+        bc.overhead_bytes <= bbytes_on,
+        "batched audited total must stay <=2x the semi-honest bytes: overhead {} vs protocol {}",
+        bc.overhead_bytes,
+        bbytes_on
+    );
+}
+
 fn main() {
     let mut b = Bencher::new();
     bench_decode(&mut b);
     bench_speculative(&mut b);
+    bench_audit(&mut b);
     // CI smoke mode: assert the decode comm-reduction gates and stop —
     // the framework sweep below is the long part of this bench.
     if std::env::var("CENTAUR_BENCH_DECODE_ONLY").is_ok() {
         println!(
-            "CENTAUR_BENCH_DECODE_ONLY set: decode + speculative gates passed, skipping framework sweep"
+            "CENTAUR_BENCH_DECODE_ONLY set: decode + speculative + audit gates passed, skipping framework sweep"
         );
         return;
     }

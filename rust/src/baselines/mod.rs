@@ -38,6 +38,12 @@ pub trait PptiFramework {
     ) -> Result<GenOutcome> {
         anyhow::bail!("{} does not support incremental generation", self.name())
     }
+    /// Cumulative integrity-audit counters, when the framework runs with
+    /// audit mode on (`None` otherwise — the default; only Centaur
+    /// engines support the audit layer).
+    fn audit_counters(&self) -> Option<crate::mpc::AuditCounters> {
+        None
+    }
 }
 
 impl PptiFramework for crate::engine::CentaurEngine {
@@ -54,6 +60,9 @@ impl PptiFramework for crate::engine::CentaurEngine {
         on_token: &mut dyn FnMut(usize, u32, &CostLedger) -> bool,
     ) -> Result<GenOutcome> {
         self.generate_streaming(prompt, steps, on_token)
+    }
+    fn audit_counters(&self) -> Option<crate::mpc::AuditCounters> {
+        crate::engine::CentaurEngine::audit_counters(self)
     }
 }
 

@@ -45,6 +45,14 @@ pub struct Metrics {
     pub spec_proposed: u64,
     /// Draft tokens (draft hits) the private greedy choices accepted.
     pub spec_accepted: u64,
+    /// Deferred MAC batch checks flushed across audited engines.
+    pub mac_checks: u64,
+    /// Extra communication the audit layer would add (MAC-check openings;
+    /// accounted here, never in the protocol ledgers).
+    pub audit_overhead_bytes: u64,
+    /// MAC batch checks that failed — any nonzero value means tampering
+    /// (or corruption) was detected and the affected requests were failed.
+    pub audit_failures: u64,
 }
 
 impl Metrics {
@@ -70,6 +78,9 @@ impl Metrics {
             max_batch_sessions: 0,
             spec_proposed: 0,
             spec_accepted: 0,
+            mac_checks: 0,
+            audit_overhead_bytes: 0,
+            audit_failures: 0,
         }
     }
 
@@ -132,6 +143,15 @@ impl Metrics {
         self.spec_accepted += accepted;
     }
 
+    /// Fold one engine's audit-counter *delta* into the serving totals
+    /// (workers and the decode scheduler harvest their engines'
+    /// cumulative [`crate::mpc::AuditCounters`] and report increments).
+    pub fn record_audit(&mut self, delta: &crate::mpc::AuditCounters) {
+        self.mac_checks += delta.mac_checks;
+        self.audit_overhead_bytes += delta.overhead_bytes;
+        self.audit_failures += delta.mac_failures;
+    }
+
     /// Compute quantiles and totals so far.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut lats = self.latencies.clone();
@@ -180,6 +200,10 @@ impl Metrics {
             max_batch_sessions: self.max_batch_sessions,
             spec_proposed: self.spec_proposed,
             spec_accepted: self.spec_accepted,
+            mac_checks: self.mac_checks,
+            audit_overhead_bytes: self.audit_overhead_bytes,
+            audit_failures: self.audit_failures,
+            pool_mac_rejected: 0,
             ring_kernel: crate::runtime::kernel::selected_name().to_string(),
             elapsed,
         }
@@ -264,6 +288,15 @@ pub struct MetricsSnapshot {
     pub spec_proposed: u64,
     /// Draft tokens (draft hits) the private greedy choices accepted.
     pub spec_accepted: u64,
+    /// Deferred MAC batch checks flushed across audited engines.
+    pub mac_checks: u64,
+    /// Audit-layer communication overhead (MAC-check openings; kept out of
+    /// the protocol ledgers so every byte pin holds with audit on).
+    pub audit_overhead_bytes: u64,
+    /// Failed MAC batch checks — nonzero means tampering was detected.
+    pub audit_failures: u64,
+    /// Pooled triples quarantined by the pool's MAC verification at take.
+    pub pool_mac_rejected: u64,
     /// Ring matmul kernel the dispatch layer selected for this process
     /// (see [`crate::runtime::kernel`]): `scalar`, `avx2`, `avx512`,
     /// `neon`, or `xla`.
@@ -286,6 +319,7 @@ impl MetricsSnapshot {
         self.pool_offline_bytes = stats.offline_bytes;
         self.pool_pooled = stats.pooled;
         self.pool_shard_depths = stats.shard_depths.clone();
+        self.pool_mac_rejected = stats.mac_rejected;
         let base = baseline.cloned().unwrap_or_default();
         self.warm_pool_hits = stats.hits.saturating_sub(base.hits);
         self.warm_pool_misses = stats.misses.saturating_sub(base.misses);
@@ -447,6 +481,15 @@ impl MetricsSnapshot {
                 self.spec_acceptance_rate() * 100.0
             ));
         }
+        if self.mac_checks > 0 || self.audit_failures > 0 || self.pool_mac_rejected > 0 {
+            s.push_str(&format!(
+                " mac_checks={} audit_overhead={} audit_failures={} pool_mac_rejected={}",
+                self.mac_checks,
+                crate::util::human_bytes(self.audit_overhead_bytes),
+                self.audit_failures,
+                self.pool_mac_rejected,
+            ));
+        }
         s
     }
 }
@@ -512,6 +555,7 @@ mod tests {
             pooled: 12,
             shapes: 3,
             shard_depths: vec![2; 8],
+            mac_rejected: 0,
         };
         let now = PoolStats {
             hits: 40,
@@ -522,6 +566,7 @@ mod tests {
             pooled: 12,
             shapes: 3,
             shard_depths: vec![1, 2, 2, 2, 1, 2, 2, 0],
+            mac_rejected: 0,
         };
         s.set_pool(&now, Some(&baseline));
         assert_eq!((s.pool_hits, s.pool_misses, s.pool_starved), (40, 4, 1));
@@ -586,6 +631,33 @@ mod tests {
         assert!(s.summary().contains("batch_max=4"));
         // No batched steps → the summary block stays out entirely.
         assert!(!Metrics::new().snapshot().summary().contains("batch_steps"));
+    }
+
+    #[test]
+    fn audit_deltas_accumulate_and_print() {
+        let mut m = Metrics::new();
+        m.record_audit(&crate::mpc::AuditCounters {
+            mac_checks: 3,
+            mac_failures: 0,
+            overhead_bytes: 96,
+            overhead_rounds: 6,
+            openings: 9,
+            share_faults_applied: 0,
+        });
+        m.record_audit(&crate::mpc::AuditCounters {
+            mac_checks: 1,
+            mac_failures: 1,
+            overhead_bytes: 32,
+            overhead_rounds: 2,
+            openings: 2,
+            share_faults_applied: 1,
+        });
+        let s = m.snapshot();
+        assert_eq!((s.mac_checks, s.audit_overhead_bytes, s.audit_failures), (4, 128, 1));
+        assert!(s.summary().contains("mac_checks=4"));
+        assert!(s.summary().contains("audit_failures=1"));
+        // Audit off → the block stays out of the summary entirely.
+        assert!(!Metrics::new().snapshot().summary().contains("mac_checks"));
     }
 
     #[test]

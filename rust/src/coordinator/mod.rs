@@ -96,6 +96,17 @@ pub struct ServerConfig {
     /// (with `offline_prefill`): shards are owned round-robin, so extra
     /// workers regenerate depleted shards concurrently under load.
     pub offline_workers: usize,
+    /// Integrity-checked serving (DESIGN.md §Integrity-checked inference):
+    /// every engine runs with SPDZ-style share MACs and replayable
+    /// transcript digests, the offline pool authenticates its stock, and
+    /// the snapshot reports `mac_checks` / `audit_failures`. Defaults to
+    /// the `CENTAUR_AUDIT` environment toggle.
+    pub audit: bool,
+    /// Tamper-injection smoke (needs `audit`): the decode scheduler arms
+    /// one share fault on its engine, so the first generate request must
+    /// fail its MAC batch check — `audit_failures > 0` proves the
+    /// detection path end to end. Never set in real serving.
+    pub audit_tamper: bool,
 }
 
 impl ServerConfig {
@@ -122,6 +133,8 @@ impl ServerConfig {
             decode_prefill_sessions: 1,
             spec_k: 1,
             offline_workers: 2,
+            audit: crate::engine::audit_env_default(),
+            audit_tamper: false,
         }
     }
 }
@@ -180,6 +193,10 @@ pub struct GenSummary {
     /// Warm-decode protocol rounds (generated tokens only) — divide by
     /// `tokens.len()` for the rounds/token the WAN latency model charges.
     pub decode_rounds: u64,
+    /// Core transcript digest of the request's replayable audit
+    /// transcript (batched sessions report the batch-level digest; always
+    /// populated — the transcript is recorded audit on or off).
+    pub transcript_digest: u64,
     /// End-to-end latency (queue + protocol), wall clock.
     pub latency: Duration,
 }
@@ -219,6 +236,7 @@ fn build_centaur_engine(cfg: &ServerConfig, pool: Option<Arc<TriplePool>>) -> Re
             triple_pool: pool,
             decode_correlations: cfg.decode_correlations,
             round_batching: cfg.round_batching,
+            audit: cfg.audit,
             ..Default::default()
         },
     )
@@ -270,6 +288,29 @@ fn release_unconsumed_demand(pool: Option<&TriplePool>, cfg: &ServerConfig, step
     }
 }
 
+/// Fold an audited engine's cumulative counters into the serving metrics
+/// as a delta against what this thread last reported (`seen`). No-op with
+/// audit off (`now` is `None`).
+fn harvest_audit(
+    metrics: &Mutex<Metrics>,
+    seen: &mut crate::mpc::AuditCounters,
+    now: Option<crate::mpc::AuditCounters>,
+) {
+    let Some(now) = now else { return };
+    let delta = crate::mpc::AuditCounters {
+        mac_checks: now.mac_checks - seen.mac_checks,
+        mac_failures: now.mac_failures - seen.mac_failures,
+        overhead_bytes: now.overhead_bytes - seen.overhead_bytes,
+        overhead_rounds: now.overhead_rounds - seen.overhead_rounds,
+        openings: now.openings - seen.openings,
+        share_faults_applied: now.share_faults_applied - seen.share_faults_applied,
+    };
+    *seen = now;
+    if delta != crate::mpc::AuditCounters::default() {
+        metrics.lock().unwrap().record_audit(&delta);
+    }
+}
+
 /// Finalize one scheduler session: harvest its summary from the batch,
 /// record metrics, send `Done` when the client is still listening, and
 /// release phantom pool demand when it is not.
@@ -302,6 +343,7 @@ fn finalize_session(
             decode_bytes: sum.decode_bytes,
             rounds: sum.rounds,
             decode_rounds: sum.decode_rounds,
+            transcript_digest: sum.transcript_digest,
             latency,
         })));
     } else {
@@ -342,6 +384,16 @@ fn decode_scheduler(
             return;
         }
     };
+    // Deliberate-tamper smoke (--audit-tamper): arm one share fault a few
+    // covered openings in, so the first request's MAC batch check must
+    // reject — proving the detection path end to end in a live server.
+    if cfg.audit_tamper {
+        let armed = engine
+            .inject_share_fault(crate::mpc::ShareFault { at_open: 8, word: 3, mask: 0b10 });
+        if !armed {
+            eprintln!("decode scheduler: --audit-tamper has no effect without --audit");
+        }
+    }
     let mut batch = match DecodeBatch::new(&mut engine) {
         Ok(b) => b,
         Err(e) => {
@@ -350,6 +402,7 @@ fn decode_scheduler(
             return;
         }
     };
+    let mut audit_seen = crate::mpc::AuditCounters::default();
     let mut lanes: std::collections::HashMap<usize, SchedLane> = std::collections::HashMap::new();
     let mut disconnected = false;
     // Speculative decode (--spec-k > 1): a public tiny-model draft built
@@ -402,6 +455,8 @@ fn decode_scheduler(
                 }
             }
         }
+        // Admission can fail a MAC flush too — report before stepping.
+        harvest_audit(&metrics, &mut audit_seen, batch.audit_counters());
         if batch.is_empty() {
             if disconnected {
                 return;
@@ -471,6 +526,7 @@ fn decode_scheduler(
                 }
             }
         }
+        harvest_audit(&metrics, &mut audit_seen, batch.audit_counters());
     }
 }
 
@@ -506,6 +562,12 @@ impl Coordinator {
         // Offline phase (optional): learn the shape profile, then prefill.
         let pool = if config.offline_prefill && config.framework == FrameworkKind::Centaur {
             let pool = Arc::new(TriplePool::new(config.seed ^ 0x0FF1, config.pool_depth));
+            // Audit mode authenticates the pool's stock: the MAC key must
+            // be live before the probe/prefill generate a single entry,
+            // or fail-closed verification would quarantine all of them.
+            if config.audit {
+                pool.enable_mac(config.seed ^ 0xA0D1_7000);
+            }
             let mut probe = build_engine(&config, Some(Arc::clone(&pool)))?;
             let dummy = vec![4u32; config.cfg.n_ctx];
             probe
@@ -563,6 +625,7 @@ impl Coordinator {
                         return;
                     }
                 };
+                let mut audit_seen = crate::mpc::AuditCounters::default();
                 loop {
                     let batch = {
                         let guard = rx.lock().unwrap();
@@ -631,6 +694,7 @@ impl Coordinator {
                                             decode_bytes: out.decode.bytes_total(),
                                             rounds: total.rounds_total(),
                                             decode_rounds: out.decode.rounds_total(),
+                                            transcript_digest: out.transcript.core_digest(),
                                             latency,
                                         })));
                                     }
@@ -641,6 +705,7 @@ impl Coordinator {
                             }
                         }
                     }
+                    harvest_audit(&m, &mut audit_seen, engine.audit_counters());
                 }
             }));
         }
@@ -1079,6 +1144,75 @@ mod tests {
         assert_eq!(snap.pool_shard_depths.len(), pool.shard_count());
         assert!(snap.summary().contains("offline_triples_per_sec"));
         assert!(snap.summary().contains("warm_pool_hit_rate"));
+    }
+
+    #[test]
+    fn audited_serving_verifies_clean_and_reports_checks() {
+        // Honest audited serving end to end: pool MACs live before the
+        // prefill stocks a single entry, per-step flushes all clean, and
+        // the snapshot reports checks + overhead with zero failures.
+        let mut sc = tiny_gpt_config();
+        sc.audit = true;
+        sc.offline_prefill = true;
+        sc.pool_depth = 1;
+        sc.decode_prefill_steps = 6;
+        let coord = Coordinator::start(sc).unwrap();
+        let s = coord.generate_blocking(vec![7, 11, 13], 3).unwrap();
+        assert_eq!(s.tokens.len(), 3);
+        assert_ne!(s.transcript_digest, 0, "the transcript must have commitments");
+        let snap = coord.shutdown();
+        assert!(snap.mac_checks > 0, "audited decode must flush MAC batches");
+        assert_eq!(snap.audit_failures, 0, "honest serving must verify clean");
+        assert!(snap.audit_overhead_bytes > 0);
+        assert_eq!(snap.pool_mac_rejected, 0, "honest pool stock must all verify");
+        assert!(snap.summary().contains("mac_checks"));
+        assert!(snap.summary().contains("audit_failures=0"));
+    }
+
+    #[test]
+    fn audited_serving_keeps_token_parity_with_audit_off() {
+        // The zero-perturbation invariant at the serving layer: audit on
+        // vs off moves not one token, byte, or transcript commitment (the
+        // MAC overhead lives in the audit counters, never the ledgers).
+        let run = |audit: bool| {
+            let mut sc = tiny_gpt_config();
+            sc.audit = audit;
+            let coord = Coordinator::start(sc).unwrap();
+            let s = coord.generate_blocking(vec![7, 11, 13], 4).unwrap();
+            let snap = coord.shutdown();
+            (s, snap)
+        };
+        let (on, snap_on) = run(true);
+        let (off, snap_off) = run(false);
+        assert_eq!(on.tokens, off.tokens, "audit must not perturb a single token");
+        assert_eq!(on.transcript_digest, off.transcript_digest);
+        assert_eq!(
+            (on.setup_bytes, on.prefill_bytes, on.decode_bytes, on.rounds),
+            (off.setup_bytes, off.prefill_bytes, off.decode_bytes, off.rounds)
+        );
+        assert!(snap_on.mac_checks > 0);
+        assert_eq!((snap_off.mac_checks, snap_off.audit_overhead_bytes), (0, 0));
+    }
+
+    #[test]
+    fn tamper_injection_is_detected_and_reported() {
+        // --audit-tamper smoke: one share fault armed a few openings in;
+        // the request must fail with a MAC error and the failure must
+        // surface in the snapshot. The server keeps serving afterwards.
+        let mut sc = tiny_gpt_config();
+        sc.audit = true;
+        sc.audit_tamper = true;
+        let coord = Coordinator::start(sc).unwrap();
+        let res = coord.generate_blocking(vec![7, 11, 13], 3);
+        let err = format!("{:#}", res.expect_err("a tampered share must fail the request"));
+        assert!(err.contains("MAC check failed"), "unexpected error: {err}");
+        // Single-shot fault: the next request over the same scheduler is
+        // honest again and completes.
+        let s = coord.generate_blocking(vec![7, 11, 13], 3).unwrap();
+        assert_eq!(s.tokens.len(), 3);
+        let snap = coord.shutdown();
+        assert!(snap.audit_failures > 0, "detection must surface in metrics");
+        assert!(snap.summary().contains("audit_failures"));
     }
 
     #[test]

@@ -1,0 +1,385 @@
+//! Replayable per-request transcript digests (integrity-checked mode,
+//! DESIGN.md §Integrity-checked inference).
+//!
+//! A [`RequestTranscript`] is an ordered commitment to everything a decode
+//! request *does* that an honest re-execution must reproduce:
+//!
+//! - one [`StepCommit`] per protocol step (session setup, each prefill
+//!   absorb, each decode flight chain) holding the step's per-
+//!   [`OpClass`] byte and round deltas and its lane width;
+//! - every token the session absorbed or emitted, in order;
+//! - optionally (full execution mode with the transfer census on) the
+//!   [`crate::net::NetSim::wire_digest`] — a rolling chain over every
+//!   transferred payload.
+//!
+//! The **core digest** — the rolling FNV fold over step commits and
+//! tokens — deliberately commits only to quantities that are pinned
+//! mode-, profile-, and kernel-independent elsewhere in the test suite
+//! (ledger charges and greedy tokens), so the same seeded request yields
+//! the *same* core digest under fast-sim or full execution, `lan` or
+//! `wan3`, scalar or SIMD ring kernels (`rust/tests/audit.rs` pins this).
+//! The **wire component** is the opposite trade: it commits to the actual
+//! payload bits, so it only exists for full-mode runs with the census on,
+//! and it catches any single-bit payload change — including tampering
+//! with one-way transfers the share-MAC does not cover (resharings,
+//! client share halves).
+//!
+//! [`verify_transcript`] re-executes a request (the caller supplies the
+//! re-execution — a fresh engine driven with the same seed and inputs)
+//! and reports the **first divergence** between the recorded and replayed
+//! transcripts: which step, which field, or which token.
+
+use crate::net::{fnv1a_fold, CostLedger, OpClass, FNV_OFFSET};
+
+/// Which session phase a step belongs to (part of the commitment — a
+/// replay that moves bytes between phases must not verify).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepPhase {
+    /// One-time session-correlation setup (`OpClass::Correlation`).
+    Setup,
+    /// Cold prefill (prompt absorption).
+    Prefill,
+    /// Warm decode (generated tokens / verify flight chains).
+    Decode,
+}
+
+impl StepPhase {
+    fn tag(self) -> u64 {
+        match self {
+            StepPhase::Setup => 1,
+            StepPhase::Prefill => 2,
+            StepPhase::Decode => 3,
+        }
+    }
+    /// Display label.
+    pub fn name(self) -> &'static str {
+        match self {
+            StepPhase::Setup => "setup",
+            StepPhase::Prefill => "prefill",
+            StepPhase::Decode => "decode",
+        }
+    }
+}
+
+/// Commitment to one protocol step: lane width plus the step ledger's
+/// per-class byte and round deltas, in [`OpClass::ALL`] order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StepCommit {
+    /// Session phase of the step.
+    pub phase: StepPhase,
+    /// Lanes the step carried (tokens absorbed across all sessions).
+    pub lanes: u32,
+    /// Per-class bytes of the step, in ledger order.
+    pub bytes_by_class: [u64; 8],
+    /// Per-class rounds of the step, in ledger order.
+    pub rounds_by_class: [u64; 8],
+}
+
+impl StepCommit {
+    /// Build a commit from a step's ledger (the per-step clone every
+    /// decode path already takes).
+    pub fn from_ledger(phase: StepPhase, lanes: u32, step: &CostLedger) -> Self {
+        let mut bytes_by_class = [0u64; 8];
+        let mut rounds_by_class = [0u64; 8];
+        for (i, &c) in OpClass::ALL.iter().enumerate() {
+            bytes_by_class[i] = step.class(c).bytes;
+            rounds_by_class[i] = step.class(c).rounds;
+        }
+        StepCommit { phase, lanes, bytes_by_class, rounds_by_class }
+    }
+
+    fn fold_into(&self, mut h: u64) -> u64 {
+        h = fnv1a_fold(h, &[STEP_TAG, self.phase.tag(), self.lanes as u64]);
+        h = fnv1a_fold(h, &self.bytes_by_class);
+        fnv1a_fold(h, &self.rounds_by_class)
+    }
+
+    /// Total bytes of the step.
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_by_class.iter().sum()
+    }
+
+    /// Total rounds of the step.
+    pub fn rounds_total(&self) -> u64 {
+        self.rounds_by_class.iter().sum()
+    }
+}
+
+// Domain separators inside the rolling core digest.
+const STEP_TAG: u64 = 0x51;
+const TOKEN_TAG: u64 = 0x70;
+
+/// First point where a recorded transcript and its replay disagree.
+#[derive(Clone, Debug)]
+pub struct TranscriptDivergence {
+    /// 0-based step commit index (`None` for token / wire / length
+    /// divergences past the common step prefix).
+    pub step: Option<usize>,
+    /// Human-readable description of what diverged.
+    pub what: String,
+}
+
+impl std::fmt::Display for TranscriptDivergence {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.step {
+            Some(i) => write!(f, "step {i}: {}", self.what),
+            None => write!(f, "{}", self.what),
+        }
+    }
+}
+
+/// Ordered, replayable commitment to one decode request (or one shared
+/// batch — a [`super::decoder::DecodeBatch`] keeps a single transcript
+/// for its interleaved schedule).
+#[derive(Clone, Debug, Default)]
+pub struct RequestTranscript {
+    commits: Vec<StepCommit>,
+    tokens: Vec<u32>,
+    core: u64,
+    wire: Option<u64>,
+}
+
+impl RequestTranscript {
+    /// Empty transcript.
+    pub fn new() -> Self {
+        RequestTranscript { commits: Vec::new(), tokens: Vec::new(), core: FNV_OFFSET, wire: None }
+    }
+
+    /// Append one step commit (rolls the core digest forward).
+    pub fn commit_step(&mut self, phase: StepPhase, lanes: u32, step: &CostLedger) {
+        let c = StepCommit::from_ledger(phase, lanes, step);
+        self.core = c.fold_into(self.core);
+        self.commits.push(c);
+    }
+
+    /// Append one absorbed/emitted token (order matters and is committed).
+    pub fn commit_token(&mut self, token: u32) {
+        self.core = fnv1a_fold(self.core, &[TOKEN_TAG, token as u64]);
+        self.tokens.push(token);
+    }
+
+    /// Attach the full-mode payload chain (see module docs); fast-sim and
+    /// census-off runs leave it `None` and the wire comparison is skipped.
+    pub fn set_wire_digest(&mut self, d: u64) {
+        self.wire = Some(d);
+    }
+
+    /// Rolling core digest over every commit and token so far —
+    /// mode/profile/kernel-independent for the same seeded request.
+    pub fn core_digest(&self) -> u64 {
+        self.core
+    }
+
+    /// Full-mode payload-chain digest, when one was attached.
+    pub fn wire_digest(&self) -> Option<u64> {
+        self.wire
+    }
+
+    /// Step commits recorded so far.
+    pub fn commits(&self) -> &[StepCommit] {
+        &self.commits
+    }
+
+    /// Tokens recorded so far, in commitment order.
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    /// Keyed signature over the transcript (the SPDZ-style emulation of a
+    /// party signing its view): any change to a commit, a token, or the
+    /// order of either changes the core digest and thus the tag.
+    pub fn sign(&self, key: u64) -> u64 {
+        let k = key | 1;
+        fnv1a_fold(FNV_OFFSET, &[k, self.core, self.commits.len() as u64, self.tokens.len() as u64])
+            .wrapping_mul(k)
+    }
+
+    /// The first divergence between this (recorded) transcript and a
+    /// replayed one, or `None` when they verify equal. Steps are compared
+    /// first (field-precise), then tokens, then lengths, then the wire
+    /// chain (only when both sides carry one).
+    pub fn first_divergence(&self, replay: &RequestTranscript) -> Option<TranscriptDivergence> {
+        for (i, (a, b)) in self.commits.iter().zip(&replay.commits).enumerate() {
+            if a == b {
+                continue;
+            }
+            let what = if a.phase != b.phase {
+                format!("phase {} vs {}", a.phase.name(), b.phase.name())
+            } else if a.lanes != b.lanes {
+                format!("lanes {} vs {}", a.lanes, b.lanes)
+            } else {
+                // Name the first class whose charge moved.
+                let mut what = String::from("per-class charges diverged");
+                for (j, &c) in OpClass::ALL.iter().enumerate() {
+                    if a.bytes_by_class[j] != b.bytes_by_class[j] {
+                        what = format!(
+                            "{} bytes {} vs {}",
+                            c.name(),
+                            a.bytes_by_class[j],
+                            b.bytes_by_class[j]
+                        );
+                        break;
+                    }
+                    if a.rounds_by_class[j] != b.rounds_by_class[j] {
+                        what = format!(
+                            "{} rounds {} vs {}",
+                            c.name(),
+                            a.rounds_by_class[j],
+                            b.rounds_by_class[j]
+                        );
+                        break;
+                    }
+                }
+                what
+            };
+            return Some(TranscriptDivergence { step: Some(i), what });
+        }
+        if self.commits.len() != replay.commits.len() {
+            return Some(TranscriptDivergence {
+                step: Some(self.commits.len().min(replay.commits.len())),
+                what: format!("step count {} vs {}", self.commits.len(), replay.commits.len()),
+            });
+        }
+        for (i, (a, b)) in self.tokens.iter().zip(&replay.tokens).enumerate() {
+            if a != b {
+                return Some(TranscriptDivergence {
+                    step: None,
+                    what: format!("token {i}: {a} vs {b}"),
+                });
+            }
+        }
+        if self.tokens.len() != replay.tokens.len() {
+            return Some(TranscriptDivergence {
+                step: None,
+                what: format!("token count {} vs {}", self.tokens.len(), replay.tokens.len()),
+            });
+        }
+        if let (Some(a), Some(b)) = (self.wire, replay.wire) {
+            if a != b {
+                return Some(TranscriptDivergence {
+                    step: None,
+                    what: format!("wire payload chain {a:#018x} vs {b:#018x}"),
+                });
+            }
+        }
+        None
+    }
+}
+
+/// Re-execute a request and check it against a recorded transcript:
+/// `reexecute` runs the request afresh (same seed, inputs, and options)
+/// and returns its transcript; the first divergence — step, token, or
+/// payload chain — becomes the error. `Ok(())` means the replay verified.
+pub fn verify_transcript<F>(recorded: &RequestTranscript, reexecute: F) -> crate::Result<()>
+where
+    F: FnOnce() -> crate::Result<RequestTranscript>,
+{
+    let replay = reexecute()?;
+    if let Some(d) = recorded.first_divergence(&replay) {
+        anyhow::bail!("transcript verification failed: {d}");
+    }
+    // Belt and braces: the rolling digests must agree whenever the parts
+    // do (a digest mismatch here would mean a fold bug, not tampering).
+    anyhow::ensure!(
+        recorded.core_digest() == replay.core_digest(),
+        "transcript parts match but core digests differ — digest fold bug"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ledger(class: OpClass, bytes: u64, rounds: u64) -> CostLedger {
+        let mut l = CostLedger::new();
+        l.add_bytes(class, bytes);
+        l.add_rounds(class, rounds);
+        l
+    }
+
+    #[test]
+    fn identical_transcripts_verify_and_sign_identically() {
+        let mk = || {
+            let mut t = RequestTranscript::new();
+            t.commit_step(StepPhase::Setup, 0, &ledger(OpClass::Correlation, 4096, 2));
+            t.commit_step(StepPhase::Prefill, 1, &ledger(OpClass::Linear, 128, 16));
+            t.commit_token(7);
+            t.commit_step(StepPhase::Decode, 1, &ledger(OpClass::Linear, 128, 16));
+            t.commit_token(9);
+            t
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.core_digest(), b.core_digest());
+        assert_eq!(a.sign(0xA5), b.sign(0xA5));
+        assert_ne!(a.sign(0xA5), a.sign(0xA7), "signature must be keyed");
+        assert!(a.first_divergence(&b).is_none());
+        assert!(verify_transcript(&a, || Ok(b)).is_ok());
+    }
+
+    #[test]
+    fn divergences_name_the_first_difference() {
+        let base = {
+            let mut t = RequestTranscript::new();
+            t.commit_step(StepPhase::Prefill, 1, &ledger(OpClass::Linear, 100, 4));
+            t.commit_token(5);
+            t
+        };
+        // A moved byte charge is named with its class.
+        let mut bytes = RequestTranscript::new();
+        bytes.commit_step(StepPhase::Prefill, 1, &ledger(OpClass::Linear, 101, 4));
+        bytes.commit_token(5);
+        let d = base.first_divergence(&bytes).expect("must diverge");
+        assert_eq!(d.step, Some(0));
+        assert!(d.what.contains("Linear bytes 100 vs 101"), "got {}", d.what);
+        assert_ne!(base.core_digest(), bytes.core_digest());
+        // A different token stream.
+        let mut tok = RequestTranscript::new();
+        tok.commit_step(StepPhase::Prefill, 1, &ledger(OpClass::Linear, 100, 4));
+        tok.commit_token(6);
+        let d = base.first_divergence(&tok).expect("must diverge");
+        assert!(d.what.contains("token 0: 5 vs 6"), "got {}", d.what);
+        // A truncated replay.
+        let mut short = RequestTranscript::new();
+        short.commit_step(StepPhase::Prefill, 1, &ledger(OpClass::Linear, 100, 4));
+        let d = base.first_divergence(&short).expect("must diverge");
+        assert!(d.what.contains("token count 1 vs 0"), "got {}", d.what);
+        let err = verify_transcript(&base, || Ok(tok)).unwrap_err();
+        assert!(err.to_string().contains("transcript verification failed"), "got {err}");
+    }
+
+    #[test]
+    fn commitment_is_order_sensitive() {
+        let mut ab = RequestTranscript::new();
+        ab.commit_token(1);
+        ab.commit_token(2);
+        let mut ba = RequestTranscript::new();
+        ba.commit_token(2);
+        ba.commit_token(1);
+        assert_ne!(ab.core_digest(), ba.core_digest());
+        // Phase moves change the digest even at equal charges.
+        let mut p = RequestTranscript::new();
+        p.commit_step(StepPhase::Prefill, 1, &ledger(OpClass::Linear, 64, 2));
+        let mut d = RequestTranscript::new();
+        d.commit_step(StepPhase::Decode, 1, &ledger(OpClass::Linear, 64, 2));
+        assert_ne!(p.core_digest(), d.core_digest());
+        assert!(p.first_divergence(&d).unwrap().what.contains("phase"));
+    }
+
+    #[test]
+    fn wire_chain_is_compared_only_when_both_sides_carry_one() {
+        let mut rec = RequestTranscript::new();
+        rec.commit_token(3);
+        rec.set_wire_digest(0xAAAA);
+        // Fast-sim replay (no wire chain): skipped, verifies clean.
+        let mut fast = RequestTranscript::new();
+        fast.commit_token(3);
+        assert!(rec.first_divergence(&fast).is_none());
+        // Full-mode replay with a different chain: rejected.
+        let mut full = RequestTranscript::new();
+        full.commit_token(3);
+        full.set_wire_digest(0xBBBB);
+        let d = rec.first_divergence(&full).expect("must diverge");
+        assert!(d.what.contains("wire payload chain"), "got {}", d.what);
+    }
+}

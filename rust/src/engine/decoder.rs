@@ -30,6 +30,7 @@ use crate::protocols::{adaptation, embedding};
 use crate::tensor::FloatTensor;
 use crate::Result;
 
+use super::audit::{RequestTranscript, StepPhase};
 use super::draft::Draft;
 use super::CentaurEngine;
 
@@ -71,6 +72,10 @@ pub struct GenOutcome {
     pub prefill: CostLedger,
     /// Online cost of the generated steps (warm decode).
     pub decode: CostLedger,
+    /// Replayable per-request transcript (DESIGN.md §Integrity-checked
+    /// inference): step commits + token stream, with the payload wire
+    /// chain attached in full execution mode with the census on.
+    pub transcript: RequestTranscript,
 }
 
 /// Merge the three session phases into one ledger (single definition
@@ -107,6 +112,7 @@ pub struct DecoderSession<'e> {
     history: Vec<u32>,
     tokens_emitted: u64,
     spec: SpeculativeState,
+    transcript: RequestTranscript,
 }
 
 impl<'e> DecoderSession<'e> {
@@ -139,6 +145,11 @@ impl<'e> DecoderSession<'e> {
             }
         }
         let setup = eng.mpc.net.ledger.clone();
+        // Step boundary: verify the setup openings' MACs, then commit the
+        // setup phase to the transcript.
+        eng.mpc.flush_mac_checks()?;
+        let mut transcript = RequestTranscript::new();
+        transcript.commit_step(StepPhase::Setup, 0, &setup);
         eng.views.clear();
         let mut sess = DecoderSession {
             eng,
@@ -153,6 +164,7 @@ impl<'e> DecoderSession<'e> {
             history: Vec::new(),
             tokens_emitted: 0,
             spec: SpeculativeState::default(),
+            transcript,
         };
         for &t in prompt {
             sess.absorb_phase(t, false)?;
@@ -232,6 +244,10 @@ impl<'e> DecoderSession<'e> {
         }
         self.last_logits = logits[m - 1].clone();
         tokens.truncate(m);
+        // Only the accepted prefix is part of the request's token stream.
+        for &t in &tokens {
+            self.transcript.commit_token(t);
+        }
         self.history.extend_from_slice(&tokens);
         self.tokens_emitted += m as u64;
         self.spec.proposed += (l - 1) as u64;
@@ -311,6 +327,10 @@ impl<'e> DecoderSession<'e> {
             outs
         };
         let step = eng.mpc.net.ledger.clone();
+        // Step boundary: batch-verify this flight chain's opening MACs
+        // and commit the step (the caller commits the accepted tokens).
+        eng.mpc.flush_mac_checks()?;
+        self.transcript.commit_step(StepPhase::Decode, tokens.len() as u32, &step);
         self.decode.merge(&step);
         self.decode_steps += 1;
         self.last_step = step;
@@ -385,6 +405,15 @@ impl<'e> DecoderSession<'e> {
         };
         let logits = adaptation::return_to_client(&mut eng.mpc, &logits_sh)?;
         let step = eng.mpc.net.ledger.clone();
+        // Step boundary: batch-verify this step's opening MACs, then
+        // commit the step and its token to the transcript.
+        eng.mpc.flush_mac_checks()?;
+        self.transcript.commit_step(
+            if decode_phase { StepPhase::Decode } else { StepPhase::Prefill },
+            1,
+            &step,
+        );
+        self.transcript.commit_token(token);
         if decode_phase {
             self.decode.merge(&step);
             self.decode_steps += 1;
@@ -498,6 +527,23 @@ impl<'e> DecoderSession<'e> {
     /// Setup + prefill + decode merged.
     pub fn total_cost(&self) -> CostLedger {
         merged_phases(&self.setup, &self.prefill, &self.decode)
+    }
+
+    /// The session's replayable transcript so far. In full execution mode
+    /// with the transfer census on, the current payload wire chain is
+    /// attached; fast-sim transcripts carry only the (mode-independent)
+    /// core commitment.
+    pub fn transcript(&self) -> RequestTranscript {
+        let mut t = self.transcript.clone();
+        if self.eng.mpc.net.record_transfers && !self.eng.fast_sim {
+            t.set_wire_digest(self.eng.mpc.net.wire_digest);
+        }
+        t
+    }
+
+    /// Rolling core transcript digest (mode/profile/kernel-independent).
+    pub fn transcript_digest(&self) -> u64 {
+        self.transcript.core_digest()
     }
 }
 
@@ -623,6 +669,10 @@ pub struct SessionSummary {
     /// Generate steps the session never consumed (early eviction) — the
     /// scheduler releases the matching pool demand.
     pub steps_unconsumed: u64,
+    /// Core transcript digest of the *batch* at harvest time (batched
+    /// steps are shared flights, so the commitment is batch-level; a B=1
+    /// batch's digest equals the solo session's).
+    pub transcript_digest: u64,
 }
 
 /// One token emission from a batched decode step.
@@ -672,6 +722,7 @@ pub struct DecodeBatch<'e> {
     max_concurrent: usize,
     spec_proposed: u64,
     spec_accepted: u64,
+    transcript: RequestTranscript,
 }
 
 impl<'e> DecodeBatch<'e> {
@@ -695,6 +746,7 @@ impl<'e> DecodeBatch<'e> {
             max_concurrent: 0,
             spec_proposed: 0,
             spec_accepted: 0,
+            transcript: RequestTranscript::new(),
         })
     }
 
@@ -732,6 +784,10 @@ impl<'e> DecodeBatch<'e> {
                 }
             }
             let setup = eng.mpc.net.ledger.clone();
+            // Admission boundary: batch-verify the correlation-dealing
+            // MACs, then commit the setup phase to the batch transcript.
+            eng.mpc.flush_mac_checks()?;
+            self.transcript.commit_step(StepPhase::Setup, 0, &setup);
             if self.sessions.is_empty() {
                 eng.views.clear();
             }
@@ -876,6 +932,8 @@ impl<'e> DecodeBatch<'e> {
             self.spec_accepted += (m - 1) as u64;
             self.batch_tokens += m as u64;
             for &tok in &toks[..m] {
+                // Only the accepted prefix joins the batch token stream.
+                self.transcript.commit_token(tok);
                 s.tokens.push(tok);
                 s.history.push(tok);
                 s.steps_left -= 1;
@@ -907,6 +965,7 @@ impl<'e> DecodeBatch<'e> {
             rounds: s.setup.rounds_total() + s.prefill_rounds + s.decode_rounds,
             decode_rounds: s.decode_rounds,
             steps_unconsumed: s.steps_left as u64,
+            transcript_digest: self.transcript.core_digest(),
             tokens: s.tokens,
         })
     }
@@ -986,6 +1045,29 @@ impl<'e> DecodeBatch<'e> {
         }
     }
 
+    /// The batch's replayable transcript so far (shared steps commit
+    /// once, tagged with the lane count). In full execution mode with the
+    /// transfer census on, the current payload wire chain is attached.
+    pub fn transcript(&self) -> RequestTranscript {
+        let mut t = self.transcript.clone();
+        if self.eng.mpc.net.record_transfers && !self.eng.fast_sim {
+            t.set_wire_digest(self.eng.mpc.net.wire_digest);
+        }
+        t
+    }
+
+    /// Rolling core transcript digest (mode/profile/kernel-independent).
+    pub fn transcript_digest(&self) -> u64 {
+        self.transcript.core_digest()
+    }
+
+    /// Cumulative audit counters of the underlying engine (`None` with
+    /// audit mode off) — the batch borrows the engine for its whole life,
+    /// so the scheduler harvests through this passthrough.
+    pub fn audit_counters(&self) -> Option<crate::mpc::AuditCounters> {
+        self.eng.audit_counters()
+    }
+
     /// One shared single-token forward for `work` = ascending
     /// `(session index, token)` lanes. Prefill calls pass a single lane;
     /// decode steps pass every live session — both run the exact same
@@ -995,6 +1077,7 @@ impl<'e> DecodeBatch<'e> {
         let grouped: Vec<(usize, Vec<u32>)> = work.iter().map(|&(i, t)| (i, vec![t])).collect();
         let logits = self.absorb_groups(&grouped, decode_phase)?;
         for (&(idx, token), mut outs) in work.iter().zip(logits) {
+            self.transcript.commit_token(token);
             let s = &mut self.sessions[idx];
             s.history.push(token);
             s.last_logits = outs.pop().expect("one logits row per lane");
@@ -1134,6 +1217,16 @@ impl<'e> DecodeBatch<'e> {
         };
         let step = eng.mpc.net.ledger.clone();
         let step_rounds = step.rounds_total();
+        // Step boundary: batch-verify this step's opening MACs, then
+        // commit the shared step (all lanes ride one flight schedule, so
+        // the batch transcript commits it once, tagged with lane count).
+        eng.mpc.flush_mac_checks()?;
+        let lanes: u32 = work.iter().map(|(_, t)| t.len() as u32).sum();
+        self.transcript.commit_step(
+            if decode_phase { StepPhase::Decode } else { StepPhase::Prefill },
+            lanes,
+            &step,
+        );
         for ((idx, tokens), bytes) in work.iter().zip(&lane_bytes) {
             let s = &mut self.sessions[*idx];
             if decode_phase {

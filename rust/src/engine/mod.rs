@@ -12,6 +12,7 @@
 //! All communication lands in [`crate::net::CostLedger`]; every plaintext
 //! P1 reconstructs is recorded in [`views::Views`].
 
+pub mod audit;
 pub mod decoder;
 pub mod draft;
 pub mod views;
@@ -57,6 +58,22 @@ pub struct EngineOptions {
     /// Record a digest of every transferred payload in the [`crate::net`]
     /// transfer census (security tests); off by default.
     pub record_transfers: bool,
+    /// Integrity-checked inference (DESIGN.md §Integrity-checked
+    /// inference): SPDZ-style deferred share MACs batch-verified at step
+    /// and request boundaries, plus the transfer census for the
+    /// transcript wire chain. Zero perturbation: shares, ledgers, views,
+    /// and tokens stay bit-identical to an audit-off run of the same
+    /// seed. Defaults to the `CENTAUR_AUDIT` environment variable
+    /// (`1`/`true` = on).
+    pub audit: bool,
+}
+
+/// Whether `CENTAUR_AUDIT` asks for integrity-checked mode by default.
+pub fn audit_env_default() -> bool {
+    matches!(
+        std::env::var("CENTAUR_AUDIT").ok().as_deref(),
+        Some("1") | Some("true") | Some("on")
+    )
 }
 
 impl Default for EngineOptions {
@@ -70,6 +87,7 @@ impl Default for EngineOptions {
             decode_correlations: true,
             round_batching: true,
             record_transfers: false,
+            audit: audit_env_default(),
         }
     }
 }
@@ -129,9 +147,15 @@ impl CentaurEngine {
     ) -> Result<Self> {
         let pm = PermutedModel::build(cfg, w, perms);
         let mut mpc = Mpc::new(NetSim::new(opts.profile), opts.seed ^ 0xEE);
-        mpc.net.record_transfers = opts.record_transfers;
+        // Audit mode needs the census for the transcript wire chain; the
+        // MAC key derives from the seed without touching any protocol PRG,
+        // so everything stays bit-identical to an audit-off run.
+        mpc.net.record_transfers = opts.record_transfers || opts.audit;
         if let Some(pool) = &opts.triple_pool {
             mpc.dealer.attach_pool(std::sync::Arc::clone(pool));
+        }
+        if opts.audit {
+            mpc.enable_audit(opts.seed);
         }
         // Deal the shared π₁ matrices once (Algorithm 6 setup).
         let pi1_sh = ppp::share_perm(&mut mpc, &pm.perms.pi1, OpClass::Linear);
@@ -211,6 +235,8 @@ impl CentaurEngine {
             ModelKind::Gpt2 => adaptation::pp_adaptation_gpt2(&mut ctx, &self.pm, &x_pi)?,
         };
         let logits = adaptation::return_to_client(&mut self.mpc, &logits_sh)?;
+        // Request boundary: batch-verify every opening of this inference.
+        self.mpc.flush_mac_checks()?;
         Ok(InferenceOutput { logits, stats: self.mpc.net.ledger.clone() })
     }
 
@@ -255,7 +281,8 @@ impl CentaurEngine {
         }
         let (setup, prefill, decode) =
             (sess.setup_cost().clone(), sess.prefill_cost().clone(), sess.decode_cost().clone());
-        Ok(decoder::GenOutcome { tokens, setup, prefill, decode })
+        let transcript = sess.transcript();
+        Ok(decoder::GenOutcome { tokens, setup, prefill, decode, transcript })
     }
 
     /// Speculative incremental generation (DESIGN.md §Speculative decode):
@@ -285,7 +312,8 @@ impl CentaurEngine {
         let spec = *sess.speculative();
         let (setup, prefill, decode) =
             (sess.setup_cost().clone(), sess.prefill_cost().clone(), sess.decode_cost().clone());
-        Ok((decoder::GenOutcome { tokens, setup, prefill, decode }, spec))
+        let transcript = sess.transcript();
+        Ok((decoder::GenOutcome { tokens, setup, prefill, decode, transcript }, spec))
     }
 
     /// The pre-KV-cache generation path: re-run the full padded forward
@@ -324,6 +352,47 @@ impl CentaurEngine {
     /// multisets of two schedules with it.
     pub fn transfer_log(&self) -> &[crate::net::TransferRecord] {
         &self.mpc.net.transfer_log
+    }
+
+    /// Whether integrity-checked mode is on ([`EngineOptions::audit`]).
+    pub fn audit_enabled(&self) -> bool {
+        self.mpc.audit_enabled()
+    }
+
+    /// Audit counters so far (`None` when audit is off) — MAC checks,
+    /// failures, and audit-only overhead, never charged to the protocol
+    /// ledger (see [`crate::mpc::AuditCounters`]).
+    pub fn audit_counters(&self) -> Option<crate::mpc::AuditCounters> {
+        self.mpc.audit_counters()
+    }
+
+    /// MAC-covered openings so far (the target domain of
+    /// [`CentaurEngine::inject_share_fault`]); 0 when audit is off.
+    pub fn audit_open_count(&self) -> u64 {
+        self.mpc.audit_open_count()
+    }
+
+    /// Transfers executed by this engine's network so far (the target
+    /// domain of [`CentaurEngine::schedule_tamper`]).
+    pub fn transfer_count(&self) -> u64 {
+        self.mpc.net.transfer_seq
+    }
+
+    /// Wire-level faults the tamper harness actually landed.
+    pub fn faults_applied(&self) -> u64 {
+        self.mpc.net.faults_applied
+    }
+
+    /// Schedule a single-shot wire fault (tamper harness — see
+    /// [`crate::net::TamperPlan`]).
+    pub fn schedule_tamper(&mut self, plan: crate::net::TamperPlan) {
+        self.mpc.net.schedule_tamper(plan);
+    }
+
+    /// Schedule a single-shot share fault (tamper harness). Returns false
+    /// when audit is off.
+    pub fn inject_share_fault(&mut self, fault: crate::mpc::ShareFault) -> bool {
+        self.mpc.inject_share_fault(fault)
     }
 
     /// Backend fallback count (XLA backend health check).

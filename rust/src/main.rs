@@ -8,6 +8,8 @@
 //! centaur serve  --weights gpt2-tiny-wikitext103 --gen-steps 8 --requests 4
 //!                [--offline-prefill] [--no-decode-corr] [--no-round-batching]  # streaming incremental decode
 //!                [--spec-k 4]  # speculative multi-token verify per flight chain
+//!                [--audit]        # SPDZ-style share MACs + transcript digests
+//!                [--audit-tamper] # deliberate fault; run fails unless detected
 //! centaur compare --model bert-tiny [--full]
 //! centaur artifacts-check
 //! ```
@@ -179,12 +181,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sc.spec_k == 1 || sc.round_batching,
         "--spec-k > 1 needs the batched decode schedule (drop --no-round-batching)"
     );
+    // Integrity-checked serving: `--audit` turns on share MACs +
+    // transcript digests (also honors CENTAUR_AUDIT=1); `--audit-tamper`
+    // additionally arms one deliberate share fault in the decode
+    // scheduler and the run FAILS unless the audit layer catches it.
+    sc.audit = sc.audit || args.flag("audit");
+    sc.audit_tamper = args.flag("audit-tamper");
+    anyhow::ensure!(!sc.audit_tamper || sc.audit, "--audit-tamper needs --audit");
+    let audit = sc.audit;
+    let audit_tamper = sc.audit_tamper;
     let n_req = args.opt_usize("requests", 16);
 
     // Streaming generation mode: each request decodes `--gen-steps` tokens
     // incrementally over the secret-shared KV cache, tokens streamed back
     // as the protocol produces them.
     let gen_steps = args.opt_usize("gen-steps", 0);
+    anyhow::ensure!(
+        !audit_tamper || gen_steps > 0,
+        "--audit-tamper arms the decode scheduler; combine it with --gen-steps"
+    );
     if gen_steps > 0 {
         anyhow::ensure!(
             sc.cfg.kind == ModelKind::Gpt2,
@@ -224,10 +239,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 coord.submit_generate(prompt, gen_steps)
             })
             .collect();
+        let mut rejected = 0u64;
         for (i, rx) in rxs.into_iter().enumerate() {
             loop {
-                match rx.recv().map_err(|_| anyhow::anyhow!("coordinator died"))?? {
-                    StreamEvent::Token { index, token, step_bytes, .. } => {
+                match rx.recv().map_err(|_| anyhow::anyhow!("coordinator died"))? {
+                    // Under the deliberate-tamper smoke, rejected requests
+                    // are the expected outcome — count them and move on.
+                    Err(e) if audit_tamper => {
+                        println!("  req{i} rejected by audit: {e:#}");
+                        rejected += 1;
+                        break;
+                    }
+                    Err(e) => return Err(e),
+                    Ok(StreamEvent::Token { index, token, step_bytes, .. }) => {
                         if i == 0 {
                             println!(
                                 "  req0 token[{index}] = {token}  ({} online this step)",
@@ -235,7 +259,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                             );
                         }
                     }
-                    StreamEvent::Done(s) => {
+                    Ok(StreamEvent::Done(s)) => {
                         if i == 0 {
                             let per_tok = s.decode_bytes / (s.tokens.len().max(1) as u64);
                             println!(
@@ -253,6 +277,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         let snap = coord.shutdown();
         println!("{}", snap.summary());
+        if audit_tamper {
+            anyhow::ensure!(
+                rejected > 0 && snap.audit_failures > 0,
+                "--audit-tamper: the armed fault went UNDETECTED (rejected={rejected}, audit_failures={})",
+                snap.audit_failures
+            );
+            println!(
+                "audit tamper smoke: {rejected} request(s) rejected, audit_failures={}",
+                snap.audit_failures
+            );
+        } else if audit {
+            anyhow::ensure!(
+                snap.audit_failures == 0,
+                "audit flagged an honest run (audit_failures={})",
+                snap.audit_failures
+            );
+            println!(
+                "audit clean: mac_checks={} overhead={}",
+                snap.mac_checks,
+                centaur::util::human_bytes(snap.audit_overhead_bytes)
+            );
+        }
         return Ok(());
     }
 
@@ -285,6 +331,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let snap = coord.shutdown();
     println!("{}", snap.summary());
+    if audit {
+        anyhow::ensure!(
+            snap.audit_failures == 0,
+            "audit flagged an honest run (audit_failures={})",
+            snap.audit_failures
+        );
+        println!(
+            "audit clean: mac_checks={} overhead={}",
+            snap.mac_checks,
+            centaur::util::human_bytes(snap.audit_overhead_bytes)
+        );
+    }
     Ok(())
 }
 

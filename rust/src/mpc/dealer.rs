@@ -353,6 +353,72 @@ pub enum PoolItem {
 }
 
 // ---------------------------------------------------------------------
+// Pool MACs (DESIGN.md §Integrity-checked inference): under audit mode
+// the dealer authenticates every pooled item at generation time with a
+// keyed digest over its entire share state; `take` re-verifies, so an
+// item corrupted while it sat in the pool is quarantined *before* the
+// consuming open ever sees it — and counted, so the session's next
+// `Mpc::flush_mac_checks` rejects. On-demand (cold-fallback) generation
+// stays unauthenticated: it happens in-process at the consuming call
+// site, so there is no storage window to protect.
+// ---------------------------------------------------------------------
+
+fn tag_fold_tensor(mut h: u64, t: &RingTensor) -> u64 {
+    h = crate::net::fnv1a_fold(h, &[t.rows() as u64, t.cols() as u64]);
+    for &v in t.data() {
+        h = crate::net::fnv1a_fold(h, &[v as u64]);
+    }
+    h
+}
+
+fn tag_fold_share(h: u64, s: &Share) -> u64 {
+    tag_fold_tensor(tag_fold_tensor(h, &s.s0), &s.s1)
+}
+
+fn tag_fold_fixed(mut h: u64, c: &FixedOperandCorrelation) -> u64 {
+    h = tag_fold_share(h, &c.mask);
+    for fu in &c.uses {
+        for (a, cc) in &fu.blocks {
+            h = tag_fold_share(h, a);
+            h = tag_fold_share(h, cc);
+        }
+    }
+    h
+}
+
+/// Keyed MAC tag over a pooled item's entire share state (every tensor of
+/// every share, shapes included). With an odd `key` folded in at both
+/// ends, any single-bit corruption of any stored word changes the tag.
+fn item_tag(key: u64, item: &PoolItem) -> u64 {
+    let mut h = crate::net::fnv1a_fold(crate::net::FNV_OFFSET, &[key]);
+    match item {
+        PoolItem::Mat(t) => {
+            h = tag_fold_share(h, &t.a);
+            h = tag_fold_share(h, &t.b);
+            h = tag_fold_share(h, &t.c);
+        }
+        PoolItem::Square(p) => {
+            h = tag_fold_share(h, &p.a);
+            h = tag_fold_share(h, &p.c);
+        }
+        PoolItem::Fixed(c) => h = tag_fold_fixed(h, c),
+        PoolItem::FixedSession(cs) => {
+            for c in cs {
+                h = tag_fold_fixed(h, c);
+            }
+        }
+    }
+    h.wrapping_mul(key | 1)
+}
+
+/// A pooled item plus the MAC tag it was stocked with (0 when the pool's
+/// MAC key was unset at push time).
+struct PoolEntry {
+    item: PoolItem,
+    tag: u64,
+}
+
+// ---------------------------------------------------------------------
 // Generation (shared by the on-demand dealer path and the pool)
 // ---------------------------------------------------------------------
 
@@ -522,7 +588,7 @@ fn generate_fixed_session(rng: &mut Rng, shape: TripleShape) -> Vec<FixedOperand
 
 #[derive(Default)]
 struct ShapeQueue {
-    q: VecDeque<PoolItem>,
+    q: VecDeque<PoolEntry>,
     /// Misses recorded *before this shape was ever stocked* plus demand
     /// registered by sessions up front — after one cold inference (or one
     /// `register_demand` pass) this is exactly the per-request demand,
@@ -579,6 +645,14 @@ pub struct TriplePool {
     depth: usize,
     /// Hard cap on pooled entries per shape (memory guard).
     max_per_shape: usize,
+    /// MAC key authenticating pooled items (0 = MACs off). Set **before**
+    /// the pool is stocked ([`TriplePool::enable_mac`]): entries pushed
+    /// while the key was unset carry tag 0 and are rejected fail-closed
+    /// once verification is on.
+    mac_key: AtomicU64,
+    /// Pooled items rejected at [`TriplePool::take`] because their stored
+    /// state no longer matches their MAC tag.
+    mac_rejected: AtomicU64,
 }
 
 /// Point-in-time statistics of a [`TriplePool`] (one lock round-trip over
@@ -603,6 +677,8 @@ pub struct PoolStats {
     /// Entries currently pooled per shard slot (length
     /// [`TriplePool::shard_count`]).
     pub shard_depths: Vec<usize>,
+    /// Pooled items rejected at take for a MAC mismatch (audit mode).
+    pub mac_rejected: u64,
 }
 
 impl TriplePool {
@@ -626,7 +702,51 @@ impl TriplePool {
             offline_bytes: AtomicU64::new(0),
             depth: depth.max(1),
             max_per_shape: 256,
+            mac_key: AtomicU64::new(0),
+            mac_rejected: AtomicU64::new(0),
         }
+    }
+
+    /// Switch on pool-item MACs with `key` (forced odd, so it is never
+    /// mistaken for the off state and any single-bit corruption changes
+    /// the keyed tag). Call before stocking: entries already pooled carry
+    /// no tag and will be rejected fail-closed.
+    pub fn enable_mac(&self, key: u64) {
+        self.mac_key.store(key | 1, Ordering::Relaxed);
+    }
+
+    /// Whether pool-item MACs are on.
+    pub fn mac_enabled(&self) -> bool {
+        self.mac_key.load(Ordering::Relaxed) != 0
+    }
+
+    /// Pooled items rejected at [`TriplePool::take`] for a MAC mismatch.
+    pub fn mac_rejected(&self) -> u64 {
+        self.mac_rejected.load(Ordering::Relaxed)
+    }
+
+    /// Tamper-injection hook: flip one bit of one stored word of the next
+    /// pooled entry for `shape` (after its tag was computed, emulating
+    /// corruption while the item sat in the pool). Returns false when
+    /// nothing is pooled for `shape`.
+    pub fn tamper_one(&self, shape: TripleShape) -> bool {
+        let mut inner = self.shards[self.shard_of(&shape)].lock().unwrap();
+        let Some(sq) = inner.shapes.get_mut(&shape) else { return false };
+        let Some(entry) = sq.q.front_mut() else { return false };
+        let t = match &mut entry.item {
+            PoolItem::Mat(t) => &mut t.a.s0,
+            PoolItem::Square(p) => &mut p.a.s0,
+            PoolItem::Fixed(c) => &mut c.mask.s0,
+            PoolItem::FixedSession(cs) => match cs.first_mut() {
+                Some(c) => &mut c.mask.s0,
+                None => return false,
+            },
+        };
+        if t.len() == 0 {
+            return false;
+        }
+        t.data_mut()[0] ^= 1;
+        true
     }
 
     /// Deterministic shard slot for a shape (FNV-1a over the key fields —
@@ -660,24 +780,34 @@ impl TriplePool {
     /// Either way a miss on a shape the offline phase knew about counts as
     /// a starvation event.
     pub fn take(&self, shape: TripleShape) -> Option<PoolItem> {
+        let key = self.mac_key.load(Ordering::Relaxed);
         let mut inner = self.shards[self.shard_of(&shape)].lock().unwrap();
         let sq = inner.shapes.entry(shape).or_default();
-        match sq.q.pop_front() {
-            Some(item) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(item)
-            }
-            None => {
-                if sq.stocked > 0 || sq.demand > 0 {
-                    self.starved.fetch_add(1, Ordering::Relaxed);
+        loop {
+            match sq.q.pop_front() {
+                Some(entry) => {
+                    if key != 0 && entry.tag != item_tag(key, &entry.item) {
+                        // Quarantine: never hand a corrupted item to an
+                        // open. The counter makes the consuming session's
+                        // next MAC flush reject.
+                        self.mac_rejected.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Some(entry.item);
                 }
-                if sq.stocked == 0 {
-                    sq.demand += 1;
-                } else if sq.demand > 0 {
-                    sq.surge += 1;
+                None => {
+                    if sq.stocked > 0 || sq.demand > 0 {
+                        self.starved.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if sq.stocked == 0 {
+                        sq.demand += 1;
+                    } else if sq.demand > 0 {
+                        sq.surge += 1;
+                    }
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    return None;
                 }
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
             }
         }
     }
@@ -732,16 +862,26 @@ impl TriplePool {
     /// Push one freshly generated batch for `shape` into its shard,
     /// respecting the per-shape cap. Returns entries actually stocked.
     fn push_generated(&self, shard: usize, shape: TripleShape, items: Vec<PoolItem>) -> u64 {
+        // Tag outside the shard lock: the MAC walks the item's whole
+        // share state, and generation is already lock-free by design.
+        let key = self.mac_key.load(Ordering::Relaxed);
+        let entries: Vec<PoolEntry> = items
+            .into_iter()
+            .map(|item| {
+                let tag = if key != 0 { item_tag(key, &item) } else { 0 };
+                PoolEntry { item, tag }
+            })
+            .collect();
         let mut pushed = 0u64;
         {
             let mut inner = self.shards[shard].lock().unwrap();
             let sq = inner.shapes.entry(shape).or_default();
-            for item in items {
+            for entry in entries {
                 if sq.q.len() >= self.max_per_shape {
                     break;
                 }
                 sq.stocked += 1;
-                sq.q.push_back(item);
+                sq.q.push_back(entry);
                 pushed += 1;
             }
         }
@@ -904,6 +1044,7 @@ impl TriplePool {
             pooled,
             shapes,
             shard_depths,
+            mac_rejected: self.mac_rejected(),
         }
     }
 
@@ -1720,5 +1861,139 @@ mod tests {
             pool.release_demand(s, u64::MAX); // retire any surge leftovers
             assert_eq!(pool.demand_for(s), 0);
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Pool-item MACs (integrity-checked mode)
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn mac_tags_quarantine_a_tampered_entry_at_take() {
+        let pool = TriplePool::new(200, 2);
+        pool.enable_mac(0xFEED_FACE);
+        assert!(pool.mac_enabled());
+        let shape = TripleShape::matmul(4, 4, 4);
+        pool.register_demand(shape, 1);
+        assert_eq!(pool.fill_to_target(), 2);
+        // Corrupt the front entry while it sits in the pool.
+        assert!(pool.tamper_one(shape));
+        // take() rejects the corrupted entry and serves the clean one.
+        assert!(matches!(pool.take(shape), Some(PoolItem::Mat(_))));
+        assert_eq!(pool.mac_rejected(), 1);
+        assert_eq!((pool.hits(), pool.misses()), (1, 0));
+        assert_eq!(pool.stats().mac_rejected, 1, "PoolStats must surface the rejection");
+        // Draining the (now empty) queue is an ordinary miss.
+        assert!(pool.take(shape).is_none());
+        // Nothing pooled for an unknown shape → nothing to tamper with.
+        assert!(!pool.tamper_one(TripleShape::elem(9, 9)));
+    }
+
+    #[test]
+    fn mac_rejects_untagged_entries_fail_closed() {
+        // Entries stocked before the key was set carry tag 0; turning the
+        // MAC on afterwards must reject them rather than trust them.
+        let pool = TriplePool::new(201, 1);
+        let shape = TripleShape::square(3, 3);
+        pool.register_demand(shape, 1);
+        assert_eq!(pool.fill_to_target(), 1);
+        pool.enable_mac(0xB00);
+        assert!(pool.take(shape).is_none(), "untagged entries must not be served");
+        assert_eq!(pool.mac_rejected(), 1);
+        // The refill path restocks with valid tags and service resumes.
+        assert!(pool.fill_to_target() >= 1);
+        assert!(pool.take(shape).is_some());
+    }
+
+    #[test]
+    fn mac_tags_cover_every_pool_item_family() {
+        let pool = TriplePool::new(202, 1);
+        pool.enable_mac(0xAB5);
+        let shapes = [
+            TripleShape::matmul(2, 3, 4),
+            TripleShape::elem(3, 3),
+            TripleShape::square(2, 5),
+            TripleShape::fixed_ppp(2, 4, 3),
+            TripleShape::fixed_append_session(4, 2, 3, 2),
+        ];
+        for s in shapes {
+            pool.register_demand(s, 1);
+        }
+        assert_eq!(pool.fill_to_target(), 5);
+        for s in shapes {
+            assert!(pool.tamper_one(s), "tamper hook must reach {s:?}");
+            assert!(pool.take(s).is_none(), "corrupted {s:?} must be quarantined");
+        }
+        assert_eq!(pool.mac_rejected(), 5);
+    }
+
+    #[test]
+    fn offline_service_stocks_verifiable_entries_under_mac() {
+        // PoolService workers tag what they generate; consuming takes
+        // verify clean — audit mode does not starve the warm path.
+        let pool = Arc::new(TriplePool::new(203, 2));
+        pool.enable_mac(0xD0_0DAD);
+        let shape = TripleShape::matmul(1, 8, 8);
+        pool.register_demand(shape, 1);
+        let service = TriplePool::start_service(&pool, 1);
+        let mut waited = 0;
+        while pool.pooled_total() < 2 && waited < 5000 {
+            std::thread::sleep(Duration::from_millis(1));
+            waited += 1;
+        }
+        assert!(pool.take(shape).is_some());
+        assert_eq!(pool.mac_rejected(), 0);
+        assert_eq!(pool.hits(), 1);
+        service.stop();
+    }
+
+    #[test]
+    fn a_mac_corrupted_pooled_triple_fails_the_consuming_flush() {
+        use crate::mpc::Mpc;
+        use crate::net::{NetSim, NetworkProfile, OpClass};
+        let pool = Arc::new(TriplePool::new(204, 2));
+        pool.enable_mac(0x5EED);
+        let shape = TripleShape::matmul(4, 4, 4);
+        pool.register_demand(shape, 1);
+        assert_eq!(pool.fill_to_target(), 2);
+        assert!(pool.tamper_one(shape));
+
+        let mut mpc = Mpc::new(NetSim::new(NetworkProfile::lan()), 77);
+        mpc.dealer.attach_pool(Arc::clone(&pool));
+        mpc.enable_audit(77);
+        let x = RingTensor::from_fn(4, 4, |r, c| (r * 4 + c) as i64 - 7);
+        let sx = mpc.share_local(&x);
+        let sy = mpc.share_local(&x);
+        // The consuming matmul's take quarantines the corrupted entry and
+        // serves the clean one — the opening itself stays honest…
+        mpc.matmul(&sx, &sy, OpClass::Linear);
+        assert_eq!(pool.mac_rejected(), 1);
+        // …but the session's next MAC flush must still reject: a
+        // corrupted item surfaced on this session's watch.
+        let err = mpc.flush_mac_checks().unwrap_err();
+        assert!(err.to_string().contains("corrupted pool items = 1"), "unexpected error: {err}");
+        assert_eq!(mpc.audit_counters().unwrap().mac_failures, 1);
+        // The rejection was consumed; subsequent flushes are clean.
+        mpc.matmul(&sx, &sy, OpClass::Linear);
+        assert_eq!(mpc.flush_mac_checks().unwrap(), 1);
+    }
+
+    #[test]
+    fn audited_session_demand_balances_to_zero_on_release() {
+        // An audited session registers decode-shape demand exactly like a
+        // semi-honest one and hands it back on eviction.
+        let pool = TriplePool::new(205, 1);
+        pool.enable_mac(0xCAFE);
+        let shapes = [TripleShape::matmul(1, 16, 8), TripleShape::fixed_ppp(1, 8, 4)];
+        for s in shapes {
+            pool.register_demand(s, 3);
+            assert_eq!(pool.demand_for(s), 3);
+        }
+        pool.fill_to_target();
+        for s in shapes {
+            assert!(pool.take(s).is_some(), "warm take under MAC must succeed");
+            pool.release_demand(s, 3);
+            assert_eq!(pool.demand_for(s), 0, "audited demand must balance to zero");
+        }
+        assert_eq!(pool.mac_rejected(), 0);
     }
 }

@@ -89,6 +89,63 @@ impl Share {
     }
 }
 
+/// Point-in-time audit counters of an [`Mpc`] context (see
+/// [`Mpc::enable_audit`]): MAC-check traffic is accounted here, **never**
+/// in the protocol [`crate::net::CostLedger`], so every byte/round-exact
+/// pin in the test suite holds identically with audit on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AuditCounters {
+    /// Batched σ-checks performed (step/request boundaries).
+    pub mac_checks: u64,
+    /// σ-checks that rejected (nonzero accumulator or a MAC-corrupted
+    /// pooled item surfaced since the last flush).
+    pub mac_failures: u64,
+    /// Audit-only wire bytes (σ-share commit/open per flush).
+    pub overhead_bytes: u64,
+    /// Audit-only wire rounds (commit + reveal per flush).
+    pub overhead_rounds: u64,
+    /// Openings the σ-accumulator has covered so far.
+    pub openings: u64,
+    /// Share faults the tamper harness actually injected.
+    pub share_faults_applied: u64,
+}
+
+/// A scheduled single-shot *share* fault (tamper-injection harness): at
+/// covered opening number `at_open`, party 1 sends a perturbed share —
+/// `word` (mod len) XORed with `mask | 1` — instead of its true one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShareFault {
+    /// 0-based index into the MAC-covered openings of this context
+    /// (see [`Mpc::audit_open_count`]).
+    pub at_open: u64,
+    /// Flat word index into the share tensor (mod len).
+    pub word: usize,
+    /// XOR mask; bit 0 is forced so the fault always changes the value.
+    pub mask: u64,
+}
+
+/// Deferred SPDZ-style MAC state: a per-session information-theoretic key
+/// `α` (odd, derived from the session seed without touching any protocol
+/// PRG stream) and a running accumulator
+/// `σ += c_j · α · (delivered_j − expected_j)` over every element of
+/// every covered opening, with per-element odd coefficients `c_j`. Honest
+/// runs keep `σ = 0` without evaluating a single coefficient; any
+/// single-element corruption contributes `odd·odd·d ≠ 0 (mod 2^64)`, so
+/// one flipped bit anywhere is detected with certainty at the next
+/// [`Mpc::flush_mac_checks`].
+struct AuditState {
+    alpha: u64,
+    sigma: u64,
+    /// Covered openings so far (σ coefficient domain separator).
+    open_seq: u64,
+    /// Openings accumulated since the last flush.
+    pending: u64,
+    /// Pool `mac_rejected` watermark at the last flush.
+    pool_rejected_seen: u64,
+    fault: Option<ShareFault>,
+    counters: AuditCounters,
+}
+
 /// MPC execution context: network simulator + dealer + share randomness.
 pub struct Mpc {
     /// Network simulator charging every transfer.
@@ -96,6 +153,8 @@ pub struct Mpc {
     /// Trusted dealer for correlated randomness.
     pub dealer: Dealer,
     rng: Rng,
+    /// Deferred MAC-check state (`None` = semi-honest mode).
+    audit: Option<AuditState>,
 }
 
 impl Mpc {
@@ -103,7 +162,149 @@ impl Mpc {
     pub fn new(net: NetSim, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let dealer = Dealer::new(rng.fork(0xDEA1));
-        Mpc { net, dealer, rng }
+        Mpc { net, dealer, rng, audit: None }
+    }
+
+    // ------------------------------------------------------------------
+    // Integrity-checked mode (DESIGN.md §Integrity-checked inference)
+    // ------------------------------------------------------------------
+
+    /// Switch on integrity-checked mode: every subsequent opening is
+    /// covered by the deferred σ-accumulator, batch-verified at
+    /// [`Mpc::flush_mac_checks`]. The MAC key `α` is derived from `seed`
+    /// by splitmix64 — **not** by forking a protocol PRG, which would
+    /// desynchronize share randomness — so shares, payloads, views, and
+    /// tokens stay bit-identical to an audit-off run of the same seed.
+    pub fn enable_audit(&mut self, seed: u64) {
+        let mut st = seed ^ 0xA0D1_7C0D_E5ED_BEEF;
+        let alpha = crate::util::rng::splitmix64(&mut st) | 1;
+        let pool_rejected_seen = self.dealer.pool().map_or(0, |p| p.mac_rejected());
+        self.audit = Some(AuditState {
+            alpha,
+            sigma: 0,
+            open_seq: 0,
+            pending: 0,
+            pool_rejected_seen,
+            fault: None,
+            counters: AuditCounters::default(),
+        });
+    }
+
+    /// Whether integrity-checked mode is on.
+    pub fn audit_enabled(&self) -> bool {
+        self.audit.is_some()
+    }
+
+    /// Current audit counters (`None` when audit is off).
+    pub fn audit_counters(&self) -> Option<AuditCounters> {
+        self.audit.as_ref().map(|a| a.counters)
+    }
+
+    /// Number of MAC-covered openings so far (the index domain of
+    /// [`ShareFault::at_open`]). 0 when audit is off.
+    pub fn audit_open_count(&self) -> u64 {
+        self.audit.as_ref().map_or(0, |a| a.open_seq)
+    }
+
+    /// Schedule a single-shot share fault (tamper harness). Returns false
+    /// when audit mode is off — there is no covered opening to target.
+    pub fn inject_share_fault(&mut self, fault: ShareFault) -> bool {
+        match self.audit.as_mut() {
+            Some(a) => {
+                a.fault = Some(fault);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Batch-verify every opening accumulated since the last flush: the
+    /// parties commit and reveal their σ-shares (32 audit-only bytes, 2
+    /// audit-only rounds — charged to [`AuditCounters`], never the
+    /// protocol ledger) and reject unless `σ = 0` and no MAC-corrupted
+    /// pooled item surfaced since the last flush. A no-op returning
+    /// `Ok(0)` when audit is off or nothing is pending; `Ok(1)` after a
+    /// clean check; an error after a failed one (the failure stays
+    /// counted, so serving metrics survive the bail).
+    pub fn flush_mac_checks(&mut self) -> crate::Result<u64> {
+        let pool_rejected_now = self.dealer.pool().map_or(0, |p| p.mac_rejected());
+        let Some(a) = self.audit.as_mut() else { return Ok(0) };
+        let pool_delta = pool_rejected_now.saturating_sub(a.pool_rejected_seen);
+        a.pool_rejected_seen = pool_rejected_now;
+        if a.pending == 0 && pool_delta == 0 {
+            return Ok(0);
+        }
+        let pending = std::mem::take(&mut a.pending);
+        let sigma = std::mem::take(&mut a.sigma);
+        a.counters.mac_checks += 1;
+        a.counters.overhead_bytes += 32;
+        a.counters.overhead_rounds += 2;
+        if sigma != 0 || pool_delta > 0 {
+            a.counters.mac_failures += 1;
+            anyhow::bail!(
+                "audit MAC check failed: sigma = {sigma:#018x}, corrupted pool items = \
+                 {pool_delta} ({pending} openings in the batch)"
+            );
+        }
+        Ok(1)
+    }
+
+    /// Snapshot the honest reconstruction of a share about to be opened
+    /// (`None` when audit is off — zero work on the semi-honest path).
+    fn audit_expected(&self, s: &Share) -> Option<RingTensor> {
+        self.audit.as_ref().map(|_| s.reconstruct())
+    }
+
+    /// Fold one covered opening into σ: any element where the delivered
+    /// reconstruction differs from the expected one contributes
+    /// `c_j · α · (delivered_j − expected_j)` with a per-(opening, element)
+    /// odd coefficient. Honest openings cost one comparison per element.
+    fn audit_accumulate(&mut self, expected: Option<RingTensor>, actual: &RingTensor) {
+        let (Some(exp), Some(a)) = (expected, self.audit.as_mut()) else { return };
+        let base = a.alpha ^ a.open_seq.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        for (j, (&e, &g)) in exp.data().iter().zip(actual.data().iter()).enumerate() {
+            if e != g {
+                let mut st = base ^ j as u64;
+                let c = crate::util::rng::splitmix64(&mut st) | 1;
+                let diff = (g as u64).wrapping_sub(e as u64);
+                a.sigma = a.sigma.wrapping_add(c.wrapping_mul(a.alpha).wrapping_mul(diff));
+            }
+        }
+        a.open_seq += 1;
+        a.pending += 1;
+        a.counters.openings += 1;
+    }
+
+    /// The canonical two-way exchange behind every full opening: P0 sends
+    /// its half to P1, P1 sends its half to P0 (in that order — the
+    /// census-pinned schedule), and both reconstruct from the *delivered*
+    /// halves. Under audit the honest value is snapshotted first and the
+    /// delivered reconstruction folded into σ; a due [`ShareFault`]
+    /// perturbs the copy of P1's half that goes on the wire (the sender's
+    /// state, like the snapshot, is untouched — a cheating party, not a
+    /// broken one). Rounds are charged by the caller.
+    fn exchange_halves(&mut self, s: &Share, class: OpClass) -> RingTensor {
+        let expected = self.audit_expected(s);
+        let faulty_s1 = match self.audit.as_mut() {
+            Some(a) if a.fault.is_some_and(|f| f.at_open == a.open_seq) => {
+                let f = a.fault.take().expect("checked above");
+                let mut t = s.s1.clone();
+                if t.len() > 0 {
+                    let i = f.word % t.len();
+                    t.data_mut()[i] = (t.data()[i] as u64 ^ (f.mask | 1)) as i64;
+                    a.counters.share_faults_applied += 1;
+                    Some(t)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        };
+        let d0 = self.net.transfer(PartyId::P0, PartyId::P1, &s.s0, class);
+        let d1 = self.net.transfer(PartyId::P1, PartyId::P0, faulty_s1.as_ref().unwrap_or(&s.s1), class);
+        let actual = ring::add(&d0, &d1);
+        self.audit_accumulate(expected, &actual);
+        actual
     }
 
     // ------------------------------------------------------------------
@@ -155,40 +356,47 @@ impl Mpc {
     /// Client-side input sharing: generate shares and send `[x]_j` to each
     /// compute server (1 round, `2·8·|x|` bytes — both messages in parallel).
     pub fn input_share(&mut self, x: &RingTensor, class: OpClass) -> Share {
-        let sh = self.share_local(x);
-        let s0 = self.net.transfer(PartyId::P2, PartyId::P0, &sh.s0, class);
-        let s1 = self.net.transfer(PartyId::P2, PartyId::P1, &sh.s1, class);
+        let sh = self.input_share_unrounded(x, class);
         self.net.round(class, 1);
-        Share { s0, s1 }
+        sh
     }
 
     /// Deferred-round input sharing for the session-batched decode
     /// schedule: identical share generation and transfers to
     /// [`Mpc::input_share`], no round charge — a batch-mate's charged
     /// input flight carries this lane's two messages (independent
-    /// payloads from the same client round trip).
+    /// payloads from the same client round trip). Under audit the
+    /// delivered shares are checked against the client's plaintext.
     pub fn input_share_unrounded(&mut self, x: &RingTensor, class: OpClass) -> Share {
         let sh = self.share_local(x);
+        let expected = self.audit.as_ref().map(|_| x.clone());
         let s0 = self.net.transfer(PartyId::P2, PartyId::P0, &sh.s0, class);
         let s1 = self.net.transfer(PartyId::P2, PartyId::P1, &sh.s1, class);
-        Share { s0, s1 }
+        let out = Share { s0, s1 };
+        if expected.is_some() {
+            let actual = out.reconstruct();
+            self.audit_accumulate(expected, &actual);
+        }
+        out
     }
 
     /// Open a sharing to both parties (1 round, each party sends its share
     /// to the other: `2·8·|x|` bytes).
     pub fn open(&mut self, s: &Share, class: OpClass) -> RingTensor {
-        let a = self.net.transfer(PartyId::P0, PartyId::P1, &s.s0, class);
-        let b = self.net.transfer(PartyId::P1, PartyId::P0, &s.s1, class);
+        let opened = self.exchange_halves(s, class);
         self.net.round(class, 1);
-        ring::add(&a, &b)
+        opened
     }
 
     /// Open to a single party (half the traffic, 1 round).
     pub fn open_to(&mut self, s: &Share, to: PartyId, class: OpClass) -> RingTensor {
         let from = if to == PartyId::P0 { PartyId::P1 } else { PartyId::P0 };
+        let expected = self.audit_expected(s);
         let other = self.net.transfer(from, to, s.of(from), class);
         self.net.round(class, 1);
-        ring::add(s.of(to), &other)
+        let actual = ring::add(s.of(to), &other);
+        self.audit_accumulate(expected, &actual);
+        actual
     }
 
     /// Send an existing share tensor from one server to the other (e.g. the
@@ -345,13 +553,9 @@ impl Mpc {
         // E = X - A, F = Y - B, opened in one parallel round.
         let e_sh = self.sub(x, &trip.a);
         let f_sh = self.sub(y, &trip.b);
-        let e0 = self.net.transfer(PartyId::P0, PartyId::P1, &e_sh.s0, class);
-        let e1 = self.net.transfer(PartyId::P1, PartyId::P0, &e_sh.s1, class);
-        let f0 = self.net.transfer(PartyId::P0, PartyId::P1, &f_sh.s0, class);
-        let f1 = self.net.transfer(PartyId::P1, PartyId::P0, &f_sh.s1, class);
+        let e = self.exchange_halves(&e_sh, class);
+        let f = self.exchange_halves(&f_sh, class);
         // (round charged by the caller: matmul/matmul_batch)
-        let e = ring::add(&e0, &e1);
-        let f = ring::add(&f0, &f1);
         // [Z] = [C] + E·[B] + [A]·F + E·F (P0 adds the public term).
         let mut s0 = self.net.timed(class, PartyId::P0, || {
             let mut z = ring::matmul(&e, &trip.b.s0);
@@ -378,13 +582,9 @@ impl Mpc {
         let trip = self.dealer.elem_triple(x.rows(), x.cols());
         let e_sh = self.sub(x, &trip.a);
         let f_sh = self.sub(y, &trip.b);
-        let e0 = self.net.transfer(PartyId::P0, PartyId::P1, &e_sh.s0, class);
-        let e1 = self.net.transfer(PartyId::P1, PartyId::P0, &e_sh.s1, class);
-        let f0 = self.net.transfer(PartyId::P0, PartyId::P1, &f_sh.s0, class);
-        let f1 = self.net.transfer(PartyId::P1, PartyId::P0, &f_sh.s1, class);
+        let e = self.exchange_halves(&e_sh, class);
+        let f = self.exchange_halves(&f_sh, class);
         self.net.round(class, 1);
-        let e = ring::add(&e0, &e1);
-        let f = ring::add(&f0, &f1);
         let mut s0 = ring::add(
             &ring::add(&ring::mul_elem(&e, &trip.b.s0), &ring::mul_elem(&trip.a.s0, &f)),
             &ring::add(&trip.c.s0, &ring::mul_elem(&e, &f)),
@@ -404,10 +604,8 @@ impl Mpc {
     pub fn square(&mut self, x: &Share, class: OpClass) -> Share {
         let trip = self.dealer.square_pair(x.rows(), x.cols());
         let e_sh = self.sub(x, &trip.a);
-        let e0 = self.net.transfer(PartyId::P0, PartyId::P1, &e_sh.s0, class);
-        let e1 = self.net.transfer(PartyId::P1, PartyId::P0, &e_sh.s1, class);
+        let e = self.exchange_halves(&e_sh, class);
         self.net.round(class, 1);
-        let e = ring::add(&e0, &e1);
         // X² = E² + 2·E·A + A² → [X²] = E² (public, P0) + 2E·[A] + [C]
         let two_e = ring::scale(&e, 2);
         let mut s0 = ring::add(
@@ -453,11 +651,10 @@ impl Mpc {
         );
         anyhow::ensure!(fixed.shape() == corr.mask.shape(), "fixed operand / mask shape mismatch");
         let diff = self.sub(fixed, &corr.mask);
-        let d0 = self.net.transfer(PartyId::P0, PartyId::P1, &diff.s0, class);
-        let d1 = self.net.transfer(PartyId::P1, PartyId::P0, &diff.s1, class);
+        let opened = self.exchange_halves(&diff, class);
         self.net.round(class, 1);
         corr.opened = 1;
-        Ok(ring::add(&d0, &d1))
+        Ok(opened)
     }
 
     /// Extend the masked opening of a *write-once row-grown* operand (the
@@ -485,10 +682,9 @@ impl Mpc {
         anyhow::ensure!(pos < corr.mask.rows(), "row {pos} outside the dealt mask");
         let b_row = corr.mask.row_block(pos, pos + 1);
         let diff = self.sub(row, &b_row);
-        let d0 = self.net.transfer(PartyId::P0, PartyId::P1, &diff.s0, class);
-        let d1 = self.net.transfer(PartyId::P1, PartyId::P0, &diff.s1, class);
+        let opened = self.exchange_halves(&diff, class);
         corr.opened = pos as u64 + 1;
-        Ok(ring::add(&d0, &d1))
+        Ok(opened)
     }
 
     /// `Π_MatMul` with a session-fixed RIGHT operand whose masked opening
@@ -515,10 +711,8 @@ impl Mpc {
         let (a, c) = &fu.blocks[0];
         anyhow::ensure!(a.shape() == x.shape(), "per-use mask shape mismatch");
         let e_sh = self.sub(x, a);
-        let e0 = self.net.transfer(PartyId::P0, PartyId::P1, &e_sh.s0, class);
-        let e1 = self.net.transfer(PartyId::P1, PartyId::P0, &e_sh.s1, class);
+        let e = self.exchange_halves(&e_sh, class);
         self.net.round(class, 1);
-        let e = ring::add(&e0, &e1);
         let b = &corr.mask;
         let mut s0 = self.net.timed(class, PartyId::P0, || {
             let mut z = ring::matmul(&e, &b.s0);
@@ -565,9 +759,7 @@ impl Mpc {
         let (a, c) = &fu.blocks[0];
         anyhow::ensure!(a.shape() == y.shape(), "per-use mask shape mismatch");
         let e_sh = self.sub(y, a);
-        let e0 = self.net.transfer(PartyId::P0, PartyId::P1, &e_sh.s0, class);
-        let e1 = self.net.transfer(PartyId::P1, PartyId::P0, &e_sh.s1, class);
-        let e = ring::add(&e0, &e1);
+        let e = self.exchange_halves(&e_sh, class);
         let f_col = f_pub.col_block(pos, pos + 1);
         let b_col = corr.mask.col_block(pos, pos + 1);
         let mut s0 = self.net.timed(class, PartyId::P0, || {
@@ -627,9 +819,7 @@ impl Mpc {
             let qh = q.col_block(h * dh, (h + 1) * dh);
             anyhow::ensure!(a.shape() == (1, dh), "per-use head mask shape mismatch");
             let e_sh = self.sub(&qh, a);
-            let e0 = self.net.transfer(PartyId::P0, PartyId::P1, &e_sh.s0, class);
-            let e1 = self.net.transfer(PartyId::P1, PartyId::P0, &e_sh.s1, class);
-            es.push(ring::add(&e0, &e1));
+            es.push(self.exchange_halves(&e_sh, class));
         }
         self.net.round(class, 1);
         let mut outs = Vec::with_capacity(heads);
@@ -1051,5 +1241,112 @@ mod tests {
         let got = dec(&out.reconstruct());
         let want = x.map(|v| v * 0.125);
         assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    // ------------------------------------------------------------------
+    // Integrity-checked mode
+    // ------------------------------------------------------------------
+
+    /// input_share (1 covered opening) + matmul (E and F: 2 more).
+    fn audited_workload(mpc: &mut Mpc) -> RingTensor {
+        let x = FloatTensor::from_fn(4, 4, |r, c| ((r * 3 + c) % 5) as f32 * 0.2 - 0.7);
+        let y = FloatTensor::from_fn(4, 4, |r, c| ((r + 2 * c) % 7) as f32 * 0.1 - 0.3);
+        let sx = mpc.input_share(&enc(&x), OpClass::Embed);
+        let sy = mpc.share_local(&enc(&y));
+        mpc.matmul(&sx, &sy, OpClass::Linear).reconstruct()
+    }
+
+    #[test]
+    fn audit_honest_run_is_bit_identical_and_flushes_clean() {
+        let mut plain = mk();
+        let plain_out = audited_workload(&mut plain);
+
+        let mut mpc = mk();
+        mpc.enable_audit(42);
+        let audited_out = audited_workload(&mut mpc);
+        assert_eq!(audited_out, plain_out, "audit must not perturb a single output bit");
+        assert_eq!(
+            (mpc.net.ledger.bytes_total(), mpc.net.ledger.rounds_total()),
+            (plain.net.ledger.bytes_total(), plain.net.ledger.rounds_total()),
+            "audit traffic never reaches the protocol ledger"
+        );
+
+        assert_eq!(mpc.flush_mac_checks().unwrap(), 1);
+        let c = mpc.audit_counters().unwrap();
+        assert_eq!(c.mac_failures, 0);
+        assert_eq!(c.mac_checks, 1);
+        assert_eq!((c.overhead_bytes, c.overhead_rounds), (32, 2));
+        assert_eq!(c.openings, 3);
+        assert_eq!(c.share_faults_applied, 0);
+        // Nothing pending → the next flush is a free no-op.
+        assert_eq!(mpc.flush_mac_checks().unwrap(), 0);
+    }
+
+    #[test]
+    fn audit_detects_an_injected_share_fault() {
+        let mut mpc = mk();
+        mpc.enable_audit(7);
+        assert!(mpc.inject_share_fault(ShareFault { at_open: 1, word: 5, mask: 1 << 17 }));
+        audited_workload(&mut mpc);
+        let err = mpc.flush_mac_checks().unwrap_err();
+        assert!(err.to_string().contains("MAC check failed"), "unexpected error: {err}");
+        let c = mpc.audit_counters().unwrap();
+        assert_eq!(c.share_faults_applied, 1);
+        assert_eq!(c.mac_failures, 1);
+        // The failed batch was consumed; the context is clean again.
+        assert_eq!(mpc.flush_mac_checks().unwrap(), 0);
+    }
+
+    #[test]
+    fn audit_detects_a_wire_bit_flip() {
+        use crate::net::{TamperKind, TamperPlan};
+        let mut mpc = mk();
+        mpc.enable_audit(9);
+        // input_share is transfers 0–1; the matmul E exchange is 2–3.
+        mpc.net
+            .schedule_tamper(TamperPlan { at_seq: 2, kind: TamperKind::BitFlip { word: 3, bit: 41 } });
+        audited_workload(&mut mpc);
+        assert_eq!(mpc.net.faults_applied, 1, "the scheduled flip must have landed");
+        let err = mpc.flush_mac_checks().unwrap_err();
+        assert!(err.to_string().contains("MAC check failed"), "unexpected error: {err}");
+        assert_eq!(mpc.audit_counters().unwrap().mac_failures, 1);
+    }
+
+    #[test]
+    fn audit_detects_a_stale_replay() {
+        use crate::net::{TamperKind, TamperPlan};
+        let mut mpc = mk();
+        mpc.enable_audit(11);
+        // Within one open: seq 0 is P0's half (stashed), seq 1 is P1's —
+        // replaying the stale P0 payload as P1's makes the sum 2·s0 ≠ x.
+        mpc.net.schedule_tamper(TamperPlan { at_seq: 1, kind: TamperKind::ReplayStale });
+        let x = RingTensor::from_vec(2, 3, vec![1, -2, 3, -4, 5, -6]);
+        let sx = mpc.share_local(&x);
+        let opened = mpc.open(&sx, OpClass::Other);
+        assert_ne!(opened, x, "the replayed stale half must corrupt the opening");
+        assert_eq!(mpc.net.faults_applied, 1);
+        let err = mpc.flush_mac_checks().unwrap_err();
+        assert!(err.to_string().contains("MAC check failed"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn audit_covers_fixed_operand_openings() {
+        let mut mpc = mk();
+        mpc.enable_audit(13);
+        let n = 4usize;
+        let y = FloatTensor::from_fn(n, n, |r, c| ((r + c) % 3) as f32 * 0.25 - 0.25);
+        let sy = mpc.share_local(&enc(&y));
+        let mut corr = mpc.dealer.fixed_correlation(TripleShape::fixed_ppp(2, n, 1));
+        // Honest fixed-operand open + use flushes clean…
+        let f = mpc.open_fixed_operand(&sy, &mut corr, OpClass::Correlation).unwrap();
+        let sx = mpc.share_local(&enc(&FloatTensor::from_fn(2, n, |r, c| (r + c) as f32 * 0.1)));
+        mpc.matmul_fixed_rhs(&sx, &f, &mut corr, OpClass::Linear).unwrap();
+        assert_eq!(mpc.flush_mac_checks().unwrap(), 1);
+        // …and a share fault on the very next covered opening is caught.
+        let open_now = mpc.audit_open_count();
+        assert!(mpc.inject_share_fault(ShareFault { at_open: open_now, word: 0, mask: 2 }));
+        let sz = mpc.share_local(&RingTensor::zeros(3, 3));
+        mpc.open(&sz, OpClass::Other);
+        assert!(mpc.flush_mac_checks().is_err());
     }
 }

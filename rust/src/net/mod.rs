@@ -357,20 +357,84 @@ pub struct TransferRecord {
     pub class_idx: usize,
     /// Payload size in bytes.
     pub bytes: u64,
-    /// FNV-1a digest of the payload words (order-sensitive within the
-    /// tensor, so equal digests mean equal payloads w.h.p.).
+    /// Context-hardened digest: commits to direction, tensor shape, the
+    /// global transfer sequence number, and the payload digest, so equal
+    /// payloads moved in different contexts — or a stale message replayed
+    /// later — no longer collide (see [`transfer_digest`]).
     pub digest: u64,
+    /// FNV-1a digest of the payload words alone (order-sensitive within
+    /// the tensor, so equal payloads mean equal values w.h.p.) — the
+    /// context-free component used for cross-schedule multiset checks.
+    pub payload: u64,
 }
 
-fn fnv1a_tensor(t: &RingTensor) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &v in t.data() {
-        for b in v.to_le_bytes() {
+/// FNV-1a offset basis (shared by every digest in this module).
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Fold 64-bit words into an FNV-1a chain, little-endian byte order —
+/// the same byte walk as [`fnv1a_tensor`], so composed digests stay
+/// stable across refactors of either.
+pub fn fnv1a_fold(mut h: u64, words: &[u64]) -> u64 {
+    for w in words {
+        for b in w.to_le_bytes() {
             h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
+            h = h.wrapping_mul(FNV_PRIME);
         }
     }
     h
+}
+
+/// FNV-1a digest of a ring tensor's payload words (context-free).
+pub fn fnv1a_tensor(t: &RingTensor) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &v in t.data() {
+        h = fnv1a_fold(h, &[v as u64]);
+    }
+    h
+}
+
+/// Context-hardened census digest of one transfer: folds the direction,
+/// the tensor shape, the global sequence number, and the payload digest.
+/// Any bit of context or content changing changes the digest, so replayed
+/// or re-routed copies of an identical payload are distinguishable — the
+/// property the audit transcript chain relies on.
+pub fn transfer_digest(from: PartyId, to: PartyId, t: &RingTensor, seq: u64, payload: u64) -> u64 {
+    fnv1a_fold(
+        FNV_OFFSET,
+        &[from.index() as u64, to.index() as u64, t.rows() as u64, t.cols() as u64, seq, payload],
+    )
+}
+
+/// The kind of single-shot wire fault the tamper-injection harness can
+/// schedule against a [`NetSim`] (see [`NetSim::schedule_tamper`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TamperKind {
+    /// XOR one bit of one payload word of the delivered clone
+    /// (`word`/`bit` are reduced modulo the payload dimensions).
+    BitFlip {
+        /// Flat word index into the payload (mod `len`).
+        word: usize,
+        /// Bit position within the word (mod 64).
+        bit: u32,
+    },
+    /// Deliver the *previous* transfer's payload instead (a stale-message
+    /// replay). Degrades to a bit flip when the previous payload has a
+    /// different shape or is bit-identical, so a scheduled fault always
+    /// corrupts something.
+    ReplayStale,
+}
+
+/// A scheduled single-shot wire fault: corrupt the delivered clone of
+/// global transfer number `at_seq`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TamperPlan {
+    /// 0-based global transfer sequence number to corrupt
+    /// ([`NetSim::transfer_seq`] counts every transfer since construction,
+    /// across ledger resets).
+    pub at_seq: u64,
+    /// What to do to the delivered payload.
+    pub kind: TamperKind,
 }
 
 /// The in-process network simulator handed to every protocol.
@@ -391,6 +455,24 @@ pub struct NetSim {
     pub record_transfers: bool,
     /// Recorded transfers (empty unless `record_transfers`).
     pub transfer_log: Vec<TransferRecord>,
+    /// Global transfer sequence number: increments on **every** transfer
+    /// since construction, across ledger resets — the per-message
+    /// uniqueness the hardened census digests fold in.
+    pub transfer_seq: u64,
+    /// Rolling FNV-1a chain over the contextual digests of every recorded
+    /// transfer (the wire component of the audit transcript). Survives
+    /// [`NetSim::reset`] like the census itself; rewound by
+    /// [`NetSim::clear_transfer_log`].
+    pub wire_digest: u64,
+    /// Wire faults actually applied so far (lets the tamper harness
+    /// assert the scheduled fault landed on a real message).
+    pub faults_applied: u64,
+    /// Scheduled single-shot wire fault (tamper-injection test hook);
+    /// consumed when its target transfer happens.
+    tamper: Option<TamperPlan>,
+    /// Stash of the payload immediately preceding a pending
+    /// [`TamperKind::ReplayStale`] target — the stale message to replay.
+    stale: Option<RingTensor>,
     /// Open-batch state: rounds suppressed since `begin_batch` (`None`
     /// when no batch is active).
     batched_rounds: Option<u64>,
@@ -406,25 +488,89 @@ impl NetSim {
             messages: 0,
             record_transfers: false,
             transfer_log: Vec::new(),
+            transfer_seq: 0,
+            wire_digest: FNV_OFFSET,
+            faults_applied: 0,
+            tamper: None,
+            stale: None,
             batched_rounds: None,
+        }
+    }
+
+    /// Schedule a single-shot wire fault against global transfer
+    /// `plan.at_seq` (tamper-injection harness — see
+    /// `rust/tests/audit.rs`). Replaces any pending plan. The fault
+    /// mutates the *delivered* clone only: the sender's tensor is
+    /// untouched, exactly like a message corrupted in flight.
+    pub fn schedule_tamper(&mut self, plan: TamperPlan) {
+        self.tamper = Some(plan);
+    }
+
+    /// Whether a scheduled wire fault has not yet fired.
+    pub fn tamper_pending(&self) -> bool {
+        self.tamper.is_some()
+    }
+
+    fn apply_tamper(&mut self, kind: TamperKind, delivered: &mut RingTensor) {
+        let flip = |t: &mut RingTensor, word: usize, bit: u32| {
+            if t.len() > 0 {
+                let i = word % t.len();
+                t.data_mut()[i] ^= 1i64 << (bit % 64);
+                true
+            } else {
+                false
+            }
+        };
+        let landed = match kind {
+            TamperKind::BitFlip { word, bit } => flip(delivered, word, bit),
+            TamperKind::ReplayStale => match self.stale.take() {
+                Some(prev) if prev.shape() == delivered.shape() && prev != *delivered => {
+                    *delivered = prev;
+                    true
+                }
+                // No usable stale message (first transfer, shape change,
+                // or identical payload): degrade to a bit flip so the
+                // scheduled fault still corrupts something.
+                _ => flip(delivered, 0, 0),
+            },
+        };
+        if landed {
+            self.faults_applied += 1;
         }
     }
 
     /// Transfer a ring tensor between parties as part of the *current*
     /// round: clones the payload and charges its serialized size.
     /// Rounds are charged separately with [`NetSim::round`] so that
-    /// messages sent in parallel count as one round.
+    /// messages sent in parallel count as one round. Returns the
+    /// *delivered* clone — which a scheduled [`TamperPlan`] may have
+    /// corrupted — so protocols reconstruct from what actually arrived.
     pub fn transfer(&mut self, from: PartyId, to: PartyId, t: &RingTensor, class: OpClass) -> RingTensor {
         let bytes = (t.len() as u64) * crate::fixed::ELEM_BYTES;
         self.ledger.add_bytes(class, bytes);
         self.messages += 1;
+        let seq = self.transfer_seq;
+        self.transfer_seq += 1;
+        let mut delivered = t.clone();
+        if let Some(plan) = self.tamper {
+            if plan.at_seq == seq {
+                self.tamper = None;
+                self.apply_tamper(plan.kind, &mut delivered);
+            } else if plan.kind == TamperKind::ReplayStale && plan.at_seq == seq + 1 {
+                self.stale = Some(delivered.clone());
+            }
+        }
         if self.record_transfers {
+            let payload = fnv1a_tensor(&delivered);
+            let digest = transfer_digest(from, to, &delivered, seq, payload);
+            self.wire_digest = fnv1a_fold(self.wire_digest, &[digest]);
             self.transfer_log.push(TransferRecord {
                 from: from.index(),
                 to: to.index(),
                 class_idx: class.index(),
                 bytes,
-                digest: fnv1a_tensor(t),
+                digest,
+                payload,
             });
         }
         if self.realtime {
@@ -432,7 +578,7 @@ impl NetSim {
                 (bytes as f64 * 8.0) / self.profile.bandwidth_bps,
             ));
         }
-        t.clone()
+        delivered
     }
 
     /// Charge raw bytes without a payload (e.g. cost-model charges for the
@@ -491,9 +637,12 @@ impl NetSim {
         self.batched_rounds.is_some()
     }
 
-    /// Drop the recorded transfer census.
+    /// Drop the recorded transfer census and rewind the wire-digest chain
+    /// (the global sequence counter keeps counting: census digests stay
+    /// unique for the simulator's whole lifetime).
     pub fn clear_transfer_log(&mut self) {
         self.transfer_log.clear();
+        self.wire_digest = FNV_OFFSET;
     }
 
     /// Record measured local compute.
@@ -617,13 +766,81 @@ mod tests {
         net.transfer(PartyId::P0, PartyId::P1, &b, OpClass::Linear);
         net.transfer(PartyId::P1, PartyId::P0, &a, OpClass::Linear);
         assert_eq!(net.transfer_log.len(), 3);
-        assert_ne!(net.transfer_log[0].digest, net.transfer_log[1].digest);
-        assert_eq!(net.transfer_log[0].digest, net.transfer_log[2].digest);
+        assert_ne!(net.transfer_log[0].payload, net.transfer_log[1].payload);
+        assert_eq!(net.transfer_log[0].payload, net.transfer_log[2].payload);
+        // Context-hardened digests: the SAME payload moved in a different
+        // direction at a different sequence number must not collide.
+        assert_ne!(net.transfer_log[0].digest, net.transfer_log[2].digest);
         // the census survives a ledger reset (session-long audits)
         net.reset();
         assert_eq!(net.transfer_log.len(), 3);
+        assert_eq!(net.transfer_seq, 3, "the sequence counter survives resets");
         net.clear_transfer_log();
         assert!(net.transfer_log.is_empty());
+        assert_eq!(net.wire_digest, FNV_OFFSET);
+    }
+
+    /// Golden-value pin of the census digest format: `payload` is FNV-1a
+    /// over the little-endian payload words; `digest` folds
+    /// `[from, to, rows, cols, seq, payload]` from the FNV offset basis.
+    /// An accidental format change (field order, width, byte order) fails
+    /// here loudly instead of silently invalidating recorded transcripts.
+    #[test]
+    fn census_digest_format_is_pinned() {
+        let mut net = NetSim::new(NetworkProfile::lan());
+        net.record_transfers = true;
+        let t = RingTensor::from_vec(2, 2, vec![1, -2, 3, -4]);
+        net.transfer(PartyId::P0, PartyId::P1, &t, OpClass::Linear);
+        net.transfer(PartyId::P1, PartyId::P0, &t, OpClass::Linear);
+        assert_eq!(net.transfer_log[0].payload, 0x1bdaa41b3e2bf895);
+        assert_eq!(net.transfer_log[0].digest, 0x56227a27a8929d4c);
+        assert_eq!(net.transfer_log[1].payload, 0x1bdaa41b3e2bf895);
+        assert_eq!(net.transfer_log[1].digest, 0x982f83bf6a28a471);
+        // and the rolling wire chain is the fold of the two digests
+        let want = fnv1a_fold(FNV_OFFSET, &[0x56227a27a8929d4c, 0x982f83bf6a28a471]);
+        assert_eq!(net.wire_digest, want);
+    }
+
+    #[test]
+    fn scheduled_bit_flip_corrupts_only_the_delivered_clone() {
+        let mut net = NetSim::new(NetworkProfile::lan());
+        let t = RingTensor::from_vec(1, 4, vec![10, 20, 30, 40]);
+        // fault targets the second transfer, word 2, bit 5
+        net.schedule_tamper(TamperPlan { at_seq: 1, kind: TamperKind::BitFlip { word: 2, bit: 5 } });
+        let first = net.transfer(PartyId::P0, PartyId::P1, &t, OpClass::Other);
+        assert_eq!(first, t, "fault must not fire early");
+        assert!(net.tamper_pending());
+        let second = net.transfer(PartyId::P0, PartyId::P1, &t, OpClass::Other);
+        assert_eq!(net.faults_applied, 1);
+        assert!(!net.tamper_pending(), "single-shot: the plan is consumed");
+        assert_eq!(t.data()[2], 30, "sender copy untouched");
+        assert_eq!(second.data()[2], 30 ^ (1 << 5));
+        let third = net.transfer(PartyId::P0, PartyId::P1, &t, OpClass::Other);
+        assert_eq!(third, t, "later transfers are clean again");
+    }
+
+    #[test]
+    fn stale_replay_substitutes_the_previous_payload() {
+        let mut net = NetSim::new(NetworkProfile::lan());
+        let a = RingTensor::from_vec(1, 3, vec![1, 2, 3]);
+        let b = RingTensor::from_vec(1, 3, vec![4, 5, 6]);
+        net.schedule_tamper(TamperPlan { at_seq: 1, kind: TamperKind::ReplayStale });
+        net.transfer(PartyId::P0, PartyId::P1, &a, OpClass::Other);
+        let got = net.transfer(PartyId::P0, PartyId::P1, &b, OpClass::Other);
+        assert_eq!(got, a, "the stale message must be delivered instead");
+        assert_eq!(net.faults_applied, 1);
+    }
+
+    #[test]
+    fn stale_replay_degrades_to_a_flip_without_a_usable_predecessor() {
+        let mut net = NetSim::new(NetworkProfile::lan());
+        let t = RingTensor::from_vec(1, 2, vec![7, 8]);
+        // target the FIRST transfer: there is no predecessor to replay
+        net.schedule_tamper(TamperPlan { at_seq: 0, kind: TamperKind::ReplayStale });
+        let got = net.transfer(PartyId::P0, PartyId::P1, &t, OpClass::Other);
+        assert_eq!(net.faults_applied, 1);
+        assert_ne!(got, t, "a scheduled fault must still corrupt something");
+        assert_eq!(got.data()[0], 7 ^ 1);
     }
 
     #[test]

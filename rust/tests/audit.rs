@@ -1,0 +1,378 @@
+//! Tamper-injection harness for integrity-checked inference
+//! (DESIGN.md §Integrity-checked inference).
+//!
+//! The property under test: with [`EngineOptions::audit`] on, *any*
+//! single fault — one bit flipped in one delivered transfer, one stale
+//! message replayed, or one share perturbed at one opening — is rejected
+//! by the deferred share-MAC check or by transcript verification, while
+//! honest runs verify clean and stay **bit-identical** to audit-off runs
+//! (tokens, ledgers, payload chains — the audit layer's only observable
+//! cost lives in [`centaur::mpc::AuditCounters`]).
+//!
+//! The tamper grid covers 3 seeds × {lan, wan3} × {solo, batched B=4,
+//! speculative k=4}, rotating the fault kind per cell so every kind runs
+//! under every mode. Fault positions are drawn pseudo-randomly from the
+//! *request's own* span of an identically-seeded honest twin: engine
+//! construction (permutation dealing) already consumes transfer and
+//! opening indices, so a position below the post-construction watermark
+//! would never fire.
+
+use centaur::engine::audit::{verify_transcript, RequestTranscript};
+use centaur::engine::decoder::DecodeBatch;
+use centaur::engine::draft::Draft;
+use centaur::engine::{CentaurEngine, EngineOptions};
+use centaur::model::{ModelConfig, ModelWeights};
+use centaur::mpc::ShareFault;
+use centaur::net::{NetworkProfile, TamperKind, TamperPlan};
+use centaur::runtime::NativeBackend;
+use centaur::util::rng::splitmix64;
+
+const PROMPT: [u32; 2] = [5, 9];
+const STEPS: usize = 2;
+const BATCH: u32 = 4;
+const SPEC_K: usize = 4;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Mode {
+    /// One `DecoderSession` via `generate_streaming`.
+    Solo,
+    /// A `DecodeBatch` holding `BATCH` concurrent sessions.
+    Batched,
+    /// Speculative decode (`generate_speculative`, draft = tiny model).
+    Spec,
+}
+
+const MODES: [Mode; 3] = [Mode::Solo, Mode::Batched, Mode::Spec];
+
+/// One engine run plus the audit-side observations the harness asserts
+/// on. `pre_*` are the post-construction watermarks faults must clear.
+struct Run {
+    result: centaur::Result<(Vec<u32>, RequestTranscript)>,
+    pre_transfers: u64,
+    post_transfers: u64,
+    pre_opens: u64,
+    post_opens: u64,
+    counters: Option<centaur::mpc::AuditCounters>,
+    faults_applied: u64,
+}
+
+fn exec(
+    eng: &mut CentaurEngine,
+    cfg: &ModelConfig,
+    w: &ModelWeights,
+    mode: Mode,
+) -> centaur::Result<(Vec<u32>, RequestTranscript)> {
+    match mode {
+        Mode::Solo => {
+            let out = eng.generate_streaming(&PROMPT, STEPS, &mut |_, _, _| true)?;
+            Ok((out.tokens, out.transcript))
+        }
+        Mode::Spec => {
+            let draft = Draft::tiny(cfg, w);
+            let (out, _) = eng.generate_speculative(&PROMPT, STEPS, &draft, SPEC_K)?;
+            Ok((out.tokens, out.transcript))
+        }
+        Mode::Batched => {
+            let mut batch = DecodeBatch::new(eng)?;
+            let mut ids = Vec::new();
+            for i in 0..BATCH {
+                ids.push(batch.admit(&[PROMPT[0], PROMPT[1] + i], STEPS, None)?);
+            }
+            while !batch.step()?.is_empty() {}
+            let transcript = batch.transcript();
+            let mut tokens = Vec::new();
+            for id in ids {
+                tokens.extend(batch.remove(id).expect("admitted session").tokens);
+            }
+            Ok((tokens, transcript))
+        }
+    }
+}
+
+fn run_mode(
+    cfg: &ModelConfig,
+    w: &ModelWeights,
+    profile: &str,
+    seed: u64,
+    mode: Mode,
+    audit: bool,
+    wire: Option<TamperPlan>,
+    share: Option<ShareFault>,
+) -> Run {
+    let mut eng = CentaurEngine::with_backend(
+        cfg,
+        w,
+        Box::new(NativeBackend::new()),
+        EngineOptions {
+            profile: NetworkProfile::by_name(profile).unwrap(),
+            seed,
+            record_transfers: true,
+            audit,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let pre_transfers = eng.transfer_count();
+    let pre_opens = eng.audit_open_count();
+    if let Some(p) = wire {
+        eng.schedule_tamper(p);
+    }
+    if let Some(f) = share {
+        assert!(eng.inject_share_fault(f), "share faults need audit mode on");
+    }
+    let result = exec(&mut eng, cfg, w, mode);
+    Run {
+        result,
+        pre_transfers,
+        post_transfers: eng.transfer_count(),
+        pre_opens,
+        post_opens: eng.audit_open_count(),
+        counters: eng.audit_counters(),
+        faults_applied: eng.faults_applied(),
+    }
+}
+
+/// The headline property: every cell of the 3 × 2 × 3 grid injects one
+/// fault (kind rotating per cell, position pseudo-random within the
+/// honest twin's request span) and the fault is always rejected — by the
+/// MAC flush bailing, by a counted MAC failure, or by the replayed
+/// transcript diverging from the honest one.
+#[test]
+fn tamper_grid_every_injected_fault_is_detected() {
+    let cfg = ModelConfig::gpt2_tiny();
+    let w = ModelWeights::random(&cfg, 117);
+    let mut cell = 0u64;
+    for seed in [0xA11D_31u64, 0xA11D_32, 0xA11D_33] {
+        for profile in ["lan", "wan3"] {
+            for mode in MODES {
+                // Honest twin: must verify clean, and supplies the
+                // request's transfer/opening span for fault placement.
+                let honest = run_mode(&cfg, &w, profile, seed, mode, true, None, None);
+                let (h_tokens, h_tr) = honest.result.as_ref().expect("honest run must succeed");
+                assert!(!h_tokens.is_empty());
+                let hc = honest.counters.unwrap();
+                assert_eq!(hc.mac_failures, 0, "honest run must verify clean ({profile}/{mode:?})");
+                assert!(hc.mac_checks > 0, "audited run must actually check ({profile}/{mode:?})");
+                let transfers = honest.post_transfers - honest.pre_transfers;
+                let opens = honest.post_opens - honest.pre_opens;
+                assert!(transfers > 0 && opens > 0, "request must transfer and open");
+
+                let mut st = seed ^ (cell << 17) ^ 0x7A3F_0001;
+                let r = splitmix64(&mut st);
+                let (wire, share) = match cell % 3 {
+                    0 => (
+                        Some(TamperPlan {
+                            at_seq: honest.pre_transfers + r % transfers,
+                            kind: TamperKind::BitFlip {
+                                word: (r >> 8) as usize,
+                                bit: ((r >> 32) % 64) as u32,
+                            },
+                        }),
+                        None,
+                    ),
+                    1 => (
+                        Some(TamperPlan {
+                            at_seq: honest.pre_transfers + r % transfers,
+                            kind: TamperKind::ReplayStale,
+                        }),
+                        None,
+                    ),
+                    _ => (
+                        None,
+                        Some(ShareFault {
+                            at_open: honest.pre_opens + r % opens,
+                            word: (r >> 8) as usize,
+                            mask: 1 << ((r >> 32) % 64),
+                        }),
+                    ),
+                };
+
+                let t = run_mode(&cfg, &w, profile, seed, mode, true, wire, share);
+                if wire.is_some() {
+                    assert_eq!(
+                        t.faults_applied, 1,
+                        "cell {cell} ({profile}/{mode:?}): scheduled wire fault never landed"
+                    );
+                }
+                if share.is_some() {
+                    assert_eq!(
+                        t.counters.unwrap().share_faults_applied,
+                        1,
+                        "cell {cell} ({profile}/{mode:?}): injected share fault never fired"
+                    );
+                }
+                let detected = match &t.result {
+                    Err(_) => true,
+                    Ok((_, tr)) => {
+                        t.counters.is_some_and(|c| c.mac_failures > 0)
+                            || h_tr.first_divergence(tr).is_some()
+                    }
+                };
+                assert!(
+                    detected,
+                    "cell {cell} (seed {seed:#x}, {profile}, {mode:?}, wire {wire:?}, share \
+                     {share:?}): the fault went UNDETECTED"
+                );
+                cell += 1;
+            }
+        }
+    }
+}
+
+/// Zero-perturbation invariant: turning audit on must not move a single
+/// bit of the inference itself. Tokens, per-step ledger commitments, the
+/// core digest, *and the payload wire chain* are equal to the audit-off
+/// run; only the audit counters differ (present and nonzero vs absent).
+#[test]
+fn honest_audited_runs_verify_clean_and_match_audit_off_bit_for_bit() {
+    let cfg = ModelConfig::gpt2_tiny();
+    let w = ModelWeights::random(&cfg, 118);
+    for mode in MODES {
+        let on = run_mode(&cfg, &w, "lan", 0xC1EA4, mode, true, None, None);
+        let off = run_mode(&cfg, &w, "lan", 0xC1EA4, mode, false, None, None);
+        let (tok_on, tr_on) = on.result.expect("audited run");
+        let (tok_off, tr_off) = off.result.expect("semi-honest run");
+        assert_eq!(tok_on, tok_off, "audit must not perturb tokens ({mode:?})");
+        assert_eq!(tr_on.commits(), tr_off.commits(), "audit must not perturb ledgers ({mode:?})");
+        assert_eq!(tr_on.core_digest(), tr_off.core_digest());
+        assert_eq!(
+            tr_on.wire_digest(),
+            tr_off.wire_digest(),
+            "audit must not perturb a single payload bit ({mode:?})"
+        );
+        assert!(tr_on.wire_digest().is_some(), "census-on full runs carry a wire chain");
+        // The σ-exchange is emulated: counted in AuditCounters, never on
+        // the simulated wire.
+        assert_eq!(
+            on.post_transfers - on.pre_transfers,
+            off.post_transfers - off.pre_transfers,
+            "audit overhead must stay off the protocol transfer stream ({mode:?})"
+        );
+        let c = on.counters.expect("audit-on exposes counters");
+        assert!(c.mac_checks > 0 && c.openings > 0, "({mode:?}) counters: {c:?}");
+        assert_eq!(c.mac_failures, 0);
+        assert_eq!(c.overhead_bytes, 32 * c.mac_checks, "32 σ-bytes per flush");
+        assert!(off.counters.is_none(), "audit-off exposes no counters");
+    }
+}
+
+/// The transcript's core digest commits only to quantities pinned
+/// execution-mode-independent elsewhere (ledger deltas, lanes, greedy
+/// tokens), so the same seeded request digests identically under
+/// fast-sim or full execution, lan or wan3, scalar or SIMD ring kernels.
+/// The wire chain is the intentional exception: it exists only for full
+/// runs with the census on — and *is* profile- and kernel-independent.
+#[test]
+fn transcript_core_digest_is_mode_profile_and_kernel_independent() {
+    let cfg = ModelConfig::gpt2_tiny();
+    let w = ModelWeights::random(&cfg, 119);
+    let run = |fast: bool, profile: &str| {
+        let mut eng = CentaurEngine::with_backend(
+            &cfg,
+            &w,
+            Box::new(NativeBackend::new()),
+            EngineOptions {
+                profile: NetworkProfile::by_name(profile).unwrap(),
+                seed: 53,
+                fast_sim: fast,
+                record_transfers: !fast,
+                audit: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let out = eng.generate_streaming(&PROMPT, STEPS, &mut |_, _, _| true).unwrap();
+        (out.tokens, out.transcript)
+    };
+    let (tok, tr) = run(false, "lan");
+    // Profile independence, full mode — including the payload chain.
+    let (tok_wan, tr_wan) = run(false, "wan3");
+    assert_eq!(tok, tok_wan);
+    assert_eq!(tr.core_digest(), tr_wan.core_digest());
+    assert_eq!(tr.wire_digest().expect("full mode"), tr_wan.wire_digest().expect("full mode"));
+    // Fast-sim twin: identical step commitments, tokens, and core digest;
+    // no wire chain to compare.
+    let (tok_fast, tr_fast) = run(true, "lan");
+    assert_eq!(tr_fast.wire_digest(), None, "fast-sim carries no payload chain");
+    assert_eq!(tr.commits(), tr_fast.commits(), "fast-sim must charge identical step ledgers");
+    assert_eq!(tok, tok_fast, "fast-sim greedy tokens must match full execution");
+    assert_eq!(tr.core_digest(), tr_fast.core_digest());
+    let (_, tr_fast_wan) = run(true, "wan3");
+    assert_eq!(tr_fast.core_digest(), tr_fast_wan.core_digest());
+    // Kernel independence: the scalar ring kernel is bit-identical to the
+    // SIMD dispatch, so even the wire chain must match. (The override is
+    // process-global, but all kernels compute identical ring values, so
+    // concurrently running tests are unaffected.)
+    centaur::runtime::kernel::set_override(Some("scalar")).unwrap();
+    let scalar = run(false, "lan");
+    centaur::runtime::kernel::set_override(None).unwrap();
+    let (tok_s, tr_s) = scalar;
+    assert_eq!(tok, tok_s);
+    assert_eq!(tr.core_digest(), tr_s.core_digest());
+    assert_eq!(tr.wire_digest(), tr_s.wire_digest(), "ring kernels are bit-identical");
+}
+
+/// End-to-end `verify_transcript`: an honest re-execution of the same
+/// seeded request verifies; a tampered re-execution is rejected (either
+/// its MAC flush bails or its transcript diverges); and a request of a
+/// different shape or seed is never accepted as a replay.
+#[test]
+fn verify_transcript_accepts_honest_replays_and_rejects_divergent_ones() {
+    let cfg = ModelConfig::gpt2_tiny();
+    let w = ModelWeights::random(&cfg, 120);
+    let honest = run_mode(&cfg, &w, "lan", 61, Mode::Solo, true, None, None);
+    let transfers = honest.post_transfers - honest.pre_transfers;
+    let (_, recorded) = honest.result.expect("honest run");
+
+    // Same seed, same inputs, fresh engine: verifies.
+    let replay = run_mode(&cfg, &w, "lan", 61, Mode::Solo, true, None, None);
+    verify_transcript(&recorded, || replay.result.map(|(_, t)| t))
+        .expect("an honest replay must verify");
+
+    // A re-execution with one bit flipped on the wire: rejected.
+    let tampered = run_mode(
+        &cfg,
+        &w,
+        "lan",
+        61,
+        Mode::Solo,
+        true,
+        Some(TamperPlan {
+            at_seq: honest.pre_transfers + transfers / 2,
+            kind: TamperKind::BitFlip { word: 3, bit: 41 },
+        }),
+        None,
+    );
+    let err = verify_transcript(&recorded, || tampered.result.map(|(_, t)| t)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("transcript verification failed") || msg.contains("MAC check failed"),
+        "got: {msg}"
+    );
+
+    // A longer request is structurally not a replay (step-count
+    // divergence), independent of any wire evidence.
+    let longer = {
+        let mut eng = CentaurEngine::with_backend(
+            &cfg,
+            &w,
+            Box::new(NativeBackend::new()),
+            EngineOptions {
+                seed: 61,
+                record_transfers: true,
+                audit: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        eng.generate_streaming(&PROMPT, STEPS + 1, &mut |_, _, _| true).unwrap().transcript
+    };
+    let err = verify_transcript(&recorded, || Ok(longer)).unwrap_err();
+    assert!(format!("{err:#}").contains("step count"), "got: {err:#}");
+
+    // A different session seed reshapes every mask: the payload chain
+    // diverges even though ledgers (and typically tokens) agree.
+    let other = run_mode(&cfg, &w, "lan", 62, Mode::Solo, true, None, None);
+    let err = verify_transcript(&recorded, || other.result.map(|(_, t)| t)).unwrap_err();
+    assert!(format!("{err:#}").contains("transcript verification failed"), "got: {err:#}");
+}

@@ -272,11 +272,18 @@ fn batched_decode_census_is_exactly_the_sequential_census() {
 
     // (1) Transferred-payload multiset identical: every opening the
     // sequential schedule performs, exactly once each, and nothing else.
-    let mut bat_log = bat_eng.transfer_log().to_vec();
-    let mut seq_log = seq_eng.transfer_log().to_vec();
+    // Projected to (from, to, class, bytes, payload) — the contextual
+    // `digest` field deliberately commits to the transfer sequence
+    // number, which the two schedules order differently.
+    let project = |log: &[centaur::net::TransferRecord]| {
+        let mut v: Vec<_> =
+            log.iter().map(|r| (r.from, r.to, r.class_idx, r.bytes, r.payload)).collect();
+        v.sort_unstable();
+        v
+    };
+    let bat_log = project(bat_eng.transfer_log());
+    let seq_log = project(seq_eng.transfer_log());
     assert_eq!(bat_log.len(), seq_log.len(), "batching changed the number of transfers");
-    bat_log.sort();
-    seq_log.sort();
     assert_eq!(bat_log, seq_log, "batching changed a transferred payload");
 
     // (2) P1 view census identical record for record — labels, tags,
